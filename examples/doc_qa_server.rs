@@ -1,0 +1,72 @@
+//! Advanced-RAG document QA "server": accepts a small stream of queries
+//! (documents + questions) and serves them concurrently with Teola's full
+//! pipeline — query expansion with streamed partial decodes, per-segment
+//! embedding + search, reranking and refine-mode synthesis.
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::baselines::Scheme;
+use teola::bench::{next_query_id, platform_for};
+use teola::graph::template::QueryConfig;
+use teola::scheduler::Platform;
+use teola::workload::Tokenizer;
+
+const CORPUS: [&str; 8] = [
+    "quarterly revenue increased due to cloud subscription growth",
+    "operating margin declined after one time restructuring charges",
+    "the board approved a share repurchase program for next year",
+    "research spending focused on inference acceleration hardware",
+    "customer churn decreased in the enterprise segment",
+    "the datacenter expansion added three new regions in asia",
+    "foreign exchange headwinds reduced reported revenue growth",
+    "free cash flow remained strong despite capital expenditures",
+];
+
+fn main() -> teola::Result<()> {
+    let core = "llm-small";
+    let mut cfg = platform_for(AppKind::DocQaAdvanced, core);
+    cfg.warm = false;
+    let platform = Platform::start(&cfg)?;
+    let tok = Tokenizer::new(platform.manifest.vocab);
+
+    let questions = [
+        "why did operating margin decline this quarter",
+        "what is driving revenue growth",
+        "how is the company spending on research",
+    ];
+
+    let mut template = AppKind::DocQaAdvanced.template(core);
+    bind_answer_tokens(&mut template, 20);
+
+    // Serve the three questions concurrently (each with its own uploaded
+    // document set — per-query vector-DB namespaces).
+    let mut handles = Vec::new();
+    let t0 = std::time::Instant::now();
+    for (i, question) in questions.iter().enumerate() {
+        let q = QueryConfig {
+            question: tok.encode(question),
+            doc_chunks: CORPUS.iter().map(|d| tok.encode(d)).collect(),
+            top_k: 3,
+            expansion: 3,
+            answer_tokens: 20,
+            seed: 500 + i as u64,
+        };
+        let egraph = Scheme::Teola.build(&template, &q, &platform.profiles)?;
+        handles.push((question, platform.spawn_query(next_query_id(), egraph)));
+    }
+    for (question, h) in handles {
+        let (answer, m) = h.join().expect("query thread")?;
+        println!(
+            "Q: {question}\n   -> {} ({} ops, {:.1} ms e2e)",
+            tok.decode(&answer.flat_tokens()[..10.min(answer.flat_tokens().len())]),
+            m.n_engine_ops,
+            m.e2e_us as f64 / 1000.0
+        );
+    }
+    println!(
+        "served {} queries concurrently in {:.1} ms",
+        questions.len(),
+        t0.elapsed().as_secs_f64() * 1000.0
+    );
+    platform.shutdown();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! End-to-end serving validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Loads the real AOT-compiled models, then serves batched Poisson request
+//! streams for two applications under Teola and the strongest baseline,
+//! reporting latency percentiles and throughput — proof that all three
+//! layers (Pallas kernel -> JAX HLO -> Rust coordinator) compose on a real
+//! serving workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+
+use teola::apps::AppKind;
+use teola::baselines::Scheme;
+use teola::bench::{platform_for_all, run_trace, TraceRun};
+use teola::scheduler::Platform;
+use teola::workload::DatasetKind;
+
+fn main() -> teola::Result<()> {
+    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("no artifacts: run `make artifacts` first");
+        return Ok(());
+    }
+    let core = "llm-small";
+    let apps = [
+        (AppKind::DocQaNaive, DatasetKind::TruthfulQa),
+        (AppKind::DocQaAdvanced, DatasetKind::TruthfulQa),
+    ];
+    let cfg = platform_for_all(&[apps[0].0, apps[1].0], core);
+    println!("starting platform (compiling AOT artifacts on PJRT-CPU)...");
+    let platform = Platform::start(&cfg)?;
+
+    let rate = 3.0;
+    let n = if teola::bench::quick() { 4 } else { 12 };
+    println!(
+        "serving {n} queries/app at {rate} rps (open-loop Poisson), core LLM = {core}\n"
+    );
+    println!(
+        "{:<22} {:<14} {:>9} {:>9} {:>9} {:>10}",
+        "app", "scheme", "mean_ms", "p50_ms", "p90_ms", "qps"
+    );
+    for (app, dataset) in apps {
+        for scheme in [Scheme::LlamaDistTO, Scheme::Teola] {
+            let run = TraceRun {
+                app,
+                scheme,
+                dataset,
+                core_llm: core.into(),
+                rate,
+                n_queries: n,
+                seed: 0xE2E,
+            };
+            let r = run_trace(&platform, &run)?;
+            println!(
+                "{:<22} {:<14} {:>9.1} {:>9.1} {:>9.1} {:>10.2}",
+                app.name(),
+                scheme.name(),
+                r.summary_ms.mean,
+                r.summary_ms.p50,
+                r.summary_ms.p90,
+                n as f64 / r.wall_s
+            );
+        }
+    }
+    println!("\ne2e serving driver OK — all three layers composed.");
+    platform.shutdown();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: define a workflow, optimize it, serve one query.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::baselines::Scheme;
+use teola::bench::{next_query_id, platform_for};
+use teola::graph::template::QueryConfig;
+use teola::scheduler::Platform;
+use teola::workload::Tokenizer;
+
+fn main() -> teola::Result<()> {
+    // 1. Provision the engines (offline stage ①: embedder + vector DB +
+    //    two instances of the core LLM, all from AOT artifacts).
+    let core = "llm-lite";
+    let mut cfg = platform_for(AppKind::DocQaNaive, core);
+    cfg.warm = false;
+    let platform = Platform::start(&cfg)?;
+    println!("platform up: engines ready");
+
+    // 2. A user query: documents + question (tokenized by the demo
+    //    word-hash tokenizer).
+    let tok = Tokenizer::new(platform.manifest.vocab);
+    let docs = [
+        "teola orchestrates llm applications with primitive level dataflow graphs",
+        "the graph optimizer prunes dependencies and splits prefill into partial prefills",
+        "topology aware batching fuses primitives from multiple queries by depth",
+        "the runtime executes aot compiled xla artifacts on the pjrt cpu client",
+    ];
+    let q = QueryConfig {
+        question: tok.encode("how does teola optimize end to end latency"),
+        doc_chunks: docs.iter().map(|d| tok.encode(d)).collect(),
+        top_k: 2,
+        expansion: 2,
+        answer_tokens: 16,
+        seed: 1,
+    };
+
+    // 3. Build the template, construct the p-graph, run the optimization
+    //    passes, and execute the e-graph (online stages ② ③ ④).
+    let mut template = AppKind::DocQaNaive.template(core);
+    bind_answer_tokens(&mut template, q.answer_tokens);
+    let egraph = Scheme::Teola.build(&template, &q, &platform.profiles)?;
+    println!(
+        "e-graph: {} primitives, critical path {}",
+        egraph.len(),
+        egraph.critical_path_len()
+    );
+
+    let t0 = std::time::Instant::now();
+    let (answer, metrics) = platform.run_query(next_query_id(), egraph)?;
+    println!(
+        "answer tokens: {}",
+        tok.decode(&answer.flat_tokens())
+    );
+    println!(
+        "latency {:.1} ms | engine ops {} | queue {:.1} ms | exec {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1000.0,
+        metrics.n_engine_ops,
+        metrics.queue_us as f64 / 1000.0,
+        metrics.exec_us as f64 / 1000.0
+    );
+
+    platform.shutdown();
+    Ok(())
+}

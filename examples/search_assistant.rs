@@ -1,0 +1,47 @@
+//! Search-engine-empowered assistant (Fig. 2a): a proxy model drafts a
+//! heuristic answer, a judge decides whether to search the web, and the
+//! core LLM synthesizes — comparing Teola against module-sequential
+//! execution on the same query.
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::baselines::Scheme;
+use teola::bench::{next_query_id, platform_for};
+use teola::graph::template::QueryConfig;
+use teola::scheduler::Platform;
+use teola::workload::Tokenizer;
+
+fn main() -> teola::Result<()> {
+    let core = "llm-small";
+    let mut cfg = platform_for(AppKind::SearchGen, core);
+    cfg.warm = false;
+    let platform = Platform::start(&cfg)?;
+    let tok = Tokenizer::new(platform.manifest.vocab);
+
+    let q = QueryConfig {
+        question: tok.encode("what changed in the latest orchestration framework release"),
+        doc_chunks: vec![],
+        top_k: 4,
+        expansion: 1,
+        answer_tokens: 20,
+        seed: 99,
+    };
+
+    let mut template = AppKind::SearchGen.template(core);
+    bind_answer_tokens(&mut template, q.answer_tokens);
+
+    for scheme in [Scheme::LlamaDistTO, Scheme::Teola] {
+        platform.set_policy(scheme.policy());
+        let egraph = scheme.build(&template, &q, &platform.profiles)?;
+        let t0 = std::time::Instant::now();
+        let (answer, m) = platform.run_query(next_query_id(), egraph)?;
+        println!(
+            "{:<14} {:>8.1} ms  ({} engine ops)  answer: {}",
+            scheme.name(),
+            t0.elapsed().as_secs_f64() * 1000.0,
+            m.n_engine_ops,
+            tok.decode(&answer.flat_tokens()[..8.min(answer.flat_tokens().len())])
+        );
+    }
+    platform.shutdown();
+    Ok(())
+}

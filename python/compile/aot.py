@@ -1,0 +1,274 @@
+"""AOT pipeline: lower every (variant, op, bucket) to HLO text + weights.
+
+Emits into ``artifacts/``:
+  * ``<variant>__<op>__b<B>[_c<C>].hlo.txt`` — HLO *text* (NOT a serialized
+    HloModuleProto: jax >= 0.5 emits 64-bit instruction ids which the
+    xla_extension 0.5.1 proto parser rejects; the text parser reassigns
+    ids and round-trips cleanly — see /opt/xla-example/README.md).
+  * ``<variant>.weights.bin`` — TWB1 tensors in AOT parameter order.
+  * ``manifest.json`` — machine-readable index the Rust loader consumes.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, weights as W
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _weight_specs(schema):
+    return tuple(_spec(shape) for _, shape in schema)
+
+
+def _entry(name, op, variant, inputs, outputs):
+    """Manifest entry. inputs/outputs: list of (name, shape, dtype-str)."""
+    return {
+        "artifact": name,
+        "op": op,
+        "variant": variant,
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in inputs
+        ],
+        "outputs": [
+            {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in outputs
+        ],
+    }
+
+
+def lower_llm(cfg: configs.LlmConfig, outdir: str, manifest: dict, quick: bool):
+    schema = model.llm_weight_schema(cfg)
+    wspecs = _weight_specs(schema)
+    v, s = cfg.vocab, cfg.max_seq
+    n_weights = len(schema)
+
+    buckets = configs.prefill_buckets()
+    dbatches = configs.DECODE_BATCHES
+    if quick:
+        buckets = [(1, 16), (2, 32)]
+        dbatches = [1, 2]
+
+    for batch, chunk in buckets:
+        name = configs.artifact_name(cfg.name, "prefill", batch, chunk)
+        kv_shape = model.kv_cache_shape(cfg, batch)
+
+        def fn(weights, tokens, kv, offsets, lengths):
+            return model.llm_prefill(cfg, weights, tokens, kv, offsets, lengths)
+
+        lowered = jax.jit(fn).lower(
+            wspecs,
+            _spec((batch, chunk), I32),
+            _spec(kv_shape),
+            _spec((batch,), I32),
+            _spec((batch,), I32),
+        )
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            _entry(
+                name,
+                "prefill",
+                cfg.name,
+                [
+                    ("tokens", (batch, chunk), "i32"),
+                    ("kv", kv_shape, "f32"),
+                    ("offsets", (batch,), "i32"),
+                    ("lengths", (batch,), "i32"),
+                ],
+                [
+                    ("kv", kv_shape, "f32"),
+                    ("last_logits", (batch, v), "f32"),
+                    ("next_token", (batch,), "i32"),
+                ],
+            )
+            | {"n_weights": n_weights, "batch": batch, "chunk": chunk}
+        )
+        print(f"  wrote {name}", flush=True)
+
+    for batch in dbatches:
+        name = configs.artifact_name(cfg.name, "decode", batch)
+        kv_shape = model.kv_cache_shape(cfg, batch)
+
+        def fn(weights, tokens, kv, positions):
+            return model.llm_decode(cfg, weights, tokens, kv, positions)
+
+        lowered = jax.jit(fn).lower(
+            wspecs,
+            _spec((batch,), I32),
+            _spec(kv_shape),
+            _spec((batch,), I32),
+        )
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            _entry(
+                name,
+                "decode",
+                cfg.name,
+                [
+                    ("tokens", (batch,), "i32"),
+                    ("kv", kv_shape, "f32"),
+                    ("positions", (batch,), "i32"),
+                ],
+                [
+                    ("kv", kv_shape, "f32"),
+                    ("logits", (batch, v), "f32"),
+                    ("next_token", (batch,), "i32"),
+                ],
+            )
+            | {"n_weights": n_weights, "batch": batch}
+        )
+        print(f"  wrote {name}", flush=True)
+
+
+def lower_encoder(cfg: configs.EncoderConfig, outdir: str, manifest: dict, quick: bool):
+    schema = model.encoder_weight_schema(cfg)
+    wspecs = _weight_specs(schema)
+    t = cfg.max_seq
+    n_weights = len(schema)
+    batches = configs.ENCODER_BATCHES if not quick else [1, 4]
+
+    for batch in batches:
+        name = configs.artifact_name(cfg.name, cfg.head, batch)
+        if cfg.head == "embed":
+
+            def fn(weights, tokens, mask):
+                return (model.embed_forward(cfg, weights, tokens, mask),)
+
+            out_sig = [("embeddings", (batch, cfg.d_model), "f32")]
+        else:
+
+            def fn(weights, tokens, mask):
+                return (model.rerank_forward(cfg, weights, tokens, mask),)
+
+            out_sig = [("scores", (batch,), "f32")]
+
+        lowered = jax.jit(fn).lower(
+            wspecs, _spec((batch, t), I32), _spec((batch, t))
+        )
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append(
+            _entry(
+                name,
+                cfg.head,
+                cfg.name,
+                [("tokens", (batch, t), "i32"), ("mask", (batch, t), "f32")],
+                out_sig,
+            )
+            | {"n_weights": n_weights, "batch": batch}
+        )
+        print(f"  wrote {name}", flush=True)
+
+
+def write_weights(outdir: str, manifest: dict):
+    for i, (vname, cfg) in enumerate(configs.LLM_VARIANTS.items()):
+        schema = model.llm_weight_schema(cfg)
+        arrays = W.init_weights(schema, seed=1000 + i)
+        W.save_weights(os.path.join(outdir, f"{vname}.weights.bin"), schema, arrays)
+        manifest["models"][vname] = {
+            "kind": "llm",
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "weights": f"{vname}.weights.bin",
+            "n_weights": len(schema),
+        }
+        print(f"  weights {vname} ({len(schema)} tensors)", flush=True)
+    for i, (vname, cfg) in enumerate(configs.ENCODER_VARIANTS.items()):
+        schema = model.encoder_weight_schema(cfg)
+        arrays = W.init_weights(schema, seed=2000 + i)
+        W.save_weights(os.path.join(outdir, f"{vname}.weights.bin"), schema, arrays)
+        manifest["models"][vname] = {
+            "kind": cfg.head,
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "weights": f"{vname}.weights.bin",
+            "n_weights": len(schema),
+        }
+        print(f"  weights {vname} ({len(schema)} tensors)", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="small bucket subset for CI/tests"
+    )
+    ap.add_argument(
+        "--variants",
+        default="",
+        help="comma-separated LLM variant subset (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": 1,
+        "vocab": configs.VOCAB,
+        "special_tokens": {
+            "pad": configs.PAD_ID,
+            "bos": configs.BOS_ID,
+            "eos": configs.EOS_ID,
+            "sep": configs.SEP_ID,
+        },
+        "models": {},
+        "artifacts": [],
+    }
+
+    write_weights(args.out, manifest)
+
+    llm_names = (
+        [v for v in args.variants.split(",") if v]
+        if args.variants
+        else list(configs.LLM_VARIANTS)
+    )
+    for vname in llm_names:
+        print(f"lowering {vname} ...", flush=True)
+        lower_llm(configs.LLM_VARIANTS[vname], args.out, manifest, args.quick)
+    for vname, cfg in configs.ENCODER_VARIANTS.items():
+        print(f"lowering {vname} ...", flush=True)
+        lower_encoder(cfg, args.out, manifest, args.quick)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Model-variant configurations and AOT bucket grids.
+
+Single source of truth shared by model.py, aot.py and the pytest suite.
+The Rust side consumes the same information through artifacts/manifest.json
+written by aot.py.
+
+The paper deploys gemma-2-2B / llama-2-7B / llama-2-13B / llama-30B plus a
+bge-large embedder and bge-reranker on 3090/A800 GPUs.  We substitute tiny
+decoder/encoder transformers whose *relative* costs preserve the paper's
+ordering (lite < small < medium < large); absolute latency realism comes
+from running the real lowered HLO on the PJRT CPU client.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# ---------------------------------------------------------------------------
+# Token conventions (shared with rust/src/workload/tokenizer.rs)
+# ---------------------------------------------------------------------------
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+SEP_ID = 3  # structured-output separator used by splittable decodes
+VOCAB = 2048
+
+
+@dataclass(frozen=True)
+class LlmConfig:
+    """Decoder-only LLM variant."""
+
+    name: str
+    layers: int
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    vocab: int = VOCAB
+    max_seq: int = 256  # KV-cache capacity S
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder used for the embedding model and the cross-encoder reranker."""
+
+    name: str
+    layers: int
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    vocab: int = VOCAB
+    max_seq: int = 64  # input sequence length (padded)
+    # "embed": mean-pool + l2-normalise -> [B, d_model]
+    # "score": CLS head -> [B] relevance scores
+    head: str = "embed"
+
+
+# ---------------------------------------------------------------------------
+# Variants (paper model -> our analog)
+# ---------------------------------------------------------------------------
+LLM_VARIANTS = {
+    # gemma-2-2B analog: contextualization / lightweight LLM
+    "llm-lite": LlmConfig("llm-lite", layers=2),
+    # llama-2-7B analog: proxy/judge + small core LLM
+    "llm-small": LlmConfig("llm-small", layers=4),
+    # llama-2-13B analog
+    "llm-medium": LlmConfig("llm-medium", layers=6),
+    # llama-30B analog
+    "llm-large": LlmConfig("llm-large", layers=8),
+}
+
+ENCODER_VARIANTS = {
+    # bge-large-en-v1.5 analog
+    "embedder": EncoderConfig("embedder", layers=2, max_seq=64, head="embed"),
+    # bge-reranker-large analog (query+chunk pair packed into one sequence)
+    "reranker": EncoderConfig("reranker", layers=2, max_seq=128, head="score"),
+}
+
+# ---------------------------------------------------------------------------
+# AOT bucket grids: every (variant, op, batch, chunk) tuple here becomes one
+# artifacts/<variant>__<op>__b<B>[_c<C>].hlo.txt executable.
+# ---------------------------------------------------------------------------
+PREFILL_BATCHES: List[int] = [1, 2, 4]
+PREFILL_CHUNKS: List[int] = [16, 32, 64, 128]
+# Single-shot full-prefill buckets for the baselines plus the exact-size
+# buckets Table 3 needs so decomposed-vs-single comparisons compute the
+# same number of (unpadded) tokens on both paths.
+PREFILL_FULL: List[Tuple[int, int]] = [(1, 48), (1, 160), (1, 192), (1, 256)]
+DECODE_BATCHES: List[int] = [1, 2, 4, 8]
+ENCODER_BATCHES: List[int] = [1, 4, 8, 16]
+
+
+def prefill_buckets() -> List[Tuple[int, int]]:
+    out = [(b, c) for b in PREFILL_BATCHES for c in PREFILL_CHUNKS]
+    out.extend(PREFILL_FULL)
+    return out
+
+
+def artifact_name(variant: str, op: str, batch: int, chunk: int | None = None) -> str:
+    if chunk is None:
+        return f"{variant}__{op}__b{batch}"
+    return f"{variant}__{op}__b{batch}_c{chunk}"

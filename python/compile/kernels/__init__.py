@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lower into the AOT HLO)."""
+
+from .attention import flash_attention
+from .pooling import masked_mean_pool
+
+__all__ = ["flash_attention", "masked_mean_pool"]

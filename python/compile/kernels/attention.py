@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: tiled attention with offset causal masking.
+
+This is the compute hot-spot of the paper's decomposed LLM prefilling
+(Table 2: Prefilling / Partial Prefilling / Full Prefilling).  A chunk of C
+new tokens, whose first token sits at absolute position ``offset[b]`` in
+sequence ``b``, attends against the full KV cache (which already contains
+the chunk's own keys/values at ``[offset, offset+C)``).
+
+Hardware adaptation (paper targets CUDA warps/tensor-cores via vLLM):
+  * threadblock-per-(batch, head, q-tile)  ->  Pallas grid (B*H, C/block_q)
+  * shared-memory K/V staging             ->  VMEM blocks via BlockSpec
+  * warp-level online softmax             ->  running (m, l, acc) over KV
+    tiles, the flash-attention scheme, with MXU-shaped [tile, Dh] matmuls
+  * CUDA masking predicates               ->  broadcasted_iota masks with a
+    per-row offset
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO and the same code path is
+executed by the Rust runtime.  VMEM/MXU estimates for a real TPU are in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV tile width of the online-softmax loop.  S (=256) must be a multiple.
+DEFAULT_BLOCK_K = 128
+# Q tile height.  C must be a multiple (or equal) for every prefill bucket.
+DEFAULT_BLOCK_Q = 16
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head, q-tile) program: flash-style attention over KV tiles.
+
+    off_ref: [1]        i32, absolute position of the chunk's first token
+    q_ref:   [1, Bq, D] f32, query tile
+    k_ref:   [1, S,  D] f32, full key cache row for this (b, h)
+    v_ref:   [1, S,  D] f32, full value cache row
+    o_ref:   [1, Bq, D] f32, output tile
+    """
+    qi = pl.program_id(1)
+    block_q = q_ref.shape[1]
+    head_dim = q_ref.shape[2]
+    seq = k_ref.shape[1]
+
+    offset = off_ref[0]
+    q = q_ref[0, :, :] * scale  # [Bq, D]
+
+    # Absolute positions of the queries in this tile.
+    q_pos = offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    # Running accumulators of the online softmax.
+    m = jnp.full((block_q, 1), _NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+
+    # Static trip count -> unrolled at trace time (interpret mode friendly).
+    for kv_start in range(0, seq, block_k):
+        k_tile = k_ref[0, kv_start : kv_start + block_k, :]  # [Bk, D]
+        v_tile = v_ref[0, kv_start : kv_start + block_k, :]  # [Bk, D]
+
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32)  # [Bq, Bk]
+
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kv_pos <= q_pos  # causal w.r.t. absolute positions
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # [Bq, Bk]
+        alpha = jnp.exp(m - m_new)  # [Bq, 1]
+        l = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        m = m_new
+
+    o_ref[0, :, :] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    offsets: jax.Array,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Chunked causal attention against a pre-populated KV cache.
+
+    Args:
+      q:       [B, H, C, D] chunk queries.
+      k, v:    [B, H, S, D] full KV cache (chunk keys already written).
+      offsets: [B] int32 absolute position of each row's chunk start.
+    Returns:
+      [B, H, C, D] attention outputs for the chunk.
+    """
+    batch, heads, chunk, head_dim = q.shape
+    seq = k.shape[2]
+    if chunk < block_q:
+        block_q = chunk
+    if seq < block_k:
+        block_k = seq
+    assert chunk % block_q == 0, (chunk, block_q)
+    assert seq % block_k == 0, (seq, block_k)
+
+    scale = 1.0 / (head_dim**0.5)
+    bh = batch * heads
+    q_r = q.reshape(bh, chunk, head_dim)
+    k_r = k.reshape(bh, seq, head_dim)
+    v_r = v.reshape(bh, seq, head_dim)
+    # One offset per (batch*head) program, derived from the per-batch offsets.
+    off_r = jnp.repeat(offsets.astype(jnp.int32), heads)
+
+    grid = (bh, chunk // block_q)
+    kernel = functools.partial(_attn_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (b,)),
+            pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, chunk, head_dim), jnp.float32),
+        interpret=True,
+    )(off_r, q_r, k_r, v_r)
+    return out.reshape(batch, heads, chunk, head_dim)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: fused masked mean-pool + L2 normalisation.
+
+The embedding engine's post-transformer step (bge-style sentence
+embeddings).  Fusing pool + normalise keeps the [B, T, D] activations in
+VMEM for a single pass instead of two HBM round-trips.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-6
+
+
+def _pool_kernel(x_ref, mask_ref, o_ref):
+    """One batch-row program.
+
+    x_ref:    [1, T, D] f32 token activations
+    mask_ref: [1, T]    f32 validity mask (1.0 for real tokens)
+    o_ref:    [1, D]    f32 normalised sentence embedding
+    """
+    x = x_ref[0, :, :]  # [T, D]
+    mask = mask_ref[0, :]  # [T]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pooled = jnp.sum(x * mask[:, None], axis=0) / denom  # [D]
+    norm = jnp.sqrt(jnp.sum(pooled * pooled) + _EPS)
+    o_ref[0, :] = pooled / norm
+
+
+@jax.jit
+def masked_mean_pool(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked mean-pool over tokens, then L2-normalise.
+
+    Args:
+      x:    [B, T, D] token activations.
+      mask: [B, T] float mask (1.0 = valid token).
+    Returns:
+      [B, D] unit-norm embeddings.
+    """
+    batch, t, d = x.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d), jnp.float32),
+        interpret=True,
+    )(x, mask.astype(jnp.float32))

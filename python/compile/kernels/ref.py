@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against.
+They are deliberately written in the most direct way possible (materialised
+score matrix, no tiling) so any disagreement implicates the kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+_EPS = 1e-6
+
+
+def attention_ref(q, k, v, offsets):
+    """Reference chunked causal attention.
+
+    q: [B, H, C, D]; k, v: [B, H, S, D]; offsets: [B] i32.
+    Query i of row b (absolute position offsets[b]+i) attends to cache
+    positions j <= offsets[b]+i.
+    """
+    batch, heads, chunk, head_dim = q.shape
+    seq = k.shape[2]
+    scale = 1.0 / (head_dim**0.5)
+
+    s = jnp.einsum("bhcd,bhsd->bhcs", q, k) * scale  # [B, H, C, S]
+    q_pos = offsets[:, None] + jnp.arange(chunk)[None, :]  # [B, C]
+    kv_pos = jnp.arange(seq)  # [S]
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # [B, C, S]
+    s = jnp.where(mask[:, None, :, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhcs,bhsd->bhcd", p, v)
+
+
+def masked_mean_pool_ref(x, mask):
+    """Reference masked mean-pool + L2 normalise. x: [B,T,D]; mask: [B,T]."""
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / denom
+    norm = jnp.sqrt(jnp.sum(pooled * pooled, axis=1, keepdims=True) + _EPS)
+    return pooled / norm

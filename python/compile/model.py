@@ -1,0 +1,294 @@
+"""L2 JAX models: decoder LLM (prefill/decode), encoder embedder, reranker.
+
+All forward functions take a flat *tuple* of weight arrays as their first
+argument so that the lowered HLO's parameter order is exactly
+``weights + activations`` — the Rust runtime uploads the weights once as
+device-resident PjRtBuffers and threads them into every `execute_b` call.
+
+The decoder supports the paper's decomposed prefilling (§4.2 Pass 3):
+``llm_prefill`` consumes a *chunk* of tokens whose first token sits at a
+per-row ``offset`` into an existing KV cache, computing attention of the
+chunk against ``cache[:offset] ∪ chunk`` with an offset causal mask (the L1
+Pallas kernel).  Partial Prefilling == calling it with offset>0 on a cache
+populated by an earlier call; Full Prefilling == the final such call.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import EncoderConfig, LlmConfig
+from .kernels.attention import flash_attention
+from .kernels.pooling import masked_mean_pool
+
+_LN_EPS = 1e-5
+
+# ---------------------------------------------------------------------------
+# Weight schemas.  The *order* of these lists is the AOT parameter order and
+# is mirrored in artifacts/manifest.json for the Rust loader.
+# ---------------------------------------------------------------------------
+
+_LAYER_TENSORS = [
+    ("ln1_scale", "d"),
+    ("ln1_bias", "d"),
+    ("wqkv", "d,3d"),
+    ("bqkv", "3d"),
+    ("wo", "d,d"),
+    ("bo", "d"),
+    ("ln2_scale", "d"),
+    ("ln2_bias", "d"),
+    ("w1", "d,f"),
+    ("b1", "f"),
+    ("w2", "f,d"),
+    ("b2", "d"),
+]
+
+
+def _dims(spec: str, d: int, f: int, v: int, s: int) -> Tuple[int, ...]:
+    lut = {"d": d, "3d": 3 * d, "f": f, "v": v, "s": s}
+    return tuple(lut[tok] for tok in spec.split(","))
+
+
+def llm_weight_schema(cfg: LlmConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) list in AOT parameter order for an LLM variant."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+    out = [
+        ("tok_embed", (v, d)),
+        ("pos_embed", (s, d)),
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+    ]
+    for layer in range(cfg.layers):
+        for name, spec in _LAYER_TENSORS:
+            out.append((f"layer{layer}.{name}", _dims(spec, d, f, v, s)))
+    return out
+
+
+def encoder_weight_schema(cfg: EncoderConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+    out = [
+        ("tok_embed", (v, d)),
+        ("pos_embed", (s, d)),
+    ]
+    for layer in range(cfg.layers):
+        for name, spec in _LAYER_TENSORS:
+            out.append((f"layer{layer}.{name}", _dims(spec, d, f, v, s)))
+    if cfg.head == "score":
+        out.append(("w_score", (d, 1)))
+        out.append(("b_score", (1,)))
+    return out
+
+
+def kv_cache_shape(cfg: LlmConfig, batch: int) -> Tuple[int, ...]:
+    """[L, 2, B, H, S, Dh] — the KV cache threaded through prefill/decode."""
+    return (cfg.layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Shared blocks
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + _LN_EPS) * scale + bias
+
+
+def _mlp(x, w1, b1, w2, b2):
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, w1) + b1), w2) + b2
+
+
+def _split_heads(x, heads, head_dim):
+    # [B, T, d] -> [B, H, T, Dh]
+    b, t, _ = x.shape
+    return x.reshape(b, t, heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # [B, H, T, Dh] -> [B, T, d]
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _layer_weights(weights, base: int, layer: int):
+    """Slice one layer's 12 tensors out of the flat weight tuple."""
+    i = base + layer * len(_LAYER_TENSORS)
+    return weights[i : i + len(_LAYER_TENSORS)]
+
+
+# ---------------------------------------------------------------------------
+# Decoder LLM
+# ---------------------------------------------------------------------------
+
+
+def llm_prefill(cfg: LlmConfig, weights, tokens, kv, offsets, lengths):
+    """Chunked (partial/full) prefill.
+
+    Args:
+      weights: flat tuple per ``llm_weight_schema``.
+      tokens:  [B, C] int32 chunk tokens (padded rows allowed).
+      kv:      [L, 2, B, H, S, Dh] f32 existing cache (zeros on first call).
+      offsets: [B] int32 absolute position of each row's chunk start.
+      lengths: [B] int32 valid token count per row (<= C).
+    Returns:
+      (kv', last_logits[B, V], next_token[B]) — logits/argmax at each row's
+      final valid position.
+    """
+    tok_embed, pos_embed = weights[0], weights[1]
+    lnf_scale, lnf_bias = weights[2], weights[3]
+    batch, chunk = tokens.shape
+    heads, head_dim, seq = cfg.n_heads, cfg.head_dim, cfg.max_seq
+
+    positions = offsets[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    x = tok_embed[tokens] + pos_embed[jnp.clip(positions, 0, seq - 1)]
+
+    # One-hot scatter of the chunk into the cache: [B, C, S], zero for padded
+    # positions so stale cache contents survive short rows.
+    valid = (jnp.arange(chunk)[None, :] < lengths[:, None]).astype(jnp.float32)
+    onehot = (
+        jax.nn.one_hot(jnp.clip(positions, 0, seq - 1), seq, dtype=jnp.float32)
+        * valid[:, :, None]
+    )
+    keep = 1.0 - jnp.sum(onehot, axis=1)  # [B, S] zero where overwritten
+
+    new_kv = []
+    for layer in range(cfg.layers):
+        (ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2) = (
+            _layer_weights(weights, 4, layer)
+        )
+        h = _layer_norm(x, ln1_s, ln1_b)
+        qkv = jnp.dot(h, wqkv) + bqkv  # [B, C, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, heads, head_dim)  # [B, H, C, Dh]
+        k = _split_heads(k, heads, head_dim)
+        v = _split_heads(v, heads, head_dim)
+
+        k_cache = kv[layer, 0] * keep[:, None, :, None] + jnp.einsum(
+            "bcs,bhcd->bhsd", onehot, k
+        )
+        v_cache = kv[layer, 1] * keep[:, None, :, None] + jnp.einsum(
+            "bcs,bhcd->bhsd", onehot, v
+        )
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+
+        attn = flash_attention(q, k_cache, v_cache, offsets)  # L1 kernel
+        x = x + jnp.dot(_merge_heads(attn), wo) + bo
+        x = x + _mlp(_layer_norm(x, ln2_s, ln2_b), w1, b1, w2, b2)
+
+    h = _layer_norm(x, lnf_scale, lnf_bias)
+    logits = jnp.dot(h, tok_embed.T)  # tied head: [B, C, V]
+    last_idx = jnp.clip(lengths - 1, 0, chunk - 1)
+    last_logits = logits[jnp.arange(batch), last_idx]  # [B, V]
+    next_token = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(new_kv), last_logits, next_token
+
+
+def llm_decode(cfg: LlmConfig, weights, tokens, kv, positions):
+    """Single autoregressive decode step.
+
+    Args:
+      tokens:    [B] int32 current tokens.
+      kv:        [L, 2, B, H, S, Dh] cache.
+      positions: [B] int32 absolute position of `tokens`.
+    Returns:
+      (kv', logits[B, V], next_token[B]).
+    """
+    tok_embed, pos_embed = weights[0], weights[1]
+    lnf_scale, lnf_bias = weights[2], weights[3]
+    batch = tokens.shape[0]
+    heads, head_dim, seq = cfg.n_heads, cfg.head_dim, cfg.max_seq
+
+    x = tok_embed[tokens] + pos_embed[jnp.clip(positions, 0, seq - 1)]  # [B, d]
+    onehot = jax.nn.one_hot(jnp.clip(positions, 0, seq - 1), seq, dtype=jnp.float32)
+    kv_pos = jnp.arange(seq, dtype=jnp.int32)
+    mask = (kv_pos[None, :] <= positions[:, None])[:, None, None, :]  # [B,1,1,S]
+    scale = 1.0 / (head_dim**0.5)
+
+    new_kv = []
+    for layer in range(cfg.layers):
+        (ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2) = (
+            _layer_weights(weights, 4, layer)
+        )
+        h = _layer_norm(x, ln1_s, ln1_b)
+        qkv = jnp.dot(h, wqkv) + bqkv  # [B, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(batch, heads, 1, head_dim)
+        k = k.reshape(batch, heads, 1, head_dim)
+        v = v.reshape(batch, heads, 1, head_dim)
+
+        k_cache = kv[layer, 0] * (1.0 - onehot)[:, None, :, None] + jnp.einsum(
+            "bs,bhd->bhsd", onehot, k[:, :, 0, :]
+        )
+        v_cache = kv[layer, 1] * (1.0 - onehot)[:, None, :, None] + jnp.einsum(
+            "bs,bhd->bhsd", onehot, v[:, :, 0, :]
+        )
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+
+        # Memory-bound matvec attention: plain jnp (no kernel benefit at Tq=1).
+        s = jnp.einsum("bhqd,bhsd->bhqs", q, k_cache) * scale
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqs,bhsd->bhqd", p, v_cache)  # [B, H, 1, Dh]
+        x = x + jnp.dot(attn.transpose(0, 2, 1, 3).reshape(batch, -1), wo) + bo
+        x = x + _mlp(_layer_norm(x, ln2_s, ln2_b), w1, b1, w2, b2)
+
+    h = _layer_norm(x, lnf_scale, lnf_bias)
+    logits = jnp.dot(h, tok_embed.T)  # [B, V]
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(new_kv), logits, next_token
+
+
+# ---------------------------------------------------------------------------
+# Encoders (embedder / reranker)
+# ---------------------------------------------------------------------------
+
+
+def _encoder_trunk(cfg: EncoderConfig, weights, tokens, mask):
+    """Bidirectional transformer trunk -> [B, T, d] activations."""
+    tok_embed, pos_embed = weights[0], weights[1]
+    batch, t = tokens.shape
+    heads = cfg.n_heads
+    head_dim = cfg.d_model // cfg.n_heads
+    scale = 1.0 / (head_dim**0.5)
+
+    x = tok_embed[tokens] + pos_embed[jnp.arange(t)][None, :, :]
+    attn_mask = (mask[:, None, None, :] > 0.5)  # [B,1,1,T]
+
+    for layer in range(cfg.layers):
+        (ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2) = (
+            _layer_weights(weights, 2, layer)
+        )
+        h = _layer_norm(x, ln1_s, ln1_b)
+        qkv = jnp.dot(h, wqkv) + bqkv
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, heads, head_dim)
+        k = _split_heads(k, heads, head_dim)
+        v = _split_heads(v, heads, head_dim)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        s = jnp.where(attn_mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        x = x + jnp.dot(_merge_heads(attn), wo) + bo
+        x = x + _mlp(_layer_norm(x, ln2_s, ln2_b), w1, b1, w2, b2)
+    return x
+
+
+def embed_forward(cfg: EncoderConfig, weights, tokens, mask):
+    """Sentence embeddings: trunk -> fused masked-mean-pool + L2 (L1 kernel).
+
+    tokens: [B, T] int32; mask: [B, T] f32.  Returns [B, d] unit vectors.
+    """
+    x = _encoder_trunk(cfg, weights, tokens, mask)
+    return masked_mean_pool(x, mask)
+
+
+def rerank_forward(cfg: EncoderConfig, weights, tokens, mask):
+    """Cross-encoder relevance scores from the CLS (position 0) state.
+
+    tokens: [B, T] packed ``query SEP chunk`` pairs.  Returns [B] scores.
+    """
+    w_score, b_score = weights[-2], weights[-1]
+    x = _encoder_trunk(cfg, weights, tokens, mask)
+    return (jnp.dot(x[:, 0, :], w_score) + b_score)[:, 0]

@@ -1,0 +1,85 @@
+"""Seeded weight initialisation and the TWB1 binary weight format.
+
+The Rust runtime (rust/src/runtime/weights.rs) reads the same format:
+
+    magic   b"TWB1"
+    u32 LE  tensor count N
+    N times:
+        u32 LE  name length, then name bytes (utf-8)
+        u32 LE  dtype (0 = f32)
+        u32 LE  ndim, then ndim x u32 LE dims
+        raw little-endian payload (prod(dims) * 4 bytes)
+
+Tensors appear in the file in exact AOT parameter order.
+"""
+
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+MAGIC = b"TWB1"
+DTYPE_F32 = 0
+
+
+def init_weights(
+    schema: List[Tuple[str, Tuple[int, ...]]], seed: int
+) -> List[np.ndarray]:
+    """Deterministic scaled-gaussian init per tensor.
+
+    Norm scales/biases get (1, 0); everything else N(0, 1/sqrt(fan_in)).
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in schema:
+        base = name.rsplit(".", 1)[-1]
+        if base.endswith("_scale"):
+            arr = np.ones(shape, dtype=np.float32)
+        elif base.endswith("_bias") or base.startswith("b"):
+            arr = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            arr = (
+                rng.standard_normal(shape) / np.sqrt(fan_in)
+            ).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+def save_weights(
+    path: str, schema: List[Tuple[str, Tuple[int, ...]]], arrays: List[np.ndarray]
+) -> None:
+    assert len(schema) == len(arrays)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(arrays)))
+        for (name, shape), arr in zip(schema, arrays):
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            assert arr.dtype == np.float32
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", DTYPE_F32))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_weights(path: str) -> List[Tuple[str, np.ndarray]]:
+    """Inverse of save_weights (used by the pytest suite)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (dtype,) = struct.unpack("<I", f.read(4))
+            assert dtype == DTYPE_F32
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out.append((name, arr))
+    return out

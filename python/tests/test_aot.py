@@ -1,0 +1,99 @@
+"""AOT pipeline sanity: manifest structure, weight files, HLO lowering.
+
+Runs the quick-bucket AOT into a temp dir and validates everything the Rust
+loader depends on (parameter ordering, shapes, TWB1 round-trip).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.weights import init_weights, load_weights, save_weights
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_weight_roundtrip(tmp_path):
+    cfg = configs.LlmConfig("tiny", layers=1, d_model=32, n_heads=2, d_ff=64,
+                            vocab=64, max_seq=16)
+    schema = model.llm_weight_schema(cfg)
+    arrays = init_weights(schema, seed=9)
+    path = str(tmp_path / "w.bin")
+    save_weights(path, schema, arrays)
+    back = load_weights(path)
+    assert [n for n, _ in back] == [n for n, _ in schema]
+    for (_, a), b in zip(back, arrays):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_weight_init_deterministic():
+    cfg = configs.ENCODER_VARIANTS["embedder"]
+    schema = model.encoder_weight_schema(cfg)
+    a = init_weights(schema, seed=5)
+    b = init_weights(schema, seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = init_weights(schema, seed=6)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_llm_schema_order_stable():
+    cfg = configs.LLM_VARIANTS["llm-lite"]
+    schema = model.llm_weight_schema(cfg)
+    names = [n for n, _ in schema]
+    assert names[:4] == ["tok_embed", "pos_embed", "lnf_scale", "lnf_bias"]
+    assert names[4] == "layer0.ln1_scale"
+    assert len(schema) == 4 + 12 * cfg.layers
+
+
+def test_prefill_bucket_grid():
+    buckets = configs.prefill_buckets()
+    assert (1, 16) in buckets and (4, 128) in buckets and (1, 256) in buckets
+    assert len(set(buckets)) == len(buckets)
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", out, "--quick",
+         "--variants", "llm-lite"],
+        cwd=os.path.join(REPO, "python"),
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_structure(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["format"] == 1
+    assert m["special_tokens"]["sep"] == configs.SEP_ID
+    assert "llm-lite" in m["models"]
+    assert m["models"]["llm-lite"]["kind"] == "llm"
+    arts = {a["artifact"]: a for a in m["artifacts"]}
+    pf = arts["llm-lite__prefill__b1_c16"]
+    assert pf["n_weights"] == 4 + 12 * configs.LLM_VARIANTS["llm-lite"].layers
+    assert pf["inputs"][0]["shape"] == [1, 16]
+    assert pf["outputs"][0]["shape"] == list(
+        model.kv_cache_shape(configs.LLM_VARIANTS["llm-lite"], 1))
+    # every referenced file exists
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(quick_artifacts, a["file"])), a["file"]
+    for mm in m["models"].values():
+        assert os.path.exists(os.path.join(quick_artifacts, mm["weights"]))
+
+
+def test_hlo_text_parses_as_module(quick_artifacts):
+    """HLO text must contain a parseable entry computation signature."""
+    path = os.path.join(quick_artifacts, "llm-lite__prefill__b1_c16.hlo.txt")
+    with open(path) as f:
+        head = f.read(4096)
+    assert head.startswith("HloModule")
+    assert "entry_computation_layout" in head

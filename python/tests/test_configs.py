@@ -1,0 +1,68 @@
+"""Configuration/grid invariants shared with the Rust loader."""
+
+import pytest
+
+from compile import configs
+from compile.model import encoder_weight_schema, kv_cache_shape, llm_weight_schema
+
+
+def test_variant_ordering_by_cost():
+    """Relative cost ordering must mirror the paper's model lineup."""
+    layers = [configs.LLM_VARIANTS[v].layers for v in
+              ("llm-lite", "llm-small", "llm-medium", "llm-large")]
+    assert layers == sorted(layers)
+    assert len(set(layers)) == 4
+
+
+def test_head_dim_divides():
+    for cfg in configs.LLM_VARIANTS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_artifact_names_unique():
+    names = set()
+    for v in configs.LLM_VARIANTS:
+        for b, c in configs.prefill_buckets():
+            names.add(configs.artifact_name(v, "prefill", b, c))
+        for b in configs.DECODE_BATCHES:
+            names.add(configs.artifact_name(v, "decode", b))
+    expected = len(configs.LLM_VARIANTS) * (
+        len(configs.prefill_buckets()) + len(configs.DECODE_BATCHES))
+    assert len(names) == expected
+
+
+def test_table3_buckets_present():
+    """Exact-size buckets for the Table 3 splits (16+48, 64+64, 160+32)."""
+    chunks = {c for _, c in configs.prefill_buckets()}
+    for needed in (16, 48, 64, 160, 192, 128):
+        assert needed in chunks, needed
+
+
+def test_kv_cache_shape_matches_schema_dims():
+    cfg = configs.LLM_VARIANTS["llm-small"]
+    shape = kv_cache_shape(cfg, batch=2)
+    assert shape == (cfg.layers, 2, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+@pytest.mark.parametrize("variant", list(configs.LLM_VARIANTS))
+def test_llm_schema_param_count(variant):
+    cfg = configs.LLM_VARIANTS[variant]
+    schema = llm_weight_schema(cfg)
+    assert len(schema) == 4 + 12 * cfg.layers
+    # total params stay modest (tiny-model budget)
+    n_params = sum(
+        int(__import__("numpy").prod(shape)) for _, shape in schema)
+    assert n_params < 5_000_000
+
+
+def test_encoder_schema_heads():
+    emb = encoder_weight_schema(configs.ENCODER_VARIANTS["embedder"])
+    rr = encoder_weight_schema(configs.ENCODER_VARIANTS["reranker"])
+    assert [n for n, _ in rr][-2:] == ["w_score", "b_score"]
+    assert not any(n.startswith("w_score") for n, _ in emb)
+
+
+def test_special_tokens_disjoint():
+    ids = {configs.PAD_ID, configs.BOS_ID, configs.EOS_ID, configs.SEP_ID}
+    assert len(ids) == 4
+    assert all(0 <= i < 4 for i in ids)

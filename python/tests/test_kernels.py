@@ -1,0 +1,137 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, offsets and tile sizes; every example asserts
+allclose against ref.py.  This is the core correctness signal for the
+compute hot-spot that ends up inside every AOT prefill artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.pooling import masked_mean_pool
+from compile.kernels.ref import attention_ref, masked_mean_pool_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@st.composite
+def attn_case(draw):
+    batch = draw(st.sampled_from([1, 2, 4]))
+    heads = draw(st.sampled_from([1, 2, 4]))
+    chunk = draw(st.sampled_from([8, 16, 32, 64]))
+    seq = draw(st.sampled_from([128, 256]))
+    head_dim = draw(st.sampled_from([16, 32]))
+    # offsets leave room for the chunk inside the cache
+    offsets = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=seq - chunk),
+            min_size=batch,
+            max_size=batch,
+        )
+    )
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return batch, heads, chunk, seq, head_dim, offsets, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(attn_case())
+def test_attention_matches_ref(case):
+    batch, heads, chunk, seq, head_dim, offsets, seed = case
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (batch, heads, chunk, head_dim))
+    k = _rand(kk, (batch, heads, seq, head_dim))
+    v = _rand(kv, (batch, heads, seq, head_dim))
+    off = jnp.asarray(offsets, dtype=jnp.int32)
+
+    out = flash_attention(q, k, v, off)
+    ref = attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 64), (16, 128), (32, 128), (64, 256)])
+def test_attention_tile_sizes(block_q, block_k):
+    """Kernel result must be invariant to the tiling schedule."""
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (2, 4, 64, 32))
+    k = _rand(kk, (2, 4, 256, 32))
+    v = _rand(kv, (2, 4, 256, 32))
+    off = jnp.asarray([0, 150], dtype=jnp.int32)
+    out = flash_attention(q, k, v, off, block_q=block_q, block_k=block_k)
+    ref = attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_offset_zero_equals_plain_causal():
+    """offset=0 must reproduce a plain causal self-attention prefill."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    chunk = seq = 128
+    q = _rand(kq, (1, 2, chunk, 32))
+    k = _rand(kk, (1, 2, seq, 32))
+    v = _rand(kv, (1, 2, seq, 32))
+    off = jnp.zeros((1,), dtype=jnp.int32)
+    out = flash_attention(q, k, v, off)
+    ref = attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_ignores_stale_cache_beyond_mask():
+    """Garbage in cache positions > query position must not leak through."""
+    key = jax.random.PRNGKey(11)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (1, 2, 16, 32))
+    k = _rand(kk, (1, 2, 256, 32))
+    v = _rand(kv, (1, 2, 256, 32))
+    off = jnp.asarray([40], dtype=jnp.int32)
+    out1 = flash_attention(q, k, v, off)
+    # poison everything after the last visible position (40 + 15)
+    k2 = k.at[:, :, 56:, :].set(1e4)
+    v2 = v.at[:, :, 56:, :].set(-1e4)
+    out2 = flash_attention(q, k2, v2, off)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.sampled_from([1, 3, 8]),
+    t=st.sampled_from([16, 64]),
+    d=st.sampled_from([32, 128]),
+    valid=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pooling_matches_ref(batch, t, d, valid, seed):
+    valid = min(valid, t)
+    key = jax.random.PRNGKey(seed)
+    x = _rand(key, (batch, t, d))
+    mask = (jnp.arange(t)[None, :] < valid).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (batch, t))
+    out = masked_mean_pool(x, mask)
+    ref = masked_mean_pool_ref(x, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_pooling_unit_norm():
+    key = jax.random.PRNGKey(5)
+    x = _rand(key, (4, 64, 128))
+    mask = jnp.ones((4, 64))
+    out = masked_mean_pool(x, mask)
+    norms = jnp.linalg.norm(out, axis=1)
+    np.testing.assert_allclose(np.asarray(norms), np.ones(4), atol=1e-4)
+
+
+def test_pooling_all_masked_row_is_finite():
+    """A fully-masked row must not produce NaNs (denominator clamp)."""
+    x = jnp.ones((2, 16, 32))
+    mask = jnp.zeros((2, 16))
+    out = masked_mean_pool(x, mask)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,186 @@
+"""L2 model correctness.
+
+The decisive property for the paper's Pass 3 (LLM prefilling split): running
+a prompt through *multiple chunked partial prefills* must produce exactly
+the same logits and KV cache as one monolithic prefill — decomposition may
+cost engine-seconds (Table 3) but never accuracy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.weights import init_weights
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = configs.LlmConfig("test-llm", layers=2, d_model=64, n_heads=2, d_ff=128,
+                        vocab=128, max_seq=64)
+ENC = configs.EncoderConfig("test-enc", layers=2, d_model=64, n_heads=2,
+                            d_ff=128, vocab=128, max_seq=32, head="embed")
+RR = configs.EncoderConfig("test-rr", layers=2, d_model=64, n_heads=2,
+                           d_ff=128, vocab=128, max_seq=32, head="score")
+
+
+@pytest.fixture(scope="module")
+def llm_weights():
+    schema = model.llm_weight_schema(CFG)
+    return tuple(jnp.asarray(a) for a in init_weights(schema, seed=42))
+
+
+@pytest.fixture(scope="module")
+def enc_weights():
+    schema = model.encoder_weight_schema(ENC)
+    return tuple(jnp.asarray(a) for a in init_weights(schema, seed=43))
+
+
+@pytest.fixture(scope="module")
+def rr_weights():
+    schema = model.encoder_weight_schema(RR)
+    return tuple(jnp.asarray(a) for a in init_weights(schema, seed=44))
+
+
+def _zeros_kv(batch):
+    return jnp.zeros(model.kv_cache_shape(CFG, batch), dtype=jnp.float32)
+
+
+def _tok(key, batch, n):
+    return jax.random.randint(key, (batch, n), 4, CFG.vocab, dtype=jnp.int32)
+
+
+def test_single_prefill_logits_finite(llm_weights):
+    toks = _tok(jax.random.PRNGKey(0), 1, 16)
+    kv, logits, nxt = model.llm_prefill(
+        CFG, llm_weights, toks, _zeros_kv(1),
+        jnp.zeros(1, jnp.int32), jnp.full((1,), 16, jnp.int32))
+    assert logits.shape == (1, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert kv.shape == model.kv_cache_shape(CFG, 1)
+
+
+@pytest.mark.parametrize("splits", [[16], [8, 8], [4, 8, 4], [1, 15]])
+def test_chunked_prefill_equals_monolithic(llm_weights, splits):
+    """Partial+full prefill == single full prefill (Pass 3 correctness)."""
+    total = sum(splits)
+    toks = _tok(jax.random.PRNGKey(1), 1, total)
+
+    kv_m, logits_m, next_m = model.llm_prefill(
+        CFG, llm_weights, toks, _zeros_kv(1),
+        jnp.zeros(1, jnp.int32), jnp.full((1,), total, jnp.int32))
+
+    kv = _zeros_kv(1)
+    off = 0
+    for c in splits:
+        chunk = toks[:, off:off + c]
+        kv, logits, nxt = model.llm_prefill(
+            CFG, llm_weights, chunk, kv,
+            jnp.full((1,), off, jnp.int32), jnp.full((1,), c, jnp.int32))
+        off += c
+
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(kv_m), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_m), atol=1e-3, rtol=1e-3)
+    assert int(nxt[0]) == int(next_m[0])
+
+
+def test_decode_equals_prefill_extension(llm_weights):
+    """Prefill(n) + decode(token) must equal Prefill(n+1) logits."""
+    n = 12
+    toks = _tok(jax.random.PRNGKey(2), 1, n + 1)
+
+    kv, _, _ = model.llm_prefill(
+        CFG, llm_weights, toks[:, :n], _zeros_kv(1),
+        jnp.zeros(1, jnp.int32), jnp.full((1,), n, jnp.int32))
+    kv_d, logits_d, next_d = model.llm_decode(
+        CFG, llm_weights, toks[:, n], kv, jnp.full((1,), n, jnp.int32))
+
+    kv_m, logits_m, next_m = model.llm_prefill(
+        CFG, llm_weights, toks, _zeros_kv(1),
+        jnp.zeros(1, jnp.int32), jnp.full((1,), n + 1, jnp.int32))
+
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(logits_m), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(kv_d), np.asarray(kv_m), atol=1e-4)
+    assert int(next_d[0]) == int(next_m[0])
+
+
+def test_batched_prefill_rows_independent(llm_weights):
+    """Row b of a batched prefill == the same row prefilled alone."""
+    toks = _tok(jax.random.PRNGKey(3), 2, 16)
+    lens = jnp.asarray([16, 10], jnp.int32)
+    offs = jnp.asarray([0, 0], jnp.int32)
+    kv_b, logits_b, _ = model.llm_prefill(
+        CFG, llm_weights, toks, _zeros_kv(2), offs, lens)
+
+    for b in range(2):
+        kv_1, logits_1, _ = model.llm_prefill(
+            CFG, llm_weights, toks[b:b + 1], _zeros_kv(1),
+            offs[b:b + 1], lens[b:b + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits_b[b]), np.asarray(logits_1[0]),
+            atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(
+            np.asarray(kv_b[:, :, b]), np.asarray(kv_1[:, :, 0]), atol=1e-4)
+
+
+def test_padded_row_does_not_corrupt_cache(llm_weights):
+    """Positions past `lengths` must leave the cache untouched."""
+    toks = _tok(jax.random.PRNGKey(4), 1, 16)
+    kv0 = jnp.full(model.kv_cache_shape(CFG, 1), 7.0, dtype=jnp.float32)
+    kv, _, _ = model.llm_prefill(
+        CFG, llm_weights, toks, kv0,
+        jnp.zeros(1, jnp.int32), jnp.full((1,), 4, jnp.int32))
+    # slots >= 4 keep the sentinel value
+    np.testing.assert_allclose(np.asarray(kv[:, :, :, :, 4:, :]), 7.0)
+
+
+def test_decode_greedy_loop_deterministic(llm_weights):
+    toks = _tok(jax.random.PRNGKey(5), 1, 8)
+    kv, _, nxt = model.llm_prefill(
+        CFG, llm_weights, toks, _zeros_kv(1),
+        jnp.zeros(1, jnp.int32), jnp.full((1,), 8, jnp.int32))
+
+    def run(kv, nxt):
+        out = []
+        pos = 8
+        for _ in range(4):
+            kv, _, nxt = model.llm_decode(
+                CFG, llm_weights, nxt, kv, jnp.full((1,), pos, jnp.int32))
+            out.append(int(nxt[0]))
+            pos += 1
+        return out
+
+    assert run(kv, nxt) == run(kv, nxt)
+
+
+def test_embedder_unit_norm_and_shape(enc_weights):
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, 32), 4, 128, dtype=jnp.int32)
+    mask = (jnp.arange(32)[None, :] < jnp.asarray([32, 10, 5, 1])[:, None]).astype(
+        jnp.float32)
+    emb = model.embed_forward(ENC, enc_weights, toks, mask)
+    assert emb.shape == (4, 64)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(emb, axis=1)), np.ones(4), atol=1e-4)
+
+
+def test_embedder_mask_respected(enc_weights):
+    """Tokens behind the mask must not influence the embedding."""
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 32), 4, 128, dtype=jnp.int32)
+    mask = (jnp.arange(32)[None, :] < 8).astype(jnp.float32)
+    e1 = model.embed_forward(ENC, enc_weights, toks, mask)
+    toks2 = toks.at[0, 8:].set(99)
+    e2 = model.embed_forward(ENC, enc_weights, toks2, mask)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-5)
+
+
+def test_reranker_scores_shape_and_order_stability(rr_weights):
+    toks = jax.random.randint(jax.random.PRNGKey(8), (4, 32), 4, 128, dtype=jnp.int32)
+    mask = jnp.ones((4, 32))
+    s = model.rerank_forward(RR, rr_weights, toks, mask)
+    assert s.shape == (4,)
+    # batched scores equal per-row scores
+    for b in range(4):
+        s1 = model.rerank_forward(RR, rr_weights, toks[b:b + 1], mask[b:b + 1])
+        np.testing.assert_allclose(np.asarray(s[b]), np.asarray(s1[0]), atol=1e-4)

@@ -1,0 +1,131 @@
+//! Figure 10: ablation of the graph-optimization passes on advanced-RAG
+//! doc QA.  Left: single-query latency; right: mean latency under load.
+//! Arms: full Teola, w/o parallelization (Pass 1+3 off), w/o pipelining
+//! (Pass 2+4 off), no optimization.
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::bench::{
+    ms, next_query_id, platform_for, scaled, speedup, BenchTable, TraceRun,
+};
+use teola::engines::profile::ProfileRegistry;
+use teola::graph::egraph::EGraph;
+use teola::graph::pgraph::build_pgraph;
+use teola::graph::{run_passes, OptFlags};
+use teola::scheduler::{BatchPolicy, Platform};
+use teola::util::stats::Summary;
+use teola::workload::{Dataset, DatasetKind, PoissonTrace};
+
+const ARMS: [(&str, fn() -> OptFlags); 4] = [
+    ("Teola (all passes)", OptFlags::all),
+    ("w/o pipelining", OptFlags::parallelization_only),
+    ("w/o parallelization", OptFlags::pipelining_only),
+    ("no graph opt", OptFlags::none),
+];
+
+fn build(app: AppKind, core: &str, q: &teola::graph::template::QueryConfig, flags: OptFlags, profiles: &ProfileRegistry) -> EGraph {
+    let mut t = app.template(core);
+    bind_answer_tokens(&mut t, q.answer_tokens);
+    let g = build_pgraph(&t, q).expect("pgraph");
+    let g = run_passes(g, flags, profiles).expect("passes");
+    EGraph::new(g).expect("egraph")
+}
+
+fn main() {
+    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("fig10: no artifacts; skipping");
+        return;
+    }
+    let app = AppKind::DocQaAdvanced;
+    let dataset = DatasetKind::TruthfulQa;
+    // Paper uses llama-30B; llm-small keeps the sweep tractable on this
+    // single-core testbed while preserving the relative pass effects.
+    let core = "llm-small";
+    let cfg = platform_for(app, core);
+    let platform = Platform::start(&cfg).expect("platform");
+    platform.set_policy(BatchPolicy::TopoAware);
+    let profiles = ProfileRegistry::with_defaults();
+
+    let mut table = BenchTable::new(
+        "fig10_ablation_graph",
+        &["setting", "arm", "mean_ms", "vs_full"],
+    );
+    table.note("app", app.name());
+    table.note("core_llm", core);
+
+    // ---- left: single-query latency, averaged ----
+    let reps = if teola::bench::quick() { 2 } else { 6 };
+    let mut single: Vec<(usize, f64)> = Vec::new();
+    for (ai, (_name, flags)) in ARMS.iter().enumerate() {
+        let mut lats = Vec::new();
+        let mut ds = Dataset::new(dataset, 0xF10);
+        for _ in 0..reps {
+            let q = ds.sample();
+            let e = build(app, core, &q, flags(), &profiles);
+            let t0 = std::time::Instant::now();
+            platform.run_query(next_query_id(), e).expect("query");
+            lats.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        single.push((ai, Summary::of(&lats).mean));
+    }
+    let full = single[0].1;
+    for (ai, mean) in &single {
+        table.row(vec![
+            "single-query".into(),
+            ARMS[*ai].0.into(),
+            ms(*mean),
+            speedup(*mean, full),
+        ]);
+    }
+
+    // ---- right: latency under load ----
+    let rates: Vec<f64> = if teola::bench::quick() { vec![1.0] } else { vec![1.0, 2.0, 4.0] };
+    let n = scaled(12);
+    for &rate in &rates {
+        let mut arm_means = Vec::new();
+        for (_name, flags) in ARMS.iter() {
+            let trace = PoissonTrace::generate(rate, n, 0xF10);
+            let mut ds = Dataset::new(dataset, 0xF10);
+            let mut prepared = Vec::new();
+            for _ in 0..n {
+                let q = ds.sample();
+                prepared.push(build(app, core, &q, flags(), &profiles));
+            }
+            let start = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for (i, e) in prepared.into_iter().enumerate() {
+                if let Some(w) = trace.arrivals[i].checked_sub(start.elapsed()) {
+                    std::thread::sleep(w);
+                }
+                handles.push(platform.spawn_query(next_query_id(), e));
+            }
+            let lats: Vec<f64> = handles
+                .into_iter()
+                .map(|h| h.join().unwrap().expect("q").1.e2e_us as f64 / 1000.0)
+                .collect();
+            arm_means.push(Summary::of(&lats).mean);
+        }
+        let full = arm_means[0];
+        for (ai, mean) in arm_means.iter().enumerate() {
+            table.row(vec![
+                format!("rate-{rate}"),
+                ARMS[ai].0.into(),
+                ms(*mean),
+                speedup(*mean, full),
+            ]);
+        }
+    }
+    platform.shutdown();
+
+    let _ = TraceRun {
+        app,
+        scheme: teola::baselines::Scheme::Teola,
+        dataset,
+        core_llm: core.into(),
+        rate: 1.0,
+        n_queries: 1,
+        seed: 0,
+    };
+    table.print();
+    table.write_json().expect("json");
+    println!("\nfig10 OK (paper: both parallelization and pipelining reduce latency)");
+}

@@ -1,0 +1,147 @@
+//! Figure 11: ablation of topology-aware batching (advanced RAG, same
+//! setting as Fig. 10).  Arms: topology-aware vs blind FIFO batching, both
+//! over the fully optimized Teola e-graph.  Paper: ~1.15x single query,
+//! up to 19.2% mean-latency reduction under multi-query load.
+
+use teola::apps::AppKind;
+use teola::baselines::Scheme;
+use teola::bench::{ms, platform_for, run_single, run_trace, scaled, speedup, BenchTable, TraceRun};
+use teola::scheduler::{BatchPolicy, Platform};
+use teola::util::stats::Summary;
+use teola::workload::{Dataset, DatasetKind};
+
+fn main() {
+    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("fig11: no artifacts; skipping");
+        return;
+    }
+    let app = AppKind::DocQaAdvanced;
+    let dataset = DatasetKind::TruthfulQa;
+    let core = "llm-small";
+    let cfg = platform_for(app, core);
+    let platform = Platform::start(&cfg).expect("platform");
+
+    let mut table = BenchTable::new(
+        "fig11_ablation_sched",
+        &["setting", "batching", "mean_ms", "speedup"],
+    );
+    table.note("app", app.name());
+    table.note("core_llm", core);
+
+    let arms = [("topology-aware", BatchPolicy::TopoAware), ("blind FIFO", BatchPolicy::BlindTO)];
+
+    // Single-query (averaged): depth-aware fusing inside one query.
+    let reps = if teola::bench::quick() { 2 } else { 6 };
+    let mut single = Vec::new();
+    for (_name, policy) in arms {
+        let mut ds = Dataset::new(dataset, 0xF11);
+        let mut lats = Vec::new();
+        for _ in 0..reps {
+            let q = ds.sample();
+            let run = TraceRun {
+                app,
+                scheme: Scheme::Teola,
+                dataset,
+                core_llm: core.into(),
+                rate: 1.0,
+                n_queries: 1,
+                seed: 0xF11,
+            };
+            platform.set_policy(policy);
+            // run_single resets policy from the scheme; override after.
+            let (lat, _m) = {
+                platform.set_policy(policy);
+                let (e, _) = teola::bench::build_egraph(&platform, &run, &q).unwrap();
+                platform.set_policy(policy);
+                let t0 = std::time::Instant::now();
+                platform.run_query(teola::bench::next_query_id(), e).unwrap();
+                (t0.elapsed().as_secs_f64() * 1000.0, ())
+            };
+            lats.push(lat);
+        }
+        single.push(Summary::of(&lats).mean);
+    }
+    table.row(vec![
+        "single-query".into(),
+        "topology-aware".into(),
+        ms(single[0]),
+        speedup(single[1], single[0]),
+    ]);
+    table.row(vec![
+        "single-query".into(),
+        "blind FIFO".into(),
+        ms(single[1]),
+        "1.00x".into(),
+    ]);
+
+    // Multi-query load.
+    let rates: Vec<f64> = if teola::bench::quick() { vec![1.0] } else { vec![1.0, 2.0, 4.0] };
+    let n = scaled(12);
+    for &rate in &rates {
+        let mut means = Vec::new();
+        for (_name, policy) in arms {
+            let run = TraceRun {
+                app,
+                scheme: Scheme::Teola,
+                dataset,
+                core_llm: core.into(),
+                rate,
+                n_queries: n,
+                seed: 0xF11 + rate as u64,
+            };
+            // run_trace sets the scheme policy; override by running and
+            // flipping the policy first (set_policy is sticky).
+            platform.set_policy(policy);
+            let r = run_trace_with_policy(&platform, &run, policy);
+            means.push(r);
+        }
+        table.row(vec![
+            format!("rate-{rate}"),
+            "topology-aware".into(),
+            ms(means[0]),
+            speedup(means[1], means[0]),
+        ]);
+        table.row(vec![
+            format!("rate-{rate}"),
+            "blind FIFO".into(),
+            ms(means[1]),
+            "1.00x".into(),
+        ]);
+    }
+    platform.shutdown();
+    table.print();
+    table.write_json().expect("json");
+    println!("\nfig11 OK (paper: ~1.15x single query; up to 19.2% under load)");
+}
+
+fn run_trace_with_policy(
+    platform: &Platform,
+    run: &TraceRun,
+    policy: BatchPolicy,
+) -> f64 {
+    use teola::bench::{build_egraph, next_query_id};
+    use teola::workload::PoissonTrace;
+    let trace = PoissonTrace::generate(run.rate, run.n_queries, run.seed);
+    let mut ds = Dataset::new(run.dataset, run.seed ^ 0xDA7A);
+    let mut prepared = Vec::new();
+    for _ in 0..run.n_queries {
+        let q = ds.sample();
+        let (e, _) = build_egraph(platform, run, &q).expect("egraph");
+        prepared.push(e);
+    }
+    platform.set_policy(policy);
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (i, e) in prepared.into_iter().enumerate() {
+        if let Some(w) = trace.arrivals[i].checked_sub(start.elapsed()) {
+            std::thread::sleep(w);
+        }
+        handles.push(platform.spawn_query(next_query_id(), e));
+    }
+    let lats: Vec<f64> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap().expect("q").1.e2e_us as f64 / 1000.0)
+        .collect();
+    let _ = run_single; // (link the shared helpers)
+    Summary::of(&lats).mean
+}

@@ -1,0 +1,82 @@
+//! Figure 1: latency breakdown of each task module for the four apps,
+//! executed with module-sequential orchestration (the LlamaIndex analog),
+//! with the LLM synthesizing module split into prefilling and decoding.
+//!
+//! Regenerates the paper's stacked-bar data as percentage rows.
+
+use std::collections::HashMap;
+
+use teola::apps::AppKind;
+use teola::baselines::Scheme;
+use teola::bench::{ms, platform_for_all, run_single, BenchTable, TraceRun};
+use teola::scheduler::Platform;
+use teola::workload::{Dataset, DatasetKind};
+
+fn main() {
+    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("fig1: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    let apps = [
+        (AppKind::SearchGen, DatasetKind::WebQuestions),
+        (AppKind::DocQaNaive, DatasetKind::TruthfulQa),
+        (AppKind::DocQaAdvanced, DatasetKind::TruthfulQa),
+        (AppKind::ContextualRetrieval, DatasetKind::FinQaBench),
+    ];
+    let core = "llm-small";
+    let mut table = BenchTable::new(
+        "fig1_breakdown",
+        &["app", "module", "class", "exec_ms", "share_%"],
+    );
+    table.note("scheme", "LlamaDist (module-sequential, TO)");
+    table.note("core_llm", core);
+
+    let all_apps: Vec<AppKind> = apps.iter().map(|(a, _)| *a).collect();
+    let cfg = platform_for_all(&all_apps, core);
+    let platform = Platform::start(&cfg).expect("platform");
+    for (app, dataset) in apps {
+        let run = TraceRun {
+            app,
+            scheme: Scheme::LlamaDistTO,
+            dataset,
+            core_llm: core.into(),
+            rate: 1.0,
+            n_queries: 1,
+            seed: 7,
+        };
+        // Average over a few queries.
+        let reps = if teola::bench::quick() { 1 } else { 3 };
+        let mut acc: HashMap<(usize, &'static str), u64> = HashMap::new();
+        let mut ds = Dataset::new(dataset, 7);
+        for _ in 0..reps {
+            let q = ds.sample();
+            let (_lat, m) = run_single(&platform, &run, &q).expect("query");
+            for (k, v) in m.per_component_us {
+                *acc.entry(k).or_default() += v;
+            }
+        }
+        let total: u64 = acc.values().sum();
+        let template = app.template(core);
+        let mut keys: Vec<_> = acc.keys().copied().collect();
+        keys.sort();
+        for (comp, class) in keys {
+            let v = acc[&(comp, class)];
+            let name = template
+                .components
+                .get(comp)
+                .map(|c| c.name.clone())
+                .unwrap_or_else(|| format!("comp{comp}"));
+            table.row(vec![
+                app.name().into(),
+                name,
+                class.into(),
+                ms(v as f64 / 1000.0 / reps as f64),
+                format!("{:.1}", 100.0 * v as f64 / total.max(1) as f64),
+            ]);
+        }
+    }
+    platform.shutdown();
+    table.print();
+    table.write_json().expect("write json");
+    println!("\nfig1 OK (expect: non-LLM modules take a large share; >50% for doc QA)");
+}

@@ -1,0 +1,90 @@
+//! Figure 8: end-to-end latency of the four applications under five
+//! orchestration schemes across request rates.
+//!
+//! Paper rows: search-gen (web_questions/HotpotQA), doc QA naive RAG
+//! (FinQABench/TruthfulQA), doc QA advanced RAG, contextual retrieval;
+//! schemes LlamaDist(PO), LlamaDist(TO), LlamaDistPC, AutoGen, Teola.
+//! Expected shape: Teola wins everywhere (up to ~2x on advanced RAG);
+//! PO beats TO at low rates and loses at high rates.
+
+use teola::apps::AppKind;
+use teola::baselines::Scheme;
+use teola::bench::{ms, platform_for_all, run_trace, scaled, speedup, BenchTable, TraceRun};
+use teola::scheduler::Platform;
+use teola::workload::DatasetKind;
+
+fn main() {
+    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("fig8: no artifacts; skipping");
+        return;
+    }
+    let quick = teola::bench::quick();
+    // (app, dataset, core llm) rows; llm size mirrors the paper's rows
+    // scaled to this testbed (llm-small == llama-2-7B analog, etc.).
+    // (app, dataset, core llm, rates) rows; llm size mirrors the paper's
+    // rows scaled to this testbed; rates load the 2-instance LLM pools to
+    // paper-equivalent utilization (engine seconds here are ~100x smaller
+    // than the paper's GPU seconds, so rates are correspondingly higher).
+    let rows: Vec<(AppKind, DatasetKind, &str, [f64; 3])> = if quick {
+        vec![(AppKind::DocQaNaive, DatasetKind::TruthfulQa, "llm-lite", [4.0, 4.0, 4.0])]
+    } else {
+        vec![
+            (AppKind::SearchGen, DatasetKind::WebQuestions, "llm-small", [2.0, 4.0, 8.0]),
+            (AppKind::DocQaNaive, DatasetKind::TruthfulQa, "llm-small", [2.0, 4.0, 8.0]),
+            (AppKind::DocQaAdvanced, DatasetKind::TruthfulQa, "llm-small", [1.0, 2.0, 4.0]),
+            (AppKind::ContextualRetrieval, DatasetKind::FinQaBench, "llm-small", [0.5, 1.0, 2.0]),
+        ]
+    };
+    let n_queries = scaled(16);
+
+    let mut table = BenchTable::new(
+        "fig8_e2e",
+        &["app", "dataset", "rate_rps", "scheme", "mean_ms", "p90_ms", "teola_speedup"],
+    );
+    table.note("queries_per_point", &n_queries.to_string());
+
+    let all_apps: Vec<AppKind> = rows.iter().map(|(a, _, _, _)| *a).collect();
+    let core0 = rows[0].2;
+    let cfg = platform_for_all(&all_apps, core0);
+    let platform = Platform::start(&cfg).expect("platform");
+    for (app, dataset, core, rates) in &rows {
+        let rates = if quick { &rates[..1] } else { &rates[..] };
+        for &rate in rates {
+            let mut results: Vec<(Scheme, f64, f64)> = Vec::new();
+            for scheme in Scheme::all() {
+                let run = TraceRun {
+                    app: *app,
+                    scheme,
+                    dataset: *dataset,
+                    core_llm: (*core).into(),
+                    rate,
+                    n_queries,
+                    seed: 0xF18 + rate as u64,
+                };
+                let r = run_trace(&platform, &run).expect("trace");
+                results.push((scheme, r.summary_ms.mean, r.summary_ms.p90));
+            }
+            let teola_mean = results
+                .iter()
+                .find(|(s, _, _)| *s == Scheme::Teola)
+                .map(|(_, m, _)| *m)
+                .unwrap_or(0.0);
+            for (scheme, mean, p90) in results {
+                table.row(vec![
+                    app.name().into(),
+                    dataset.name().into(),
+                    format!("{rate}"),
+                    scheme.name().into(),
+                    ms(mean),
+                    ms(p90),
+                    speedup(mean, teola_mean),
+                ]);
+            }
+        }
+    }
+    platform.shutdown();
+
+    table.print();
+    table.write_json().expect("json");
+    println!("\nfig8 OK (paper: Teola up to 2.09x; PO < TO at high rate)");
+}

@@ -1,0 +1,377 @@
+//! The five Figure-2 application workflows as workflow templates.
+//!
+//! Each builder returns a `WorkflowTemplate` ready for p-graph construction
+//! with a per-query `QueryConfig`.  Engine names must match the pools the
+//! `Platform` provisions ("embedder", "reranker", "vdb", "web", "tool" and
+//! the LLM variant names).
+
+use crate::graph::pgraph::instr_tokens;
+use crate::graph::template::{
+    Component, ComponentKind, EmbedSource, PromptPart, SynthesisMode, WorkflowTemplate,
+};
+
+/// Which app (drives workload synthesis + benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    SearchGen,
+    DocQaNaive,
+    DocQaAdvanced,
+    ContextualRetrieval,
+    Agent,
+}
+
+impl AppKind {
+    /// All apps, Fig. 8 row order.
+    pub fn all() -> [AppKind; 5] {
+        [
+            AppKind::SearchGen,
+            AppKind::DocQaNaive,
+            AppKind::DocQaAdvanced,
+            AppKind::ContextualRetrieval,
+            AppKind::Agent,
+        ]
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::SearchGen => "search-gen",
+            AppKind::DocQaNaive => "doc-qa-naive",
+            AppKind::DocQaAdvanced => "doc-qa-advanced",
+            AppKind::ContextualRetrieval => "contextual-retrieval",
+            AppKind::Agent => "llm-agent",
+        }
+    }
+
+    /// Build the template for a core-LLM variant.
+    pub fn template(&self, core_llm: &str) -> WorkflowTemplate {
+        match self {
+            AppKind::SearchGen => search_gen(core_llm),
+            AppKind::DocQaNaive => doc_qa_naive(core_llm),
+            AppKind::DocQaAdvanced => doc_qa_advanced(core_llm),
+            AppKind::ContextualRetrieval => contextual_retrieval(core_llm),
+            AppKind::Agent => llm_agent(core_llm),
+        }
+    }
+
+    /// Auxiliary LLM variants this app needs besides the core LLM.
+    pub fn aux_llms(&self) -> Vec<&'static str> {
+        match self {
+            AppKind::SearchGen => vec!["llm-small"],
+            AppKind::ContextualRetrieval => vec!["llm-lite"],
+            _ => vec![],
+        }
+    }
+
+    /// Whether the app needs the reranker engine.
+    pub fn needs_reranker(&self) -> bool {
+        matches!(self, AppKind::DocQaAdvanced | AppKind::ContextualRetrieval)
+    }
+}
+
+fn comp(name: &str, kind: ComponentKind, engine: &str) -> Component {
+    Component {
+        name: name.to_string(),
+        kind,
+        engine: engine.to_string(),
+        batchable: false,
+        splittable: false,
+    }
+}
+
+fn comp_b(name: &str, kind: ComponentKind, engine: &str) -> Component {
+    Component { batchable: true, ..comp(name, kind, engine) }
+}
+
+/// Fig. 2a: search-engine-empowered generation.
+///
+/// A small proxy LLM drafts a heuristic answer, a judge decides whether a
+/// web search is needed, search results (top 4) feed the core LLM.
+pub fn search_gen(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("search-gen");
+    let proxy = t.add(comp(
+        "proxy",
+        ComponentKind::LlmGenerate {
+            variant: "llm-small".into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("proxy-heuristic", 18)),
+                PromptPart::Question,
+            ],
+            out_tokens: 20,
+            segments: 1,
+            fan: 1,
+        },
+        "llm-small",
+    ));
+    let judge = t.add(comp(
+        "judge",
+        ComponentKind::LlmGenerate {
+            variant: "llm-small".into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("judge-need-search", 14)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: proxy, slice: None },
+            ],
+            out_tokens: 4,
+            segments: 1,
+            fan: 1,
+        },
+        "llm-small",
+    ));
+    let cond = t.add(comp("need-search", ComponentKind::Condition { prob_true: 0.7 }, ""));
+    let web = t.add(comp_b("web-search", ComponentKind::WebSearch { top_k: 4 }, "web"));
+    let synth = t.add(comp(
+        "synthesize",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("answer-with-search", 22)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: proxy, slice: None },
+                PromptPart::Upstream { component: web, slice: None },
+            ],
+            out_tokens: 0, // filled from QueryConfig::answer_tokens at bind
+            segments: 1,
+            fan: 1,
+        },
+        core_llm,
+    ));
+    t.chain(&[proxy, judge, cond, web, synth]);
+    t
+}
+
+/// Fig. 2c: document QA with naive RAG (tree synthesis over top-3 chunks).
+pub fn doc_qa_naive(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("doc-qa-naive");
+    let idx = t.add(comp_b("indexing", ComponentKind::Indexing, "embedder"));
+    let qe = t.add(comp_b(
+        "query-embed",
+        ComponentKind::Embedding { of: EmbedSource::Question },
+        "embedder",
+    ));
+    let se = t.add(comp("search", ComponentKind::VectorSearching { top_k: 3 }, "vdb"));
+    let syn = t.add(comp(
+        "synthesize",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::Tree,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("qa-tree", 18)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: se, slice: None },
+            ],
+            out_tokens: 0,
+            segments: 1,
+            fan: 3,
+        },
+        core_llm,
+    ));
+    t.chain(&[idx, qe, se, syn]);
+    t
+}
+
+/// Fig. 2d: document QA with advanced RAG — query expansion (splittable),
+/// per-query search (16 each), rerank to top 3, refine-mode synthesis.
+pub fn doc_qa_advanced(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("doc-qa-advanced");
+    let idx = t.add(comp_b("indexing", ComponentKind::Indexing, "embedder"));
+    let expand = t.add(Component {
+        splittable: true,
+        ..comp(
+            "query-expand",
+            ComponentKind::LlmGenerate {
+                variant: core_llm.into(),
+                mode: SynthesisMode::OneShot,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("expand-query", 16)),
+                    PromptPart::Question,
+                ],
+                out_tokens: 18,
+                segments: 3,
+                fan: 1,
+            },
+            core_llm,
+        )
+    });
+    let qe = t.add(comp_b(
+        "embed-queries",
+        ComponentKind::Embedding { of: EmbedSource::Upstream(expand) },
+        "embedder",
+    ));
+    let se = t.add(comp("search", ComponentKind::VectorSearching { top_k: 16 }, "vdb"));
+    let rr = t.add(comp_b("rerank", ComponentKind::Reranking { top_k: 3 }, "reranker"));
+    let syn = t.add(comp(
+        "synthesize",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::Refine,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("qa-refine", 18)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: rr, slice: None },
+            ],
+            out_tokens: 0,
+            segments: 1,
+            fan: 3,
+        },
+        core_llm,
+    ));
+    t.chain(&[idx, expand, qe, se, rr, syn]);
+    t
+}
+
+/// Fig. 2e: contextual retrieval — per-chunk contextualization with a
+/// lightweight LLM before indexing, rerank of 32 fetched chunks, one-shot
+/// synthesis over the top 3.
+pub fn contextual_retrieval(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("contextual-retrieval");
+    let ctx = t.add(comp(
+        "contextualize",
+        ComponentKind::Contextualize { variant: "llm-lite".into(), out_tokens: 8, neighbors: 2 },
+        "llm-lite",
+    ));
+    let idx = t.add(comp_b("indexing", ComponentKind::IndexingUpstream(ctx), "embedder"));
+    let qe = t.add(comp_b(
+        "query-embed",
+        ComponentKind::Embedding { of: EmbedSource::Question },
+        "embedder",
+    ));
+    let se = t.add(comp("search", ComponentKind::VectorSearching { top_k: 32 }, "vdb"));
+    let rr = t.add(comp_b("rerank", ComponentKind::Reranking { top_k: 3 }, "reranker"));
+    let syn = t.add(comp(
+        "synthesize",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("qa-contextual", 18)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: rr, slice: None },
+            ],
+            out_tokens: 0,
+            segments: 1,
+            fan: 1,
+        },
+        core_llm,
+    ));
+    t.chain(&[ctx, idx, qe, se, rr, syn]);
+    t
+}
+
+/// Fig. 2b: generic LLM agent — plan with the core LLM (two actions,
+/// splittable), execute tool APIs, confirm.
+pub fn llm_agent(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("llm-agent");
+    let plan = t.add(Component {
+        splittable: true,
+        ..comp(
+            "plan",
+            ComponentKind::LlmGenerate {
+                variant: core_llm.into(),
+                mode: SynthesisMode::OneShot,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("agent-plan", 20)),
+                    PromptPart::Question,
+                ],
+                out_tokens: 24,
+                segments: 2,
+                fan: 1,
+            },
+            core_llm,
+        )
+    });
+    let draft = t.add(comp(
+        "draft-email",
+        ComponentKind::Tool { name: "draft_email".into(), cost_us: 25_000 },
+        "tool",
+    ));
+    let send = t.add(comp(
+        "send-email",
+        ComponentKind::Tool { name: "send_email".into(), cost_us: 40_000 },
+        "tool",
+    ));
+    let confirm = t.add(comp(
+        "confirm",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("agent-confirm", 14)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: plan, slice: None },
+            ],
+            out_tokens: 0,
+            segments: 1,
+            fan: 1,
+        },
+        core_llm,
+    ));
+    t.chain(&[plan, draft, send, confirm]);
+    t
+}
+
+/// Bind per-query knobs into a template: every `out_tokens: 0` becomes the
+/// query's planned answer length.
+pub fn bind_answer_tokens(t: &mut WorkflowTemplate, answer_tokens: usize) {
+    for c in &mut t.components {
+        if let ComponentKind::LlmGenerate { out_tokens, .. } = &mut c.kind {
+            if *out_tokens == 0 {
+                *out_tokens = answer_tokens;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pgraph::build_pgraph;
+    use crate::graph::template::QueryConfig;
+
+    #[test]
+    fn all_apps_build_pgraphs() {
+        for app in AppKind::all() {
+            let mut t = app.template("llm-small");
+            bind_answer_tokens(&mut t, 16);
+            let q = QueryConfig::example(7);
+            let g = build_pgraph(&t, &q).unwrap_or_else(|e| panic!("{}: {e}", app.name()));
+            assert!(g.topo_order().is_ok(), "{}", app.name());
+            assert!(g.nodes.len() >= 4, "{}", app.name());
+        }
+    }
+
+    #[test]
+    fn search_gen_has_guarded_web_search() {
+        let mut t = search_gen("llm-medium");
+        bind_answer_tokens(&mut t, 16);
+        let q = QueryConfig::example(9);
+        let g = build_pgraph(&t, &q).unwrap();
+        let web = g
+            .nodes
+            .iter()
+            .find(|n| n.kind == crate::graph::primitive::PrimKind::WebSearching)
+            .unwrap();
+        assert!(web.guard.is_some());
+    }
+
+    #[test]
+    fn contextual_builds_one_call_per_chunk() {
+        let mut t = contextual_retrieval("llm-medium");
+        bind_answer_tokens(&mut t, 16);
+        let mut q = QueryConfig::example(3);
+        q.doc_chunks.truncate(5);
+        let g = build_pgraph(&t, &q).unwrap();
+        let prefills = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                n.kind == crate::graph::primitive::PrimKind::Prefilling
+                    && n.engine == "llm-lite"
+            })
+            .count();
+        assert_eq!(prefills, 5);
+    }
+}

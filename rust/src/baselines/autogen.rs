@@ -1,0 +1,121 @@
+//! AutoGen-style agent orchestration.
+//!
+//! Components are grouped into role agents (retrieval agent, synthesizer
+//! agent, ...); agents execute strictly sequentially with an inter-agent
+//! message hop, and components *within* an agent run in registration
+//! order.  This reproduces the paper's observation that AutoGen's compact
+//! agent structure behaves like module-sequential chaining plus messaging
+//! overhead, and "suffers from high request load due to its inability to
+//! pipeline and parallelize operations".
+
+use crate::graph::template::{Component, ComponentKind, WorkflowTemplate};
+
+/// Per-hop message latency between agents (serialize + route + deserialize
+/// in the multi-agent conversation framework).
+pub const AGENT_HOP_US: u64 = 12_000;
+
+/// Group a workflow's components into agents by role and rebuild the
+/// template as a strict agent chain with message hops.
+pub fn agentize(t: &WorkflowTemplate) -> WorkflowTemplate {
+    let groups = agent_groups(t);
+    let mut out = WorkflowTemplate::new(&format!("{}-autogen", t.name));
+    out.components = t.components.clone();
+
+    // Chain: components within each agent in order, hop nodes between
+    // agents. Component indices are preserved (hops appended at the end),
+    // so Upstream prompt references remain valid.
+    let mut order: Vec<usize> = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        if gi > 0 {
+            let hop = out.components.len();
+            out.components.push(Component {
+                name: format!("agent-hop-{gi}"),
+                kind: ComponentKind::Tool {
+                    name: format!("agent_message_{gi}"),
+                    cost_us: AGENT_HOP_US,
+                },
+                engine: "tool".into(),
+                batchable: false,
+                splittable: false,
+            });
+            order.push(hop);
+        }
+        order.extend(group.iter().copied());
+    }
+    out.chain(&order);
+    out
+}
+
+/// Role-based agent grouping: consecutive components of the same broad
+/// role (retrieval / llm / tool / control) share an agent.
+fn agent_groups(t: &WorkflowTemplate) -> Vec<Vec<usize>> {
+    fn role(k: &ComponentKind) -> u8 {
+        match k {
+            ComponentKind::Indexing
+            | ComponentKind::IndexingUpstream(_)
+            | ComponentKind::Embedding { .. }
+            | ComponentKind::VectorSearching { .. }
+            | ComponentKind::WebSearch { .. } => 0, // retrieval agent
+            ComponentKind::Reranking { .. } => 1,   // rerank agent
+            ComponentKind::LlmGenerate { .. } | ComponentKind::Contextualize { .. } => 2,
+            ComponentKind::Condition { .. } => 3, // controller rides along
+            ComponentKind::Tool { .. } => 4,      // tool executor agent
+        }
+    }
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut last_role = u8::MAX;
+    for (i, c) in t.components.iter().enumerate() {
+        let r = role(&c.kind);
+        // Conditions attach to the preceding agent.
+        if r == 3 && !groups.is_empty() {
+            groups.last_mut().unwrap().push(i);
+            continue;
+        }
+        if r == last_role && r == 2 {
+            // Distinct LLM roles are distinct agents in AutoGen (proxy vs
+            // judge vs synthesizer) — do not merge LLM components.
+            groups.push(vec![i]);
+        } else if r == last_role {
+            groups.last_mut().unwrap().push(i);
+        } else {
+            groups.push(vec![i]);
+        }
+        last_role = r;
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{bind_answer_tokens, AppKind};
+    use crate::graph::pgraph::build_pgraph;
+    use crate::graph::template::QueryConfig;
+
+    #[test]
+    fn agentized_template_has_hops() {
+        let mut t = AppKind::DocQaAdvanced.template("llm-small");
+        bind_answer_tokens(&mut t, 16);
+        let a = agentize(&t);
+        let hops = a
+            .components
+            .iter()
+            .filter(|c| c.name.starts_with("agent-hop"))
+            .count();
+        assert!(hops >= 3, "advanced RAG spans >= 4 agents, got {hops} hops");
+        // Still builds a valid acyclic p-graph.
+        let q = QueryConfig::example(17);
+        let g = build_pgraph(&a, &q).unwrap();
+        assert!(g.topo_order().is_ok());
+    }
+
+    #[test]
+    fn component_indices_preserved() {
+        let mut t = AppKind::SearchGen.template("llm-medium");
+        bind_answer_tokens(&mut t, 16);
+        let a = agentize(&t);
+        for (i, c) in t.components.iter().enumerate() {
+            assert_eq!(a.components[i].name, c.name);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Baseline orchestration schemes (§7 Baselines).
+//!
+//! All schemes execute the *same* engines through the same two-tier
+//! runtime; they differ in (a) which graph optimizations apply, (b) extra
+//! structural transforms, and (c) the engine-scheduler batching policy:
+//!
+//! * **LlamaDist(PO/TO)** — module-sequential chain (the template edges are
+//!   kept, no passes run), per-invocation or throughput-oriented engine
+//!   scheduling.
+//! * **LlamaDistPC** — manual module parallelization (dependency pruning
+//!   only) + KV prefix-cache reuse for shared instruction prefixes.
+//! * **AutoGen** — components grouped into agents; agents execute strictly
+//!   sequentially with a message hop between them.
+//! * **Teola** — all four passes + topology-aware batching.
+
+pub mod autogen;
+pub mod prefix_cache;
+
+use crate::engines::profile::ProfileRegistry;
+use crate::error::Result;
+use crate::graph::egraph::EGraph;
+use crate::graph::pgraph::{build_pgraph, PGraph};
+use crate::graph::template::{QueryConfig, WorkflowTemplate};
+use crate::graph::{run_passes, OptFlags};
+use crate::scheduler::batching::BatchPolicy;
+
+/// An orchestration scheme under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Teola,
+    LlamaDistPO,
+    LlamaDistTO,
+    LlamaDistPC,
+    AutoGen,
+}
+
+impl Scheme {
+    /// All schemes in Fig. 8 legend order.
+    pub fn all() -> [Scheme; 5] {
+        [
+            Scheme::LlamaDistPO,
+            Scheme::LlamaDistTO,
+            Scheme::LlamaDistPC,
+            Scheme::AutoGen,
+            Scheme::Teola,
+        ]
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Teola => "Teola",
+            Scheme::LlamaDistPO => "LlamaDist(PO)",
+            Scheme::LlamaDistTO => "LlamaDist(TO)",
+            Scheme::LlamaDistPC => "LlamaDistPC",
+            Scheme::AutoGen => "AutoGen",
+        }
+    }
+
+    /// Graph-optimization level.
+    pub fn flags(&self) -> OptFlags {
+        match self {
+            Scheme::Teola => OptFlags::all(),
+            Scheme::LlamaDistPC => OptFlags {
+                prune_deps: true,
+                stage_decompose: false,
+                prefill_split: false,
+                decode_pipeline: false,
+            },
+            _ => OptFlags::none(),
+        }
+    }
+
+    /// Engine-scheduler batching policy.
+    pub fn policy(&self) -> BatchPolicy {
+        match self {
+            Scheme::Teola => BatchPolicy::TopoAware,
+            Scheme::LlamaDistPO => BatchPolicy::PerInvocation,
+            _ => BatchPolicy::BlindTO,
+        }
+    }
+
+    /// Build the executable e-graph for one query under this scheme.
+    pub fn build(
+        &self,
+        template: &WorkflowTemplate,
+        q: &QueryConfig,
+        profiles: &ProfileRegistry,
+    ) -> Result<EGraph> {
+        let template = match self {
+            Scheme::AutoGen => autogen::agentize(template),
+            _ => template.clone(),
+        };
+        let mut g: PGraph = build_pgraph(&template, q)?;
+        if matches!(self, Scheme::LlamaDistPC) {
+            prefix_cache::apply_prefix_cache(&mut g);
+        }
+        let g = run_passes(g, self.flags(), profiles)?;
+        EGraph::new(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{bind_answer_tokens, AppKind};
+
+    #[test]
+    fn all_schemes_build_all_apps() {
+        let profiles = ProfileRegistry::with_defaults();
+        for app in AppKind::all() {
+            let mut t = app.template("llm-small");
+            bind_answer_tokens(&mut t, 16);
+            let q = QueryConfig::example(13);
+            for s in Scheme::all() {
+                let e = s
+                    .build(&t, &q, &profiles)
+                    .unwrap_or_else(|err| panic!("{} / {}: {err}", app.name(), s.name()));
+                assert!(e.len() >= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn teola_graph_no_larger_critical_path() {
+        let profiles = ProfileRegistry::with_defaults();
+        let mut t = AppKind::DocQaAdvanced.template("llm-small");
+        bind_answer_tokens(&mut t, 16);
+        let q = QueryConfig::example(21);
+        let teola = Scheme::Teola.build(&t, &q, &profiles).unwrap();
+        let base = Scheme::LlamaDistTO.build(&t, &q, &profiles).unwrap();
+        // Optimization must not lengthen the critical path.
+        assert!(teola.critical_path_len() <= base.critical_path_len() + 1);
+    }
+}

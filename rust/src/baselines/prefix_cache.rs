@@ -1,0 +1,118 @@
+//! KV prefix-cache reuse (the "PC" in LlamaDistPC; cf. Prompt Cache /
+//! SGLang-style instruction-prefix sharing).
+//!
+//! Within one query, LLM calls that share an identical leading Const
+//! prompt part (the instruction template, typically ~60 tokens in the
+//! paper's apps) prefill it once; every other call clones the prefix KV
+//! and prefills only the remainder.
+
+use std::collections::HashMap;
+
+use crate::graph::pgraph::PGraph;
+use crate::graph::primitive::{DataRef, PayloadSpec, PrimKind, Primitive};
+
+/// Rewrite the p-graph in place; returns the number of clones introduced.
+pub fn apply_prefix_cache(g: &mut PGraph) -> usize {
+    // Group monolithic prefill nodes by (engine, shared instruction part).
+    let mut groups: HashMap<(String, Vec<i32>), Vec<usize>> = HashMap::new();
+    for n in &g.nodes {
+        if n.kind != PrimKind::Prefilling {
+            continue;
+        }
+        if let PayloadSpec::Prefill { parts, .. } = &n.payload {
+            if let Some(DataRef::Const(rows)) = parts.first() {
+                if rows.len() == 1 && !rows[0].is_empty() {
+                    groups
+                        .entry((n.engine.clone(), rows[0].clone()))
+                        .or_default()
+                        .push(n.id);
+                }
+            }
+        }
+    }
+
+    let mut clones = 0;
+    for ((engine, instr), members) in groups {
+        if members.len() < 2 {
+            continue;
+        }
+        let len = instr.len();
+        // The first member keeps its full prefill and becomes the prefix
+        // donor (its seq contains the instruction KV at [0, len)).
+        let donor = members[0];
+        let donor_seq = match &g.nodes[donor].payload {
+            PayloadSpec::Prefill { seq, .. } => *seq,
+            _ => continue,
+        };
+        for &m in &members[1..] {
+            let (seq, parts, component, guard) = match &g.nodes[m].payload {
+                PayloadSpec::Prefill { seq, parts } => {
+                    (*seq, parts.clone(), g.nodes[m].component, g.nodes[m].guard)
+                }
+                _ => continue,
+            };
+            // Clone node: copies [0, len) from the donor sequence.
+            let clone_id = g.nodes.len();
+            g.nodes.push(Primitive {
+                id: clone_id,
+                kind: PrimKind::PrefixClone,
+                engine: engine.clone(),
+                component,
+                batchable: false,
+                splittable: false,
+                payload: PayloadSpec::ClonePrefix {
+                    src_seq: donor_seq,
+                    dst_seq: seq,
+                    len,
+                    after: donor,
+                },
+                hard_deps: vec![],
+                guard,
+            });
+            // The member's prefill drops the shared instruction and chains
+            // behind the clone.
+            if let PayloadSpec::Prefill { parts: p, .. } = &mut g.nodes[m].payload {
+                *p = parts[1..].to_vec();
+            }
+            g.nodes[m].hard_deps.push(clone_id);
+            clones += 1;
+        }
+    }
+    clones
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{bind_answer_tokens, AppKind};
+    use crate::graph::pgraph::build_pgraph;
+    use crate::graph::template::QueryConfig;
+
+    #[test]
+    fn tree_synthesis_shares_instruction_prefix() {
+        let mut t = AppKind::DocQaNaive.template("llm-small");
+        bind_answer_tokens(&mut t, 16);
+        let q = QueryConfig::example(31);
+        let mut g = build_pgraph(&t, &q).unwrap();
+        let clones = apply_prefix_cache(&mut g);
+        // Tree mode: 3 leaf calls share the qa-tree instruction -> 2 clones.
+        assert_eq!(clones, 2);
+        assert!(g.topo_order().is_ok());
+        let n_clone_nodes = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == PrimKind::PrefixClone)
+            .count();
+        assert_eq!(n_clone_nodes, 2);
+    }
+
+    #[test]
+    fn no_sharing_no_clones() {
+        let mut t = AppKind::SearchGen.template("llm-medium");
+        bind_answer_tokens(&mut t, 16);
+        let q = QueryConfig::example(33);
+        let mut g = build_pgraph(&t, &q).unwrap();
+        // proxy/judge/synthesize all use distinct instructions.
+        assert_eq!(apply_prefix_cache(&mut g), 0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Benchmark driver + reporting harness (criterion is unavailable offline;
+//! every `benches/*.rs` target uses this module with `harness = false`).
+//!
+//! Provides: trace execution (open-loop Poisson over a running Platform),
+//! single-query timing, table printing in the paper's row/series format,
+//! and machine-readable JSON dumps under `bench_results/`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::apps::{bind_answer_tokens, AppKind};
+use crate::baselines::Scheme;
+use crate::engines::QueryId;
+use crate::error::Result;
+use crate::graph::template::QueryConfig;
+use crate::json::{num, obj, s, Json};
+use crate::scheduler::graph_sched::QueryMetrics;
+use crate::scheduler::{Platform, PlatformConfig};
+use crate::util::stats::Summary;
+use crate::workload::{Dataset, DatasetKind, PoissonTrace};
+
+static NEXT_QUERY: AtomicU64 = AtomicU64::new(1);
+
+/// Unique query id across a bench process.
+pub fn next_query_id() -> QueryId {
+    NEXT_QUERY.fetch_add(1, Ordering::Relaxed)
+}
+
+/// `TEOLA_BENCH_QUICK=1` shrinks sweeps for smoke runs.
+pub fn quick() -> bool {
+    std::env::var("TEOLA_BENCH_QUICK").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Scale a query count down in quick mode.
+pub fn scaled(n: usize) -> usize {
+    if quick() {
+        (n / 3).max(2)
+    } else {
+        n
+    }
+}
+
+/// One trace-run request.
+#[derive(Debug, Clone)]
+pub struct TraceRun {
+    pub app: AppKind,
+    pub scheme: Scheme,
+    pub dataset: DatasetKind,
+    pub core_llm: String,
+    pub rate: f64,
+    pub n_queries: usize,
+    pub seed: u64,
+}
+
+/// Aggregated result of a trace run.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    pub latencies_ms: Vec<f64>,
+    pub summary_ms: Summary,
+    pub mean_opt_us: f64,
+    pub mean_queue_us: f64,
+    pub mean_exec_us: f64,
+    pub wall_s: f64,
+}
+
+/// Build the e-graph for one (scheme, app, query), measuring optimization
+/// time into `QueryMetrics::opt_us` later.
+pub fn build_egraph(
+    platform: &Platform,
+    run: &TraceRun,
+    q: &QueryConfig,
+) -> Result<(crate::graph::egraph::EGraph, u64)> {
+    let t0 = Instant::now();
+    let mut t = run.app.template(&run.core_llm);
+    bind_answer_tokens(&mut t, q.answer_tokens);
+    let e = run.scheme.build(&t, q, &platform.profiles)?;
+    Ok((e, t0.elapsed().as_micros() as u64))
+}
+
+/// Execute one query synchronously; returns (latency_ms, metrics).
+pub fn run_single(platform: &Platform, run: &TraceRun, q: &QueryConfig) -> Result<(f64, QueryMetrics)> {
+    platform.set_policy(run.scheme.policy());
+    let (e, opt_us) = build_egraph(platform, run, q)?;
+    let qid = next_query_id();
+    let t0 = Instant::now();
+    let (_out, mut m) = platform.run_query(qid, e)?;
+    m.opt_us = opt_us;
+    m.e2e_us = t0.elapsed().as_micros() as u64;
+    Ok((m.e2e_us as f64 / 1000.0, m))
+}
+
+/// Open-loop Poisson trace over the platform; queries run on their own
+/// threads, arrivals follow the trace schedule.
+pub fn run_trace(platform: &Platform, run: &TraceRun) -> Result<TraceResult> {
+    platform.set_policy(run.scheme.policy());
+    let trace = PoissonTrace::generate(run.rate, run.n_queries, run.seed);
+    let mut dataset = Dataset::new(run.dataset, run.seed ^ 0xDA7A);
+
+    // Pre-build all e-graphs (construction is not part of the serving
+    // path being measured; its cost is recorded separately as opt time).
+    let mut prepared = Vec::with_capacity(run.n_queries);
+    for _ in 0..run.n_queries {
+        let q = dataset.sample();
+        let (e, opt_us) = build_egraph(platform, run, &q)?;
+        prepared.push((e, opt_us));
+    }
+
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(run.n_queries);
+    for (i, (e, opt_us)) in prepared.into_iter().enumerate() {
+        let due = trace.arrivals[i];
+        if let Some(wait) = due.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let qid = next_query_id();
+        handles.push((opt_us, platform.spawn_query(qid, e)));
+    }
+
+    let mut latencies = Vec::with_capacity(run.n_queries);
+    let mut opt_sum = 0u64;
+    let mut queue_sum = 0u64;
+    let mut exec_sum = 0u64;
+    for (opt_us, h) in handles {
+        let (_out, m) = h.join().expect("query thread")?;
+        latencies.push(m.e2e_us as f64 / 1000.0);
+        opt_sum += opt_us;
+        queue_sum += m.queue_us;
+        exec_sum += m.exec_us;
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let n = run.n_queries.max(1) as f64;
+    Ok(TraceResult {
+        summary_ms: Summary::of(&latencies),
+        latencies_ms: latencies,
+        mean_opt_us: opt_sum as f64 / n,
+        mean_queue_us: queue_sum as f64 / n,
+        mean_exec_us: exec_sum as f64 / n,
+        wall_s,
+    })
+}
+
+/// Platform config covering one app (core LLM + its aux models).
+pub fn platform_for(app: AppKind, core_llm: &str) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default_with("artifacts", core_llm);
+    for aux in app.aux_llms() {
+        cfg = cfg.with_llm(aux, 2, 8);
+    }
+    cfg
+}
+
+/// Platform config covering several apps at once (co-location).
+pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default_with("artifacts", core_llm);
+    for app in apps {
+        for aux in app.aux_llms() {
+            cfg = cfg.with_llm(aux, 2, 8);
+        }
+    }
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Reporting
+// ---------------------------------------------------------------------------
+
+/// A printable/serializable result table (one per paper artifact).
+#[derive(Debug, Clone)]
+pub struct BenchTable {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub meta: Vec<(String, String)>,
+}
+
+impl BenchTable {
+    /// New table with column headers.
+    pub fn new(name: &str, columns: &[&str]) -> BenchTable {
+        BenchTable {
+            name: name.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Attach free-form metadata (settings, units).
+    pub fn note(&mut self, k: &str, v: &str) {
+        self.meta.push((k.to_string(), v.to_string()));
+    }
+
+    /// Pretty-print in the paper's rows/series format.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.name);
+        for (k, v) in &self.meta {
+            println!("   {k}: {v}");
+        }
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([c.len()])
+                    .max()
+                    .unwrap_or(4)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let mut s = String::from("  ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.columns);
+        line(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<String>>(),
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    /// Dump to `bench_results/<name>.json`.
+    pub fn write_json(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_results")?;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| s(c)).collect()))
+            .collect();
+        let meta: Vec<Json> = self
+            .meta
+            .iter()
+            .map(|(k, v)| obj(vec![("k", s(k)), ("v", s(v))]))
+            .collect();
+        let doc = obj(vec![
+            ("name", s(&self.name)),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| s(c)).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+            ("meta", Json::Arr(meta)),
+            ("unix_time", num(now_unix() as f64)),
+        ]);
+        std::fs::write(
+            format!("bench_results/{}.json", self.name),
+            doc.to_string(),
+        )
+    }
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Format milliseconds.
+pub fn ms(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+/// Format a speedup factor.
+pub fn speedup(base: f64, new: f64) -> String {
+    if new > 0.0 {
+        format!("{:.2}x", base / new)
+    } else {
+        "-".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = BenchTable::new("unit-test-table", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("unit", "ms");
+        assert_eq!(t.rows.len(), 1);
+        t.print();
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(speedup(1.0, 0.0), "-");
+    }
+
+    #[test]
+    fn unique_query_ids() {
+        let a = next_query_id();
+        let b = next_query_id();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,151 @@
+//! Embedding engine (bge-large analog): batched sentence embeddings.
+//!
+//! Jobs may carry many chunks (document indexing) or a single query; the
+//! executor packs all rows of a batch into the smallest covering bucket
+//! and splits oversized groups across successive calls.
+
+use std::rc::Rc;
+use std::sync::mpsc::Sender;
+
+use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::profile::{charge_device, DeviceModel};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput};
+use crate::error::{Result, TeolaError};
+use crate::runtime::{HostTensor, Manifest, XlaContext};
+
+/// Per-instance embedding executor.
+pub struct EmbeddingExecutor {
+    ctx: XlaContext,
+    model: String,
+    seq: usize,
+    d_model: usize,
+    batches: Vec<usize>,
+    device: DeviceModel,
+}
+
+impl EmbeddingExecutor {
+    /// Build on the instance thread; `warm` pre-compiles all buckets.
+    pub fn new(manifest: Rc<Manifest>, model: &str, warm: bool) -> Result<EmbeddingExecutor> {
+        let info = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| TeolaError::Engine(format!("unknown embedder {model}")))?;
+        let seq = info.max_seq;
+        let d_model = info.d_model;
+        let batches = manifest.encoder_batches(model);
+        if batches.is_empty() {
+            return Err(TeolaError::Engine(format!("no buckets for {model}")));
+        }
+        let mut ctx = XlaContext::new(manifest)?;
+        if warm {
+            let names: Vec<String> =
+                batches.iter().map(|b| format!("{model}__embed__b{b}")).collect();
+            ctx.warm(&names)?;
+            ctx.model_weights(model)?;
+        }
+        Ok(EmbeddingExecutor {
+            ctx,
+            model: model.to_string(),
+            seq,
+            d_model,
+            batches,
+            device: DeviceModel::for_engine(model),
+        })
+    }
+
+    /// Embed up to `max_bucket` rows in one XLA call.
+    fn embed_rows(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(rows.len());
+        let maxb = *self.batches.last().unwrap();
+        let mut i = 0;
+        while i < rows.len() {
+            let take = (rows.len() - i).min(maxb);
+            let bb = crate::engines::llm::pick_bucket(&self.batches, take);
+            let mut tokens = vec![0i32; bb * self.seq];
+            let mut mask = vec![0f32; bb * self.seq];
+            for (b, row) in rows[i..i + take].iter().enumerate() {
+                let len = row.len().min(self.seq);
+                tokens[b * self.seq..b * self.seq + len].copy_from_slice(&row[..len]);
+                mask[b * self.seq..b * self.seq + len]
+                    .iter_mut()
+                    .for_each(|x| *x = 1.0);
+            }
+            let artifact = format!("{}__embed__b{}", self.model, bb);
+            let started = std::time::Instant::now();
+            let res = self.ctx.run(
+                &artifact,
+                Some(&self.model.clone()),
+                &[
+                    HostTensor::i32(vec![bb, self.seq], tokens),
+                    HostTensor::f32(vec![bb, self.seq], mask),
+                ],
+            )?;
+            charge_device(started, self.device.encoder_us(take));
+            let flat = res[0].to_vec::<f32>()?;
+            for b in 0..take {
+                out.push(flat[b * self.d_model..(b + 1) * self.d_model].to_vec());
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+impl BatchExecutor for EmbeddingExecutor {
+    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
+        // Flatten all jobs' chunks into one row list, remembering extents.
+        let mut rows: Vec<Vec<i32>> = Vec::new();
+        let mut extents = Vec::new();
+        for (ctx, job) in &batch.jobs {
+            match job {
+                EngineJob::Embed { chunks } => {
+                    extents.push((ctx.clone(), rows.len(), chunks.len()));
+                    rows.extend(chunks.iter().cloned());
+                }
+                other => {
+                    return Err(TeolaError::Engine(format!(
+                        "embedding engine got {other:?}"
+                    )))
+                }
+            }
+        }
+        let embs = self.embed_rows(&rows)?;
+        for (ctx, start, count) in extents {
+            emit(Completion {
+                query: ctx.query,
+                node: ctx.node,
+                output: JobOutput::Embeddings(embs[start..start + count].to_vec()),
+                timing: ExecTiming::default(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Spawn `n_instances` embedding instance threads.
+pub fn spawn_embedding_engine(
+    manifest: Rc<Manifest>,
+    model: &str,
+    n_instances: usize,
+    warm: bool,
+    free_tx: Sender<InstanceFree>,
+    ready_tx: Sender<()>,
+) -> Vec<Instance> {
+    let dir = manifest.dir.clone();
+    (0..n_instances)
+        .map(|i| {
+            let dir_c = dir.clone();
+            let model_c = model.to_string();
+            spawn_instance(
+                i,
+                format!("embed-{i}"),
+                move || {
+                    let m = Rc::new(Manifest::load(dir_c)?);
+                    EmbeddingExecutor::new(m, &model_c, warm)
+                },
+                free_tx.clone(),
+                ready_tx.clone(),
+            )
+        })
+        .collect()
+}

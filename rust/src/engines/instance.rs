@@ -1,0 +1,99 @@
+//! Generic engine-instance worker: one OS thread per instance, one
+//! `BatchExecutor` implementation per engine type.
+//!
+//! The thread owns all non-`Send` XLA state (client, executables, weight
+//! buffers).  Batches arrive over a channel; completions are emitted to
+//! each request's reply channel; an `InstanceFree` token returns to the
+//! engine scheduler so it can dispatch the next batch.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::engines::{Batch, Completion, ExecTiming, InstanceFree};
+use crate::error::Result;
+
+/// Engine-type-specific batched execution logic.  Implementations run on
+/// the instance thread and may emit multiple completions per job
+/// (streaming partial decodes).
+pub trait BatchExecutor {
+    /// Execute a batch; call `emit` for every (possibly partial) completion.
+    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()>;
+}
+
+/// Handle to a spawned instance thread.
+pub struct Instance {
+    pub sender: Sender<Batch>,
+    pub handle: JoinHandle<()>,
+    /// Whether a batch is currently in flight (scheduler bookkeeping).
+    pub busy: bool,
+}
+
+/// Spawn an instance worker.  `make_executor` runs *on the new thread* so
+/// it can own non-Send XLA state; `free_tx` receives an `InstanceFree`
+/// after every batch.
+pub fn spawn_instance<F, E>(
+    index: usize,
+    name: String,
+    make_executor: F,
+    free_tx: Sender<InstanceFree>,
+    ready_tx: Sender<()>,
+) -> Instance
+where
+    F: FnOnce() -> Result<E> + Send + 'static,
+    E: BatchExecutor,
+{
+    let (tx, rx): (Sender<Batch>, Receiver<Batch>) = channel();
+    let handle = std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || {
+            let mut exec = match make_executor() {
+                Ok(e) => {
+                    let _ = ready_tx.send(());
+                    e
+                }
+                Err(err) => {
+                    eprintln!("[{name}] executor init failed: {err}");
+                    let _ = ready_tx.send(());
+                    return;
+                }
+            };
+            while let Ok(batch) = rx.recv() {
+                let started = Instant::now();
+                // (query, node, arrival, reply) per job, for routing.
+                let ctxs: Vec<(u64, usize, Instant, Sender<Completion>)> = batch
+                    .jobs
+                    .iter()
+                    .map(|(ctx, _)| (ctx.query, ctx.node, ctx.arrival, ctx.reply.clone()))
+                    .collect();
+                let mut route = |mut c: Completion| {
+                    // Exact (query, node) match first; segment completions
+                    // may target sibling nodes of the same query (partial
+                    // decodes), so fall back to any job of that query.
+                    let entry = ctxs
+                        .iter()
+                        .find(|(q, n, _, _)| *q == c.query && *n == c.node)
+                        .or_else(|| ctxs.iter().find(|(q, _, _, _)| *q == c.query));
+                    if let Some((_, _, arrival, reply)) = entry {
+                        c.timing.queued_us =
+                            started.duration_since(*arrival).as_micros() as u64;
+                        if c.timing.exec_us == 0 {
+                            c.timing.exec_us = started.elapsed().as_micros() as u64;
+                        }
+                        let _ = reply.send(c);
+                    }
+                };
+                if let Err(err) = exec.execute(batch, &mut route) {
+                    eprintln!("[{name}] batch failed: {err}");
+                }
+                let _ = free_tx.send(InstanceFree { instance: index });
+            }
+        })
+        .expect("spawn instance thread");
+    Instance { sender: tx, handle, busy: false }
+}
+
+/// Build an ExecTiming carrying a measured execution time.
+pub fn timing_exec(exec_us: u64) -> ExecTiming {
+    ExecTiming { queued_us: 0, exec_us }
+}

@@ -1,0 +1,616 @@
+//! LLM serving engine: KV-cache management, chunked (partial/full)
+//! prefilling, batched streaming decode.
+//!
+//! This substitutes the paper's modified vLLM.  Each instance owns a PJRT
+//! context; sequences live in a store shared by all instances of the
+//! engine (KV state crosses instances as host `Vec<f32>`, the analog of
+//! the paper's KV-cache movement cost, cf. Table 3 discussion in §7.4).
+//!
+//! Decode streams: segment boundaries (forced SEP tokens — the stand-in
+//! for the paper's structured-output parser on JSON-ish decodes) emit
+//! completions *during* the loop, which is what makes Pass 4 (decoding
+//! pipelining) effective end-to-end.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::profile::{charge_device, DeviceModel};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput, RequestCtx, SeqId};
+use crate::error::{Result, TeolaError};
+use crate::runtime::{HostTensor, Manifest, XlaContext};
+
+/// Per-sequence decoder state: KV cache ([L,2,1,H,S,Dh] flattened) + the
+/// number of valid positions.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub kv: Vec<f32>,
+    pub len: usize,
+}
+
+/// Sequence store shared across the engine's instances.
+pub type SeqStore = Arc<Mutex<HashMap<SeqId, SeqState>>>;
+
+/// Model geometry needed for KV packing.
+#[derive(Debug, Clone, Copy)]
+pub struct LlmDims {
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+}
+
+impl LlmDims {
+    fn from_manifest(m: &Manifest, variant: &str) -> Result<LlmDims> {
+        let info = m
+            .models
+            .get(variant)
+            .ok_or_else(|| TeolaError::Engine(format!("unknown LLM variant {variant}")))?;
+        Ok(LlmDims {
+            layers: info.layers,
+            heads: info.n_heads,
+            max_seq: info.max_seq,
+            head_dim: info.d_model / info.n_heads,
+            vocab: info.vocab,
+        })
+    }
+
+    /// Elements of one sequence's KV cache.
+    pub fn seq_kv_elems(&self) -> usize {
+        self.layers * 2 * self.heads * self.max_seq * self.head_dim
+    }
+
+    /// Elements of one (layer, k/v) plane for a single sequence.
+    fn plane(&self) -> usize {
+        self.heads * self.max_seq * self.head_dim
+    }
+}
+
+/// Pack per-sequence KV caches ([L,2,1,H,S,Dh] each) into a batch tensor
+/// [L,2,B,H,S,Dh].  Missing/None entries are zero (fresh sequences).
+pub fn pack_kv(dims: &LlmDims, seqs: &[Option<&SeqState>], batch: usize) -> Vec<f32> {
+    let plane = dims.plane();
+    let mut out = vec![0f32; dims.layers * 2 * batch * plane];
+    for (b, s) in seqs.iter().enumerate() {
+        if let Some(state) = s {
+            for l in 0..dims.layers {
+                for k in 0..2 {
+                    let src = (l * 2 + k) * plane;
+                    let dst = ((l * 2 + k) * batch + b) * plane;
+                    out[dst..dst + plane].copy_from_slice(&state.kv[src..src + plane]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_kv`]: extract row `b` into a per-sequence KV buffer.
+pub fn unpack_kv(dims: &LlmDims, batched: &[f32], batch: usize, b: usize) -> Vec<f32> {
+    let plane = dims.plane();
+    let mut out = vec![0f32; dims.seq_kv_elems()];
+    for l in 0..dims.layers {
+        for k in 0..2 {
+            let dst = (l * 2 + k) * plane;
+            let src = ((l * 2 + k) * batch + b) * plane;
+            out[dst..dst + plane].copy_from_slice(&batched[src..src + plane]);
+        }
+    }
+    out
+}
+
+/// Pick the smallest bucket `>= need` from an ascending list; falls back to
+/// the largest when `need` exceeds every bucket (caller must then split).
+pub fn pick_bucket(buckets: &[usize], need: usize) -> usize {
+    for &b in buckets {
+        if b >= need {
+            return b;
+        }
+    }
+    *buckets.last().expect("no buckets")
+}
+
+struct PrefillRow {
+    ctx: RequestCtx,
+    seq: SeqId,
+    tokens: Vec<i32>,
+    offset: usize,
+}
+
+struct DecodeRow {
+    ctx: RequestCtx,
+    seq: SeqId,
+    first_token: i32,
+    segments: Vec<crate::engines::SegmentSpec>,
+}
+
+/// The per-instance executor.
+pub struct LlmExecutor {
+    ctx: XlaContext,
+    variant: String,
+    dims: LlmDims,
+    store: SeqStore,
+    prefill_buckets: Vec<(usize, usize)>,
+    decode_batches: Vec<usize>,
+    device: DeviceModel,
+    sep: i32,
+    eos: i32,
+}
+
+impl LlmExecutor {
+    /// Build an executor bound to this thread; optionally pre-compile all
+    /// of the variant's buckets.
+    pub fn new(manifest: Rc<Manifest>, variant: &str, store: SeqStore, warm: bool) -> Result<LlmExecutor> {
+        let dims = LlmDims::from_manifest(&manifest, variant)?;
+        let prefill_buckets = manifest.prefill_buckets(variant);
+        let decode_batches = manifest.decode_batches(variant);
+        if prefill_buckets.is_empty() || decode_batches.is_empty() {
+            return Err(TeolaError::Engine(format!("no buckets for {variant}")));
+        }
+        let sep = manifest.special.sep;
+        let eos = manifest.special.eos;
+        let mut ctx = XlaContext::new(manifest)?;
+        if warm {
+            let mut names: Vec<String> = prefill_buckets
+                .iter()
+                .map(|(b, c)| format!("{variant}__prefill__b{b}_c{c}"))
+                .collect();
+            names.extend(decode_batches.iter().map(|b| format!("{variant}__decode__b{b}")));
+            ctx.warm(&names)?;
+            ctx.model_weights(variant)?;
+        }
+        Ok(LlmExecutor {
+            ctx,
+            variant: variant.to_string(),
+            dims,
+            store,
+            prefill_buckets,
+            decode_batches,
+            device: DeviceModel::for_engine(variant),
+            sep,
+            eos,
+        })
+    }
+
+    /// Max rows a prefill call supports.
+    fn max_prefill_batch(&self) -> usize {
+        self.prefill_buckets.iter().map(|(b, _)| *b).max().unwrap()
+    }
+
+    /// Prefill bucket choice: smallest (B, C) covering (rows, chunk).
+    fn prefill_bucket(&self, rows: usize, chunk: usize) -> (usize, usize) {
+        let mut best: Option<(usize, usize)> = None;
+        for &(b, c) in &self.prefill_buckets {
+            if b >= rows && c >= chunk {
+                let cand = (b, c);
+                best = Some(match best {
+                    None => cand,
+                    Some(prev) => {
+                        // minimize padded area b*c
+                        if cand.0 * cand.1 < prev.0 * prev.1 {
+                            cand
+                        } else {
+                            prev
+                        }
+                    }
+                });
+            }
+        }
+        best.unwrap_or_else(|| {
+            // chunk exceeds all buckets: take the largest chunk bucket that
+            // fits the rows; caller splits the token stream.
+            *self
+                .prefill_buckets
+                .iter()
+                .filter(|(b, _)| *b >= rows)
+                .max_by_key(|(_, c)| *c)
+                .unwrap_or(self.prefill_buckets.last().unwrap())
+        })
+    }
+
+    fn run_prefill_group(
+        &mut self,
+        rows: Vec<PrefillRow>,
+        emit: &mut dyn FnMut(Completion),
+    ) -> Result<()> {
+        // Split oversized chunks into bucket-sized pieces (sequential calls
+        // on the same sequence preserve offsets).  The threshold is the
+        // largest chunk available in *multi-row* buckets so batched rows
+        // are never truncated to a smaller bucket.
+        let max_c = self
+            .prefill_buckets
+            .iter()
+            .filter(|(b, _)| *b >= 2)
+            .map(|(_, c)| *c)
+            .max()
+            .unwrap_or_else(|| self.prefill_buckets.iter().map(|(_, c)| *c).max().unwrap());
+        let mut work: Vec<PrefillRow> = Vec::new();
+        for mut r in rows {
+            while r.tokens.len() > max_c {
+                let head: Vec<i32> = r.tokens.drain(..max_c).collect();
+                let piece = PrefillRow {
+                    ctx: r.ctx.clone(),
+                    seq: r.seq,
+                    tokens: head,
+                    offset: r.offset,
+                };
+                r.offset += max_c;
+                // Intermediate pieces complete silently (no emit).
+                self.exec_prefill_batch(vec![piece], None)?;
+            }
+            work.push(r);
+        }
+
+        // Group rows into batch-bucket-sized calls.
+        let maxb = self.max_prefill_batch();
+        let mut i = 0;
+        while i < work.len() {
+            let take = (work.len() - i).min(maxb);
+            let group: Vec<PrefillRow> = work.drain(i..i + take).collect();
+            self.exec_prefill_batch(group, Some(emit))?;
+        }
+        Ok(())
+    }
+
+    fn exec_prefill_batch(
+        &mut self,
+        rows: Vec<PrefillRow>,
+        mut emit: Option<&mut dyn FnMut(Completion)>,
+    ) -> Result<()> {
+        let n = rows.len();
+        let chunk_need = rows.iter().map(|r| r.tokens.len()).max().unwrap_or(1);
+        let (bb, bc) = self.prefill_bucket(n, chunk_need);
+        let artifact = format!("{}__prefill__b{}_c{}", self.variant, bb, bc);
+
+        // Gather KV states.
+        let states: Vec<Option<SeqState>> = {
+            let store = self.store.lock().unwrap();
+            rows.iter().map(|r| store.get(&r.seq).cloned()).collect()
+        };
+        let refs: Vec<Option<&SeqState>> = states.iter().map(|s| s.as_ref()).collect();
+        let kv = pack_kv(&self.dims, &refs, bb);
+
+        let mut tokens = vec![0i32; bb * bc];
+        let mut offsets = vec![0i32; bb];
+        let mut lengths = vec![1i32; bb]; // padded rows use length 1 on pads
+        for (b, r) in rows.iter().enumerate() {
+            let len = r.tokens.len().min(bc);
+            tokens[b * bc..b * bc + len].copy_from_slice(&r.tokens[..len]);
+            offsets[b] = r.offset as i32;
+            lengths[b] = len as i32;
+        }
+
+        let kv_shape = vec![self.dims.layers, 2, bb, self.dims.heads, self.dims.max_seq, self.dims.head_dim];
+        // Device-occupancy: charge for the *valid* tokens of this call.
+        let valid_tokens: usize = rows.iter().map(|r| r.tokens.len().min(bc)).sum();
+        let started = std::time::Instant::now();
+        let out = self.ctx.run(
+            &artifact,
+            Some(&self.variant.clone()),
+            &[
+                HostTensor::i32(vec![bb, bc], tokens),
+                HostTensor::f32(kv_shape, kv),
+                HostTensor::i32(vec![bb], offsets),
+                HostTensor::i32(vec![bb], lengths),
+            ],
+        )?;
+        charge_device(started, self.device.prefill_us(1, valid_tokens));
+        let kv_out = out[0].to_vec::<f32>()?;
+        let next = out[2].to_vec::<i32>()?;
+
+        // Write back sequence states and emit completions.
+        {
+            let mut store = self.store.lock().unwrap();
+            for (b, r) in rows.iter().enumerate() {
+                let kv_seq = unpack_kv(&self.dims, &kv_out, bb, b);
+                let new_len = r.offset + r.tokens.len().min(bc);
+                store.insert(r.seq, SeqState { kv: kv_seq, len: new_len });
+            }
+        }
+        if let Some(emit) = emit.as_deref_mut() {
+            for (b, r) in rows.iter().enumerate() {
+                emit(Completion {
+                    query: r.ctx.query,
+                    node: r.ctx.node,
+                    output: JobOutput::Tokens(vec![next[b]]),
+                    timing: ExecTiming::default(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn run_decode_group(
+        &mut self,
+        rows: Vec<DecodeRow>,
+        emit: &mut dyn FnMut(Completion),
+    ) -> Result<()> {
+        let maxb = *self.decode_batches.last().unwrap();
+        let mut i = 0;
+        let mut rows = rows;
+        while i < rows.len() {
+            let take = (rows.len() - i).min(maxb);
+            let group: Vec<DecodeRow> = rows.drain(i..i + take).collect();
+            self.exec_decode_batch(group, emit)?;
+        }
+        let _ = i;
+        Ok(())
+    }
+
+    fn exec_decode_batch(
+        &mut self,
+        rows: Vec<DecodeRow>,
+        emit: &mut dyn FnMut(Completion),
+    ) -> Result<()> {
+        let n = rows.len();
+        let bb = pick_bucket(&self.decode_batches, n);
+        let artifact = format!("{}__decode__b{}", self.variant, bb);
+        let s_cap = self.dims.max_seq;
+
+        // Gather KV + positions.
+        let states: Vec<Option<SeqState>> = {
+            let store = self.store.lock().unwrap();
+            rows.iter().map(|r| store.get(&r.seq).cloned()).collect()
+        };
+        let refs: Vec<Option<&SeqState>> = states.iter().map(|s| s.as_ref()).collect();
+        let mut kv = pack_kv(&self.dims, &refs, bb);
+        let kv_shape = vec![self.dims.layers, 2, bb, self.dims.heads, s_cap, self.dims.head_dim];
+
+        let mut positions: Vec<i32> = (0..bb).map(|_| 0).collect();
+        let mut tokens: Vec<i32> = vec![self.eos; bb];
+        // Per-row progress.
+        let mut planned: Vec<usize> = vec![0; bb];
+        let mut produced: Vec<usize> = vec![0; bb];
+        let mut seg_idx: Vec<usize> = vec![0; bb];
+        let mut seg_tokens: Vec<Vec<i32>> = vec![Vec::new(); bb];
+        let mut all_segments: Vec<Vec<Vec<i32>>> = vec![Vec::new(); bb];
+        for (b, r) in rows.iter().enumerate() {
+            let st = states[b]
+                .as_ref()
+                .ok_or_else(|| TeolaError::Engine(format!("decode on unknown seq {:?}", r.seq)))?;
+            positions[b] = st.len.min(s_cap - 1) as i32;
+            tokens[b] = r.first_token;
+            planned[b] = r.segments.iter().map(|s| s.len).sum();
+        }
+
+        let total_needed: usize = planned.iter().sum();
+        let mut emitted_total = 0usize;
+        // Autoregressive loop; all rows step together, finished rows decode
+        // into a clamped position and are ignored.
+        while emitted_total < total_needed {
+            let step_started = std::time::Instant::now();
+            let out = self.ctx.run(
+                &artifact,
+                Some(&self.variant.clone()),
+                &[
+                    HostTensor::i32(vec![bb], tokens.clone()),
+                    HostTensor::f32(kv_shape.clone(), kv),
+                    HostTensor::i32(vec![bb], positions.clone()),
+                ],
+            )?;
+            charge_device(step_started, self.device.decode_step_us(n));
+            kv = out[0].to_vec::<f32>()?;
+            let next = out[2].to_vec::<i32>()?;
+
+            for (b, r) in rows.iter().enumerate() {
+                if produced[b] >= planned[b] {
+                    continue;
+                }
+                // Host-side constrained sampling: force SEP at segment
+                // boundaries, EOS at the end of the plan.
+                let seg = &r.segments[seg_idx[b]];
+                let pos_in_seg = seg_tokens[b].len() + 1;
+                let is_seg_end = pos_in_seg >= seg.len;
+                let is_last = produced[b] + 1 >= planned[b];
+                let tok = if is_last {
+                    self.eos
+                } else if is_seg_end {
+                    self.sep
+                } else {
+                    let mut t = next[b];
+                    if t == self.eos || t == self.sep {
+                        t = 4 + (t.unsigned_abs() as i32 % 100);
+                    }
+                    t
+                };
+                seg_tokens[b].push(tok);
+                produced[b] += 1;
+                emitted_total += 1;
+                tokens[b] = tok;
+                positions[b] = (positions[b] + 1).min(s_cap as i32 - 1);
+
+                if is_seg_end || is_last {
+                    let out_tokens = std::mem::take(&mut seg_tokens[b]);
+                    all_segments[b].push(out_tokens.clone());
+                    // Stream the segment to its marker node (Pass 4); the
+                    // decode node itself receives the full output when its
+                    // row finishes, so skip streaming when the target is
+                    // the decode node.
+                    if seg.node != r.ctx.node {
+                        emit(Completion {
+                            query: r.ctx.query,
+                            node: seg.node,
+                            output: JobOutput::Tokens(out_tokens),
+                            timing: ExecTiming::default(),
+                        });
+                    }
+                    if seg_idx[b] + 1 < r.segments.len() {
+                        seg_idx[b] += 1;
+                    }
+                    if is_last {
+                        // Row done: complete the decode node immediately
+                        // (don't make short rows wait for the batch tail).
+                        emit(Completion {
+                            query: r.ctx.query,
+                            node: r.ctx.node,
+                            output: JobOutput::TokenBatch(std::mem::take(
+                                &mut all_segments[b],
+                            )),
+                            timing: ExecTiming::default(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Persist final KV state (refine-mode reuses the sequence later).
+        {
+            let mut store = self.store.lock().unwrap();
+            for (b, r) in rows.iter().enumerate() {
+                let kv_seq = unpack_kv(&self.dims, &kv, bb, b);
+                let len = (positions[b] as usize + 1).min(s_cap);
+                store.insert(r.seq, SeqState { kv: kv_seq, len });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl BatchExecutor for LlmExecutor {
+    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
+        let mut prefills: Vec<PrefillRow> = Vec::new();
+        let mut decodes: Vec<DecodeRow> = Vec::new();
+        for (ctx, job) in batch.jobs {
+            match job {
+                EngineJob::Prefill { seq, tokens, offset } => {
+                    prefills.push(PrefillRow { ctx, seq, tokens, offset })
+                }
+                EngineJob::Decode { seq, first_token, segments } => {
+                    decodes.push(DecodeRow { ctx, seq, first_token, segments })
+                }
+                EngineJob::ClonePrefix { src, dst, len } => {
+                    let mut store = self.store.lock().unwrap();
+                    if let Some(s) = store.get(&src).cloned() {
+                        let mut kv = s.kv.clone();
+                        // Zero positions >= len so only the prefix is reused.
+                        zero_after(&self.dims, &mut kv, len);
+                        store.insert(dst, SeqState { kv, len: len.min(s.len) });
+                    }
+                    drop(store);
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::Unit,
+                        timing: ExecTiming::default(),
+                    });
+                }
+                EngineJob::FreeQuery { query } => {
+                    let mut store = self.store.lock().unwrap();
+                    store.retain(|k, _| k.0 != query);
+                    drop(store);
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::Unit,
+                        timing: ExecTiming::default(),
+                    });
+                }
+                other => {
+                    return Err(TeolaError::Engine(format!(
+                        "LLM engine got non-LLM job {other:?}"
+                    )))
+                }
+            }
+        }
+        if !prefills.is_empty() {
+            self.run_prefill_group(prefills, emit)?;
+        }
+        if !decodes.is_empty() {
+            self.run_decode_group(decodes, emit)?;
+        }
+        Ok(())
+    }
+}
+
+/// Zero every cache position >= `len` (prefix-clone hygiene).
+fn zero_after(dims: &LlmDims, kv: &mut [f32], len: usize) {
+    let row = dims.head_dim;
+    let seq = dims.max_seq;
+    for l in 0..dims.layers {
+        for k in 0..2 {
+            for h in 0..dims.heads {
+                let base = (((l * 2 + k) * dims.heads) + h) * seq * row;
+                for s in len..seq {
+                    let p = base + s * row;
+                    kv[p..p + row].iter_mut().for_each(|x| *x = 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Spawn `n_instances` LLM instance threads sharing one sequence store.
+pub fn spawn_llm_engine(
+    manifest: Rc<Manifest>,
+    variant: &str,
+    n_instances: usize,
+    warm: bool,
+    free_tx: Sender<InstanceFree>,
+    ready_tx: Sender<()>,
+) -> (Vec<Instance>, SeqStore) {
+    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+    // Manifest is not Send (Rc) — reload per thread from its directory.
+    let dir = manifest.dir.clone();
+    let mut instances = Vec::new();
+    for i in 0..n_instances {
+        let store_c = store.clone();
+        let dir_c = dir.clone();
+        let variant_c = variant.to_string();
+        let inst = spawn_instance(
+            i,
+            format!("llm-{variant}-{i}"),
+            move || {
+                let m = Rc::new(Manifest::load(dir_c)?);
+                LlmExecutor::new(m, &variant_c, store_c, warm)
+            },
+            free_tx.clone(),
+            ready_tx.clone(),
+        );
+        instances.push(inst);
+    }
+    (instances, store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> LlmDims {
+        LlmDims { layers: 2, heads: 2, max_seq: 8, head_dim: 4, vocab: 16 }
+    }
+
+    #[test]
+    fn kv_pack_unpack_roundtrip() {
+        let d = dims();
+        let n = d.seq_kv_elems();
+        let s0 = SeqState { kv: (0..n).map(|x| x as f32).collect(), len: 3 };
+        let s1 = SeqState { kv: (0..n).map(|x| (x * 2) as f32).collect(), len: 5 };
+        let packed = pack_kv(&d, &[Some(&s0), Some(&s1), None], 4);
+        assert_eq!(packed.len(), d.layers * 2 * 4 * d.plane());
+        assert_eq!(unpack_kv(&d, &packed, 4, 0), s0.kv);
+        assert_eq!(unpack_kv(&d, &packed, 4, 1), s1.kv);
+        assert!(unpack_kv(&d, &packed, 4, 2).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 3), 4);
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 1), 1);
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 9), 8);
+    }
+
+    #[test]
+    fn zero_after_clears_suffix_only() {
+        let d = dims();
+        let mut kv = vec![1f32; d.seq_kv_elems()];
+        zero_after(&d, &mut kv, 3);
+        // position 2 of layer 0 k-plane head 0 survives
+        assert_eq!(kv[2 * d.head_dim], 1.0);
+        // position 3 is zeroed
+        assert_eq!(kv[3 * d.head_dim], 0.0);
+    }
+}

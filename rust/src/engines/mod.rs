@@ -1,0 +1,187 @@
+//! Execution-engine substrates.
+//!
+//! The paper deploys vLLM (LLM), Triton-style servers (embedding,
+//! reranking), postgres+pgvector (vector DB) and Google custom search.  We
+//! rebuild each as a Rust engine:
+//!
+//! * model-based engines execute AOT XLA artifacts on per-instance PJRT
+//!   contexts (one OS thread per instance == one GPU in the paper);
+//! * model-free engines (vector DB, web search) are CPU-side services with
+//!   their own worker threads.
+//!
+//! All engines share one job/batch protocol so the lower-tier engine
+//! schedulers (scheduler/engine_sched.rs) can batch primitives uniformly.
+
+pub mod embedding;
+pub mod instance;
+pub mod llm;
+pub mod profile;
+pub mod reranker;
+pub mod search;
+pub mod vector_db;
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Query identifier (assigned by the frontend).
+pub type QueryId = u64;
+/// Node identifier within one query's e-graph.
+pub type NodeId = usize;
+/// LLM sequence identifier: (query, call index within the query).
+pub type SeqId = (QueryId, u32);
+
+/// The engine types of the paper's applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// An LLM serving engine for a specific model variant.
+    Llm,
+    /// Embedding model engine.
+    Embedding,
+    /// Cross-encoder reranker engine.
+    Reranker,
+    /// Vector database (ingestion + search).
+    VectorDb,
+    /// External web-search service.
+    WebSearch,
+    /// Generic external tool API (agent workflows).
+    Tool,
+}
+
+/// How many new tokens a decode must produce and how the output splits into
+/// semantically separate segments (paper Pass 4: splittable decodes).
+#[derive(Debug, Clone)]
+pub struct SegmentSpec {
+    /// e-graph node credited when this segment completes (enables partial
+    /// decoding primitives to fire downstream work early).
+    pub node: NodeId,
+    /// Number of tokens in this segment (SEP token terminates it).
+    pub len: usize,
+}
+
+/// One schedulable unit of engine work (the payload of a primitive).
+#[derive(Debug, Clone)]
+pub enum EngineJob {
+    /// Chunked (partial or full) prefill of `tokens` into `seq` at `offset`.
+    Prefill {
+        seq: SeqId,
+        tokens: Vec<i32>,
+        offset: usize,
+    },
+    /// Autoregressive decode after the seq's prefill completed.
+    /// `segments` partitions the planned output; unsplit decodes use a
+    /// single segment pointing at the decode node itself.
+    Decode {
+        seq: SeqId,
+        first_token: i32,
+        segments: Vec<SegmentSpec>,
+    },
+    /// Copy the first `len` cache positions from `src` into `dst`
+    /// (prefix-cache reuse — used by the LlamaDistPC baseline).
+    ClonePrefix { src: SeqId, dst: SeqId, len: usize },
+    /// Release every sequence belonging to a query (end-of-query cleanup).
+    FreeQuery { query: QueryId },
+    /// Embed a batch of token chunks.
+    Embed { chunks: Vec<Vec<i32>> },
+    /// Score pre-packed (query ++ SEP ++ candidate) pair sequences.
+    Rerank { pairs: Vec<Vec<i32>> },
+    /// Store chunk embeddings in the per-query vector-DB namespace.
+    Ingest {
+        namespace: QueryId,
+        chunks: Vec<Vec<i32>>,
+        embeddings: Vec<Vec<f32>>,
+    },
+    /// Top-k cosine search per query embedding in a namespace.
+    VectorSearch {
+        namespace: QueryId,
+        embeddings: Vec<Vec<f32>>,
+        top_k: usize,
+    },
+    /// Web-search over the global corpus (single or batched queries).
+    WebSearch { queries: Vec<Vec<i32>>, top_k: usize },
+    /// Simulated external tool API call with a fixed latency envelope.
+    ToolCall { name: String, cost_us: u64 },
+}
+
+impl EngineJob {
+    /// Number of model "rows" this job contributes to a batch (for slot
+    /// accounting in Algorithm 2).
+    pub fn rows(&self) -> usize {
+        match self {
+            EngineJob::Prefill { .. } | EngineJob::Decode { .. } => 1,
+            EngineJob::Embed { chunks } => chunks.len(),
+            EngineJob::Rerank { pairs } => pairs.len(),
+            EngineJob::Ingest { chunks, .. } => chunks.len(),
+            EngineJob::VectorSearch { embeddings, .. } => embeddings.len(),
+            EngineJob::WebSearch { queries, .. } => queries.len(),
+            EngineJob::ClonePrefix { .. }
+            | EngineJob::FreeQuery { .. }
+            | EngineJob::ToolCall { .. } => 1,
+        }
+    }
+}
+
+/// Result value of a completed job/segment.
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    /// Generated tokens (decode segment output).
+    Tokens(Vec<i32>),
+    /// A list of token sequences (retrieved chunks, search results, ...).
+    TokenBatch(Vec<Vec<i32>>),
+    /// Embedding vectors.
+    Embeddings(Vec<Vec<f32>>),
+    /// Relevance scores.
+    Scores(Vec<f32>),
+    /// Side-effect only.
+    Unit,
+}
+
+/// Execution timing recorded by the instance for metrics/fig12.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Microseconds spent queued in the engine scheduler.
+    pub queued_us: u64,
+    /// Microseconds of actual engine execution (batched; shared rows see
+    /// the same value).
+    pub exec_us: u64,
+}
+
+/// Completion notification sent to the query's graph scheduler.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub query: QueryId,
+    pub node: NodeId,
+    pub output: JobOutput,
+    pub timing: ExecTiming,
+}
+
+/// Request context travelling with a job through queue -> batch -> instance.
+#[derive(Debug, Clone)]
+pub struct RequestCtx {
+    pub query: QueryId,
+    pub node: NodeId,
+    /// Topological depth of the node in its e-graph (Algorithm 2).
+    pub depth: u32,
+    /// When the job entered the engine scheduler queue.
+    pub arrival: Instant,
+    /// Completion channel of the owning query's graph scheduler.
+    pub reply: Sender<Completion>,
+}
+
+/// A batch the engine scheduler hands to one engine instance.
+#[derive(Debug)]
+pub struct Batch {
+    pub jobs: Vec<(RequestCtx, EngineJob)>,
+}
+
+impl Batch {
+    /// Total model rows across jobs.
+    pub fn rows(&self) -> usize {
+        self.jobs.iter().map(|(_, j)| j.rows()).sum()
+    }
+}
+
+/// Message an instance sends its engine scheduler when a batch finishes.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceFree {
+    pub instance: usize,
+}

@@ -1,0 +1,222 @@
+//! Web-search engine simulator (Google custom search analog).
+//!
+//! The paper calls an external search API (single and batched requests)
+//! with network latency we cannot reproduce; this module indexes a
+//! synthetic corpus and models the latency envelope: a per-request base
+//! RTT plus a small per-result transfer cost, drawn deterministically per
+//! request.  Relevance is token-overlap scoring (BM25-lite) — retrieval
+//! *content* only needs to be shape-realistic for the serving benchmarks.
+//!
+//! External tool APIs for the agent workflow reuse the same worker with a
+//! fixed `cost_us` (paper Fig. 2b: draft/send email etc.).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput};
+use crate::error::{Result, TeolaError};
+use crate::util::rng::Rng;
+
+/// One indexed document (its token ids; doubles as the snippet returned).
+#[derive(Debug, Clone)]
+pub struct Doc {
+    pub tokens: Vec<i32>,
+}
+
+/// The searchable corpus + inverted index.
+#[derive(Debug)]
+pub struct Corpus {
+    pub docs: Vec<Doc>,
+    index: HashMap<i32, Vec<u32>>, // token -> doc ids
+}
+
+impl Corpus {
+    /// Build a deterministic synthetic corpus of `n_docs` documents with
+    /// Zipf-distributed tokens of `len` each.
+    pub fn synthetic(n_docs: usize, len: usize, vocab: usize, seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let mut docs = Vec::with_capacity(n_docs);
+        for _ in 0..n_docs {
+            let tokens: Vec<i32> =
+                (0..len).map(|_| 4 + rng.zipf(0, (vocab - 4) as u64) as i32).collect();
+            docs.push(Doc { tokens });
+        }
+        Corpus::from_docs(docs)
+    }
+
+    /// Index an explicit document set.
+    pub fn from_docs(docs: Vec<Doc>) -> Corpus {
+        let mut index: HashMap<i32, Vec<u32>> = HashMap::new();
+        for (i, d) in docs.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &t in &d.tokens {
+                if seen.insert(t) {
+                    index.entry(t).or_default().push(i as u32);
+                }
+            }
+        }
+        Corpus { docs, index }
+    }
+
+    /// Token-overlap scored top-k (BM25-lite: idf-weighted hit counting).
+    pub fn search(&self, query: &[i32], k: usize) -> Vec<usize> {
+        let n = self.docs.len() as f32;
+        let mut scores: HashMap<u32, f32> = HashMap::new();
+        for &t in query {
+            if let Some(postings) = self.index.get(&t) {
+                let idf = (n / (postings.len() as f32 + 0.5)).ln().max(0.0);
+                for &d in postings {
+                    *scores.entry(d).or_default() += idf;
+                }
+            }
+        }
+        let mut ranked: Vec<(f32, u32)> = scores.into_iter().map(|(d, s)| (s, d)).collect();
+        ranked.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        ranked.into_iter().take(k).map(|(_, d)| d as usize).collect()
+    }
+}
+
+/// Latency envelope of the simulated external service.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Base round-trip in microseconds.
+    pub base_us: u64,
+    /// Additional cost per result row.
+    pub per_result_us: u64,
+    /// +- jitter fraction applied deterministically per request.
+    pub jitter: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // ~35 ms RTT to a search API, 1 ms per extra result row.
+        NetModel { base_us: 35_000, per_result_us: 1_000, jitter: 0.2 }
+    }
+}
+
+/// Web-search batch executor.
+pub struct SearchExecutor {
+    corpus: Arc<Corpus>,
+    net: NetModel,
+    rng: Rng,
+}
+
+impl BatchExecutor for SearchExecutor {
+    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
+        for (ctx, job) in batch.jobs {
+            let started = Instant::now();
+            match job {
+                EngineJob::WebSearch { queries, top_k } => {
+                    // Batched requests share one RTT (the paper's search
+                    // engine "supports single and batched requests").
+                    let rows: usize = queries.len() * top_k;
+                    let jit = 1.0 + self.net.jitter * (self.rng.next_f64() * 2.0 - 1.0);
+                    let cost = Duration::from_micros(
+                        ((self.net.base_us + self.net.per_result_us * rows as u64) as f64
+                            * jit) as u64,
+                    );
+                    std::thread::sleep(cost);
+                    let mut results = Vec::new();
+                    for q in &queries {
+                        for d in self.corpus.search(q, top_k) {
+                            results.push(self.corpus.docs[d].tokens.clone());
+                        }
+                    }
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::TokenBatch(results),
+                        timing: ExecTiming {
+                            queued_us: 0,
+                            exec_us: started.elapsed().as_micros() as u64,
+                        },
+                    });
+                }
+                EngineJob::ToolCall { cost_us, .. } => {
+                    std::thread::sleep(Duration::from_micros(cost_us));
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::Unit,
+                        timing: ExecTiming {
+                            queued_us: 0,
+                            exec_us: started.elapsed().as_micros() as u64,
+                        },
+                    });
+                }
+                other => {
+                    return Err(TeolaError::Engine(format!("search engine got {other:?}")))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Spawn the web-search engine over a shared corpus.
+pub fn spawn_search_engine(
+    corpus: Arc<Corpus>,
+    net: NetModel,
+    n_instances: usize,
+    free_tx: Sender<InstanceFree>,
+    ready_tx: Sender<()>,
+) -> Vec<Instance> {
+    (0..n_instances)
+        .map(|i| {
+            let corpus_c = corpus.clone();
+            spawn_instance(
+                i,
+                format!("search-{i}"),
+                move || {
+                    Ok::<_, crate::error::TeolaError>(SearchExecutor {
+                        corpus: corpus_c,
+                        net,
+                        rng: Rng::new(4242 + i as u64),
+                    })
+                },
+                free_tx.clone(),
+                ready_tx.clone(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_finds_overlapping_doc() {
+        let docs = vec![
+            Doc { tokens: vec![10, 11, 12] },
+            Doc { tokens: vec![20, 21, 22] },
+            Doc { tokens: vec![10, 21, 30] },
+        ];
+        let c = Corpus::from_docs(docs);
+        let got = c.search(&[20, 21, 22], 2);
+        assert_eq!(got[0], 1);
+    }
+
+    #[test]
+    fn search_respects_k() {
+        let c = Corpus::synthetic(50, 32, 512, 7);
+        let q: Vec<i32> = c.docs[3].tokens[..8].to_vec();
+        let got = c.search(&q, 4);
+        assert!(got.len() <= 4);
+        assert!(got.contains(&3), "self-similar doc should rank");
+    }
+
+    #[test]
+    fn synthetic_corpus_deterministic() {
+        let a = Corpus::synthetic(5, 16, 256, 9);
+        let b = Corpus::synthetic(5, 16, 256, 9);
+        for (x, y) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+}

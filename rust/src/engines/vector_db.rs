@@ -1,0 +1,221 @@
+//! Vector database substrate (postgresql + pgvector analog).
+//!
+//! An in-process store with per-query namespaces: document QA apps ingest
+//! each query's uploaded document chunks, search them, then drop the
+//! namespace.  Search is exact brute-force cosine over unit vectors (the
+//! embedder L2-normalises), which at our chunk counts (tens) matches
+//! pgvector's exact mode semantics.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput, QueryId};
+use crate::error::{Result, TeolaError};
+
+/// A stored chunk: unit-norm embedding + original tokens.
+#[derive(Debug, Clone)]
+pub struct StoredChunk {
+    pub embedding: Vec<f32>,
+    pub tokens: Vec<i32>,
+}
+
+/// Namespaced store shared by the DB engine's workers.
+pub type DbStore = Arc<RwLock<HashMap<QueryId, Vec<StoredChunk>>>>;
+
+/// Cosine similarity of two (not necessarily unit) vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let mut dot = 0f32;
+    let mut na = 0f32;
+    let mut nb = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+/// Top-k most similar stored chunks for one query embedding.
+pub fn top_k(chunks: &[StoredChunk], query: &[f32], k: usize) -> Vec<usize> {
+    let mut scored: Vec<(f32, usize)> = chunks
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (cosine(&c.embedding, query), i))
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    scored.into_iter().take(k).map(|(_, i)| i).collect()
+}
+
+/// Round-trip + per-row cost model of the out-of-process database the
+/// paper uses (postgresql + pgvector over a socket).  Our store is
+/// in-process, so the protocol/planner/WAL costs are modelled explicitly.
+#[derive(Debug, Clone, Copy)]
+pub struct DbCostModel {
+    /// Per-operation round trip (protocol + planning), microseconds.
+    pub base_us: u64,
+    /// Per ingested/scored row, microseconds.
+    pub per_row_us: u64,
+}
+
+impl Default for DbCostModel {
+    fn default() -> Self {
+        // ~4 ms RTT + 250 us/row: pgvector exact-search ballpark scaled to
+        // this testbed (see DESIGN.md §2 substitutions).
+        DbCostModel { base_us: 4_000, per_row_us: 250 }
+    }
+}
+
+/// Vector-DB batch executor (model-free: no XLA context).
+pub struct VectorDbExecutor {
+    store: DbStore,
+    cost: DbCostModel,
+}
+
+impl VectorDbExecutor {
+    fn charge(&self, rows: usize) {
+        let us = self.cost.base_us + self.cost.per_row_us * rows as u64;
+        std::thread::sleep(std::time::Duration::from_micros(us));
+    }
+}
+
+impl BatchExecutor for VectorDbExecutor {
+    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
+        for (ctx, job) in batch.jobs {
+            let started = Instant::now();
+            match job {
+                EngineJob::Ingest { namespace, chunks, embeddings } => {
+                    self.charge(chunks.len());
+                    if chunks.len() != embeddings.len() {
+                        return Err(TeolaError::Engine(format!(
+                            "ingest arity mismatch: {} chunks vs {} embeddings",
+                            chunks.len(),
+                            embeddings.len()
+                        )));
+                    }
+                    let mut store = self.store.write().unwrap();
+                    let ns = store.entry(namespace).or_default();
+                    for (t, e) in chunks.into_iter().zip(embeddings) {
+                        ns.push(StoredChunk { embedding: e, tokens: t });
+                    }
+                    drop(store);
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::Unit,
+                        timing: ExecTiming {
+                            queued_us: 0,
+                            exec_us: started.elapsed().as_micros() as u64,
+                        },
+                    });
+                }
+                EngineJob::VectorSearch { namespace, embeddings, top_k: k } => {
+                    self.charge(embeddings.len() * k);
+                    let store = self.store.read().unwrap();
+                    let ns = store.get(&namespace).cloned().unwrap_or_default();
+                    drop(store);
+                    // One result set per query embedding, concatenated in
+                    // order (the app layer dedups / reranks).
+                    let mut results: Vec<Vec<i32>> = Vec::new();
+                    for q in &embeddings {
+                        for idx in top_k(&ns, q, k) {
+                            results.push(ns[idx].tokens.clone());
+                        }
+                    }
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::TokenBatch(results),
+                        timing: ExecTiming {
+                            queued_us: 0,
+                            exec_us: started.elapsed().as_micros() as u64,
+                        },
+                    });
+                }
+                EngineJob::FreeQuery { query } => {
+                    self.store.write().unwrap().remove(&query);
+                    emit(Completion {
+                        query: ctx.query,
+                        node: ctx.node,
+                        output: JobOutput::Unit,
+                        timing: ExecTiming::default(),
+                    });
+                }
+                other => {
+                    return Err(TeolaError::Engine(format!(
+                        "vector db got {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Spawn the vector-DB engine (model-free worker threads + shared store).
+pub fn spawn_vector_db(
+    n_instances: usize,
+    free_tx: Sender<InstanceFree>,
+    ready_tx: Sender<()>,
+) -> (Vec<Instance>, DbStore) {
+    let store: DbStore = Arc::new(RwLock::new(HashMap::new()));
+    let instances = (0..n_instances)
+        .map(|i| {
+            let store_c = store.clone();
+            spawn_instance(
+                i,
+                format!("vdb-{i}"),
+                move || {
+                    Ok::<_, crate::error::TeolaError>(VectorDbExecutor {
+                        store: store_c,
+                        cost: DbCostModel::default(),
+                    })
+                },
+                free_tx.clone(),
+                ready_tx.clone(),
+            )
+        })
+        .collect();
+    (instances, store)
+}
+
+// Rc is unused but keeps the import list uniform across engines.
+#[allow(unused)]
+type _Unused = Rc<()>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_orthogonal_and_parallel() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn top_k_orders_by_similarity() {
+        let chunks = vec![
+            StoredChunk { embedding: vec![1.0, 0.0], tokens: vec![1] },
+            StoredChunk { embedding: vec![0.0, 1.0], tokens: vec![2] },
+            StoredChunk { embedding: vec![0.7, 0.7], tokens: vec![3] },
+        ];
+        let got = top_k(&chunks, &[1.0, 0.1], 2);
+        assert_eq!(got, vec![0, 2]);
+    }
+
+    #[test]
+    fn top_k_handles_small_store() {
+        let chunks = vec![StoredChunk { embedding: vec![1.0], tokens: vec![1] }];
+        assert_eq!(top_k(&chunks, &[1.0], 5), vec![0]);
+        assert!(top_k(&[], &[1.0], 3).is_empty());
+    }
+}

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the Teola stack.
+#[derive(Error, Debug)]
+pub enum TeolaError {
+    /// PJRT / XLA failures surfaced by the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// I/O failures (artifact files, weight files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Manifest / JSON parse failures.
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Weight-file (TWB1) format violations.
+    #[error("weights: {0}")]
+    Weights(String),
+
+    /// Graph construction or optimization-pass violations.
+    #[error("graph: {0}")]
+    Graph(String),
+
+    /// Runtime scheduling failures (dead channels, missing values).
+    #[error("scheduler: {0}")]
+    Scheduler(String),
+
+    /// Engine-level failures (unknown bucket, KV overflow, bad batch).
+    #[error("engine: {0}")]
+    Engine(String),
+
+    /// Application/workflow configuration errors.
+    #[error("app: {0}")]
+    App(String),
+}
+
+impl From<xla::Error> for TeolaError {
+    fn from(e: xla::Error) -> Self {
+        TeolaError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, TeolaError>;

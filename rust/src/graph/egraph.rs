@@ -1,0 +1,111 @@
+//! e-Graph: the optimized, execution-ready graph with node depths
+//! (Algorithm 2, Event 1) and critical-path helpers.
+
+use crate::engines::NodeId;
+use crate::error::Result;
+use crate::graph::pgraph::PGraph;
+
+/// The execution graph the runtime scheduler consumes.
+#[derive(Debug, Clone)]
+pub struct EGraph {
+    pub graph: PGraph,
+    /// Reverse-topological depth per node (output = 0).
+    pub depths: Vec<u32>,
+    /// Parent adjacency (all edges).
+    pub parents: Vec<Vec<NodeId>>,
+    /// Child adjacency (all edges).
+    pub children: Vec<Vec<NodeId>>,
+}
+
+impl EGraph {
+    /// Finalize a p-graph into an e-graph (validates acyclicity).
+    pub fn new(graph: PGraph) -> Result<EGraph> {
+        graph.topo_order()?;
+        let depths = graph.depths();
+        let parents = graph.parents();
+        let children = graph.children();
+        Ok(EGraph { graph, depths, parents, children })
+    }
+
+    /// Node count.
+    pub fn len(&self) -> usize {
+        self.graph.nodes.len()
+    }
+
+    /// True if the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.graph.nodes.is_empty()
+    }
+
+    /// In-degree vector (scheduling bookkeeping seed).
+    pub fn in_degrees(&self) -> Vec<usize> {
+        self.parents.iter().map(|p| p.len()).collect()
+    }
+
+    /// Source nodes (in-degree 0).
+    pub fn sources(&self) -> Vec<NodeId> {
+        self.in_degrees()
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| **d == 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Length (node count) of the longest path ending at the output — the
+    /// critical path under unit node costs (§8 "Exploitation of critical
+    /// path" discusses weighted variants).
+    pub fn critical_path_len(&self) -> usize {
+        let mut best = vec![1usize; self.len()];
+        if let Ok(order) = self.graph.topo_order() {
+            for v in order {
+                for &p in &self.parents[v] {
+                    best[v] = best[v].max(best[p] + 1);
+                }
+            }
+        }
+        best.get(self.graph.output).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pgraph::build_pgraph;
+    use crate::graph::pgraph::instr_tokens;
+    use crate::graph::template::*;
+
+    fn tiny() -> EGraph {
+        let mut t = WorkflowTemplate::new("tiny");
+        let a = t.add(Component {
+            name: "gen".into(),
+            kind: ComponentKind::LlmGenerate {
+                variant: "llm-lite".into(),
+                mode: SynthesisMode::OneShot,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("i", 8)),
+                    PromptPart::Question,
+                ],
+                out_tokens: 8,
+                segments: 1,
+                fan: 0,
+            },
+            engine: "llm-lite".into(),
+            batchable: false,
+            splittable: false,
+        });
+        let _ = a;
+        let q = QueryConfig::example(5);
+        let g = build_pgraph(&t, &q).unwrap();
+        EGraph::new(g).unwrap()
+    }
+
+    #[test]
+    fn egraph_basics() {
+        let e = tiny();
+        assert_eq!(e.len(), 2); // prefill + decode
+        assert_eq!(e.sources().len(), 1);
+        assert_eq!(e.depths[e.graph.output], 0);
+        assert_eq!(e.critical_path_len(), 2);
+    }
+}

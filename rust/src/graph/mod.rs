@@ -1,0 +1,16 @@
+//! §4 Graph Optimizer: task primitives, workflow templates, p-graph
+//! construction (Algorithm 1) and the four optimization passes.
+
+pub mod egraph;
+pub mod passes;
+pub mod pgraph;
+pub mod primitive;
+pub mod template;
+pub mod value;
+
+pub use egraph::EGraph;
+pub use passes::{run_passes, OptFlags};
+pub use pgraph::PGraph;
+pub use primitive::{DataRef, PayloadSpec, PrimKind, Primitive};
+pub use template::{Component, ComponentKind, PromptPart, SynthesisMode, WorkflowTemplate};
+pub use value::Value;

@@ -1,0 +1,729 @@
+//! §4.2 optimization passes — `GraphOpt` of Algorithm 1.
+//!
+//! * Pass 1 — dependency pruning: drop template-order edges that no data
+//!   dependency backs, freeing independent dataflow branches.
+//! * Pass 2 — stage decomposition: split batchable primitives whose input
+//!   exceeds the engine's maximum efficient batch size into pipelined
+//!   stages (plus an Aggregate to re-synchronise), co-splitting an
+//!   immediately-downstream batchable consumer (Embed -> Ingest).
+//! * Pass 3 — LLM prefilling split: causal prefix groups of a prompt whose
+//!   parts become ready at different graph depths are prefilled as soon as
+//!   they are ready (Partial Prefilling -> Full Prefilling chain).
+//! * Pass 4 — LLM decoding pipelining: splittable decodes stream each
+//!   SEP-delimited segment to a PartialDecoding marker node the moment it
+//!   is produced, so downstream batchable primitives start early.
+
+use std::collections::HashMap;
+
+use crate::engines::NodeId;
+use crate::engines::profile::ProfileRegistry;
+use crate::error::Result;
+use crate::graph::pgraph::PGraph;
+use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind, Primitive};
+
+/// Which passes to run (ablation knobs for Fig. 10).
+#[derive(Debug, Clone, Copy)]
+pub struct OptFlags {
+    pub prune_deps: bool,
+    pub stage_decompose: bool,
+    pub prefill_split: bool,
+    pub decode_pipeline: bool,
+}
+
+impl OptFlags {
+    /// Everything on (Teola).
+    pub fn all() -> OptFlags {
+        OptFlags {
+            prune_deps: true,
+            stage_decompose: true,
+            prefill_split: true,
+            decode_pipeline: true,
+        }
+    }
+
+    /// Everything off (coarse execution of the same graph).
+    pub fn none() -> OptFlags {
+        OptFlags {
+            prune_deps: false,
+            stage_decompose: false,
+            prefill_split: false,
+            decode_pipeline: false,
+        }
+    }
+
+    /// Parallelization only (Pass 1 + 3) — Fig. 10 ablation arm.
+    pub fn parallelization_only() -> OptFlags {
+        OptFlags { prune_deps: true, stage_decompose: false, prefill_split: true, decode_pipeline: false }
+    }
+
+    /// Pipelining only (Pass 2 + 4) — Fig. 10 ablation arm.
+    pub fn pipelining_only() -> OptFlags {
+        OptFlags { prune_deps: false, stage_decompose: true, prefill_split: false, decode_pipeline: true }
+    }
+}
+
+/// Run the enabled passes in the paper's order; returns the e-graph-ready
+/// PGraph (depth computation happens in `EGraph::new`).
+pub fn run_passes(mut g: PGraph, flags: OptFlags, profiles: &ProfileRegistry) -> Result<PGraph> {
+    if flags.prune_deps {
+        pass1_prune(&mut g);
+    }
+    if flags.stage_decompose {
+        pass2_stage_decompose(&mut g, profiles);
+    }
+    if flags.prefill_split {
+        pass3_prefill_split(&mut g);
+    }
+    if flags.decode_pipeline {
+        pass4_decode_pipeline(&mut g);
+    }
+    // Passes must never create cycles.
+    g.topo_order()?;
+    Ok(g)
+}
+
+/// Pass 1: remove template edges that are not backed by data dependencies.
+/// (Data/hard/guard dependencies are intrinsic to the primitives and
+/// always retained.)
+pub fn pass1_prune(g: &mut PGraph) {
+    let mut data_edges: Vec<(NodeId, NodeId)> = Vec::new();
+    for n in &g.nodes {
+        for d in n.data_deps() {
+            data_edges.push((d, n.id));
+        }
+    }
+    // Keep a template edge only if the same pair is a data dependency
+    // (those are redundant but harmless; dropping them all is equivalent —
+    // we drop everything, matching "remaining edges represent only data
+    // dependencies").
+    g.template_edges.retain(|e| data_edges.contains(e));
+}
+
+/// Pass 2: stage decomposition for batchable primitives with statically
+/// known oversized inputs.  Currently applies to Embedding primitives with
+/// `Const` sources (document indexing / contextual chunk embedding), the
+/// dominant oversized-batch producers in all five apps, and co-splits a
+/// downstream Ingestion.
+pub fn pass2_stage_decompose(g: &mut PGraph, profiles: &ProfileRegistry) {
+    let candidates: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| {
+            n.batchable
+                && n.kind == PrimKind::Embedding
+                && static_embed_rows(n).map_or(false, |rows| {
+                    rows > profiles.max_efficient_batch(&n.engine, "embed", 8)
+                })
+        })
+        .map(|n| n.id)
+        .collect();
+
+    for id in candidates {
+        let max_eff = profiles.max_efficient_batch(&g.nodes[id].engine, "embed", 8);
+        split_embed_stages(g, id, max_eff);
+    }
+}
+
+fn static_embed_rows(n: &Primitive) -> Option<usize> {
+    if let PayloadSpec::Embed { sources } = &n.payload {
+        sources.iter().map(|s| s.static_rows()).sum()
+    } else {
+        None
+    }
+}
+
+/// Split one Embed node into ceil(rows/stage) stage nodes; co-split an
+/// Ingest consumer; rewire other consumers through an Aggregate.
+fn split_embed_stages(g: &mut PGraph, id: NodeId, stage_rows: usize) {
+    let (sources, engine, component, guard) = {
+        let n = &g.nodes[id];
+        let PayloadSpec::Embed { sources } = &n.payload else { return };
+        (sources.clone(), n.engine.clone(), n.component, n.guard)
+    };
+    // Flatten const rows.
+    let mut rows: Vec<Vec<i32>> = Vec::new();
+    for s in &sources {
+        if let DataRef::Const(r) = s {
+            rows.extend(r.iter().cloned());
+        } else {
+            return; // only static inputs are stage-decomposed
+        }
+    }
+    let n_stages = rows.len().div_ceil(stage_rows);
+    if n_stages <= 1 {
+        return;
+    }
+
+    // Build stage nodes. The original node becomes stage 0 (keeps its id so
+    // upstream references stay valid).
+    let mut stage_ids = vec![id];
+    let mut stage_rows_vec: Vec<Vec<Vec<i32>>> = Vec::new();
+    for s in 0..n_stages {
+        let lo = s * stage_rows;
+        let hi = ((s + 1) * stage_rows).min(rows.len());
+        stage_rows_vec.push(rows[lo..hi].to_vec());
+    }
+    g.nodes[id].payload =
+        PayloadSpec::Embed { sources: vec![DataRef::Const(stage_rows_vec[0].clone())] };
+    for s in 1..n_stages {
+        let nid = g.nodes.len();
+        g.nodes.push(Primitive {
+            id: nid,
+            kind: PrimKind::Embedding,
+            engine: engine.clone(),
+            component,
+            batchable: true,
+            splittable: false,
+            payload: PayloadSpec::Embed {
+                sources: vec![DataRef::Const(stage_rows_vec[s].clone())],
+            },
+            hard_deps: vec![],
+            guard,
+        });
+        stage_ids.push(nid);
+    }
+
+    // Find consumers of the original node.
+    let consumers: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| n.id != id && n.payload.deps().contains(&id))
+        .map(|n| n.id)
+        .collect();
+
+    for c in consumers {
+        let is_ingest = matches!(g.nodes[c].payload, PayloadSpec::Ingest { .. });
+        if is_ingest {
+            // Co-split the ingestion into matching stages + barrier agg.
+            let (chunk_stage, comp_c, guard_c, engine_c) = {
+                let n = &g.nodes[c];
+                (stage_rows_vec.clone(), n.component, n.guard, n.engine.clone())
+            };
+            g.nodes[c].payload = PayloadSpec::Ingest {
+                chunks: vec![DataRef::Const(chunk_stage[0].clone())],
+                embeddings: DataRef::Node(stage_ids[0]),
+            };
+            let mut ingest_ids = vec![c];
+            for s in 1..n_stages {
+                let nid = g.nodes.len();
+                g.nodes.push(Primitive {
+                    id: nid,
+                    kind: PrimKind::Ingestion,
+                    engine: engine_c.clone(),
+                    component: comp_c,
+                    batchable: true,
+                    splittable: false,
+                    payload: PayloadSpec::Ingest {
+                        chunks: vec![DataRef::Const(chunk_stage[s].clone())],
+                        embeddings: DataRef::Node(stage_ids[s]),
+                    },
+                    hard_deps: vec![],
+                    guard: guard_c,
+                });
+                ingest_ids.push(nid);
+            }
+            // Aggregate barrier so downstream hard-deps (search) wait for
+            // every ingest stage.
+            let agg = g.nodes.len();
+            g.nodes.push(Primitive {
+                id: agg,
+                kind: PrimKind::Aggregate,
+                engine: String::new(),
+                component: comp_c,
+                batchable: false,
+                splittable: false,
+                payload: PayloadSpec::Aggregate {
+                    parts: ingest_ids.iter().map(|i| DataRef::Node(*i)).collect(),
+                    mode: AggregateMode::Barrier,
+                },
+                hard_deps: vec![],
+                guard: guard_c,
+            });
+            // Rewire references to the ingest node (hard deps of search,
+            // template edges) to the barrier.
+            rewire_refs(g, c, agg, &[c]);
+        } else {
+            // Generic consumer: aggregate all stage embeddings first.
+            let comp_c = g.nodes[c].component;
+            let agg = g.nodes.len();
+            g.nodes.push(Primitive {
+                id: agg,
+                kind: PrimKind::Aggregate,
+                engine: String::new(),
+                component: comp_c,
+                batchable: false,
+                splittable: false,
+                payload: PayloadSpec::Aggregate {
+                    parts: stage_ids.iter().map(|i| DataRef::Node(*i)).collect(),
+                    mode: AggregateMode::ConcatRows,
+                },
+                hard_deps: vec![],
+                guard: None,
+            });
+            replace_dep(&mut g.nodes[c].payload, id, agg);
+        }
+    }
+}
+
+/// Replace references to `from` with `to` in hard deps + template edges of
+/// all nodes except `except`.
+fn rewire_refs(g: &mut PGraph, from: NodeId, to: NodeId, except: &[NodeId]) {
+    for n in g.nodes.iter_mut() {
+        if except.contains(&n.id) || n.id == to {
+            continue;
+        }
+        for d in n.hard_deps.iter_mut() {
+            if *d == from {
+                *d = to;
+            }
+        }
+    }
+    for (a, _b) in g.template_edges.iter_mut() {
+        if *a == from {
+            *a = to;
+        }
+    }
+}
+
+/// Replace a node reference inside a payload.
+fn replace_dep(p: &mut PayloadSpec, from: NodeId, to: NodeId) {
+    let fix = |r: &mut DataRef| {
+        match r {
+            DataRef::Node(n) | DataRef::NodeSlice(n, _, _) if *n == from => *n = to,
+            _ => {}
+        }
+    };
+    match p {
+        PayloadSpec::Embed { sources } => sources.iter_mut().for_each(fix),
+        PayloadSpec::Ingest { chunks, embeddings } => {
+            chunks.iter_mut().for_each(fix);
+            fix(embeddings);
+        }
+        PayloadSpec::VectorSearch { embeddings, .. } => fix(embeddings),
+        PayloadSpec::Rerank { query, candidates, .. } => {
+            fix(query);
+            candidates.iter_mut().for_each(fix);
+        }
+        PayloadSpec::Prefill { parts, .. } => parts.iter_mut().for_each(fix),
+        PayloadSpec::Decode { first_from, .. } => {
+            if *first_from == from {
+                *first_from = to;
+            }
+        }
+        PayloadSpec::PartialDecode { decode, .. } => {
+            if *decode == from {
+                *decode = to;
+            }
+        }
+        PayloadSpec::ClonePrefix { after, .. } => {
+            if *after == from {
+                *after = to;
+            }
+        }
+        PayloadSpec::Condition { input, .. } => fix(input),
+        PayloadSpec::Aggregate { parts, .. } => parts.iter_mut().for_each(fix),
+        PayloadSpec::WebSearch { queries, .. } => queries.iter_mut().for_each(fix),
+        PayloadSpec::Tool { .. } => {}
+    }
+}
+
+/// Pass 3: split monolithic Prefill nodes at readiness boundaries.
+///
+/// Parts whose dependencies are available earlier (lower forward depth)
+/// are grouped into Partial Prefilling nodes chained causally; the final
+/// group becomes the Full Prefilling node (keeping the original node id so
+/// the Decode's `first_from` stays valid).
+pub fn pass3_prefill_split(g: &mut PGraph) {
+    // Forward depth of each node (0 = no deps).
+    let fwd = forward_depths(g);
+
+    let targets: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| n.kind == PrimKind::Prefilling)
+        .filter(|n| {
+            if let PayloadSpec::Prefill { parts, .. } = &n.payload {
+                // Splittable when an early prefix exists: first part ready
+                // strictly earlier than the last part.
+                let rd: Vec<u32> = parts.iter().map(|p| part_depth(p, &fwd)).collect();
+                rd.len() > 1 && rd.iter().max() > rd.iter().min()
+            } else {
+                false
+            }
+        })
+        .map(|n| n.id)
+        .collect();
+
+    for id in targets {
+        split_prefill(g, id, &fwd);
+    }
+}
+
+fn forward_depths(g: &PGraph) -> Vec<u32> {
+    let mut depth = vec![0u32; g.nodes.len()];
+    if let Ok(order) = g.topo_order() {
+        let parents = g.parents();
+        for v in order {
+            for &p in &parents[v] {
+                depth[v] = depth[v].max(depth[p] + 1);
+            }
+        }
+    }
+    depth
+}
+
+fn part_depth(p: &DataRef, fwd: &[u32]) -> u32 {
+    match p {
+        DataRef::Const(_) => 0,
+        DataRef::Node(n) | DataRef::NodeSlice(n, _, _) => fwd[*n] + 1,
+    }
+}
+
+fn split_prefill(g: &mut PGraph, id: NodeId, fwd: &[u32]) {
+    let (seq, parts, engine, component, guard) = {
+        let n = &g.nodes[id];
+        let PayloadSpec::Prefill { seq, parts } = &n.payload else { return };
+        (*seq, parts.clone(), n.engine.clone(), n.component, n.guard)
+    };
+    // Group consecutive parts by non-decreasing readiness; a group ends
+    // when the next part's readiness exceeds the group's max (causality:
+    // a later prompt part can never be prefilled before an earlier one).
+    let depths: Vec<u32> = parts.iter().map(|p| part_depth(p, fwd)).collect();
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // [start, end)
+    let mut start = 0usize;
+    let mut cur_max = depths[0];
+    for i in 1..parts.len() {
+        if depths[i] > cur_max {
+            groups.push((start, i));
+            start = i;
+        }
+        cur_max = cur_max.max(depths[i]);
+    }
+    groups.push((start, parts.len()));
+    if groups.len() <= 1 {
+        return;
+    }
+
+    // First group keeps no chain dep; each later group chains on previous.
+    // The LAST group keeps the original node id (Full Prefilling).
+    let mut prev: Option<NodeId> = None;
+    for (gi, (a, b)) in groups.iter().enumerate() {
+        let is_last = gi == groups.len() - 1;
+        let group_parts = parts[*a..*b].to_vec();
+        if is_last {
+            let hard = prev.map(|p| vec![p]).unwrap_or_default();
+            let n = &mut g.nodes[id];
+            n.kind = PrimKind::FullPrefilling;
+            n.payload = PayloadSpec::Prefill { seq, parts: group_parts };
+            n.hard_deps.extend(hard);
+        } else {
+            let nid = g.nodes.len();
+            g.nodes.push(Primitive {
+                id: nid,
+                kind: PrimKind::PartialPrefilling,
+                engine: engine.clone(),
+                component,
+                batchable: false,
+                splittable: false,
+                payload: PayloadSpec::Prefill { seq, parts: group_parts },
+                hard_deps: prev.map(|p| vec![p]).unwrap_or_default(),
+                guard,
+            });
+            prev = Some(nid);
+        }
+    }
+}
+
+/// Pass 4: decoding pipelining for splittable multi-segment decodes.
+///
+/// Each segment gets a PartialDecoding marker node; consumers that sliced
+/// the decode's output rows are rewired to the marker, so they fire as
+/// soon as that segment streams out of the engine.
+pub fn pass4_decode_pipeline(g: &mut PGraph) {
+    let targets: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| n.kind == PrimKind::Decoding && n.splittable)
+        .filter(|n| match &n.payload {
+            PayloadSpec::Decode { segments, .. } => segments.len() > 1,
+            _ => false,
+        })
+        .map(|n| n.id)
+        .collect();
+
+    for id in targets {
+        let (n_seg, component) = {
+            let n = &g.nodes[id];
+            let PayloadSpec::Decode { segments, .. } = &n.payload else { continue };
+            (segments.len(), n.component)
+        };
+        // Create marker nodes and point the decode's segments at them.
+        let mut markers = Vec::with_capacity(n_seg);
+        for s in 0..n_seg {
+            let nid = g.nodes.len();
+            g.nodes.push(Primitive {
+                id: nid,
+                kind: PrimKind::PartialDecoding,
+                engine: String::new(),
+                component,
+                batchable: false,
+                splittable: false,
+                payload: PayloadSpec::PartialDecode { decode: id, segment: s },
+                hard_deps: vec![],
+                guard: None,
+            });
+            markers.push(nid);
+        }
+        if let PayloadSpec::Decode { segments, .. } = &mut g.nodes[id].payload {
+            for (s, (node, _len)) in segments.iter_mut().enumerate() {
+                *node = markers[s];
+            }
+        }
+        // Rewire slice consumers: NodeSlice(decode, i, i+1) -> Node(marker_i)
+        let markers_c = markers.clone();
+        for ni in 0..g.nodes.len() {
+            if ni == id || markers_c.contains(&ni) {
+                continue;
+            }
+            rewire_slices(&mut g.nodes[ni].payload, id, &markers_c);
+        }
+        // Split batchable Embedding consumers of the *whole* decode output
+        // into per-segment embeds (Fig. 6: each partial decode feeds its
+        // own embedding primitive), re-synchronised by a ConcatRows
+        // aggregate that keeps the original consumer id.
+        let whole_consumers: Vec<NodeId> = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                n.batchable
+                    && n.kind == PrimKind::Embedding
+                    && matches!(&n.payload, PayloadSpec::Embed { sources }
+                        if sources.iter().any(|s| matches!(s, DataRef::Node(x) if *x == id)))
+            })
+            .map(|n| n.id)
+            .collect();
+        for c in whole_consumers {
+            let (engine, component, guard) = {
+                let n = &g.nodes[c];
+                (n.engine.clone(), n.component, n.guard)
+            };
+            let mut stage_ids = Vec::new();
+            for &m in &markers {
+                let nid = g.nodes.len();
+                g.nodes.push(Primitive {
+                    id: nid,
+                    kind: PrimKind::Embedding,
+                    engine: engine.clone(),
+                    component,
+                    batchable: true,
+                    splittable: false,
+                    payload: PayloadSpec::Embed { sources: vec![DataRef::Node(m)] },
+                    hard_deps: vec![],
+                    guard,
+                });
+                stage_ids.push(nid);
+            }
+            // Original consumer becomes the aggregate (id preserved for
+            // its own downstream references, e.g. vector search).
+            let n = &mut g.nodes[c];
+            n.kind = PrimKind::Aggregate;
+            n.engine = String::new();
+            n.batchable = false;
+            n.payload = PayloadSpec::Aggregate {
+                parts: stage_ids.iter().map(|i| DataRef::Node(*i)).collect(),
+                mode: AggregateMode::ConcatRows,
+            };
+        }
+    }
+}
+
+fn rewire_slices(p: &mut PayloadSpec, decode: NodeId, markers: &[NodeId]) {
+    let fix = |r: &mut DataRef| {
+        if let DataRef::NodeSlice(n, a, b) = r {
+            if *n == decode && *b == *a + 1 && *a < markers.len() {
+                *r = DataRef::Node(markers[*a]);
+            }
+        }
+    };
+    match p {
+        PayloadSpec::Embed { sources } => sources.iter_mut().for_each(fix),
+        PayloadSpec::Ingest { chunks, embeddings } => {
+            chunks.iter_mut().for_each(fix);
+            fix(embeddings);
+        }
+        PayloadSpec::VectorSearch { embeddings, .. } => fix(embeddings),
+        PayloadSpec::Rerank { query, candidates, .. } => {
+            fix(query);
+            candidates.iter_mut().for_each(fix);
+        }
+        PayloadSpec::Prefill { parts, .. } => parts.iter_mut().for_each(fix),
+        PayloadSpec::Condition { input, .. } => fix(input),
+        PayloadSpec::Aggregate { parts, .. } => parts.iter_mut().for_each(fix),
+        PayloadSpec::WebSearch { queries, .. } => queries.iter_mut().for_each(fix),
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pgraph::{build_pgraph, instr_tokens};
+    use crate::graph::template::*;
+
+    fn adv_template() -> (WorkflowTemplate, QueryConfig) {
+        let mut t = WorkflowTemplate::new("adv");
+        let idx = t.add(Component {
+            name: "indexing".into(),
+            kind: ComponentKind::Indexing,
+            engine: "embedder".into(),
+            batchable: true,
+            splittable: false,
+        });
+        let qx = t.add(Component {
+            name: "expand".into(),
+            kind: ComponentKind::LlmGenerate {
+                variant: "llm-small".into(),
+                mode: SynthesisMode::OneShot,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("expand", 12)),
+                    PromptPart::Question,
+                ],
+                out_tokens: 18,
+                segments: 3,
+                fan: 0,
+            },
+            engine: "llm-small".into(),
+            batchable: false,
+            splittable: true,
+        });
+        let qe = t.add(Component {
+            name: "embed-queries".into(),
+            kind: ComponentKind::Embedding { of: EmbedSource::Upstream(qx) },
+            engine: "embedder".into(),
+            batchable: true,
+            splittable: false,
+        });
+        let se = t.add(Component {
+            name: "search".into(),
+            kind: ComponentKind::VectorSearching { top_k: 16 },
+            engine: "vdb".into(),
+            batchable: false,
+            splittable: false,
+        });
+        let syn = t.add(Component {
+            name: "synth".into(),
+            kind: ComponentKind::LlmGenerate {
+                variant: "llm-small".into(),
+                mode: SynthesisMode::Refine,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("qa", 16)),
+                    PromptPart::Question,
+                    PromptPart::Upstream { component: se, slice: None },
+                ],
+                out_tokens: 16,
+                segments: 1,
+                fan: 0,
+            },
+            engine: "llm-small".into(),
+            batchable: false,
+            splittable: false,
+        });
+        t.chain(&[idx, qx, qe, se, syn]);
+        let mut q = QueryConfig::example(7);
+        q.doc_chunks = (0..24)
+            .map(|i| (0..40).map(|j| 4 + ((i * 40 + j) % 1800) as i32).collect())
+            .collect();
+        (t, q)
+    }
+
+    #[test]
+    fn pass1_prunes_template_edges() {
+        let (t, q) = adv_template();
+        let mut g = build_pgraph(&t, &q).unwrap();
+        let before = g.template_edges.len();
+        assert!(before > 0);
+        pass1_prune(&mut g);
+        assert!(g.template_edges.len() < before);
+        assert!(g.topo_order().is_ok());
+        // Indexing and query expansion become independent roots.
+        let parents = g.parents();
+        let expand_prefill = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, PrimKind::Prefilling) && n.component == 1)
+            .unwrap();
+        assert!(parents[expand_prefill.id].is_empty());
+    }
+
+    #[test]
+    fn pass2_splits_oversized_embedding() {
+        let (t, q) = adv_template();
+        let mut g = build_pgraph(&t, &q).unwrap();
+        let n_before = g.nodes.len();
+        let profiles = ProfileRegistry::with_defaults();
+        pass2_stage_decompose(&mut g, &profiles);
+        assert!(g.nodes.len() > n_before, "24 chunks must split into stages");
+        // Ingest stages + a barrier aggregate exist.
+        let ingests = g.nodes.iter().filter(|n| n.kind == PrimKind::Ingestion).count();
+        assert!(ingests >= 2);
+        assert!(g.topo_order().is_ok());
+        // Search must now depend (transitively) on the barrier, not a
+        // single ingest: its hard dep is an Aggregate.
+        let search = g.nodes.iter().find(|n| n.kind == PrimKind::Searching).unwrap();
+        let dep = search.hard_deps[0];
+        assert_eq!(g.nodes[dep].kind, PrimKind::Aggregate);
+    }
+
+    #[test]
+    fn pass3_splits_refine_prefills() {
+        let (t, q) = adv_template();
+        let mut g = build_pgraph(&t, &q).unwrap();
+        pass1_prune(&mut g);
+        pass3_prefill_split(&mut g);
+        let partials = g.nodes.iter().filter(|n| n.kind == PrimKind::PartialPrefilling).count();
+        let fulls = g.nodes.iter().filter(|n| n.kind == PrimKind::FullPrefilling).count();
+        assert!(partials >= 1, "refine prompts have early instruction+question");
+        assert_eq!(partials >= fulls, true);
+        assert!(g.topo_order().is_ok());
+        // Partial prefill chain: full prefill hard-depends on a partial.
+        let full = g.nodes.iter().find(|n| n.kind == PrimKind::FullPrefilling).unwrap();
+        assert!(full
+            .hard_deps
+            .iter()
+            .any(|d| g.nodes[*d].kind == PrimKind::PartialPrefilling));
+    }
+
+    #[test]
+    fn pass4_creates_markers_and_rewires() {
+        let (t, q) = adv_template();
+        let mut g = build_pgraph(&t, &q).unwrap();
+        pass1_prune(&mut g);
+        pass4_decode_pipeline(&mut g);
+        let markers: Vec<_> =
+            g.nodes.iter().filter(|n| n.kind == PrimKind::PartialDecoding).collect();
+        assert_eq!(markers.len(), 3, "3 expansion segments");
+        assert!(g.topo_order().is_ok());
+        // The decode's segments point at the markers.
+        let dec = g
+            .nodes
+            .iter()
+            .find(|n| n.kind == PrimKind::Decoding && n.splittable)
+            .unwrap();
+        if let PayloadSpec::Decode { segments, .. } = &dec.payload {
+            for (node, _) in segments {
+                assert_eq!(g.nodes[*node].kind, PrimKind::PartialDecoding);
+            }
+        }
+    }
+
+    #[test]
+    fn all_passes_compose() {
+        let (t, q) = adv_template();
+        let g = build_pgraph(&t, &q).unwrap();
+        let profiles = ProfileRegistry::with_defaults();
+        let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+        assert!(g.topo_order().is_ok());
+        let d = g.depths();
+        assert_eq!(d[g.output], 0);
+    }
+}

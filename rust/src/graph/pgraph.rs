@@ -1,0 +1,720 @@
+//! p-Graph construction — Algorithm 1 `GraphTransform`.
+//!
+//! Decomposes every template component (with the query's configuration)
+//! into explicit symbolic primitives with data-dependency edges, then adds
+//! the template's original component-order edges (tail -> head).  The
+//! template edges are kept separate so Pass 1 can prune the ones that do
+//! not correspond to real data dependencies.
+
+use std::collections::HashMap;
+
+use crate::engines::NodeId;
+use crate::error::{Result, TeolaError};
+use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind, Primitive};
+use crate::graph::template::{
+    Component, ComponentKind, EmbedSource, PromptPart, QueryConfig, SynthesisMode,
+    WorkflowTemplate,
+};
+
+/// Deterministic pseudo-instruction tokens for a named prompt template.
+pub fn instr_tokens(name: &str, len: usize) -> Vec<i32> {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (0..len)
+        .map(|i| {
+            let v = h.wrapping_mul(i as u64 + 1).wrapping_add(i as u64) % 2000;
+            4 + (v as i32)
+        })
+        .collect()
+}
+
+/// The primitive-level dataflow graph of one query.
+#[derive(Debug, Clone, Default)]
+pub struct PGraph {
+    pub nodes: Vec<Primitive>,
+    /// Component-order edges inherited from the template (prunable).
+    pub template_edges: Vec<(NodeId, NodeId)>,
+    /// The node whose output is the query's final answer.
+    pub output: NodeId,
+    /// Number of LLM sequences allocated so far.
+    pub seq_count: u32,
+}
+
+impl PGraph {
+    /// Full dependency edges: data deps (payload + hard + guard) union the
+    /// surviving template edges.
+    pub fn all_edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut edges = Vec::new();
+        for n in &self.nodes {
+            for d in n.data_deps() {
+                edges.push((d, n.id));
+            }
+        }
+        edges.extend(self.template_edges.iter().copied());
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    /// Parents of each node under `all_edges`.
+    pub fn parents(&self) -> Vec<Vec<NodeId>> {
+        let mut p = vec![Vec::new(); self.nodes.len()];
+        for (a, b) in self.all_edges() {
+            p[b].push(a);
+        }
+        p
+    }
+
+    /// Children of each node under `all_edges`.
+    pub fn children(&self) -> Vec<Vec<NodeId>> {
+        let mut c = vec![Vec::new(); self.nodes.len()];
+        for (a, b) in self.all_edges() {
+            c[a].push(b);
+        }
+        c
+    }
+
+    /// Kahn topological sort; error on cycles.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let children = self.children();
+        for (_, b) in self.all_edges() {
+            indeg[b] += 1;
+        }
+        let mut stack: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &c in &children[v] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    stack.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(TeolaError::Graph("cycle in p-graph".into()));
+        }
+        Ok(order)
+    }
+
+    /// Reverse-topological depth (Algorithm 2, Event 1): output nodes have
+    /// depth 0; a parent's depth is >= child depth + 1.
+    pub fn depths(&self) -> Vec<u32> {
+        let mut depth = vec![0u32; self.nodes.len()];
+        if let Ok(order) = self.topo_order() {
+            let parents = self.parents();
+            for &v in order.iter().rev() {
+                for &p in &parents[v] {
+                    depth[p] = depth[p].max(depth[v] + 1);
+                }
+            }
+        }
+        depth
+    }
+
+    fn push(&mut self, mut prim: Primitive) -> NodeId {
+        let id = self.nodes.len();
+        prim.id = id;
+        self.nodes.push(prim);
+        id
+    }
+
+    fn alloc_seq(&mut self) -> u32 {
+        let s = self.seq_count;
+        self.seq_count += 1;
+        s
+    }
+}
+
+/// What a decomposed component exposes to downstream components.
+#[derive(Debug, Clone)]
+struct CompOut {
+    /// Node holding the component's output value.
+    out: NodeId,
+    /// First primitives of the component (targets of template edges).
+    heads: Vec<NodeId>,
+    /// Last primitives (sources of template edges).
+    tails: Vec<NodeId>,
+}
+
+/// Build the p-graph for (template, query config) — Algorithm 1.
+pub fn build_pgraph(t: &WorkflowTemplate, q: &QueryConfig) -> Result<PGraph> {
+    let mut g = PGraph::default();
+    let mut outs: HashMap<usize, CompOut> = HashMap::new();
+
+    // Component-level topological order (template edges only).
+    let order = component_topo(t)?;
+
+    for &ci in &order {
+        let comp = &t.components[ci];
+        let preds: Vec<usize> =
+            t.edges.iter().filter(|(_, b)| *b == ci).map(|(a, _)| *a).collect();
+        // A guard applies when an immediate predecessor is a Condition.
+        let guard = preds
+            .iter()
+            .filter(|p| matches!(t.components[**p].kind, ComponentKind::Condition { .. }))
+            .filter_map(|p| outs.get(p).map(|o| (o.out, true)))
+            .next();
+        let co = decompose(&mut g, t, q, ci, comp, &preds, &outs, guard)?;
+        outs.insert(ci, co);
+    }
+
+    // Algorithm 1 lines 7-9: preserve the template's component order.
+    for (a, b) in &t.edges {
+        if let (Some(oa), Some(ob)) = (outs.get(a), outs.get(b)) {
+            for &tail in &oa.tails {
+                for &head in &ob.heads {
+                    if tail != head {
+                        g.template_edges.push((tail, head));
+                    }
+                }
+            }
+        }
+    }
+    g.template_edges.sort_unstable();
+    g.template_edges.dedup();
+
+    // The final component in topological order supplies the answer.
+    let last = *order.last().ok_or_else(|| TeolaError::Graph("empty template".into()))?;
+    g.output = outs[&last].out;
+    Ok(g)
+}
+
+fn component_topo(t: &WorkflowTemplate) -> Result<Vec<usize>> {
+    let n = t.components.len();
+    let mut indeg = vec![0usize; n];
+    for (_, b) in &t.edges {
+        indeg[*b] += 1;
+    }
+    let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    stack.reverse();
+    let mut order = Vec::new();
+    while let Some(v) = stack.pop() {
+        order.push(v);
+        for (a, b) in &t.edges {
+            if *a == v {
+                indeg[*b] -= 1;
+                if indeg[*b] == 0 {
+                    stack.push(*b);
+                }
+            }
+        }
+    }
+    if order.len() != n {
+        return Err(TeolaError::Graph("cycle in template".into()));
+    }
+    Ok(order)
+}
+
+/// Resolve a prompt part to a DataRef.
+fn resolve_part(
+    part: &PromptPart,
+    q: &QueryConfig,
+    outs: &HashMap<usize, CompOut>,
+) -> Result<DataRef> {
+    Ok(match part {
+        PromptPart::Instruction(toks) => DataRef::Const(vec![toks.clone()]),
+        PromptPart::Question => DataRef::Const(vec![q.question.clone()]),
+        PromptPart::Upstream { component, slice } => {
+            let o = outs
+                .get(component)
+                .ok_or_else(|| TeolaError::Graph(format!("upstream {component} unresolved")))?;
+            match slice {
+                Some((a, b)) => DataRef::NodeSlice(o.out, *a, *b),
+                None => DataRef::Node(o.out),
+            }
+        }
+    })
+}
+
+/// Find the upstream component (among `preds`) whose output is embeddings.
+fn find_embedding_pred(
+    t: &WorkflowTemplate,
+    preds: &[usize],
+    outs: &HashMap<usize, CompOut>,
+) -> Option<NodeId> {
+    preds
+        .iter()
+        .filter(|p| {
+            matches!(
+                t.components[**p].kind,
+                ComponentKind::Embedding { .. }
+            )
+        })
+        .filter_map(|p| outs.get(p).map(|o| o.out))
+        .next()
+}
+
+/// Find the ingestion tail (vector search must wait for it).
+fn find_indexing_tail(
+    t: &WorkflowTemplate,
+    outs: &HashMap<usize, CompOut>,
+) -> Option<NodeId> {
+    t.components
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.kind, ComponentKind::Indexing))
+        .filter_map(|(i, _)| outs.get(&i).map(|o| o.out))
+        .next()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decompose(
+    g: &mut PGraph,
+    t: &WorkflowTemplate,
+    q: &QueryConfig,
+    ci: usize,
+    comp: &Component,
+    preds: &[usize],
+    outs: &HashMap<usize, CompOut>,
+    guard: Option<(NodeId, bool)>,
+) -> Result<CompOut> {
+    let blank = Primitive {
+        id: 0,
+        kind: PrimKind::Aggregate,
+        engine: String::new(),
+        component: ci,
+        batchable: comp.batchable,
+        splittable: comp.splittable,
+        payload: PayloadSpec::Aggregate { parts: vec![], mode: AggregateMode::Barrier },
+        hard_deps: vec![],
+        guard,
+    };
+
+    match &comp.kind {
+        ComponentKind::Indexing => {
+            let e = g.push(Primitive {
+                kind: PrimKind::Embedding,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Embed {
+                    sources: vec![DataRef::Const(q.doc_chunks.clone())],
+                },
+                batchable: true,
+                ..blank.clone()
+            });
+            let i = g.push(Primitive {
+                kind: PrimKind::Ingestion,
+                engine: "vdb".into(),
+                payload: PayloadSpec::Ingest {
+                    chunks: vec![DataRef::Const(q.doc_chunks.clone())],
+                    embeddings: DataRef::Node(e),
+                },
+                batchable: true,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: i, heads: vec![e], tails: vec![i] })
+        }
+        ComponentKind::Embedding { of } => {
+            let sources = match of {
+                EmbedSource::Question => vec![DataRef::Const(vec![q.question.clone()])],
+                EmbedSource::DocChunks => vec![DataRef::Const(q.doc_chunks.clone())],
+                EmbedSource::Upstream(c) => {
+                    let o = outs
+                        .get(c)
+                        .ok_or_else(|| TeolaError::Graph(format!("upstream {c} unresolved")))?;
+                    vec![DataRef::Node(o.out)]
+                }
+            };
+            let e = g.push(Primitive {
+                kind: PrimKind::Embedding,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Embed { sources },
+                batchable: true,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: e, heads: vec![e], tails: vec![e] })
+        }
+        ComponentKind::VectorSearching { top_k } => {
+            let emb = find_embedding_pred(t, preds, outs).ok_or_else(|| {
+                TeolaError::Graph(format!("search comp {ci} lacks embedding pred"))
+            })?;
+            let mut hard = Vec::new();
+            if let Some(ing) = find_indexing_tail(t, outs) {
+                hard.push(ing);
+            }
+            let s = g.push(Primitive {
+                kind: PrimKind::Searching,
+                engine: "vdb".into(),
+                payload: PayloadSpec::VectorSearch {
+                    embeddings: DataRef::Node(emb),
+                    top_k: *top_k,
+                },
+                hard_deps: hard,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: s, heads: vec![s], tails: vec![s] })
+        }
+        ComponentKind::Reranking { top_k } => {
+            // Candidates: every non-condition predecessor's output rows.
+            let candidates: Vec<DataRef> = preds
+                .iter()
+                .filter(|p| {
+                    !matches!(t.components[**p].kind, ComponentKind::Condition { .. })
+                })
+                .filter_map(|p| outs.get(p).map(|o| DataRef::Node(o.out)))
+                .collect();
+            if candidates.is_empty() {
+                return Err(TeolaError::Graph(format!("rerank comp {ci} has no inputs")));
+            }
+            let r = g.push(Primitive {
+                kind: PrimKind::Reranking,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Rerank {
+                    query: DataRef::Const(vec![q.question.clone()]),
+                    candidates,
+                    top_k: *top_k,
+                },
+                batchable: true,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: r, heads: vec![r], tails: vec![r] })
+        }
+        ComponentKind::IndexingUpstream(up) => {
+            let src = outs
+                .get(up)
+                .ok_or_else(|| TeolaError::Graph(format!("upstream {up} unresolved")))?
+                .out;
+            let e = g.push(Primitive {
+                kind: PrimKind::Embedding,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Embed { sources: vec![DataRef::Node(src)] },
+                batchable: true,
+                ..blank.clone()
+            });
+            let i = g.push(Primitive {
+                kind: PrimKind::Ingestion,
+                engine: "vdb".into(),
+                payload: PayloadSpec::Ingest {
+                    chunks: vec![DataRef::Node(src)],
+                    embeddings: DataRef::Node(e),
+                },
+                batchable: true,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: i, heads: vec![e], tails: vec![i] })
+        }
+        ComponentKind::LlmGenerate { variant, mode, prompt, out_tokens, segments, fan } => {
+            decompose_llm(
+                g, q, outs, ci, comp, variant, *mode, prompt, *out_tokens, *segments, *fan,
+                guard,
+            )
+        }
+        ComponentKind::Contextualize { variant, out_tokens, neighbors } => {
+            let k = q.doc_chunks.len();
+            let instr = instr_tokens("contextualize", 12);
+            let mut decodes = Vec::new();
+            let mut heads = Vec::new();
+            for i in 0..k {
+                let lo = i.saturating_sub(*neighbors / 2);
+                let hi = (i + neighbors / 2 + 1).min(k);
+                let mut parts = vec![DataRef::Const(vec![instr.clone()])];
+                parts.push(DataRef::Const(q.doc_chunks[lo..hi].to_vec()));
+                let seq = g.alloc_seq();
+                let p = g.push(Primitive {
+                    kind: PrimKind::Prefilling,
+                    engine: comp.engine.clone(),
+                    payload: PayloadSpec::Prefill { seq, parts },
+                    ..blank.clone()
+                });
+                let d_id = g.nodes.len() + 1; // decode refers to itself
+                let _ = d_id;
+                let d = g.push(Primitive {
+                    kind: PrimKind::Decoding,
+                    engine: comp.engine.clone(),
+                    payload: PayloadSpec::Decode {
+                        seq,
+                        first_from: p,
+                        segments: vec![(usize::MAX, *out_tokens)],
+                    },
+                    ..blank.clone()
+                });
+                fix_decode_self(g, d);
+                decodes.push(d);
+                heads.push(p);
+            }
+            // context_i ++ chunk_i rows
+            let mut parts: Vec<DataRef> = decodes.iter().map(|d| DataRef::Node(*d)).collect();
+            parts.push(DataRef::Const(q.doc_chunks.clone()));
+            let agg = g.push(Primitive {
+                kind: PrimKind::Aggregate,
+                payload: PayloadSpec::Aggregate { parts, mode: AggregateMode::ZipPrepend },
+                ..blank.clone()
+            });
+            Ok(CompOut { out: agg, heads, tails: vec![agg] })
+        }
+        ComponentKind::WebSearch { top_k } => {
+            let w = g.push(Primitive {
+                kind: PrimKind::WebSearching,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::WebSearch {
+                    queries: vec![DataRef::Const(vec![q.question.clone()])],
+                    top_k: *top_k,
+                },
+                ..blank.clone()
+            });
+            Ok(CompOut { out: w, heads: vec![w], tails: vec![w] })
+        }
+        ComponentKind::Condition { prob_true } => {
+            // Input: the most recent predecessor's output (judge answer).
+            let input = preds
+                .iter()
+                .rev()
+                .filter_map(|p| outs.get(p).map(|o| DataRef::Node(o.out)))
+                .next()
+                .unwrap_or(DataRef::Const(vec![q.question.clone()]));
+            let c = g.push(Primitive {
+                kind: PrimKind::Condition,
+                payload: PayloadSpec::Condition { input, prob_true: *prob_true },
+                ..blank.clone()
+            });
+            Ok(CompOut { out: c, heads: vec![c], tails: vec![c] })
+        }
+        ComponentKind::Tool { name, cost_us } => {
+            // Tool calls carry no token payload, so their dependency on the
+            // preceding component is a hard (unprunable) ordering edge.
+            let hard: Vec<NodeId> =
+                preds.iter().filter_map(|p| outs.get(p).map(|o| o.out)).collect();
+            let n = g.push(Primitive {
+                kind: PrimKind::ToolCalling,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Tool { name: name.clone(), cost_us: *cost_us },
+                hard_deps: hard,
+                ..blank.clone()
+            });
+            Ok(CompOut { out: n, heads: vec![n], tails: vec![n] })
+        }
+    }
+}
+
+/// Decode payload uses `usize::MAX` as a placeholder for "this node"; this
+/// rewires it once the node id is known.
+fn fix_decode_self(g: &mut PGraph, d: NodeId) {
+    if let PayloadSpec::Decode { segments, .. } = &mut g.nodes[d].payload {
+        for (node, _) in segments.iter_mut() {
+            if *node == usize::MAX {
+                *node = d;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decompose_llm(
+    g: &mut PGraph,
+    q: &QueryConfig,
+    outs: &HashMap<usize, CompOut>,
+    ci: usize,
+    comp: &Component,
+    _variant: &str,
+    mode: SynthesisMode,
+    prompt: &[PromptPart],
+    out_tokens: usize,
+    segments: usize,
+    fan: usize,
+    guard: Option<(NodeId, bool)>,
+) -> Result<CompOut> {
+    let fan = if fan > 0 { fan } else { q.top_k };
+    let blank = Primitive {
+        id: 0,
+        kind: PrimKind::Prefilling,
+        engine: comp.engine.clone(),
+        component: ci,
+        batchable: false,
+        splittable: comp.splittable,
+        payload: PayloadSpec::Aggregate { parts: vec![], mode: AggregateMode::Barrier },
+        hard_deps: vec![],
+        guard,
+    };
+
+    // Resolve the template prompt parts once.
+    let base_parts: Vec<DataRef> = prompt
+        .iter()
+        .map(|p| resolve_part(p, q, outs))
+        .collect::<Result<_>>()?;
+    // Which part (if any) is the "context rows" part for tree/refine modes?
+    let ctx_idx = prompt.iter().position(|p| matches!(p, PromptPart::Upstream { .. }));
+
+    let mk_call = |g: &mut PGraph, parts: Vec<DataRef>, toks: usize, nseg: usize| {
+        let seq = g.alloc_seq();
+        let p = g.push(Primitive {
+            kind: PrimKind::Prefilling,
+            payload: PayloadSpec::Prefill { seq, parts },
+            ..blank.clone()
+        });
+        let per = (toks / nseg.max(1)).max(1);
+        let segs: Vec<(NodeId, usize)> = (0..nseg.max(1)).map(|_| (usize::MAX, per)).collect();
+        let d = g.push(Primitive {
+            kind: PrimKind::Decoding,
+            payload: PayloadSpec::Decode { seq, first_from: p, segments: segs },
+            ..blank.clone()
+        });
+        fix_decode_self(g, d);
+        (p, d)
+    };
+
+    match mode {
+        SynthesisMode::OneShot => {
+            let (p, d) = mk_call(g, base_parts, out_tokens, segments);
+            Ok(CompOut { out: d, heads: vec![p], tails: vec![d] })
+        }
+        SynthesisMode::Tree => {
+            let k = fan.max(1);
+            let ctx = ctx_idx
+                .ok_or_else(|| TeolaError::Graph("tree mode needs an Upstream part".into()))?;
+            let mut heads = Vec::new();
+            let mut leaf_outs = Vec::new();
+            for i in 0..k {
+                let mut parts = base_parts.clone();
+                // Slice this call's chunk out of the context part.
+                if let DataRef::Node(n) = parts[ctx] {
+                    parts[ctx] = DataRef::NodeSlice(n, i, i + 1);
+                }
+                let (p, d) = mk_call(g, parts, out_tokens, 1);
+                heads.push(p);
+                leaf_outs.push(d);
+            }
+            // Combiner call: instruction + question + the k leaf answers.
+            let mut parts = vec![
+                DataRef::Const(vec![instr_tokens("tree-combine", 16)]),
+                DataRef::Const(vec![q.question.clone()]),
+            ];
+            parts.extend(leaf_outs.iter().map(|d| DataRef::Node(*d)));
+            let (pc, dc) = mk_call(g, parts, out_tokens, 1);
+            let _ = pc;
+            Ok(CompOut { out: dc, heads, tails: vec![dc] })
+        }
+        SynthesisMode::Refine => {
+            let k = fan.max(1);
+            let ctx = ctx_idx
+                .ok_or_else(|| TeolaError::Graph("refine mode needs an Upstream part".into()))?;
+            let mut heads = Vec::new();
+            let mut prev: Option<NodeId> = None;
+            let mut last = 0;
+            for i in 0..k {
+                let mut parts = if i == 0 {
+                    base_parts.clone()
+                } else {
+                    // refine template: new instruction + question + chunk + prev answer
+                    let mut ps = vec![DataRef::Const(vec![instr_tokens("refine", 20)])];
+                    ps.extend(base_parts.iter().skip(1).cloned());
+                    ps
+                };
+                let ctx_pos = if i == 0 { ctx } else { ctx.max(1) };
+                if let DataRef::Node(n) = parts[ctx_pos] {
+                    parts[ctx_pos] = DataRef::NodeSlice(n, i, i + 1);
+                }
+                if let Some(pv) = prev {
+                    parts.push(DataRef::Node(pv));
+                }
+                let (p, d) = mk_call(g, parts, out_tokens, 1);
+                if i == 0 {
+                    heads.push(p);
+                }
+                prev = Some(d);
+                last = d;
+            }
+            Ok(CompOut { out: last, heads, tails: vec![last] })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::template::{Component, WorkflowTemplate};
+
+    fn naive_rag_template() -> WorkflowTemplate {
+        let mut t = WorkflowTemplate::new("naive-rag");
+        let idx = t.add(Component {
+            name: "indexing".into(),
+            kind: ComponentKind::Indexing,
+            engine: "embedder".into(),
+            batchable: true,
+            splittable: false,
+        });
+        let qe = t.add(Component {
+            name: "query-embed".into(),
+            kind: ComponentKind::Embedding { of: EmbedSource::Question },
+            engine: "embedder".into(),
+            batchable: true,
+            splittable: false,
+        });
+        let se = t.add(Component {
+            name: "search".into(),
+            kind: ComponentKind::VectorSearching { top_k: 3 },
+            engine: "vdb".into(),
+            batchable: false,
+            splittable: false,
+        });
+        let syn = t.add(Component {
+            name: "synth".into(),
+            kind: ComponentKind::LlmGenerate {
+                variant: "llm-small".into(),
+                mode: SynthesisMode::Tree,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("qa", 16)),
+                    PromptPart::Question,
+                    PromptPart::Upstream { component: 2, slice: None },
+                ],
+                out_tokens: 16,
+                segments: 1,
+                fan: 0,
+            },
+            engine: "llm-small".into(),
+            batchable: false,
+            splittable: false,
+        });
+        t.chain(&[idx, qe, se, syn]);
+        t
+    }
+
+    #[test]
+    fn naive_rag_decomposes() {
+        let t = naive_rag_template();
+        let q = QueryConfig::example(1);
+        let g = build_pgraph(&t, &q).unwrap();
+        // indexing: 2, query embed: 1, search: 1, tree synth (3+1 calls): 8
+        assert_eq!(g.nodes.len(), 12);
+        assert!(g.topo_order().is_ok());
+        // Output is the combiner decode.
+        assert_eq!(g.nodes[g.output].kind, PrimKind::Decoding);
+        // Search hard-depends on ingestion.
+        let search = g.nodes.iter().find(|n| n.kind == PrimKind::Searching).unwrap();
+        assert_eq!(search.hard_deps.len(), 1);
+    }
+
+    #[test]
+    fn template_edges_separate_from_data_edges() {
+        let t = naive_rag_template();
+        let q = QueryConfig::example(2);
+        let g = build_pgraph(&t, &q).unwrap();
+        assert!(!g.template_edges.is_empty());
+        // With template edges removed the graph must still be acyclic.
+        let mut g2 = g.clone();
+        g2.template_edges.clear();
+        assert!(g2.topo_order().is_ok());
+    }
+
+    #[test]
+    fn depths_decrease_toward_output() {
+        let t = naive_rag_template();
+        let q = QueryConfig::example(3);
+        let g = build_pgraph(&t, &q).unwrap();
+        let d = g.depths();
+        assert_eq!(d[g.output], 0);
+        // Indexing embedding should be deeper than the final decode.
+        let e = g.nodes.iter().find(|n| n.kind == PrimKind::Embedding).unwrap();
+        assert!(d[e.id] > 0);
+    }
+
+    #[test]
+    fn instr_tokens_deterministic() {
+        assert_eq!(instr_tokens("qa", 8), instr_tokens("qa", 8));
+        assert_ne!(instr_tokens("qa", 8), instr_tokens("refine", 8));
+    }
+}

@@ -1,0 +1,232 @@
+//! Task primitives (paper Table 2) and their metadata profiles.
+//!
+//! A primitive is a symbolic node: *what* to run (kind + payload spec),
+//! *where* (target engine), and the attributes the optimizer and the
+//! topology-aware batcher exploit (batchable / splittable / depth).
+
+use crate::engines::NodeId;
+
+/// Reference to upstream data used when assembling an engine job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataRef {
+    /// Literal token rows known at graph-construction time (instructions,
+    /// the user question, uploaded document chunks).
+    Const(Vec<Vec<i32>>),
+    /// The full output value of another node.
+    Node(NodeId),
+    /// Rows `[start, end)` of another node's TokenBatch output.
+    NodeSlice(NodeId, usize, usize),
+}
+
+impl DataRef {
+    /// Node ids this reference depends on.
+    pub fn deps(&self) -> Vec<NodeId> {
+        match self {
+            DataRef::Const(_) => vec![],
+            DataRef::Node(n) | DataRef::NodeSlice(n, _, _) => vec![*n],
+        }
+    }
+
+    /// Row count if statically known (Const only).
+    pub fn static_rows(&self) -> Option<usize> {
+        match self {
+            DataRef::Const(rows) => Some(rows.len()),
+            DataRef::NodeSlice(_, a, b) => Some(b - a),
+            DataRef::Node(_) => None,
+        }
+    }
+}
+
+/// Aggregation semantics for `PrimKind::Aggregate`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregateMode {
+    /// Concatenate parents' token rows into one TokenBatch.
+    ConcatRows,
+    /// Keep the k top-scoring rows: parents = [scores, rows...].
+    TopK(usize),
+    /// Join parents' tokens into a single Tokens value.
+    JoinTokens,
+    /// Pure synchronization barrier (Unit output).
+    Barrier,
+    /// Parents = k Tokens + one final TokenBatch of k rows; output row i is
+    /// `parent_i ++ batch[i]` (contextual-retrieval prepending).
+    ZipPrepend,
+}
+
+/// The primitive taxonomy of Table 2 (+ the tool/web operations the apps
+/// in Fig. 2 need).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimKind {
+    Embedding,
+    Ingestion,
+    Searching,
+    Reranking,
+    /// Monolithic prefill (baselines / unsplit).
+    Prefilling,
+    /// Prefill of an early prompt prefix (Pass 3 output).
+    PartialPrefilling,
+    /// The final prefill chunk after partial prefills (Pass 3 output).
+    FullPrefilling,
+    Decoding,
+    /// Marker node completed by a streaming decode segment (Pass 4 output).
+    PartialDecoding,
+    /// KV prefix-cache clone (LlamaDistPC baseline).
+    PrefixClone,
+    Condition,
+    Aggregate,
+    WebSearching,
+    ToolCalling,
+}
+
+impl PrimKind {
+    /// True for ops executed by a model/engine backend (vs host-side
+    /// control-flow ops evaluated by the graph scheduler).
+    pub fn is_engine_op(&self) -> bool {
+        !matches!(
+            self,
+            PrimKind::Condition | PrimKind::Aggregate | PrimKind::PartialDecoding
+        )
+    }
+}
+
+/// How to assemble the engine job (or host evaluation) for a primitive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PayloadSpec {
+    /// Embed rows gathered from `source`s (concatenated in order).
+    Embed { sources: Vec<DataRef> },
+    /// Ingest chunk rows + their embeddings into the query namespace.
+    Ingest { chunks: Vec<DataRef>, embeddings: DataRef },
+    /// Vector search: one result set of `top_k` per query embedding row.
+    VectorSearch { embeddings: DataRef, top_k: usize },
+    /// Rerank `candidates` rows against `query`; output the `top_k` best
+    /// candidate rows (score selection happens at completion).
+    Rerank { query: DataRef, candidates: Vec<DataRef>, top_k: usize },
+    /// Prefill prompt parts (in order) into sequence `seq` of this query.
+    Prefill { seq: u32, parts: Vec<DataRef> },
+    /// Decode sequence `seq`; `segments` = (consumer marker node or self,
+    /// planned token length) pairs; `first_from` = the prefill node whose
+    /// completion supplies the seed token.
+    Decode { seq: u32, first_from: NodeId, segments: Vec<(NodeId, usize)> },
+    /// Marker for a streaming decode segment (completed by the engine).
+    PartialDecode { decode: NodeId, segment: usize },
+    /// Copy the first `len` KV positions of `src_seq` into `dst_seq`
+    /// (prefix-cache reuse; used by the LlamaDistPC baseline).  `after`
+    /// orders the clone behind the prefix's prefill.
+    ClonePrefix { src_seq: u32, dst_seq: u32, len: usize, after: NodeId },
+    /// Host-side condition: pseudo-random but query-deterministic gate
+    /// with probability `prob_true` (stands in for the judge's semantic
+    /// decision; the hash of the input tokens supplies the entropy).
+    Condition { input: DataRef, prob_true: f64 },
+    /// Host-side aggregation of parent values.
+    Aggregate { parts: Vec<DataRef>, mode: AggregateMode },
+    /// Web search over the global corpus.
+    WebSearch { queries: Vec<DataRef>, top_k: usize },
+    /// Simulated external tool API.
+    Tool { name: String, cost_us: u64 },
+}
+
+impl PayloadSpec {
+    /// All upstream node dependencies implied by the payload's data refs.
+    pub fn deps(&self) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        let mut add = |r: &DataRef| out.extend(r.deps());
+        match self {
+            PayloadSpec::Embed { sources } => sources.iter().for_each(&mut add),
+            PayloadSpec::Ingest { chunks, embeddings } => {
+                chunks.iter().for_each(&mut add);
+                add(embeddings);
+            }
+            PayloadSpec::VectorSearch { embeddings, .. } => add(embeddings),
+            PayloadSpec::Rerank { query, candidates, .. } => {
+                add(query);
+                candidates.iter().for_each(&mut add);
+            }
+            PayloadSpec::Prefill { parts, .. } => parts.iter().for_each(&mut add),
+            PayloadSpec::Decode { first_from, .. } => out.push(*first_from),
+            PayloadSpec::PartialDecode { decode, .. } => out.push(*decode),
+            PayloadSpec::ClonePrefix { after, .. } => out.push(*after),
+            PayloadSpec::Condition { input, .. } => add(input),
+            PayloadSpec::Aggregate { parts, .. } => parts.iter().for_each(&mut add),
+            PayloadSpec::WebSearch { queries, .. } => queries.iter().for_each(&mut add),
+            PayloadSpec::Tool { .. } => {}
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// A p-graph / e-graph node.
+#[derive(Debug, Clone)]
+pub struct Primitive {
+    pub id: NodeId,
+    pub kind: PrimKind,
+    /// Target engine name ("llm-large", "embedder", "reranker", "vdb",
+    /// "web", "tool"); empty for host-side control-flow ops.
+    pub engine: String,
+    /// Provenance: index of the template component this came from.
+    pub component: usize,
+    /// Batchable annotation (independent rows — Pass 2 candidate).
+    pub batchable: bool,
+    /// Splittable annotation (divisible output — Pass 4 candidate).
+    pub splittable: bool,
+    pub payload: PayloadSpec,
+    /// Extra ordering dependencies not visible in the payload (e.g.
+    /// "search after ingestion"); never pruned by Pass 1.
+    pub hard_deps: Vec<NodeId>,
+    /// Guard: run only if node's Bool output equals the flag; otherwise
+    /// this node is skipped.
+    pub guard: Option<(NodeId, bool)>,
+}
+
+impl Primitive {
+    /// All data dependencies: payload refs + hard deps + guard.
+    pub fn data_deps(&self) -> Vec<NodeId> {
+        let mut d = self.payload.deps();
+        d.extend(&self.hard_deps);
+        if let Some((g, _)) = self.guard {
+            d.push(g);
+        }
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_deps_dedup() {
+        let p = PayloadSpec::Rerank {
+            query: DataRef::Node(3),
+            candidates: vec![DataRef::Node(3), DataRef::NodeSlice(5, 0, 2)],
+            top_k: 2,
+        };
+        assert_eq!(p.deps(), vec![3, 5]);
+    }
+
+    #[test]
+    fn primitive_deps_include_guard_and_hard() {
+        let p = Primitive {
+            id: 9,
+            kind: PrimKind::WebSearching,
+            engine: "web".into(),
+            component: 0,
+            batchable: true,
+            splittable: false,
+            payload: PayloadSpec::WebSearch { queries: vec![DataRef::Node(1)], top_k: 4 },
+            hard_deps: vec![7],
+            guard: Some((2, true)),
+        };
+        assert_eq!(p.data_deps(), vec![1, 2, 7]);
+    }
+
+    #[test]
+    fn engine_op_classification() {
+        assert!(PrimKind::Embedding.is_engine_op());
+        assert!(!PrimKind::Aggregate.is_engine_op());
+        assert!(!PrimKind::PartialDecoding.is_engine_op());
+    }
+}

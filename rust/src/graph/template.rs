@@ -1,0 +1,202 @@
+//! Workflow templates — the developer-facing API (paper §3.2, Listing 1).
+//!
+//! Developers register components with engines, roles and annotations and
+//! chain them with `then` (the paper's `>>` operator).  The per-query
+//! configuration (question, documents, parameters) is bound later, when
+//! the Graph Optimizer turns the template into a p-graph.
+
+use crate::util::rng::Rng;
+
+/// How an LLM synthesizing component combines context chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthesisMode {
+    /// One prompt with all chunks appended.
+    OneShot,
+    /// k parallel calls (one chunk each) + one combining call (Fig. 4b).
+    Tree,
+    /// k chained calls; call i refines the previous answer (Fig. 6).
+    Refine,
+}
+
+/// A part of an LLM prompt, ordered; Pass 3 splits prefills at readiness
+/// boundaries between parts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PromptPart {
+    /// Fixed tokens known at template-bind time (system/user instruction).
+    Instruction(Vec<i32>),
+    /// The user question (bound from the query config).
+    Question,
+    /// Output of an upstream component (retrieved context, prior answer).
+    Upstream { component: usize, slice: Option<(usize, usize)> },
+}
+
+/// What a component is, plus its decomposition-relevant config.
+#[derive(Debug, Clone)]
+pub enum ComponentKind {
+    /// Embed + ingest the query's uploaded document chunks.
+    Indexing,
+    /// Embed + ingest token rows produced by an upstream component
+    /// (contextual retrieval indexes contextualized chunks).
+    IndexingUpstream(usize),
+    /// Embed token rows produced upstream (or the question itself).
+    Embedding { of: EmbedSource },
+    /// Vector search over the query namespace.
+    VectorSearching { top_k: usize },
+    /// Cross-encoder rerank of upstream candidates; keep top_k.
+    Reranking { top_k: usize },
+    /// LLM generation: prompt parts, synthesis mode and output plan.
+    LlmGenerate {
+        variant: String,
+        mode: SynthesisMode,
+        prompt: Vec<PromptPart>,
+        /// Planned output tokens per call (workload-controlled).
+        out_tokens: usize,
+        /// For splittable outputs: number of SEP-separated segments.
+        segments: usize,
+        /// Tree/refine fan-out (context chunks consumed); 0 = query top_k.
+        fan: usize,
+    },
+    /// Per-chunk contextualization with a lightweight LLM (Fig. 2e): one
+    /// call per chunk, each seeing `neighbors` adjacent chunks.
+    Contextualize { variant: String, out_tokens: usize, neighbors: usize },
+    /// Web search with the question (+ optionally upstream queries).
+    WebSearch { top_k: usize },
+    /// Judge/conditional branch (probability models the dataset mix).
+    Condition { prob_true: f64 },
+    /// External tool call (agent workflows).
+    Tool { name: String, cost_us: u64 },
+}
+
+/// What an Embedding component embeds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EmbedSource {
+    /// The user question.
+    Question,
+    /// The query's uploaded document chunks.
+    DocChunks,
+    /// An upstream component's token rows (e.g. expanded queries).
+    Upstream(usize),
+}
+
+/// One registered component.
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub name: String,
+    pub kind: ComponentKind,
+    /// Engine name; empty = host-side.
+    pub engine: String,
+    pub batchable: bool,
+    pub splittable: bool,
+}
+
+/// The workflow template: components + execution-order edges.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowTemplate {
+    pub name: String,
+    pub components: Vec<Component>,
+    /// Template edges (the `>>` chains); indices into `components`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl WorkflowTemplate {
+    /// Create an empty template.
+    pub fn new(name: &str) -> WorkflowTemplate {
+        WorkflowTemplate { name: name.to_string(), components: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Register a component; returns its index.
+    pub fn add(&mut self, c: Component) -> usize {
+        self.components.push(c);
+        self.components.len() - 1
+    }
+
+    /// The `>>` operator: declare that `a` executes before `b`.
+    pub fn then(&mut self, a: usize, b: usize) -> &mut Self {
+        self.edges.push((a, b));
+        self
+    }
+
+    /// Chain a sequence of components.
+    pub fn chain(&mut self, order: &[usize]) -> &mut Self {
+        for w in order.windows(2) {
+            self.edges.push((w[0], w[1]));
+        }
+        self
+    }
+
+    /// Indices of components with no incoming template edge.
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.components.len())
+            .filter(|i| !self.edges.iter().any(|(_, b)| b == i))
+            .collect()
+    }
+}
+
+/// Per-query inputs and knobs (the "declarative query" of §3.2).
+#[derive(Debug, Clone)]
+pub struct QueryConfig {
+    pub question: Vec<i32>,
+    /// Uploaded document chunks (doc QA apps).
+    pub doc_chunks: Vec<Vec<i32>>,
+    /// Retrieval depth knobs.
+    pub top_k: usize,
+    /// Query-expansion count (advanced RAG).
+    pub expansion: usize,
+    /// Planned output length for the final answer.
+    pub answer_tokens: usize,
+    /// Deterministic per-query entropy for conditions.
+    pub seed: u64,
+}
+
+impl QueryConfig {
+    /// A small default config useful in tests.
+    pub fn example(seed: u64) -> QueryConfig {
+        let mut rng = Rng::new(seed);
+        let question: Vec<i32> = (0..24).map(|_| 4 + rng.zipf(0, 2000) as i32).collect();
+        let doc_chunks = (0..8)
+            .map(|_| (0..48).map(|_| 4 + rng.zipf(0, 2000) as i32).collect())
+            .collect();
+        QueryConfig {
+            question,
+            doc_chunks,
+            top_k: 3,
+            expansion: 3,
+            answer_tokens: 24,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn template_chain_builds_edges() {
+        let mut t = WorkflowTemplate::new("x");
+        let a = t.add(Component {
+            name: "a".into(),
+            kind: ComponentKind::Indexing,
+            engine: "embedder".into(),
+            batchable: true,
+            splittable: false,
+        });
+        let b = t.add(Component {
+            name: "b".into(),
+            kind: ComponentKind::VectorSearching { top_k: 3 },
+            engine: "vdb".into(),
+            batchable: false,
+            splittable: false,
+        });
+        let c = t.add(Component {
+            name: "c".into(),
+            kind: ComponentKind::Condition { prob_true: 0.5 },
+            engine: String::new(),
+            batchable: false,
+            splittable: false,
+        });
+        t.chain(&[a, b, c]);
+        assert_eq!(t.edges, vec![(0, 1), (1, 2)]);
+        assert_eq!(t.sources(), vec![0]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Values flowing along p-graph edges (held in the per-query object store).
+
+use crate::engines::JobOutput;
+
+/// A primitive's output value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// One token sequence (a decode segment, a prompt part, ...).
+    Tokens(Vec<i32>),
+    /// A list of token sequences (chunks, expanded queries, results).
+    TokenBatch(Vec<Vec<i32>>),
+    /// Embedding vectors.
+    Embeddings(Vec<Vec<f32>>),
+    /// Relevance scores.
+    Scores(Vec<f32>),
+    /// Condition outcome.
+    Bool(bool),
+    /// Side-effect-only / barrier.
+    Unit,
+    /// Node skipped by a failed guard.
+    Skipped,
+}
+
+impl Value {
+    /// Convert an engine completion payload.
+    pub fn from_output(o: JobOutput) -> Value {
+        match o {
+            JobOutput::Tokens(t) => Value::Tokens(t),
+            JobOutput::TokenBatch(b) => Value::TokenBatch(b),
+            JobOutput::Embeddings(e) => Value::Embeddings(e),
+            JobOutput::Scores(s) => Value::Scores(s),
+            JobOutput::Unit => Value::Unit,
+        }
+    }
+
+    /// View as a list of token rows (Tokens => single row).
+    pub fn rows(&self) -> Vec<Vec<i32>> {
+        match self {
+            Value::Tokens(t) => vec![t.clone()],
+            Value::TokenBatch(b) => b.clone(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Flatten to a single token sequence.
+    pub fn flat_tokens(&self) -> Vec<i32> {
+        match self {
+            Value::Tokens(t) => t.clone(),
+            Value::TokenBatch(b) => b.iter().flatten().copied().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Number of rows for slot accounting.
+    pub fn n_rows(&self) -> usize {
+        match self {
+            Value::Tokens(_) => 1,
+            Value::TokenBatch(b) => b.len(),
+            Value::Embeddings(e) => e.len(),
+            Value::Scores(s) => s.len(),
+            _ => 0,
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # Teola — end-to-end optimization of LLM-based applications
+//!
+//! A Rust + JAX + Pallas reproduction of *"Teola: Towards End-to-End
+//! Optimization of LLM-based Applications"*.  The crate implements the
+//! paper's contribution — primitive-level dataflow-graph orchestration with
+//! graph optimization passes and a two-tier, topology-aware runtime
+//! scheduler — plus every substrate it depends on: LLM / embedding /
+//! reranking engines executing AOT-compiled XLA artifacts on PJRT, a vector
+//! database, a web-search simulator, baselines, workload generators and a
+//! benchmark harness regenerating every figure/table of the paper.
+//!
+//! Layer map:
+//! * L1 (Pallas) + L2 (JAX): `python/compile/` — build-time only.
+//! * L3 (this crate): orchestration + engines + scheduling on the request
+//!   path; Python never runs at serving time.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod engines;
+pub mod error;
+pub mod graph;
+pub mod workload;
+pub mod json;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+
+pub use error::{Result, TeolaError};

@@ -1,0 +1,122 @@
+//! `teola` CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!   teola run   --app <name> --scheme <name> [--core <llm>] [--n <k>] [--rate <rps>]
+//!   teola apps                      # list applications
+//!   teola schemes                   # list orchestration schemes
+//!   teola inspect --app <name>     # print the optimized e-graph summary
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::baselines::Scheme;
+use teola::bench::{platform_for, run_trace, TraceRun};
+use teola::engines::profile::ProfileRegistry;
+use teola::graph::template::QueryConfig;
+use teola::scheduler::Platform;
+use teola::workload::DatasetKind;
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn app_by_name(s: &str) -> Option<AppKind> {
+    AppKind::all().into_iter().find(|a| a.name() == s)
+}
+
+fn scheme_by_name(s: &str) -> Option<Scheme> {
+    Scheme::all().into_iter().find(|x| x.name().eq_ignore_ascii_case(s) || x.name() == s)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>]"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("apps") => {
+            for a in AppKind::all() {
+                println!("{}", a.name());
+            }
+        }
+        Some("schemes") => {
+            for s in Scheme::all() {
+                println!("{}", s.name());
+            }
+        }
+        Some("inspect") => {
+            let app = parse_flag(&args, "--app")
+                .and_then(|s| app_by_name(&s))
+                .unwrap_or_else(|| usage());
+            let core = parse_flag(&args, "--core").unwrap_or_else(|| "llm-small".into());
+            let scheme = parse_flag(&args, "--scheme")
+                .and_then(|s| scheme_by_name(&s))
+                .unwrap_or(Scheme::Teola);
+            let mut t = app.template(&core);
+            bind_answer_tokens(&mut t, 24);
+            let q = QueryConfig::example(1);
+            let profiles = ProfileRegistry::with_defaults();
+            let e = scheme.build(&t, &q, &profiles).expect("build e-graph");
+            println!(
+                "{} / {}: {} primitives, critical path {}, sources {}",
+                app.name(),
+                scheme.name(),
+                e.len(),
+                e.critical_path_len(),
+                e.sources().len()
+            );
+            for n in &e.graph.nodes {
+                println!(
+                    "  [{:>3}] depth={:<2} {:<20} engine={}",
+                    n.id,
+                    e.depths[n.id],
+                    format!("{:?}", n.kind),
+                    if n.engine.is_empty() { "-" } else { &n.engine }
+                );
+            }
+        }
+        Some("run") => {
+            let app = parse_flag(&args, "--app")
+                .and_then(|s| app_by_name(&s))
+                .unwrap_or_else(|| usage());
+            let scheme = parse_flag(&args, "--scheme")
+                .and_then(|s| scheme_by_name(&s))
+                .unwrap_or(Scheme::Teola);
+            let core = parse_flag(&args, "--core").unwrap_or_else(|| "llm-small".into());
+            let n: usize = parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let rate: f64 =
+                parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(1.0);
+            let mut cfg = platform_for(app, &core);
+            cfg.warm = false;
+            let platform = Platform::start(&cfg).expect("platform");
+            let run = TraceRun {
+                app,
+                scheme,
+                dataset: DatasetKind::TruthfulQa,
+                core_llm: core,
+                rate,
+                n_queries: n,
+                seed: 42,
+            };
+            let r = run_trace(&platform, &run).expect("trace");
+            println!(
+                "{} / {}: n={} rate={} -> mean {:.1} ms, p50 {:.1}, p90 {:.1}, p99 {:.1} (wall {:.1}s)",
+                app.name(),
+                scheme.name(),
+                n,
+                rate,
+                r.summary_ms.mean,
+                r.summary_ms.p50,
+                r.summary_ms.p90,
+                r.summary_ms.p99,
+                r.wall_s
+            );
+            platform.shutdown();
+        }
+        _ => usage(),
+    }
+}

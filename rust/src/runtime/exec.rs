@@ -1,0 +1,194 @@
+//! Thread-local XLA execution context.
+//!
+//! The published `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so
+//! every engine *instance* owns its own `XlaContext` on its own OS thread —
+//! which also mirrors the paper's testbed where each engine instance owns a
+//! GPU.  Host data crosses threads as plain `Vec<f32>`/`Vec<i32>`; literals
+//! and device buffers never leave the owning thread.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::error::{Result, TeolaError};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::weights::read_weights;
+
+/// Host-side tensor (what crosses thread boundaries).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    /// F32 tensor constructor (panics on shape/data mismatch).
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    /// I32 tensor constructor (panics on shape/data mismatch).
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    /// Borrow the f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(TeolaError::Engine("expected f32 tensor".into())),
+        }
+    }
+
+    /// Borrow the i32 payload.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(TeolaError::Engine("expected i32 tensor".into())),
+        }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+}
+
+/// One engine instance's XLA state: client + lazily compiled executables +
+/// device-resident weight buffers per model.
+pub struct XlaContext {
+    client: PjRtClient,
+    manifest: Rc<Manifest>,
+    executables: HashMap<String, Rc<PjRtLoadedExecutable>>,
+    weights: HashMap<String, Rc<Vec<PjRtBuffer>>>,
+}
+
+impl XlaContext {
+    /// Create a CPU-PJRT context bound to this thread.
+    pub fn new(manifest: Rc<Manifest>) -> Result<XlaContext> {
+        let client = PjRtClient::cpu()?;
+        Ok(XlaContext { client, manifest, executables: HashMap::new(), weights: HashMap::new() })
+    }
+
+    /// The manifest this context serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&mut self, artifact: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.get(artifact) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(artifact)?;
+        let exe = Rc::new(compile_hlo_file(&self.client, &path)?);
+        self.executables.insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a model's weights once; cached as device buffers thereafter.
+    pub fn model_weights(&mut self, model: &str) -> Result<Rc<Vec<PjRtBuffer>>> {
+        if let Some(w) = self.weights.get(model) {
+            return Ok(w.clone());
+        }
+        let path = self.manifest.weights_path(model)?;
+        let tensors = read_weights(&path)?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            bufs.push(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+        }
+        let rc = Rc::new(bufs);
+        self.weights.insert(model.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer(data, shape, None)?
+            }
+        })
+    }
+
+    /// Run an artifact: `weights ++ activations` in AOT parameter order.
+    /// All lowered modules return a single tuple; this syncs it to the host
+    /// and decomposes it into per-output literals.
+    pub fn run(
+        &mut self,
+        artifact: &str,
+        model: Option<&str>,
+        activations: &[HostTensor],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.executable(artifact)?;
+        let mut args: Vec<PjRtBuffer> = Vec::new();
+        if let Some(m) = model {
+            let w = self.model_weights(m)?;
+            // Re-wrap: execute_b borrows, so collect refs below instead.
+            let mut refs: Vec<&PjRtBuffer> = w.iter().collect();
+            for a in activations {
+                args.push(self.upload(a)?);
+            }
+            refs.extend(args.iter());
+            let out = exe.execute_b(&refs)?;
+            return untuple(out);
+        }
+        for a in activations {
+            args.push(self.upload(a)?);
+        }
+        let refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let out = exe.execute_b(&refs)?;
+        untuple(out)
+    }
+
+    /// Pre-compile a set of artifacts (used at engine start to avoid
+    /// first-request latency spikes).
+    pub fn warm(&mut self, artifacts: &[String]) -> Result<()> {
+        for a in artifacts {
+            self.executable(a)?;
+        }
+        Ok(())
+    }
+}
+
+fn untuple(out: Vec<Vec<PjRtBuffer>>) -> Result<Vec<Literal>> {
+    let buf = out
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| TeolaError::Engine("empty execution result".into()))?;
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+/// Load HLO text, parse into a module proto and compile on the client.
+pub fn compile_hlo_file(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| TeolaError::Manifest("non-utf8 path".into()))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Convert a literal to `Vec<f32>`.
+pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Convert a literal to `Vec<i32>`.
+pub fn literal_i32(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Element type helper for shape assertions in tests.
+pub fn literal_elem_type(lit: &Literal) -> Result<ElementType> {
+    Ok(lit.ty()?)
+}

@@ -1,0 +1,263 @@
+//! `artifacts/manifest.json` reader: the contract between the AOT pipeline
+//! (python/compile/aot.py) and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, TeolaError};
+use crate::json::Json;
+
+/// Element type of a tensor in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(TeolaError::Manifest(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// One named tensor signature (input or output of an artifact).
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable bucket.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub op: String,
+    pub variant: String,
+    pub file: String,
+    pub n_weights: usize,
+    pub batch: usize,
+    /// Prefill chunk length; 0 for non-prefill ops.
+    pub chunk: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Model metadata (weights file + dims).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String, // "llm" | "embed" | "score"
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub weights_file: String,
+    pub n_weights: usize,
+}
+
+/// Special token ids shared with python/compile/configs.py.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecialTokens {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+}
+
+/// Parsed manifest: the full artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub special: SpecialTokens,
+    pub models: HashMap<String, ModelInfo>,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+}
+
+fn sig_list(v: &Json) -> Result<Vec<TensorSig>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| TeolaError::Manifest("sig list not an array".into()))?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSig {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| TeolaError::Manifest("missing shape".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(
+                    e.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let root = Json::parse(&text).map_err(TeolaError::Manifest)?;
+
+        let special_j = root
+            .get("special_tokens")
+            .ok_or_else(|| TeolaError::Manifest("missing special_tokens".into()))?;
+        let tok = |k: &str| -> i32 {
+            special_j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as i32
+        };
+        let special = SpecialTokens {
+            pad: tok("pad"),
+            bos: tok("bos"),
+            eos: tok("eos"),
+            sep: tok("sep"),
+        };
+
+        let mut models = HashMap::new();
+        if let Some(obj) = root.get("models").and_then(Json::as_obj) {
+            for (name, m) in obj {
+                let g = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        name: name.clone(),
+                        kind: m
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("llm")
+                            .to_string(),
+                        layers: g("layers"),
+                        d_model: g("d_model"),
+                        n_heads: g("n_heads"),
+                        vocab: g("vocab"),
+                        max_seq: g("max_seq"),
+                        weights_file: m
+                            .get("weights")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        n_weights: g("n_weights"),
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = HashMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| TeolaError::Manifest("missing artifacts".into()))?
+        {
+            let name = a
+                .get("artifact")
+                .and_then(Json::as_str)
+                .ok_or_else(|| TeolaError::Manifest("artifact missing name".into()))?
+                .to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    op: a.get("op").and_then(Json::as_str).unwrap_or("").to_string(),
+                    variant: a
+                        .get("variant")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    n_weights: a.get("n_weights").and_then(Json::as_usize).unwrap_or(0),
+                    batch: a.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                    chunk: a.get("chunk").and_then(Json::as_usize).unwrap_or(0),
+                    inputs: sig_list(
+                        a.get("inputs")
+                            .ok_or_else(|| TeolaError::Manifest("no inputs".into()))?,
+                    )?,
+                    outputs: sig_list(
+                        a.get("outputs")
+                            .ok_or_else(|| TeolaError::Manifest("no outputs".into()))?,
+                    )?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir, vocab: root.get("vocab").and_then(Json::as_usize).unwrap_or(0), special, models, artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let info = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| TeolaError::Manifest(format!("unknown artifact {name}")))?;
+        Ok(self.dir.join(&info.file))
+    }
+
+    /// Absolute path of a model's TWB1 weights file.
+    pub fn weights_path(&self, model: &str) -> Result<PathBuf> {
+        let info = self
+            .models
+            .get(model)
+            .ok_or_else(|| TeolaError::Manifest(format!("unknown model {model}")))?;
+        Ok(self.dir.join(&info.weights_file))
+    }
+
+    /// All prefill buckets (batch, chunk) available for a variant, ascending.
+    pub fn prefill_buckets(&self, variant: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .values()
+            .filter(|a| a.variant == variant && a.op == "prefill")
+            .map(|a| (a.batch, a.chunk))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// All decode batch sizes for a variant, ascending.
+    pub fn decode_batches(&self, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.variant == variant && a.op == "decode")
+            .map(|a| a.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// All encoder batch sizes for a variant (op = embed | score).
+    pub fn encoder_batches(&self, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.variant == variant && (a.op == "embed" || a.op == "score"))
+            .map(|a| a.batch)
+            .collect();
+        v.sort();
+        v
+    }
+}

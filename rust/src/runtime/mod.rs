@@ -1,0 +1,21 @@
+//! PJRT runtime bridge: manifest, weights, and per-thread execution.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module loads
+//! the AOT HLO-text artifacts and executes them on the PJRT CPU client from
+//! the Rust request path.
+
+pub mod exec;
+pub mod manifest;
+pub mod weights;
+
+pub use exec::{HostTensor, XlaContext};
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, SpecialTokens};
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$TEOLA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TEOLA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

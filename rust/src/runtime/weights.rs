@@ -1,0 +1,118 @@
+//! TWB1 weight-file reader (the format python/compile/weights.py writes).
+//!
+//! Layout (all integers little-endian u32):
+//!   magic "TWB1" | count | { name_len, name, dtype, ndim, dims.., f32 data }
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Result, TeolaError};
+
+/// One weight tensor on the host.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Read every tensor of a TWB1 file, in file (== AOT parameter) order.
+pub fn read_weights(path: impl AsRef<Path>) -> Result<Vec<WeightTensor>> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_weights(&buf)
+}
+
+fn rd_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > buf.len() {
+        return Err(TeolaError::Weights("truncated u32".into()));
+    }
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// Parse a TWB1 byte buffer.
+pub fn parse_weights(buf: &[u8]) -> Result<Vec<WeightTensor>> {
+    if buf.len() < 8 || &buf[..4] != b"TWB1" {
+        return Err(TeolaError::Weights("bad magic".into()));
+    }
+    let mut pos = 4;
+    let count = rd_u32(buf, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = rd_u32(buf, &mut pos)? as usize;
+        if pos + nlen > buf.len() {
+            return Err(TeolaError::Weights("truncated name".into()));
+        }
+        let name = String::from_utf8(buf[pos..pos + nlen].to_vec())
+            .map_err(|_| TeolaError::Weights("bad name utf8".into()))?;
+        pos += nlen;
+        let dtype = rd_u32(buf, &mut pos)?;
+        if dtype != 0 {
+            return Err(TeolaError::Weights(format!("unsupported dtype {dtype}")));
+        }
+        let ndim = rd_u32(buf, &mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(rd_u32(buf, &mut pos)? as usize);
+        }
+        let elems: usize = shape.iter().product();
+        let nbytes = elems * 4;
+        if pos + nbytes > buf.len() {
+            return Err(TeolaError::Weights(format!("truncated data for {name}")));
+        }
+        let mut data = vec![0f32; elems];
+        for (i, chunk) in buf[pos..pos + nbytes].chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        pos += nbytes;
+        out.push(WeightTensor { name, shape, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_file() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"TWB1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        let name = b"w";
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(name);
+        b.extend_from_slice(&0u32.to_le_bytes()); // dtype f32
+        b.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        for i in 0..6 {
+            b.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_tiny_file() {
+        let ws = parse_weights(&tiny_file()).unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].name, "w");
+        assert_eq!(ws[0].shape, vec![2, 3]);
+        assert_eq!(ws[0].data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = tiny_file();
+        b[0] = b'X';
+        assert!(parse_weights(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = tiny_file();
+        assert!(parse_weights(&b[..b.len() - 4]).is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! Batch-formation policies for the lower-tier engine schedulers.
+//!
+//! * `TopoAware` — Algorithm 2: bucket the queue by query, sort buckets by
+//!   earliest arrival, inside each bucket prefer the *deepest* primitives
+//!   (the ones whose completion unblocks the most downstream work), fill
+//!   up to the slot budget.
+//! * `BlindTO` — throughput-oriented FIFO dynamic batching up to the
+//!   pre-tuned max batch (the paper's TO baseline).
+//! * `PerInvocation` — latency-oriented bundles: all requests of one
+//!   invocation are scheduled together and nothing else joins the batch
+//!   (the paper's PO baseline).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::engines::{Completion, EngineJob, QueryId};
+
+/// Batch-compatibility class of a job: prefill-type and decode-type LLM
+/// work never share a batch (a decode joining a prefill batch would wait
+/// behind compute-bound prefills — the head-of-line blocking vLLM avoids
+/// by separating prefill and decode iterations).
+pub fn job_class(job: &EngineJob) -> u8 {
+    match job {
+        EngineJob::Prefill { .. } | EngineJob::ClonePrefix { .. } => 1,
+        EngineJob::Decode { .. } => 2,
+        _ => 0,
+    }
+}
+
+/// Scheduling policy of an engine scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    TopoAware,
+    BlindTO,
+    PerInvocation,
+}
+
+impl BatchPolicy {
+    /// Encode for the atomic policy handle.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            BatchPolicy::TopoAware => 0,
+            BatchPolicy::BlindTO => 1,
+            BatchPolicy::PerInvocation => 2,
+        }
+    }
+
+    /// Decode from the atomic policy handle.
+    pub fn from_u8(v: u8) -> BatchPolicy {
+        match v {
+            1 => BatchPolicy::BlindTO,
+            2 => BatchPolicy::PerInvocation,
+            _ => BatchPolicy::TopoAware,
+        }
+    }
+}
+
+/// One queued primitive-node request.
+#[derive(Debug)]
+pub struct QueueItem {
+    pub query: QueryId,
+    pub node: usize,
+    /// Reverse-topological depth (Algorithm 2 priority).
+    pub depth: u32,
+    /// Invocation bundle id (PO bundles; Teola uses one bundle per node).
+    pub bundle: u64,
+    pub arrival: Instant,
+    pub rows: usize,
+    pub job: EngineJob,
+    pub reply: Sender<Completion>,
+}
+
+/// Form the next batch according to `policy`, removing the chosen items
+/// from `queue`.  `max_slots` is the engine's pre-tuned max batch rows
+/// (token-size analog for LLMs).  Returns an empty vec when nothing fits.
+pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: usize) -> Vec<QueueItem> {
+    if queue.is_empty() {
+        return Vec::new();
+    }
+    match policy {
+        BatchPolicy::BlindTO => {
+            // FIFO by arrival until slots run out, restricted to the
+            // oldest item's class.
+            let mut order: Vec<usize> = (0..queue.len()).collect();
+            order.sort_by_key(|&i| queue[i].arrival);
+            let class = job_class(&queue[order[0]].job);
+            order.retain(|&i| job_class(&queue[i].job) == class);
+            take_rows(queue, order, max_slots, false)
+        }
+        BatchPolicy::PerInvocation => {
+            // Oldest bundle only.
+            let first = queue
+                .iter()
+                .min_by_key(|it| it.arrival)
+                .map(|it| it.bundle)
+                .unwrap();
+            let order: Vec<usize> =
+                (0..queue.len()).filter(|&i| queue[i].bundle == first).collect();
+            take_rows(queue, order, usize::MAX, false)
+        }
+        BatchPolicy::TopoAware => {
+            // Algorithm 2 Event 2.
+            // Bucket by query.
+            let mut buckets: BTreeMap<QueryId, Vec<usize>> = BTreeMap::new();
+            for (i, it) in queue.iter().enumerate() {
+                buckets.entry(it.query).or_default().push(i);
+            }
+            // Sort buckets by earliest arrival.
+            let mut bucket_list: Vec<(Instant, Vec<usize>)> = buckets
+                .into_values()
+                .map(|idxs| {
+                    let earliest = idxs.iter().map(|&i| queue[i].arrival).min().unwrap();
+                    (earliest, idxs)
+                })
+                .collect();
+            bucket_list.sort_by_key(|(t, _)| *t);
+            // Algorithm 2 line 14: sweep buckets taking each bucket's
+            // highest-depth nodes first, so other queries' contributive
+            // primitives share the batch before a query's lower-depth
+            // siblings (Fig. 7).  If slots remain after the first sweep,
+            // continue with the next depth level down — idle slots help
+            // nobody.
+            let mut order = Vec::new();
+            let mut remaining: Vec<Vec<usize>> =
+                bucket_list.into_iter().map(|(_, idxs)| idxs).collect();
+            while remaining.iter().any(|b| !b.is_empty()) {
+                for bucket in remaining.iter_mut() {
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    let maxd = bucket.iter().map(|&i| queue[i].depth).max().unwrap();
+                    let mut level: Vec<usize> = bucket
+                        .iter()
+                        .copied()
+                        .filter(|&i| queue[i].depth == maxd)
+                        .collect();
+                    bucket.retain(|&i| queue[i].depth != maxd);
+                    level.sort_by_key(|&i| queue[i].arrival);
+                    order.extend(level);
+                }
+            }
+            // Restrict to the highest-priority item's class.
+            if let Some(&first) = order.first() {
+                let class = job_class(&queue[first].job);
+                order.retain(|&i| job_class(&queue[i].job) == class);
+            }
+            take_rows(queue, order, max_slots, true)
+        }
+    }
+}
+
+/// Remove items in `order` while row budget lasts.  `skip_over` lets the
+/// topology-aware policy pass over an oversized item to admit later
+/// smaller ones (slot packing); FIFO policies stop at the first overflow.
+fn take_rows(
+    queue: &mut Vec<QueueItem>,
+    order: Vec<usize>,
+    max_slots: usize,
+    skip_over: bool,
+) -> Vec<QueueItem> {
+    let mut slots = max_slots;
+    let mut chosen: Vec<usize> = Vec::new();
+    for i in order {
+        let rows = queue[i].rows.max(1);
+        if rows <= slots {
+            slots -= rows;
+            chosen.push(i);
+        } else if chosen.is_empty() {
+            // Oversized single item: admit alone (engine splits internally).
+            chosen.push(i);
+            slots = 0;
+            break;
+        } else if !skip_over {
+            break;
+        }
+        if slots == 0 {
+            break;
+        }
+    }
+    chosen.sort_unstable();
+    chosen.reverse();
+    chosen.into_iter().map(|i| queue.swap_remove(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn item(query: u64, node: usize, depth: u32, rows: usize, t0: Instant, ms: u64) -> QueueItem {
+        let (tx, _rx) = channel();
+        // leak the receiver so sends don't fail in tests that inspect items
+        std::mem::forget(_rx);
+        QueueItem {
+            query,
+            node,
+            depth,
+            bundle: query,
+            arrival: t0 + Duration::from_millis(ms),
+            rows,
+            job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn topo_aware_prefers_deep_nodes_across_queries() {
+        let t0 = Instant::now();
+        // Query 1 (earliest): node A depth 3, node B depth 1.
+        // Query 2: node H depth 3.
+        let mut q = vec![
+            item(1, 10, 3, 1, t0, 0),
+            item(1, 11, 1, 1, t0, 1),
+            item(2, 20, 3, 1, t0, 2),
+        ];
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 2);
+        let picked: Vec<(u64, usize)> = batch.iter().map(|i| (i.query, i.node)).collect();
+        // Fig. 7: A (deep, query 1) + H (deep, query 2); B waits.
+        assert!(picked.contains(&(1, 10)));
+        assert!(picked.contains(&(2, 20)));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].node, 11);
+    }
+
+    #[test]
+    fn blind_to_is_fifo() {
+        let t0 = Instant::now();
+        let mut q = vec![
+            item(1, 10, 3, 1, t0, 0),
+            item(1, 11, 1, 1, t0, 1),
+            item(2, 20, 3, 1, t0, 2),
+        ];
+        let batch = form_batch(&mut q, BatchPolicy::BlindTO, 2);
+        let picked: Vec<usize> = batch.iter().map(|i| i.node).collect();
+        assert!(picked.contains(&10) && picked.contains(&11));
+    }
+
+    #[test]
+    fn per_invocation_takes_single_bundle() {
+        let t0 = Instant::now();
+        let mut q = vec![
+            item(1, 10, 3, 1, t0, 0),
+            item(1, 11, 1, 1, t0, 0),
+            item(2, 20, 3, 1, t0, 1),
+        ];
+        let batch = form_batch(&mut q, BatchPolicy::PerInvocation, 64);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|i| i.query == 1));
+    }
+
+    #[test]
+    fn row_budget_respected() {
+        let t0 = Instant::now();
+        let mut q = vec![
+            item(1, 1, 2, 6, t0, 0),
+            item(1, 2, 2, 6, t0, 1),
+            item(2, 3, 2, 3, t0, 2),
+        ];
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 10);
+        let rows: usize = batch.iter().map(|i| i.rows).sum();
+        assert!(rows <= 10);
+        // skip-over admits the 3-row item from query 2.
+        assert!(batch.iter().any(|i| i.query == 2));
+    }
+
+    #[test]
+    fn oversized_item_admitted_alone() {
+        let t0 = Instant::now();
+        let mut q = vec![item(1, 1, 2, 100, t0, 0), item(2, 2, 2, 1, t0, 1)];
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rows, 100);
+    }
+}

@@ -1,0 +1,147 @@
+//! Lower-tier engine scheduler: owns the engine's instances, queues
+//! primitive requests from all queries, forms batches per policy and load
+//! balances across free instances (§5.2, §6).
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engines::instance::Instance;
+use crate::engines::{Batch, InstanceFree};
+use crate::scheduler::batching::{form_batch, BatchPolicy, QueueItem};
+
+/// One engine's scheduler state (runs on its own thread).
+pub struct EngineScheduler {
+    pub name: String,
+    pub instances: Vec<Instance>,
+    pub free_rx: Receiver<InstanceFree>,
+    pub job_rx: Receiver<QueueItem>,
+    /// Shared, runtime-switchable policy (benches flip it per scheme).
+    pub policy: Arc<AtomicU8>,
+    /// Pre-tuned max batch rows (the TO tuning / Algorithm 2 slot budget);
+    /// shared so harnesses can retune per experiment.
+    pub max_slots: Arc<AtomicUsize>,
+    /// Load counter per instance (in-flight rows) for least-loaded routing.
+    loads: Vec<usize>,
+    in_flight_rows: Vec<usize>,
+    queue: Vec<QueueItem>,
+    /// Dynamic-batching window: when the queue holds fewer rows than the
+    /// slot budget, wait this long (from the oldest arrival) for more
+    /// requests before dispatching — the Triton/vLLM-style accumulation
+    /// delay the paper's engines rely on.
+    batch_window: Duration,
+}
+
+impl EngineScheduler {
+    /// Build a scheduler; `run()` consumes it on a dedicated thread.
+    pub fn new(
+        name: String,
+        instances: Vec<Instance>,
+        free_rx: Receiver<InstanceFree>,
+        job_rx: Receiver<QueueItem>,
+        policy: Arc<AtomicU8>,
+        max_slots: Arc<AtomicUsize>,
+    ) -> EngineScheduler {
+        let n = instances.len();
+        EngineScheduler {
+            name,
+            instances,
+            free_rx,
+            job_rx,
+            policy,
+            max_slots,
+            loads: vec![0; n],
+            in_flight_rows: vec![0; n],
+            queue: Vec::new(),
+            batch_window: Duration::from_millis(3),
+        }
+    }
+
+    /// Scheduling loop: drain arrivals, mark freed instances, dispatch.
+    pub fn run(mut self) {
+        loop {
+            // Block briefly for new work; exit when the platform drops.
+            match self.job_rx.recv_timeout(Duration::from_micros(500)) {
+                Ok(item) => self.queue.push(item),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.queue.is_empty() {
+                        break;
+                    }
+                }
+            }
+            // Drain everything already waiting.
+            while let Ok(item) = self.job_rx.try_recv() {
+                self.queue.push(item);
+            }
+            // Mark freed instances.
+            while let Ok(f) = self.free_rx.try_recv() {
+                self.instances[f.instance].busy = false;
+                self.loads[f.instance] =
+                    self.loads[f.instance].saturating_sub(self.in_flight_rows[f.instance]);
+                self.in_flight_rows[f.instance] = 0;
+            }
+            // Dispatch while a free instance and queued work exist.
+            loop {
+                let Some(inst) = self.pick_instance() else { break };
+                if self.queue.is_empty() {
+                    break;
+                }
+                let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
+                let slots = self.max_slots.load(Ordering::Relaxed).max(1);
+                // Dynamic-batching delay: give co-arriving requests a
+                // moment to accumulate unless the slot budget is already
+                // covered (or the policy bundles by construction).
+                if policy != BatchPolicy::PerInvocation {
+                    let rows: usize = self.queue.iter().map(|i| i.rows.max(1)).sum();
+                    let oldest = self.queue.iter().map(|i| i.arrival).min();
+                    if rows < slots {
+                        if let Some(t) = oldest {
+                            if t.elapsed() < self.batch_window {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let items = form_batch(&mut self.queue, policy, slots);
+                if items.is_empty() {
+                    break;
+                }
+                let rows: usize = items.iter().map(|i| i.rows.max(1)).sum();
+                let jobs = items
+                    .into_iter()
+                    .map(|i| {
+                        (
+                            crate::engines::RequestCtx {
+                                query: i.query,
+                                node: i.node,
+                                depth: i.depth,
+                                arrival: i.arrival,
+                                reply: i.reply,
+                            },
+                            i.job,
+                        )
+                    })
+                    .collect();
+                self.loads[inst] += rows;
+                self.in_flight_rows[inst] = rows;
+                self.instances[inst].busy = true;
+                if self.instances[inst].sender.send(Batch { jobs }).is_err() {
+                    eprintln!("[{}] instance {inst} died", self.name);
+                    self.instances[inst].busy = true; // never pick again
+                }
+            }
+        }
+    }
+
+    /// Least-loaded free instance (KV-slot/request-count load balancing).
+    fn pick_instance(&self) -> Option<usize> {
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| !i.busy)
+            .min_by_key(|(idx, _)| self.loads[*idx])
+            .map(|(idx, _)| idx)
+    }
+}

@@ -1,0 +1,521 @@
+//! Upper-tier graph scheduler (§5.1): one runner per query.
+//!
+//! Tracks in-degrees of the query's e-graph, dispatches primitive nodes
+//! whose dependencies are met to the appropriate engine scheduler,
+//! evaluates host-side control-flow primitives inline, and handles
+//! streaming partial-decode completions arriving out of graph order.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Instant;
+
+use crate::engines::{Completion, EngineJob, NodeId, QueryId, SegmentSpec};
+use crate::error::{Result, TeolaError};
+use crate::graph::egraph::EGraph;
+use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
+use crate::graph::value::Value;
+use crate::scheduler::batching::QueueItem;
+use crate::scheduler::object_store::ObjectStore;
+
+/// Per-query latency accounting (feeds Figs. 1, 12 and EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct QueryMetrics {
+    /// End-to-end wall time (filled by the caller).
+    pub e2e_us: u64,
+    /// Graph construction + optimization time (filled by the caller).
+    pub opt_us: u64,
+    /// Sum of engine-scheduler queueing time across completions.
+    pub queue_us: u64,
+    /// Sum of engine execution time across completions.
+    pub exec_us: u64,
+    /// Host-side control-flow evaluation time.
+    pub host_us: u64,
+    pub n_engine_ops: usize,
+    pub n_host_ops: usize,
+    /// exec_us per (component, class) where class is "prefill", "decode"
+    /// or "other" — the Fig. 1 module breakdown.
+    pub per_component_us: HashMap<(usize, &'static str), u64>,
+}
+
+/// Routing table: engine name -> its scheduler's queue.
+pub type EngineRouter = HashMap<String, Sender<QueueItem>>;
+
+/// Executes one query's e-graph to completion.
+pub struct QueryRunner {
+    pub query: QueryId,
+    pub egraph: EGraph,
+    pub routers: EngineRouter,
+    /// SEP token id (prompt-part delimiter in rerank pairs).
+    pub sep: i32,
+    /// Clamp for prompt length (leave decode headroom in the KV cache).
+    pub max_prompt: usize,
+}
+
+enum NodeState {
+    Pending,
+    Dispatched,
+    Done,
+}
+
+impl QueryRunner {
+    /// Build a runner.
+    pub fn new(query: QueryId, egraph: EGraph, routers: EngineRouter, sep: i32) -> QueryRunner {
+        QueryRunner { query, egraph, routers, sep, max_prompt: 224 }
+    }
+
+    /// Run the e-graph; returns the output value and metrics.
+    pub fn run(self) -> Result<(Value, QueryMetrics)> {
+        let (tx, rx) = channel::<Completion>();
+        let n = self.egraph.len();
+        let mut indeg = self.egraph.in_degrees();
+        let mut state: Vec<NodeState> = (0..n).map(|_| NodeState::Pending).collect();
+        let mut store = ObjectStore::new();
+        let mut metrics = QueryMetrics::default();
+        let mut seq_len: HashMap<u32, usize> = HashMap::new();
+        let mut pending_rerank: HashMap<NodeId, (Vec<Vec<i32>>, usize)> = HashMap::new();
+        let mut done = 0usize;
+
+        // Local completion worklist (host ops complete synchronously).
+        let mut ready: Vec<NodeId> = self.egraph.sources();
+        let mut local_done: Vec<(NodeId, Value)> = Vec::new();
+
+        while done < n {
+            // Dispatch every ready node.
+            while let Some(v) = ready.pop() {
+                if matches!(state[v], NodeState::Pending) {
+                    self.dispatch(
+                        v,
+                        &mut store,
+                        &mut seq_len,
+                        &mut pending_rerank,
+                        &tx,
+                        &mut metrics,
+                        &mut state,
+                        &mut local_done,
+                    )?;
+                }
+            }
+            // Apply synchronous completions.
+            if let Some((v, val)) = local_done.pop() {
+                self.complete(v, val, &mut store, &mut indeg, &mut ready, &mut state, &mut done)?;
+                continue;
+            }
+            if done >= n {
+                break;
+            }
+            // Wait for an engine completion.
+            let c = rx
+                .recv()
+                .map_err(|_| TeolaError::Scheduler("completion channel closed".into()))?;
+            metrics.queue_us += c.timing.queued_us;
+            metrics.exec_us += c.timing.exec_us;
+            let node = c.node;
+            if store.has(node) {
+                continue; // duplicate stream delivery (benign)
+            }
+            let comp = self.egraph.graph.nodes[node].component;
+            let class = match self.egraph.graph.nodes[node].kind {
+                PrimKind::Prefilling | PrimKind::PartialPrefilling | PrimKind::FullPrefilling => "prefill",
+                PrimKind::Decoding | PrimKind::PartialDecoding => "decode",
+                _ => "other",
+            };
+            *metrics.per_component_us.entry((comp, class)).or_default() += c.timing.exec_us;
+
+            let mut value = Value::from_output(c.output);
+            // Rerank post-selection: scores -> top-k candidate rows.
+            if let Some((cands, top_k)) = pending_rerank.remove(&node) {
+                if let Value::Scores(scores) = &value {
+                    value = Value::TokenBatch(select_top_k(cands, scores, top_k));
+                }
+            }
+            metrics.n_engine_ops += 1;
+            self.complete(node, value, &mut store, &mut indeg, &mut ready, &mut state, &mut done)?;
+        }
+
+        // End-of-query cleanup: release KV + vector namespaces.
+        self.cleanup();
+        let out = store.require(self.egraph.graph.output)?.clone();
+        Ok((out, metrics))
+    }
+
+    fn cleanup(&self) {
+        for (name, sender) in &self.routers {
+            if name.starts_with("llm") || name == "vdb" {
+                let (tx, rx) = channel();
+                drop(rx);
+                let _ = sender.send(QueueItem {
+                    query: self.query,
+                    node: usize::MAX,
+                    depth: 0,
+                    bundle: 0,
+                    arrival: Instant::now(),
+                    rows: 0,
+                    job: EngineJob::FreeQuery { query: self.query },
+                    reply: tx,
+                });
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn complete(
+        &self,
+        v: NodeId,
+        val: Value,
+        store: &mut ObjectStore,
+        indeg: &mut [usize],
+        ready: &mut Vec<NodeId>,
+        state: &mut [NodeState],
+        done: &mut usize,
+    ) -> Result<()> {
+        store.put(v, val)?;
+        state[v] = NodeState::Done;
+        *done += 1;
+        for &c in &self.egraph.children[v] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                ready.push(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve a data ref to token rows (Skipped upstream -> empty).
+    fn rows_of(&self, store: &ObjectStore, r: &DataRef) -> Result<Vec<Vec<i32>>> {
+        Ok(match r {
+            DataRef::Const(rows) => rows.clone(),
+            DataRef::Node(n) => store.require(*n)?.rows(),
+            DataRef::NodeSlice(n, a, b) => {
+                let rows = store.require(*n)?.rows();
+                rows.get(*a..(*b).min(rows.len())).unwrap_or(&[]).to_vec()
+            }
+        })
+    }
+
+    fn embeddings_of(&self, store: &ObjectStore, r: &DataRef) -> Result<Vec<Vec<f32>>> {
+        match r {
+            DataRef::Node(n) => match store.require(*n)? {
+                Value::Embeddings(e) => Ok(e.clone()),
+                Value::Skipped => Ok(Vec::new()),
+                other => Err(TeolaError::Scheduler(format!(
+                    "expected embeddings from node {n}, got {other:?}"
+                ))),
+            },
+            DataRef::NodeSlice(n, a, b) => match store.require(*n)? {
+                Value::Embeddings(e) => {
+                    Ok(e.get(*a..(*b).min(e.len())).unwrap_or(&[]).to_vec())
+                }
+                other => Err(TeolaError::Scheduler(format!(
+                    "expected embeddings from node {n}, got {other:?}"
+                ))),
+            },
+            DataRef::Const(_) => Err(TeolaError::Scheduler(
+                "const embeddings are not supported".into(),
+            )),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &self,
+        v: NodeId,
+        store: &mut ObjectStore,
+        seq_len: &mut HashMap<u32, usize>,
+        pending_rerank: &mut HashMap<NodeId, (Vec<Vec<i32>>, usize)>,
+        tx: &Sender<Completion>,
+        metrics: &mut QueryMetrics,
+        state: &mut [NodeState],
+        local_done: &mut Vec<(NodeId, Value)>,
+    ) -> Result<()> {
+        let node = &self.egraph.graph.nodes[v];
+        state[v] = NodeState::Dispatched;
+
+        // Guard check.
+        if let Some((g, want)) = node.guard {
+            let pass = matches!(store.get(g), Some(Value::Bool(b)) if *b == want);
+            if !pass {
+                local_done.push((v, Value::Skipped));
+                return Ok(());
+            }
+        }
+
+        let host_start = Instant::now();
+        match &node.payload {
+            PayloadSpec::Condition { input, prob_true } => {
+                let rows = self.rows_of(store, input)?;
+                let mut h: u64 = self.query ^ 0x9E3779B97F4A7C15;
+                for t in rows.iter().flatten() {
+                    h = h.wrapping_mul(31).wrapping_add(*t as u64);
+                }
+                let outcome = (h % 10_000) as f64 / 10_000.0 < *prob_true;
+                metrics.host_us += host_start.elapsed().as_micros() as u64;
+                metrics.n_host_ops += 1;
+                local_done.push((v, Value::Bool(outcome)));
+            }
+            PayloadSpec::Aggregate { parts, mode } => {
+                let val = self.eval_aggregate(store, parts, *mode)?;
+                metrics.host_us += host_start.elapsed().as_micros() as u64;
+                metrics.n_host_ops += 1;
+                local_done.push((v, val));
+            }
+            PayloadSpec::PartialDecode { decode, .. } => {
+                // External: completed by the decode's streaming segments.
+                // If the decode itself was skipped, skip the marker too.
+                if matches!(store.get(*decode), Some(Value::Skipped)) {
+                    local_done.push((v, Value::Skipped));
+                } else if store.has(v) {
+                    // already streamed before the edge fired — nothing to do
+                }
+                // Otherwise wait for the stream message.
+            }
+            PayloadSpec::Embed { sources } => {
+                let mut chunks = Vec::new();
+                for s in sources {
+                    chunks.extend(self.rows_of(store, s)?);
+                }
+                self.send_job(v, EngineJob::Embed { chunks }, tx)?;
+            }
+            PayloadSpec::Ingest { chunks, embeddings } => {
+                let mut rows = Vec::new();
+                for c in chunks {
+                    rows.extend(self.rows_of(store, c)?);
+                }
+                let embs = self.embeddings_of(store, embeddings)?;
+                self.send_job(
+                    v,
+                    EngineJob::Ingest { namespace: self.query, chunks: rows, embeddings: embs },
+                    tx,
+                )?;
+            }
+            PayloadSpec::VectorSearch { embeddings, top_k } => {
+                let embs = self.embeddings_of(store, embeddings)?;
+                self.send_job(
+                    v,
+                    EngineJob::VectorSearch {
+                        namespace: self.query,
+                        embeddings: embs,
+                        top_k: *top_k,
+                    },
+                    tx,
+                )?;
+            }
+            PayloadSpec::Rerank { query, candidates, top_k } => {
+                let qrows = self.rows_of(store, query)?;
+                let qtok: Vec<i32> = qrows.into_iter().flatten().collect();
+                let mut cands = Vec::new();
+                for c in candidates {
+                    cands.extend(self.rows_of(store, c)?);
+                }
+                let pairs: Vec<Vec<i32>> = cands
+                    .iter()
+                    .map(|c| {
+                        let mut p = qtok.clone();
+                        p.push(self.sep);
+                        p.extend(c);
+                        p
+                    })
+                    .collect();
+                pending_rerank.insert(v, (cands, *top_k));
+                self.send_job(v, EngineJob::Rerank { pairs }, tx)?;
+            }
+            PayloadSpec::Prefill { seq, parts } => {
+                let mut tokens = Vec::new();
+                for p in parts {
+                    for row in self.rows_of(store, p)? {
+                        tokens.extend(row);
+                    }
+                }
+                let offset = *seq_len.get(seq).unwrap_or(&0);
+                let budget = self.max_prompt.saturating_sub(offset).max(1);
+                tokens.truncate(budget);
+                if tokens.is_empty() {
+                    tokens.push(self.sep);
+                }
+                seq_len.insert(*seq, offset + tokens.len());
+                self.send_job(
+                    v,
+                    EngineJob::Prefill { seq: (self.query, *seq), tokens, offset },
+                    tx,
+                )?;
+            }
+            PayloadSpec::Decode { seq, first_from, segments } => {
+                let first = match store.require(*first_from)? {
+                    Value::Tokens(t) => *t.first().unwrap_or(&self.sep),
+                    _ => self.sep,
+                };
+                let segs: Vec<SegmentSpec> = segments
+                    .iter()
+                    .map(|(n, l)| SegmentSpec { node: *n, len: *l })
+                    .collect();
+                self.send_job(
+                    v,
+                    EngineJob::Decode {
+                        seq: (self.query, *seq),
+                        first_token: first,
+                        segments: segs,
+                    },
+                    tx,
+                )?;
+            }
+            PayloadSpec::WebSearch { queries, top_k } => {
+                let mut rows = Vec::new();
+                for q in queries {
+                    rows.extend(self.rows_of(store, q)?);
+                }
+                self.send_job(v, EngineJob::WebSearch { queries: rows, top_k: *top_k }, tx)?;
+            }
+            PayloadSpec::ClonePrefix { src_seq, dst_seq, len, .. } => {
+                seq_len.insert(*dst_seq, *len);
+                self.send_job(
+                    v,
+                    EngineJob::ClonePrefix {
+                        src: (self.query, *src_seq),
+                        dst: (self.query, *dst_seq),
+                        len: *len,
+                    },
+                    tx,
+                )?;
+            }
+            PayloadSpec::Tool { name, cost_us } => {
+                self.send_job(
+                    v,
+                    EngineJob::ToolCall { name: name.clone(), cost_us: *cost_us },
+                    tx,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    fn eval_aggregate(
+        &self,
+        store: &ObjectStore,
+        parts: &[DataRef],
+        mode: AggregateMode,
+    ) -> Result<Value> {
+        match mode {
+            AggregateMode::Barrier => Ok(Value::Unit),
+            AggregateMode::ConcatRows => {
+                // If every node part carries embeddings, concatenate those;
+                // otherwise concatenate token rows.
+                let all_embeddings = parts.iter().all(|p| {
+                    matches!(p, DataRef::Node(n)
+                        if matches!(store.get(*n), Some(Value::Embeddings(_))))
+                });
+                if all_embeddings && !parts.is_empty() {
+                    let mut all = Vec::new();
+                    for p in parts {
+                        if let DataRef::Node(n) = p {
+                            if let Value::Embeddings(e) = store.require(*n)? {
+                                all.extend(e.clone());
+                            }
+                        }
+                    }
+                    return Ok(Value::Embeddings(all));
+                }
+                let mut rows = Vec::new();
+                for p in parts {
+                    rows.extend(self.rows_of(store, p)?);
+                }
+                Ok(Value::TokenBatch(rows))
+            }
+            AggregateMode::JoinTokens => {
+                let mut toks = Vec::new();
+                for p in parts {
+                    for r in self.rows_of(store, p)? {
+                        toks.extend(r);
+                        toks.push(self.sep);
+                    }
+                }
+                Ok(Value::Tokens(toks))
+            }
+            AggregateMode::TopK(k) => {
+                // parts[0] = scores node, rest = candidate rows.
+                let scores = match parts.first() {
+                    Some(DataRef::Node(n)) => match store.require(*n)? {
+                        Value::Scores(s) => s.clone(),
+                        _ => Vec::new(),
+                    },
+                    _ => Vec::new(),
+                };
+                let mut rows = Vec::new();
+                for p in &parts[1..] {
+                    rows.extend(self.rows_of(store, p)?);
+                }
+                Ok(Value::TokenBatch(select_top_k(rows, &scores, k)))
+            }
+            AggregateMode::ZipPrepend => {
+                // parts[..k] = Tokens (contexts), parts[k] = base rows.
+                let (last, ctxs) = parts.split_last().ok_or_else(|| {
+                    TeolaError::Scheduler("zip-prepend needs parts".into())
+                })?;
+                let base = self.rows_of(store, last)?;
+                let mut out = Vec::with_capacity(base.len());
+                for (i, b) in base.iter().enumerate() {
+                    let mut row = ctxs
+                        .get(i)
+                        .map(|c| self.rows_of(store, c).unwrap_or_default())
+                        .unwrap_or_default()
+                        .into_iter()
+                        .flatten()
+                        .collect::<Vec<i32>>();
+                    row.extend(b);
+                    out.push(row);
+                }
+                Ok(Value::TokenBatch(out))
+            }
+        }
+    }
+
+    fn send_job(&self, v: NodeId, job: EngineJob, tx: &Sender<Completion>) -> Result<()> {
+        let node = &self.egraph.graph.nodes[v];
+        let sender = self.routers.get(&node.engine).ok_or_else(|| {
+            TeolaError::Scheduler(format!("no engine registered for '{}'", node.engine))
+        })?;
+        let rows = job.rows();
+        sender
+            .send(QueueItem {
+                query: self.query,
+                node: v,
+                depth: self.egraph.depths[v],
+                bundle: (self.query << 20) | v as u64,
+                arrival: Instant::now(),
+                rows,
+                job,
+                reply: tx.clone(),
+            })
+            .map_err(|_| TeolaError::Scheduler(format!("engine '{}' is down", node.engine)))
+    }
+}
+
+/// Keep the k best-scoring rows (stable on ties by original order).
+pub fn select_top_k(rows: Vec<Vec<i32>>, scores: &[f32], k: usize) -> Vec<Vec<i32>> {
+    let mut idx: Vec<usize> = (0..rows.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let sa = scores.get(a).copied().unwrap_or(f32::MIN);
+        let sb = scores.get(b).copied().unwrap_or(f32::MIN);
+        sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.into_iter().map(|i| rows[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_selection() {
+        let rows = vec![vec![1], vec![2], vec![3]];
+        let got = select_top_k(rows, &[0.1, 0.9, 0.5], 2);
+        assert_eq!(got, vec![vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn top_k_handles_missing_scores() {
+        let rows = vec![vec![1], vec![2]];
+        let got = select_top_k(rows, &[0.5], 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], vec![1]);
+    }
+}

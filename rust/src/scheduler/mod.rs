@@ -1,0 +1,19 @@
+//! §5 Runtime Scheduling: the two-tier mechanism.
+//!
+//! Upper tier (graph scheduler): one runner per query tracks its e-graph's
+//! in-degrees and dispatches primitive *nodes* (not loose requests) to the
+//! engine schedulers.  Lower tier: one scheduler per engine batches
+//! primitives from all queries — topology-aware by default (Algorithm 2),
+//! with blind-TO and per-invocation (PO) policies for the baselines.
+
+pub mod batching;
+pub mod engine_sched;
+pub mod graph_sched;
+pub mod object_store;
+pub mod platform;
+
+pub use batching::{form_batch, BatchPolicy, QueueItem};
+pub use engine_sched::EngineScheduler;
+pub use graph_sched::{QueryMetrics, QueryRunner};
+pub use object_store::ObjectStore;
+pub use platform::{EngineSpec, Platform, PlatformConfig};

@@ -1,0 +1,81 @@
+//! Per-query object store (§5.1): intermediate outputs keyed by node.
+//!
+//! Acts as the input repository for pending primitives and enforces
+//! exactly-once delivery — a double write to the same node indicates a
+//! scheduling bug and is rejected (the fault-tolerance hook of the paper).
+
+use std::collections::HashMap;
+
+use crate::engines::NodeId;
+use crate::error::{Result, TeolaError};
+use crate::graph::value::Value;
+
+/// Intermediate-output store for one query.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    values: HashMap<NodeId, Value>,
+}
+
+impl ObjectStore {
+    /// Empty store.
+    pub fn new() -> ObjectStore {
+        ObjectStore::default()
+    }
+
+    /// Record a node's output; errors on duplicate delivery.
+    pub fn put(&mut self, node: NodeId, value: Value) -> Result<()> {
+        if self.values.contains_key(&node) {
+            return Err(TeolaError::Scheduler(format!(
+                "duplicate output for node {node}"
+            )));
+        }
+        self.values.insert(node, value);
+        Ok(())
+    }
+
+    /// Fetch a node's output.
+    pub fn get(&self, node: NodeId) -> Option<&Value> {
+        self.values.get(&node)
+    }
+
+    /// Fetch or error (for required inputs).
+    pub fn require(&self, node: NodeId) -> Result<&Value> {
+        self.get(node)
+            .ok_or_else(|| TeolaError::Scheduler(format!("missing value for node {node}")))
+    }
+
+    /// True once the node has completed.
+    pub fn has(&self, node: NodeId) -> bool {
+        self.values.contains_key(&node)
+    }
+
+    /// Number of stored values.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_once() {
+        let mut s = ObjectStore::new();
+        s.put(1, Value::Unit).unwrap();
+        assert!(s.put(1, Value::Unit).is_err());
+        assert!(s.has(1));
+        assert!(!s.has(2));
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let s = ObjectStore::new();
+        assert!(s.require(9).is_err());
+    }
+}

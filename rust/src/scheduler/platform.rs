@@ -1,0 +1,292 @@
+//! Platform: provisions engines + engine schedulers and runs queries.
+//!
+//! This is the deployment surface (paper §3.1 offline stage ①): register
+//! execution engines with instance counts and latency profiles, then serve
+//! queries online.  Mirrors the paper's testbed shape — each non-LLM
+//! engine gets one instance, each LLM two, unless overridden.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::engines::profile::ProfileRegistry;
+use crate::engines::search::{Corpus, NetModel};
+use crate::engines::{llm, search, vector_db, QueryId};
+use crate::engines::embedding::spawn_embedding_engine;
+use crate::engines::reranker::spawn_reranker_engine;
+use crate::error::Result;
+use crate::graph::egraph::EGraph;
+use crate::graph::value::Value;
+use crate::runtime::Manifest;
+use crate::scheduler::batching::{BatchPolicy, QueueItem};
+use crate::scheduler::engine_sched::EngineScheduler;
+use crate::scheduler::graph_sched::{QueryMetrics, QueryRunner};
+
+/// One engine pool to provision.
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    /// Engine name used by primitives ("llm-small", "embedder", ...).
+    pub name: String,
+    pub instances: usize,
+    /// Slot budget per dispatch (max efficient batch rows).
+    pub max_slots: usize,
+}
+
+/// Platform configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// LLM variants to provision (paper: two instances each).
+    pub llms: Vec<EngineSpec>,
+    pub embedder: EngineSpec,
+    pub reranker: EngineSpec,
+    pub vdb_instances: usize,
+    pub web_instances: usize,
+    pub tool_instances: usize,
+    pub policy: BatchPolicy,
+    /// Pre-compile all artifact buckets at startup.
+    pub warm: bool,
+    pub corpus_docs: usize,
+    pub net: NetModel,
+}
+
+impl PlatformConfig {
+    /// Testbed-shaped default: one core LLM variant + llm-small judge.
+    pub fn default_with(artifacts_dir: impl Into<std::path::PathBuf>, core_llm: &str) -> Self {
+        PlatformConfig {
+            artifacts_dir: artifacts_dir.into(),
+            llms: vec![
+                EngineSpec { name: core_llm.into(), instances: 2, max_slots: 8 },
+            ],
+            embedder: EngineSpec { name: "embedder".into(), instances: 1, max_slots: 16 },
+            reranker: EngineSpec { name: "reranker".into(), instances: 1, max_slots: 16 },
+            vdb_instances: 1,
+            web_instances: 2,
+            tool_instances: 2,
+            policy: BatchPolicy::TopoAware,
+            warm: true,
+            corpus_docs: 400,
+            net: NetModel::default(),
+        }
+    }
+
+    /// Add another LLM pool (e.g. the judge/proxy model).
+    pub fn with_llm(mut self, name: &str, instances: usize, max_slots: usize) -> Self {
+        if !self.llms.iter().any(|l| l.name == name) {
+            self.llms.push(EngineSpec { name: name.into(), instances, max_slots });
+        }
+        self
+    }
+
+    /// Override the batching policy.
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// A running platform: engine schedulers + routing table.
+pub struct Platform {
+    routers: HashMap<String, Sender<QueueItem>>,
+    sched_handles: Vec<JoinHandle<()>>,
+    policy: Arc<AtomicU8>,
+    slots: HashMap<String, Arc<AtomicUsize>>,
+    pub profiles: ProfileRegistry,
+    pub manifest: Rc<Manifest>,
+    pub sep: i32,
+}
+
+impl Platform {
+    /// Provision all engines and start their schedulers.
+    pub fn start(cfg: &PlatformConfig) -> Result<Platform> {
+        let manifest = Rc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let profiles = ProfileRegistry::with_defaults();
+        let mut routers = HashMap::new();
+        let mut sched_handles = Vec::new();
+        let mut slots: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
+        let policy = Arc::new(AtomicU8::new(cfg.policy.to_u8()));
+        // Instances ack on this channel once their executor (including any
+        // warm-up compilation) is constructed; start() blocks on all acks
+        // so serving never races against compilation.
+        let (ready_tx, ready_rx) = channel::<()>();
+        let mut expected_ready = 0usize;
+
+        let mut spawn_sched = |name: String,
+                               instances: Vec<crate::engines::instance::Instance>,
+                               free_rx,
+                               max_slots: usize,
+                               _p: BatchPolicy| {
+            let (job_tx, job_rx) = channel::<QueueItem>();
+            let slot_handle = Arc::new(AtomicUsize::new(max_slots));
+            let sched = EngineScheduler::new(
+                name.clone(),
+                instances,
+                free_rx,
+                job_rx,
+                policy.clone(),
+                slot_handle.clone(),
+            );
+            let h = std::thread::Builder::new()
+                .name(format!("sched-{name}"))
+                .spawn(move || sched.run())
+                .expect("spawn scheduler");
+            slots.insert(name.clone(), slot_handle);
+            routers.insert(name, job_tx);
+            sched_handles.push(h);
+        };
+
+        for spec in &cfg.llms {
+            let (free_tx, free_rx) = channel();
+            let (instances, _store) = llm::spawn_llm_engine(
+                manifest.clone(),
+                &spec.name,
+                spec.instances,
+                cfg.warm,
+                free_tx,
+                ready_tx.clone(),
+            );
+            expected_ready += instances.len();
+            spawn_sched(spec.name.clone(), instances, free_rx, spec.max_slots, cfg.policy);
+        }
+        {
+            let (free_tx, free_rx) = channel();
+            let instances = spawn_embedding_engine(
+                manifest.clone(),
+                &cfg.embedder.name,
+                cfg.embedder.instances,
+                cfg.warm,
+                free_tx,
+                ready_tx.clone(),
+            );
+            expected_ready += instances.len();
+            spawn_sched(
+                cfg.embedder.name.clone(),
+                instances,
+                free_rx,
+                cfg.embedder.max_slots,
+                cfg.policy,
+            );
+        }
+        {
+            let (free_tx, free_rx) = channel();
+            let instances = spawn_reranker_engine(
+                manifest.clone(),
+                &cfg.reranker.name,
+                cfg.reranker.instances,
+                cfg.warm,
+                free_tx,
+                ready_tx.clone(),
+            );
+            expected_ready += instances.len();
+            spawn_sched(
+                cfg.reranker.name.clone(),
+                instances,
+                free_rx,
+                cfg.reranker.max_slots,
+                cfg.policy,
+            );
+        }
+        {
+            let (free_tx, free_rx) = channel();
+            let (instances, _store) =
+                vector_db::spawn_vector_db(cfg.vdb_instances, free_tx, ready_tx.clone());
+            expected_ready += instances.len();
+            spawn_sched("vdb".into(), instances, free_rx, 64, cfg.policy);
+        }
+        let corpus = Arc::new(Corpus::synthetic(cfg.corpus_docs, 48, manifest.vocab.max(64), 11));
+        {
+            let (free_tx, free_rx) = channel();
+            let instances = search::spawn_search_engine(
+                corpus.clone(),
+                cfg.net,
+                cfg.web_instances,
+                free_tx,
+                ready_tx.clone(),
+            );
+            expected_ready += instances.len();
+            spawn_sched("web".into(), instances, free_rx, 16, cfg.policy);
+        }
+        {
+            let (free_tx, free_rx) = channel();
+            let instances = search::spawn_search_engine(
+                corpus,
+                NetModel { base_us: 20_000, per_result_us: 0, jitter: 0.2 },
+                cfg.tool_instances,
+                free_tx,
+                ready_tx.clone(),
+            );
+            expected_ready += instances.len();
+            spawn_sched("tool".into(), instances, free_rx, 16, cfg.policy);
+        }
+
+        // Block until every instance finished executor construction
+        // (incl. warm-up compiles) so serving starts on a quiet machine.
+        drop(ready_tx);
+        for _ in 0..expected_ready {
+            let _ = ready_rx.recv();
+        }
+
+        let sep = manifest.special.sep;
+        Ok(Platform { routers, sched_handles, policy, slots, profiles, manifest, sep })
+    }
+
+    /// Switch every engine scheduler's batching policy at runtime (bench
+    /// harnesses flip this per scheme without re-warming the engines).
+    pub fn set_policy(&self, p: BatchPolicy) {
+        self.policy.store(p.to_u8(), Ordering::Relaxed);
+    }
+
+    /// Retune one engine's slot budget (max batch rows) at runtime.
+    pub fn set_engine_slots(&self, engine: &str, slots: usize) {
+        if let Some(h) = self.slots.get(engine) {
+            h.store(slots.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Routing table clone for query runners.
+    pub fn routers(&self) -> HashMap<String, Sender<QueueItem>> {
+        self.routers.clone()
+    }
+
+    /// Execute one query's e-graph synchronously on the calling thread.
+    pub fn run_query(&self, query: QueryId, egraph: EGraph) -> Result<(Value, QueryMetrics)> {
+        let runner = QueryRunner::new(query, egraph, self.routers(), self.sep);
+        let t0 = Instant::now();
+        let (v, mut m) = runner.run()?;
+        m.e2e_us = t0.elapsed().as_micros() as u64;
+        Ok((v, m))
+    }
+
+    /// Spawn a query on its own thread (the paper's per-query scheduling
+    /// thread); join the handle for the result.
+    pub fn spawn_query(
+        &self,
+        query: QueryId,
+        egraph: EGraph,
+    ) -> JoinHandle<Result<(Value, QueryMetrics)>> {
+        let routers = self.routers();
+        let sep = self.sep;
+        std::thread::Builder::new()
+            .name(format!("query-{query}"))
+            .spawn(move || {
+                let runner = QueryRunner::new(query, egraph, routers, sep);
+                let t0 = Instant::now();
+                let (v, mut m) = runner.run()?;
+                m.e2e_us = t0.elapsed().as_micros() as u64;
+                Ok((v, m))
+            })
+            .expect("spawn query thread")
+    }
+
+    /// Graceful shutdown: drop queues and join scheduler threads.
+    pub fn shutdown(self) {
+        drop(self.routers);
+        for h in self.sched_handles {
+            let _ = h.join();
+        }
+    }
+}

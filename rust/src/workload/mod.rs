@@ -1,0 +1,9 @@
+//! Workload generation: synthetic datasets, Poisson traces, tokenizer.
+
+pub mod dataset;
+pub mod poisson;
+pub mod tokenizer;
+
+pub use dataset::{Dataset, DatasetKind};
+pub use poisson::PoissonTrace;
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,73 @@
+//! Tiny word-hash tokenizer so the examples accept real strings.
+//!
+//! Not a BPE — a deterministic word -> id hash into the model vocabulary,
+//! reserving the special ids.  Enough for demos: the models are synthetic,
+//! so only token *counts* and repetition structure matter.
+
+/// Word-level hash tokenizer over the shared vocabulary.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: usize,
+}
+
+impl Tokenizer {
+    /// Tokenizer for a vocabulary size (first 4 ids are special).
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab > 8);
+        Tokenizer { vocab }
+    }
+
+    fn hash_word(&self, w: &str) -> i32 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in w.to_lowercase().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        4 + (h % (self.vocab as u64 - 4)) as i32
+    }
+
+    /// Encode a string (whitespace/punctuation split).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split(|c: char| c.is_whitespace() || ",.;:!?\"()[]{}".contains(c))
+            .filter(|w| !w.is_empty())
+            .map(|w| self.hash_word(w))
+            .collect()
+    }
+
+    /// Decode token ids into a printable pseudo-text (hex word forms) —
+    /// demo output only.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|t| match *t {
+                0 => "<pad>".to_string(),
+                1 => "<bos>".to_string(),
+                2 => "<eos>".to_string(),
+                3 => "|".to_string(),
+                t => format!("w{t:x}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_deterministic_and_in_vocab() {
+        let t = Tokenizer::new(2048);
+        let a = t.encode("What is the capital of France?");
+        let b = t.encode("what is the capital of france");
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (4..2048).contains(&x)));
+        assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn decode_round_trips_special() {
+        let t = Tokenizer::new(2048);
+        assert!(t.decode(&[1, 5, 3, 2]).contains('|'));
+    }
+}

@@ -1,0 +1,114 @@
+//! All five Figure-2 applications end-to-end on the real platform, under
+//! Teola and baseline schemes.
+
+use once_cell::sync::Lazy;
+use std::sync::Mutex;
+
+use teola::apps::AppKind;
+use teola::baselines::Scheme;
+use teola::bench::{platform_for_all, run_single, TraceRun};
+use teola::scheduler::Platform;
+use teola::workload::{Dataset, DatasetKind};
+
+fn have_artifacts() -> bool {
+    let ok = teola::runtime::default_artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+// Platform is !Send (Rc manifest) so it cannot live in a static; tests in
+// this binary serialize via this mutex and each builds a platform scoped
+// to the app it exercises.
+static SERIAL: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+fn run_app(app: AppKind, scheme: Scheme, dataset: DatasetKind, seed: u64) -> (f64, usize) {
+    let core = "llm-lite"; // fastest variant keeps CI latency sane
+    let mut cfg = platform_for_all(&[app], core);
+    cfg.warm = false; // lazy-compile only the buckets the app touches
+    let platform = Platform::start(&cfg).unwrap();
+    let mut ds = Dataset::new(dataset, seed);
+    let mut q = ds.sample();
+    q.answer_tokens = q.answer_tokens.min(12);
+    if q.doc_chunks.len() > 6 {
+        q.doc_chunks.truncate(6);
+    }
+    let run = TraceRun {
+        app,
+        scheme,
+        dataset,
+        core_llm: core.into(),
+        rate: 1.0,
+        n_queries: 1,
+        seed,
+    };
+    let (ms, m) = run_single(&platform, &run, &q).unwrap();
+    platform.shutdown();
+    (ms, m.n_engine_ops)
+}
+
+#[test]
+fn search_gen_teola_and_baseline() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms_t, ops_t) = run_app(AppKind::SearchGen, Scheme::Teola, DatasetKind::WebQuestions, 1);
+    let (ms_b, _) = run_app(AppKind::SearchGen, Scheme::LlamaDistTO, DatasetKind::WebQuestions, 1);
+    assert!(ms_t > 0.0 && ms_b > 0.0);
+    assert!(ops_t >= 4, "proxy, judge, (web), synth: got {ops_t}");
+}
+
+#[test]
+fn doc_qa_naive_all_schemes() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    for scheme in Scheme::all() {
+        let (ms, ops) = run_app(AppKind::DocQaNaive, scheme, DatasetKind::TruthfulQa, 2);
+        assert!(ms > 0.0, "{}", scheme.name());
+        assert!(ops >= 7, "{}: {ops}", scheme.name());
+    }
+}
+
+#[test]
+fn doc_qa_advanced_teola() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms, ops) = run_app(AppKind::DocQaAdvanced, Scheme::Teola, DatasetKind::TruthfulQa, 3);
+    assert!(ms > 0.0);
+    // expansion (pf+dec) + per-segment embeds + search + rerank +
+    // refine chain (3x pf+dec) + indexing ops
+    assert!(ops >= 10, "got {ops}");
+}
+
+#[test]
+fn contextual_retrieval_teola() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms, ops) = run_app(
+        AppKind::ContextualRetrieval,
+        Scheme::Teola,
+        DatasetKind::FinQaBench,
+        4,
+    );
+    assert!(ms > 0.0);
+    assert!(ops >= 12, "6 chunks contextualized + retrieval: got {ops}");
+}
+
+#[test]
+fn agent_app_teola_and_autogen() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms_t, _) = run_app(AppKind::Agent, Scheme::Teola, DatasetKind::WebQuestions, 5);
+    let (ms_a, _) = run_app(AppKind::Agent, Scheme::AutoGen, DatasetKind::WebQuestions, 5);
+    assert!(ms_t > 0.0 && ms_a > 0.0);
+}

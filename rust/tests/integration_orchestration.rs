@@ -1,0 +1,140 @@
+//! End-to-end orchestration integration: real engines, real artifacts,
+//! full two-tier scheduling over optimized e-graphs.
+
+use teola::engines::profile::ProfileRegistry;
+use teola::graph::pgraph::{build_pgraph, instr_tokens};
+use teola::graph::template::*;
+use teola::graph::{run_passes, EGraph, OptFlags, Value};
+use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
+
+fn have_artifacts() -> bool {
+    let dir = teola::runtime::default_artifacts_dir();
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn naive_rag_template(llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("naive-rag");
+    let idx = t.add(Component {
+        name: "indexing".into(),
+        kind: ComponentKind::Indexing,
+        engine: "embedder".into(),
+        batchable: true,
+        splittable: false,
+    });
+    let qe = t.add(Component {
+        name: "query-embed".into(),
+        kind: ComponentKind::Embedding { of: EmbedSource::Question },
+        engine: "embedder".into(),
+        batchable: true,
+        splittable: false,
+    });
+    let se = t.add(Component {
+        name: "search".into(),
+        kind: ComponentKind::VectorSearching { top_k: 3 },
+        engine: "vdb".into(),
+        batchable: false,
+        splittable: false,
+    });
+    let syn = t.add(Component {
+        name: "synth".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: llm.into(),
+            mode: SynthesisMode::Tree,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("qa", 16)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: 2, slice: None },
+            ],
+            out_tokens: 8,
+            segments: 1,
+            fan: 0,
+        },
+        engine: llm.into(),
+        batchable: false,
+        splittable: false,
+    });
+    t.chain(&[idx, qe, se, syn]);
+    t
+}
+
+#[test]
+fn naive_rag_runs_end_to_end_optimized() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PlatformConfig::default_with("artifacts", "llm-lite");
+    let platform = Platform::start(&cfg).unwrap();
+
+    let t = naive_rag_template("llm-lite");
+    let q = QueryConfig::example(42);
+    let g = build_pgraph(&t, &q).unwrap();
+    let profiles = ProfileRegistry::with_defaults();
+    let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+    let e = EGraph::new(g).unwrap();
+
+    let (out, metrics) = platform.run_query(1, e).unwrap();
+    match out {
+        Value::TokenBatch(rows) => {
+            assert!(!rows.is_empty());
+            assert!(!rows[0].is_empty());
+        }
+        other => panic!("unexpected output {other:?}"),
+    }
+    assert!(metrics.n_engine_ops >= 8, "ops: {}", metrics.n_engine_ops);
+    assert!(metrics.exec_us > 0);
+    platform.shutdown();
+}
+
+#[test]
+fn coarse_and_optimized_agree_on_structure() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PlatformConfig::default_with("artifacts", "llm-lite")
+        .with_policy(BatchPolicy::BlindTO);
+    let platform = Platform::start(&cfg).unwrap();
+    let t = naive_rag_template("llm-lite");
+    let q = QueryConfig::example(43);
+    let profiles = ProfileRegistry::with_defaults();
+
+    let g1 = run_passes(build_pgraph(&t, &q).unwrap(), OptFlags::none(), &profiles).unwrap();
+    let e1 = EGraph::new(g1).unwrap();
+    let (out1, _) = platform.run_query(11, e1).unwrap();
+
+    let g2 = run_passes(build_pgraph(&t, &q).unwrap(), OptFlags::all(), &profiles).unwrap();
+    let e2 = EGraph::new(g2).unwrap();
+    let (out2, _) = platform.run_query(12, e2).unwrap();
+
+    // Same final-answer row count regardless of optimization level.
+    assert_eq!(out1.rows().len(), out2.rows().len());
+    platform.shutdown();
+}
+
+#[test]
+fn concurrent_queries_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PlatformConfig::default_with("artifacts", "llm-lite");
+    let platform = Platform::start(&cfg).unwrap();
+    let t = naive_rag_template("llm-lite");
+    let profiles = ProfileRegistry::with_defaults();
+
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let q = QueryConfig::example(100 + i);
+        let g = run_passes(build_pgraph(&t, &q).unwrap(), OptFlags::all(), &profiles).unwrap();
+        let e = EGraph::new(g).unwrap();
+        handles.push(platform.spawn_query(100 + i, e));
+    }
+    for h in handles {
+        let (out, m) = h.join().unwrap().unwrap();
+        assert!(!out.rows().is_empty());
+        assert!(m.e2e_us > 0);
+    }
+    platform.shutdown();
+}

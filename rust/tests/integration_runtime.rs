@@ -1,0 +1,245 @@
+//! Integration tests for the PJRT runtime bridge against real AOT artifacts.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` (these tests
+//! are skipped with a message when the directory is absent so plain
+//! `cargo test` still passes in a fresh checkout).
+
+use std::rc::Rc;
+
+use teola::runtime::{HostTensor, Manifest, XlaContext};
+
+fn manifest() -> Option<Rc<Manifest>> {
+    let dir = teola::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Manifest::load(dir).expect("manifest parses")))
+}
+
+fn kv_zeros(m: &Manifest, variant: &str, batch: usize) -> HostTensor {
+    let info = &m.models[variant];
+    let shape = vec![
+        info.layers,
+        2,
+        batch,
+        info.n_heads,
+        info.max_seq,
+        info.d_model / info.n_heads,
+    ];
+    let n = shape.iter().product();
+    HostTensor::f32(shape, vec![0.0; n])
+}
+
+#[test]
+fn manifest_loads_and_indexes() {
+    let Some(m) = manifest() else { return };
+    assert!(m.models.contains_key("llm-lite"));
+    assert!(m.models.contains_key("embedder"));
+    assert!(!m.prefill_buckets("llm-lite").is_empty());
+    assert!(!m.decode_batches("llm-small").is_empty());
+    assert_eq!(m.special.sep, 3);
+}
+
+#[test]
+fn embedder_produces_unit_norm_vectors() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = XlaContext::new(m.clone()).unwrap();
+    let t = 64usize;
+    let tokens: Vec<i32> = (0..t as i32).map(|i| 4 + (i % 100)).collect();
+    let mask: Vec<f32> = (0..t).map(|i| if i < 20 { 1.0 } else { 0.0 }).collect();
+    let out = ctx
+        .run(
+            "embedder__embed__b1",
+            Some("embedder"),
+            &[
+                HostTensor::i32(vec![1, t], tokens),
+                HostTensor::f32(vec![1, t], mask),
+            ],
+        )
+        .unwrap();
+    let emb = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(emb.len(), m.models["embedder"].d_model);
+    let norm: f32 = emb.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "norm={norm}");
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_across_buckets() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = XlaContext::new(m.clone()).unwrap();
+    let variant = "llm-lite";
+    let c = 16usize;
+    let tokens: Vec<i32> = (0..c as i32).map(|i| 10 + i * 3 % 500).collect();
+
+    // Monolithic: one c16 prefill with length 16.
+    let out_mono = ctx
+        .run(
+            "llm-lite__prefill__b1_c16",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1, c], tokens.clone()),
+                kv_zeros(&m, variant, 1),
+                HostTensor::i32(vec![1], vec![0]),
+                HostTensor::i32(vec![1], vec![c as i32]),
+            ],
+        )
+        .unwrap();
+    let logits_mono = out_mono[1].to_vec::<f32>().unwrap();
+    let next_mono = out_mono[2].to_vec::<i32>().unwrap();
+
+    // Chunked: two c16 prefills of 8 valid tokens each (padded).
+    let mut chunk1 = tokens[..8].to_vec();
+    chunk1.resize(c, 0);
+    let out1 = ctx
+        .run(
+            "llm-lite__prefill__b1_c16",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1, c], chunk1),
+                kv_zeros(&m, variant, 1),
+                HostTensor::i32(vec![1], vec![0]),
+                HostTensor::i32(vec![1], vec![8]),
+            ],
+        )
+        .unwrap();
+    let kv_mid = out1[0].to_vec::<f32>().unwrap();
+    let kv_shape = kv_zeros(&m, variant, 1).shape().to_vec();
+
+    let mut chunk2 = tokens[8..].to_vec();
+    chunk2.resize(c, 0);
+    let out2 = ctx
+        .run(
+            "llm-lite__prefill__b1_c16",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1, c], chunk2),
+                HostTensor::f32(kv_shape, kv_mid),
+                HostTensor::i32(vec![1], vec![8]),
+                HostTensor::i32(vec![1], vec![8]),
+            ],
+        )
+        .unwrap();
+    let logits_chunked = out2[1].to_vec::<f32>().unwrap();
+    let next_chunked = out2[2].to_vec::<i32>().unwrap();
+
+    assert_eq!(next_mono, next_chunked);
+    let max_err = logits_mono
+        .iter()
+        .zip(&logits_chunked)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-2, "prefill decomposition drift: {max_err}");
+}
+
+#[test]
+fn decode_step_extends_prefill() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = XlaContext::new(m.clone()).unwrap();
+    let variant = "llm-lite";
+    let c = 16usize;
+    let tokens: Vec<i32> = (0..c as i32).map(|i| 5 + i).collect();
+
+    let out = ctx
+        .run(
+            "llm-lite__prefill__b1_c16",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1, c], tokens),
+                kv_zeros(&m, variant, 1),
+                HostTensor::i32(vec![1], vec![0]),
+                HostTensor::i32(vec![1], vec![c as i32]),
+            ],
+        )
+        .unwrap();
+    let kv = out[0].to_vec::<f32>().unwrap();
+    let next = out[2].to_vec::<i32>().unwrap();
+    let kv_shape = kv_zeros(&m, variant, 1).shape().to_vec();
+
+    let dec = ctx
+        .run(
+            "llm-lite__decode__b1",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1], next.clone()),
+                HostTensor::f32(kv_shape, kv),
+                HostTensor::i32(vec![1], vec![c as i32]),
+            ],
+        )
+        .unwrap();
+    let logits = dec[1].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), m.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    let next2 = dec[2].to_vec::<i32>().unwrap();
+    assert!((0..m.vocab as i32).contains(&next2[0]));
+
+    // Determinism: the same decode twice gives the same token.
+    let kv2 = dec[0].to_vec::<f32>().unwrap();
+    let kv_shape2 = kv_zeros(&m, variant, 1).shape().to_vec();
+    let dec_b = ctx
+        .run(
+            "llm-lite__decode__b1",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1], next2.clone()),
+                HostTensor::f32(kv_shape2.clone(), kv2.clone()),
+                HostTensor::i32(vec![1], vec![c as i32 + 1]),
+            ],
+        )
+        .unwrap();
+    let dec_c = ctx
+        .run(
+            "llm-lite__decode__b1",
+            Some(variant),
+            &[
+                HostTensor::i32(vec![1], next2),
+                HostTensor::f32(kv_shape2, kv2),
+                HostTensor::i32(vec![1], vec![c as i32 + 1]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(
+        dec_b[2].to_vec::<i32>().unwrap(),
+        dec_c[2].to_vec::<i32>().unwrap()
+    );
+}
+
+#[test]
+fn reranker_scores_are_finite_and_batch_consistent() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = XlaContext::new(m.clone()).unwrap();
+    let t = m.models["reranker"].max_seq;
+    let mk = |seed: i32| -> Vec<i32> { (0..t as i32).map(|i| 4 + (i * seed) % 700).collect() };
+
+    let mut tokens = Vec::new();
+    for s in 1..=4 {
+        tokens.extend(mk(s));
+    }
+    let mask = vec![1f32; 4 * t];
+    let out = ctx
+        .run(
+            "reranker__score__b4",
+            Some("reranker"),
+            &[
+                HostTensor::i32(vec![4, t], tokens.clone()),
+                HostTensor::f32(vec![4, t], mask),
+            ],
+        )
+        .unwrap();
+    let scores = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(scores.len(), 4);
+    assert!(scores.iter().all(|s| s.is_finite()));
+
+    let out1 = ctx
+        .run(
+            "reranker__score__b1",
+            Some("reranker"),
+            &[
+                HostTensor::i32(vec![1, t], mk(3)),
+                HostTensor::f32(vec![1, t], vec![1f32; t]),
+            ],
+        )
+        .unwrap();
+    let s1 = out1[0].to_vec::<f32>().unwrap()[0];
+    assert!((s1 - scores[2]).abs() < 1e-3, "{s1} vs {}", scores[2]);
+}
