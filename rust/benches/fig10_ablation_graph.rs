@@ -31,8 +31,8 @@ fn build(app: AppKind, core: &str, q: &teola::graph::template::QueryConfig, flag
 }
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig10: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig10: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let app = AppKind::DocQaAdvanced;

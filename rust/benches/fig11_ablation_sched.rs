@@ -11,8 +11,8 @@ use teola::util::stats::Summary;
 use teola::workload::{Dataset, DatasetKind};
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig11: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig11: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let app = AppKind::DocQaAdvanced;

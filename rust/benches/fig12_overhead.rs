@@ -13,8 +13,8 @@ use teola::scheduler::Platform;
 use teola::workload::DatasetKind;
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig12: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig12: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let app = AppKind::DocQaAdvanced;

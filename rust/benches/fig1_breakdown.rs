@@ -13,8 +13,8 @@ use teola::scheduler::Platform;
 use teola::workload::{Dataset, DatasetKind};
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig1: no artifacts (run `make artifacts`); skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig1: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let apps = [

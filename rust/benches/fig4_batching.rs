@@ -49,8 +49,8 @@ fn embed_total_time(platform: &Platform, n: usize, policy: BatchPolicy) -> f64 {
 }
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig4: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig4: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let skip_a = std::env::var("TEOLA_FIG4_SKIP_A").is_ok();

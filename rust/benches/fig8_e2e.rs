@@ -14,8 +14,8 @@ use teola::scheduler::Platform;
 use teola::workload::DatasetKind;
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig8: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig8: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let quick = teola::bench::quick();

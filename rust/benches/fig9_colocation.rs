@@ -61,8 +61,8 @@ fn run_colocated(platform: &Platform, scheme: Scheme, rate: f64, n_each: usize, 
 }
 
 fn main() {
-    if !teola::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("fig9: no artifacts; skipping");
+    if !teola::bench::backend_available() {
+        eprintln!("fig9: no artifacts and TEOLA_BACKEND!=sim; skipping");
         return;
     }
     let core = "llm-small";

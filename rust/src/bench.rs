@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use crate::apps::{bind_answer_tokens, AppKind};
 use crate::baselines::Scheme;
+use crate::engines::sim::ExecBackend;
 use crate::engines::QueryId;
 use crate::error::Result;
 use crate::graph::template::QueryConfig;
@@ -17,7 +18,7 @@ use crate::json::{num, obj, s, Json};
 use crate::scheduler::graph_sched::QueryMetrics;
 use crate::scheduler::{Platform, PlatformConfig};
 use crate::util::stats::Summary;
-use crate::workload::{Dataset, DatasetKind, PoissonTrace};
+use crate::workload::DatasetKind;
 
 static NEXT_QUERY: AtomicU64 = AtomicU64::new(1);
 
@@ -90,71 +91,48 @@ pub fn run_single(platform: &Platform, run: &TraceRun, q: &QueryConfig) -> Resul
 }
 
 /// Open-loop Poisson trace over the platform; queries run on their own
-/// threads, arrivals follow the trace schedule.
+/// threads, arrivals follow the trace schedule.  Thin wrapper over the
+/// serving driver (`serving::run_load`) keeping the historical result
+/// shape used by the figure benches.
 pub fn run_trace(platform: &Platform, run: &TraceRun) -> Result<TraceResult> {
-    platform.set_policy(run.scheme.policy());
-    let trace = PoissonTrace::generate(run.rate, run.n_queries, run.seed);
-    let mut dataset = Dataset::new(run.dataset, run.seed ^ 0xDA7A);
-
-    // Pre-build all e-graphs (construction is not part of the serving
-    // path being measured; its cost is recorded separately as opt time).
-    let mut prepared = Vec::with_capacity(run.n_queries);
-    for _ in 0..run.n_queries {
-        let q = dataset.sample();
-        let (e, opt_us) = build_egraph(platform, run, &q)?;
-        prepared.push((e, opt_us));
-    }
-
-    let start = Instant::now();
-    let mut handles = Vec::with_capacity(run.n_queries);
-    for (i, (e, opt_us)) in prepared.into_iter().enumerate() {
-        let due = trace.arrivals[i];
-        if let Some(wait) = due.checked_sub(start.elapsed()) {
-            std::thread::sleep(wait);
-        }
-        let qid = next_query_id();
-        handles.push((opt_us, platform.spawn_query(qid, e)));
-    }
-
-    let mut latencies = Vec::with_capacity(run.n_queries);
-    let mut opt_sum = 0u64;
-    let mut queue_sum = 0u64;
-    let mut exec_sum = 0u64;
-    for (opt_us, h) in handles {
-        let (_out, m) = h.join().expect("query thread")?;
-        latencies.push(m.e2e_us as f64 / 1000.0);
-        opt_sum += opt_us;
-        queue_sum += m.queue_us;
-        exec_sum += m.exec_us;
-    }
-    let wall_s = start.elapsed().as_secs_f64();
-    let n = run.n_queries.max(1) as f64;
+    let report = crate::serving::run_load(platform, run)?;
     Ok(TraceResult {
-        summary_ms: Summary::of(&latencies),
-        latencies_ms: latencies,
-        mean_opt_us: opt_sum as f64 / n,
-        mean_queue_us: queue_sum as f64 / n,
-        mean_exec_us: exec_sum as f64 / n,
-        wall_s,
+        summary_ms: report.e2e_ms.clone(),
+        mean_opt_us: report.mean_opt_us(),
+        mean_queue_us: report.mean_queue_us(),
+        mean_exec_us: report.mean_exec_us(),
+        wall_s: report.wall_s,
+        latencies_ms: report.latencies_ms,
     })
 }
 
-/// Platform config covering one app (core LLM + its aux models).
-pub fn platform_for(app: AppKind, core_llm: &str) -> PlatformConfig {
-    let mut cfg = PlatformConfig::default_with("artifacts", core_llm);
-    for aux in app.aux_llms() {
-        cfg = cfg.with_llm(aux, 2, 8);
-    }
-    cfg
+/// True when a Platform can start: either the simulated backend was
+/// selected via `TEOLA_BACKEND=sim`, or the XLA backend is fully usable
+/// (real crate linked *and* artifacts present).  The figure benches gate
+/// on this instead of a raw artifacts check so they run end-to-end on the
+/// sim backend too.
+pub fn backend_available() -> bool {
+    matches!(ExecBackend::from_env(), Some(ExecBackend::Sim))
+        || crate::runtime::xla_backend_available()
 }
 
-/// Platform config covering several apps at once (co-location).
+/// Platform config covering one app (core LLM + its aux models).  Honors
+/// the `TEOLA_BACKEND` environment override.
+pub fn platform_for(app: AppKind, core_llm: &str) -> PlatformConfig {
+    platform_for_all(std::slice::from_ref(&app), core_llm)
+}
+
+/// Platform config covering several apps at once (co-location).  Honors
+/// the `TEOLA_BACKEND` environment override.
 pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
     let mut cfg = PlatformConfig::default_with("artifacts", core_llm);
     for app in apps {
         for aux in app.aux_llms() {
             cfg = cfg.with_llm(aux, 2, 8);
         }
+    }
+    if let Some(backend) = ExecBackend::from_env() {
+        cfg.backend = backend;
     }
     cfg
 }
@@ -173,13 +151,19 @@ pub struct BenchTable {
 }
 
 impl BenchTable {
-    /// New table with column headers.
+    /// New table with column headers.  Every table records which backend
+    /// produced it, so simulated numbers are never mistaken for measured
+    /// XLA results in bench_results/ JSON dumps.
     pub fn new(name: &str, columns: &[&str]) -> BenchTable {
+        let backend = match ExecBackend::from_env() {
+            Some(ExecBackend::Sim) => "sim (DeviceModel simulation)",
+            _ => "xla (AOT artifacts)",
+        };
         BenchTable {
             name: name.to_string(),
             columns: columns.iter().map(|c| c.to_string()).collect(),
             rows: Vec::new(),
-            meta: Vec::new(),
+            meta: vec![("backend".to_string(), backend.to_string())],
         }
     }
 

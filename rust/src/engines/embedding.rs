@@ -122,30 +122,56 @@ impl BatchExecutor for EmbeddingExecutor {
     }
 }
 
-/// Spawn `n_instances` embedding instance threads.
+/// Spawn `n_instances` embedding instance threads (XLA or simulated).
 pub fn spawn_embedding_engine(
     manifest: Rc<Manifest>,
     model: &str,
     n_instances: usize,
     warm: bool,
+    backend: crate::engines::sim::ExecBackend,
     free_tx: Sender<InstanceFree>,
     ready_tx: Sender<()>,
 ) -> Vec<Instance> {
-    let dir = manifest.dir.clone();
-    (0..n_instances)
-        .map(|i| {
-            let dir_c = dir.clone();
-            let model_c = model.to_string();
-            spawn_instance(
-                i,
-                format!("embed-{i}"),
-                move || {
-                    let m = Rc::new(Manifest::load(dir_c)?);
-                    EmbeddingExecutor::new(m, &model_c, warm)
-                },
-                free_tx.clone(),
-                ready_tx.clone(),
-            )
-        })
-        .collect()
+    use crate::engines::sim::{ExecBackend, SimEmbedExecutor};
+
+    match backend {
+        ExecBackend::Xla => {
+            let dir = manifest.dir.clone();
+            (0..n_instances)
+                .map(|i| {
+                    let dir_c = dir.clone();
+                    let model_c = model.to_string();
+                    spawn_instance(
+                        i,
+                        format!("embed-{i}"),
+                        move || {
+                            let m = Rc::new(Manifest::load(dir_c)?);
+                            EmbeddingExecutor::new(m, &model_c, warm)
+                        },
+                        free_tx.clone(),
+                        ready_tx.clone(),
+                    )
+                })
+                .collect()
+        }
+        ExecBackend::Sim => {
+            let d_model = manifest.models.get(model).map(|m| m.d_model).unwrap_or(64);
+            (0..n_instances)
+                .map(|i| {
+                    let model_c = model.to_string();
+                    spawn_instance(
+                        i,
+                        format!("embed-{i}"),
+                        move || {
+                            Ok::<_, crate::error::TeolaError>(SimEmbedExecutor::new(
+                                &model_c, d_model, 16,
+                            ))
+                        },
+                        free_tx.clone(),
+                        ready_tx.clone(),
+                    )
+                })
+                .collect()
+        }
+    }
 }

@@ -543,34 +543,64 @@ fn zero_after(dims: &LlmDims, kv: &mut [f32], len: usize) {
     }
 }
 
-/// Spawn `n_instances` LLM instance threads sharing one sequence store.
+/// Spawn `n_instances` LLM instance threads sharing one sequence store,
+/// executing either real XLA artifacts or the simulated backend.
 pub fn spawn_llm_engine(
     manifest: Rc<Manifest>,
     variant: &str,
     n_instances: usize,
     warm: bool,
+    backend: crate::engines::sim::ExecBackend,
     free_tx: Sender<InstanceFree>,
     ready_tx: Sender<()>,
 ) -> (Vec<Instance>, SeqStore) {
+    use crate::engines::sim::{ExecBackend, SimLlmExecutor};
+
     let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
-    // Manifest is not Send (Rc) — reload per thread from its directory.
-    let dir = manifest.dir.clone();
     let mut instances = Vec::new();
-    for i in 0..n_instances {
-        let store_c = store.clone();
-        let dir_c = dir.clone();
-        let variant_c = variant.to_string();
-        let inst = spawn_instance(
-            i,
-            format!("llm-{variant}-{i}"),
-            move || {
-                let m = Rc::new(Manifest::load(dir_c)?);
-                LlmExecutor::new(m, &variant_c, store_c, warm)
-            },
-            free_tx.clone(),
-            ready_tx.clone(),
-        );
-        instances.push(inst);
+    match backend {
+        ExecBackend::Xla => {
+            // Manifest is not Send (Rc) — reload per thread from its dir.
+            let dir = manifest.dir.clone();
+            for i in 0..n_instances {
+                let store_c = store.clone();
+                let dir_c = dir.clone();
+                let variant_c = variant.to_string();
+                let inst = spawn_instance(
+                    i,
+                    format!("llm-{variant}-{i}"),
+                    move || {
+                        let m = Rc::new(Manifest::load(dir_c)?);
+                        LlmExecutor::new(m, &variant_c, store_c, warm)
+                    },
+                    free_tx.clone(),
+                    ready_tx.clone(),
+                );
+                instances.push(inst);
+            }
+        }
+        ExecBackend::Sim => {
+            let sep = manifest.special.sep;
+            let eos = manifest.special.eos;
+            let max_seq =
+                manifest.models.get(variant).map(|m| m.max_seq).unwrap_or(256);
+            for i in 0..n_instances {
+                let store_c = store.clone();
+                let variant_c = variant.to_string();
+                let inst = spawn_instance(
+                    i,
+                    format!("llm-{variant}-{i}"),
+                    move || {
+                        Ok::<_, crate::error::TeolaError>(SimLlmExecutor::new(
+                            &variant_c, store_c, sep, eos, max_seq,
+                        ))
+                    },
+                    free_tx.clone(),
+                    ready_tx.clone(),
+                );
+                instances.push(inst);
+            }
+        }
     }
     (instances, store)
 }

@@ -18,7 +18,10 @@ pub mod llm;
 pub mod profile;
 pub mod reranker;
 pub mod search;
+pub mod sim;
 pub mod vector_db;
+
+pub use sim::ExecBackend;
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;

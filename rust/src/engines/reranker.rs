@@ -112,30 +112,51 @@ impl BatchExecutor for RerankExecutor {
     }
 }
 
-/// Spawn `n_instances` reranker instance threads.
+/// Spawn `n_instances` reranker instance threads (XLA or simulated).
 pub fn spawn_reranker_engine(
     manifest: Rc<Manifest>,
     model: &str,
     n_instances: usize,
     warm: bool,
+    backend: crate::engines::sim::ExecBackend,
     free_tx: Sender<InstanceFree>,
     ready_tx: Sender<()>,
 ) -> Vec<Instance> {
-    let dir = manifest.dir.clone();
-    (0..n_instances)
-        .map(|i| {
-            let dir_c = dir.clone();
-            let model_c = model.to_string();
-            spawn_instance(
-                i,
-                format!("rerank-{i}"),
-                move || {
-                    let m = Rc::new(Manifest::load(dir_c)?);
-                    RerankExecutor::new(m, &model_c, warm)
-                },
-                free_tx.clone(),
-                ready_tx.clone(),
-            )
-        })
-        .collect()
+    use crate::engines::sim::{ExecBackend, SimRerankExecutor};
+
+    match backend {
+        ExecBackend::Xla => {
+            let dir = manifest.dir.clone();
+            (0..n_instances)
+                .map(|i| {
+                    let dir_c = dir.clone();
+                    let model_c = model.to_string();
+                    spawn_instance(
+                        i,
+                        format!("rerank-{i}"),
+                        move || {
+                            let m = Rc::new(Manifest::load(dir_c)?);
+                            RerankExecutor::new(m, &model_c, warm)
+                        },
+                        free_tx.clone(),
+                        ready_tx.clone(),
+                    )
+                })
+                .collect()
+        }
+        ExecBackend::Sim => (0..n_instances)
+            .map(|i| {
+                let model_c = model.to_string();
+                spawn_instance(
+                    i,
+                    format!("rerank-{i}"),
+                    move || {
+                        Ok::<_, crate::error::TeolaError>(SimRerankExecutor::new(&model_c, 16))
+                    },
+                    free_tx.clone(),
+                    ready_tx.clone(),
+                )
+            })
+            .collect(),
+    }
 }

@@ -1,48 +1,90 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: the offline image has no
+//! `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the Teola stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum TeolaError {
-    /// PJRT / XLA failures surfaced by the `xla` crate.
-    #[error("xla: {0}")]
+    /// PJRT / XLA failures surfaced by the runtime bridge.
     Xla(String),
 
     /// I/O failures (artifact files, weight files).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Manifest / JSON parse failures.
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// Weight-file (TWB1) format violations.
-    #[error("weights: {0}")]
     Weights(String),
 
     /// Graph construction or optimization-pass violations.
-    #[error("graph: {0}")]
     Graph(String),
 
     /// Runtime scheduling failures (dead channels, missing values).
-    #[error("scheduler: {0}")]
     Scheduler(String),
 
     /// Engine-level failures (unknown bucket, KV overflow, bad batch).
-    #[error("engine: {0}")]
     Engine(String),
 
     /// Application/workflow configuration errors.
-    #[error("app: {0}")]
     App(String),
 }
 
-impl From<xla::Error> for TeolaError {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for TeolaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TeolaError::Xla(m) => write!(f, "xla: {m}"),
+            TeolaError::Io(e) => write!(f, "io: {e}"),
+            TeolaError::Manifest(m) => write!(f, "manifest: {m}"),
+            TeolaError::Weights(m) => write!(f, "weights: {m}"),
+            TeolaError::Graph(m) => write!(f, "graph: {m}"),
+            TeolaError::Scheduler(m) => write!(f, "scheduler: {m}"),
+            TeolaError::Engine(m) => write!(f, "engine: {m}"),
+            TeolaError::App(m) => write!(f, "app: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TeolaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TeolaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TeolaError {
+    fn from(e: std::io::Error) -> Self {
+        TeolaError::Io(e)
+    }
+}
+
+impl From<crate::runtime::xla_stub::Error> for TeolaError {
+    fn from(e: crate::runtime::xla_stub::Error) -> Self {
         TeolaError::Xla(e.to_string())
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, TeolaError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_layer() {
+        assert_eq!(TeolaError::Graph("cycle".into()).to_string(), "graph: cycle");
+        assert_eq!(TeolaError::Engine("bad".into()).to_string(), "engine: bad");
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let e: TeolaError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -24,6 +24,7 @@ pub mod workload;
 pub mod json;
 pub mod runtime;
 pub mod scheduler;
+pub mod serving;
 pub mod util;
 
 pub use error::{Result, TeolaError};

@@ -30,7 +30,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]"
     );
     std::process::exit(2);
 }
@@ -92,6 +92,17 @@ fn main() {
                 parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(1.0);
             let mut cfg = platform_for(app, &core);
             cfg.warm = false;
+            // --backend beats the TEOLA_BACKEND env override applied by
+            // platform_for; sim runs need no artifacts directory.
+            match parse_flag(&args, "--backend").as_deref() {
+                Some("sim") => cfg.backend = teola::engines::ExecBackend::Sim,
+                Some("xla") => cfg.backend = teola::engines::ExecBackend::Xla,
+                Some(other) => {
+                    eprintln!("unknown backend {other:?} (want sim|xla)");
+                    std::process::exit(2);
+                }
+                None => {}
+            }
             let platform = Platform::start(&cfg).expect("platform");
             let run = TraceRun {
                 app,

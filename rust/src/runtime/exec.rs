@@ -1,16 +1,23 @@
 //! Thread-local XLA execution context.
 //!
-//! The published `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so
-//! every engine *instance* owns its own `XlaContext` on its own OS thread —
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so every
+//! engine *instance* owns its own `XlaContext` on its own OS thread —
 //! which also mirrors the paper's testbed where each engine instance owns a
 //! GPU.  Host data crosses threads as plain `Vec<f32>`/`Vec<i32>`; literals
 //! and device buffers never leave the owning thread.
+//!
+//! In this offline build the crate is replaced by `runtime::xla_stub`
+//! (same call surface, fails at runtime); the simulated backend
+//! (`engines::sim`) is the executable path.  Swap the import below for the
+//! real crate to restore AOT artifact execution.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
 
-use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use crate::runtime::xla_stub::{
+    self as xla, ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+};
 
 use crate::error::{Result, TeolaError};
 use crate::runtime::manifest::Manifest;

@@ -115,6 +115,44 @@ fn sig_list(v: &Json) -> Result<Vec<TensorSig>> {
 }
 
 impl Manifest {
+    /// In-memory manifest for the simulated backend: model geometry and
+    /// special tokens without any artifacts on disk.  Dims are the AOT
+    /// pipeline's test-scale defaults (python/compile/configs.py); the sim
+    /// executors only consume `d_model`/`max_seq`/`special`, so a sim
+    /// platform needs no `artifacts/` directory at all.
+    pub fn synthetic() -> Manifest {
+        let special = SpecialTokens { pad: 0, bos: 1, eos: 2, sep: 3 };
+        let mut models = HashMap::new();
+        let mut add = |name: &str, kind: &str, d_model: usize, max_seq: usize| {
+            models.insert(
+                name.to_string(),
+                ModelInfo {
+                    name: name.to_string(),
+                    kind: kind.to_string(),
+                    layers: 2,
+                    d_model,
+                    n_heads: 2,
+                    vocab: 2048,
+                    max_seq,
+                    weights_file: String::new(),
+                    n_weights: 0,
+                },
+            );
+        };
+        for v in ["llm-lite", "llm-small", "llm-medium", "llm-large"] {
+            add(v, "llm", 64, 256);
+        }
+        add("embedder", "embed", 64, 64);
+        add("reranker", "score", 64, 96);
+        Manifest {
+            dir: PathBuf::from("<sim>"),
+            vocab: 2048,
+            special,
+            models,
+            artifacts: HashMap::new(),
+        }
+    }
+
     /// Load and validate `dir/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -259,5 +297,23 @@ impl Manifest {
             .collect();
         v.sort();
         v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_covers_all_sim_engines() {
+        let m = Manifest::synthetic();
+        for v in ["llm-lite", "llm-small", "llm-medium", "llm-large", "embedder", "reranker"] {
+            assert!(m.models.contains_key(v), "{v} missing");
+        }
+        assert_eq!(m.special.sep, 3);
+        assert_eq!(m.special.eos, 2);
+        assert!(m.vocab >= 2048);
+        // No artifacts: the sim backend never touches the filesystem.
+        assert!(m.artifacts.is_empty());
     }
 }

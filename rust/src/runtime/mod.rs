@@ -7,6 +7,7 @@
 pub mod exec;
 pub mod manifest;
 pub mod weights;
+pub mod xla_stub;
 
 pub use exec::{HostTensor, XlaContext};
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo, SpecialTokens};
@@ -18,4 +19,10 @@ pub fn default_artifacts_dir() -> PathBuf {
     std::env::var("TEOLA_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when the XLA backend can actually execute: a real XLA/PJRT crate
+/// is linked (not the stub) *and* an artifacts manifest exists.
+pub fn xla_backend_available() -> bool {
+    xla_stub::AVAILABLE && default_artifacts_dir().join("manifest.json").exists()
 }

@@ -1,0 +1,154 @@
+//! Stub of the `xla` crate's PJRT surface used by `runtime::exec`.
+//!
+//! The offline build environment has neither the crates.io `xla` crate nor
+//! a PJRT plugin to link against, so the real AOT execution path cannot be
+//! compiled here.  This shim keeps the XLA code path *compiling* with the
+//! exact call surface `exec.rs` uses; every entry point fails at runtime
+//! with a clear error pointing at the simulated backend
+//! (`engines::sim::ExecBackend::Sim`), which is what `cargo test` and the
+//! benches exercise.  To restore real artifact execution, replace the
+//! `use crate::runtime::xla_stub::...` import in `exec.rs` with the real
+//! crate — no other code changes are needed.
+
+use std::fmt;
+
+/// Whether a real XLA/PJRT implementation is linked.  The stub sets this
+/// to `false`; gates (`bench::backend_available`, the `xla_*` integration
+/// tests, `Platform::start`) consult it so the XLA path skips or fails
+/// fast instead of starting a platform whose engines can never execute.
+/// Set to `true` when swapping in the real crate.
+pub const AVAILABLE: bool = false;
+
+/// Error type mirroring `xla::Error` as far as we consume it.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA backend unavailable in this build (the `xla` crate is \
+         stubbed); run with ExecBackend::Sim, or link the real crate in \
+         runtime/exec.rs"
+    )))
+}
+
+/// Element types we ever inspect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host-native element types transferable to/from literals and buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// PJRT client handle (per engine-instance thread in the real backend).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a lowered computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// Device-resident buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Sync the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed argument buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Host-side literal (tuple or tensor).
+pub struct Literal;
+
+impl Literal {
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Element type of the literal.
+    pub fn ty(&self) -> Result<ElementType> {
+        unavailable("Literal::ty")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("XLA backend unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(Literal.to_tuple().is_err());
+    }
+}

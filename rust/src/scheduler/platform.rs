@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use crate::engines::profile::ProfileRegistry;
 use crate::engines::search::{Corpus, NetModel};
+use crate::engines::sim::ExecBackend;
 use crate::engines::{llm, search, vector_db, QueryId};
 use crate::engines::embedding::spawn_embedding_engine;
 use crate::engines::reranker::spawn_reranker_engine;
@@ -40,6 +41,9 @@ pub struct EngineSpec {
 #[derive(Debug, Clone)]
 pub struct PlatformConfig {
     pub artifacts_dir: std::path::PathBuf,
+    /// Execution substrate for model-based engines: XLA artifacts or the
+    /// simulated backend (no artifacts required).
+    pub backend: ExecBackend,
     /// LLM variants to provision (paper: two instances each).
     pub llms: Vec<EngineSpec>,
     pub embedder: EngineSpec,
@@ -48,7 +52,8 @@ pub struct PlatformConfig {
     pub web_instances: usize,
     pub tool_instances: usize,
     pub policy: BatchPolicy,
-    /// Pre-compile all artifact buckets at startup.
+    /// Pre-compile all artifact buckets at startup (XLA backend only; the
+    /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
     pub corpus_docs: usize,
     pub net: NetModel,
@@ -59,6 +64,7 @@ impl PlatformConfig {
     pub fn default_with(artifacts_dir: impl Into<std::path::PathBuf>, core_llm: &str) -> Self {
         PlatformConfig {
             artifacts_dir: artifacts_dir.into(),
+            backend: ExecBackend::Xla,
             llms: vec![
                 EngineSpec { name: core_llm.into(), instances: 2, max_slots: 8 },
             ],
@@ -72,6 +78,14 @@ impl PlatformConfig {
             corpus_docs: 400,
             net: NetModel::default(),
         }
+    }
+
+    /// Simulated-backend testbed: same engine topology, no artifacts
+    /// directory needed.
+    pub fn sim(core_llm: &str) -> Self {
+        let mut cfg = Self::default_with("artifacts", core_llm);
+        cfg.backend = ExecBackend::Sim;
+        cfg
     }
 
     /// Add another LLM pool (e.g. the judge/proxy model).
@@ -103,7 +117,21 @@ pub struct Platform {
 impl Platform {
     /// Provision all engines and start their schedulers.
     pub fn start(cfg: &PlatformConfig) -> Result<Platform> {
-        let manifest = Rc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let manifest = match cfg.backend {
+            ExecBackend::Sim => Rc::new(Manifest::synthetic()),
+            ExecBackend::Xla => {
+                // Fail fast instead of spawning instances whose executor
+                // init can never succeed (dead engines would hang queries).
+                if !crate::runtime::xla_stub::AVAILABLE {
+                    return Err(crate::error::TeolaError::Xla(
+                        "XLA backend not linked in this build (runtime/xla_stub.rs); \
+                         use ExecBackend::Sim or link the real `xla` crate"
+                            .into(),
+                    ));
+                }
+                Rc::new(Manifest::load(&cfg.artifacts_dir)?)
+            }
+        };
         let profiles = ProfileRegistry::with_defaults();
         let mut routers = HashMap::new();
         let mut sched_handles = Vec::new();
@@ -146,6 +174,7 @@ impl Platform {
                 &spec.name,
                 spec.instances,
                 cfg.warm,
+                cfg.backend,
                 free_tx,
                 ready_tx.clone(),
             );
@@ -159,6 +188,7 @@ impl Platform {
                 &cfg.embedder.name,
                 cfg.embedder.instances,
                 cfg.warm,
+                cfg.backend,
                 free_tx,
                 ready_tx.clone(),
             );
@@ -178,6 +208,7 @@ impl Platform {
                 &cfg.reranker.name,
                 cfg.reranker.instances,
                 cfg.warm,
+                cfg.backend,
                 free_tx,
                 ready_tx.clone(),
             );

@@ -9,6 +9,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub std: f64,
 }
@@ -24,6 +25,7 @@ impl Summary {
                 max: 0.0,
                 p50: 0.0,
                 p90: 0.0,
+                p95: 0.0,
                 p99: 0.0,
                 std: 0.0,
             };
@@ -40,6 +42,7 @@ impl Summary {
             max: v[n - 1],
             p50: percentile_sorted(&v, 0.50),
             p90: percentile_sorted(&v, 0.90),
+            p95: percentile_sorted(&v, 0.95),
             p99: percentile_sorted(&v, 0.99),
             std: var.sqrt(),
         }
@@ -72,6 +75,8 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
         assert!((s.p50 - 2.5).abs() < 1e-12);
+        // Percentiles are ordered.
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

@@ -1,19 +1,24 @@
 //! All five Figure-2 applications end-to-end on the real platform, under
 //! Teola and baseline schemes.
+//!
+//! Every app runs unconditionally on the simulated backend, so plain
+//! `cargo test` exercises the full two-tier scheduler for each `AppKind`;
+//! the XLA variants additionally run when `artifacts/` exists.
 
-use once_cell::sync::Lazy;
 use std::sync::Mutex;
 
 use teola::apps::AppKind;
 use teola::baselines::Scheme;
 use teola::bench::{platform_for_all, run_single, TraceRun};
+use teola::engines::ExecBackend;
 use teola::scheduler::Platform;
 use teola::workload::{Dataset, DatasetKind};
 
 fn have_artifacts() -> bool {
-    let ok = teola::runtime::default_artifacts_dir().join("manifest.json").exists();
+    // Requires both artifacts on disk and a real (non-stub) XLA crate.
+    let ok = teola::runtime::xla_backend_available();
     if !ok {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        eprintln!("skipping XLA variant: no artifacts or XLA crate stubbed");
     }
     ok
 }
@@ -21,12 +26,19 @@ fn have_artifacts() -> bool {
 // Platform is !Send (Rc manifest) so it cannot live in a static; tests in
 // this binary serialize via this mutex and each builds a platform scoped
 // to the app it exercises.
-static SERIAL: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+static SERIAL: Mutex<()> = Mutex::new(());
 
-fn run_app(app: AppKind, scheme: Scheme, dataset: DatasetKind, seed: u64) -> (f64, usize) {
+fn run_app(
+    app: AppKind,
+    scheme: Scheme,
+    dataset: DatasetKind,
+    seed: u64,
+    backend: ExecBackend,
+) -> (f64, usize) {
     let core = "llm-lite"; // fastest variant keeps CI latency sane
     let mut cfg = platform_for_all(&[app], core);
     cfg.warm = false; // lazy-compile only the buckets the app touches
+    cfg.backend = backend;
     let platform = Platform::start(&cfg).unwrap();
     let mut ds = Dataset::new(dataset, seed);
     let mut q = ds.sample();
@@ -48,38 +60,35 @@ fn run_app(app: AppKind, scheme: Scheme, dataset: DatasetKind, seed: u64) -> (f6
     (ms, m.n_engine_ops)
 }
 
+fn run_app_sim(app: AppKind, scheme: Scheme, dataset: DatasetKind, seed: u64) -> (f64, usize) {
+    run_app(app, scheme, dataset, seed, ExecBackend::Sim)
+}
+
+// ---- simulated backend: always runs (plain `cargo test`) ----
+
 #[test]
-fn search_gen_teola_and_baseline() {
-    if !have_artifacts() {
-        return;
-    }
+fn sim_search_gen_teola_and_baseline() {
     let _g = SERIAL.lock().unwrap();
-    let (ms_t, ops_t) = run_app(AppKind::SearchGen, Scheme::Teola, DatasetKind::WebQuestions, 1);
-    let (ms_b, _) = run_app(AppKind::SearchGen, Scheme::LlamaDistTO, DatasetKind::WebQuestions, 1);
+    let (ms_t, ops_t) = run_app_sim(AppKind::SearchGen, Scheme::Teola, DatasetKind::WebQuestions, 1);
+    let (ms_b, _) = run_app_sim(AppKind::SearchGen, Scheme::LlamaDistTO, DatasetKind::WebQuestions, 1);
     assert!(ms_t > 0.0 && ms_b > 0.0);
     assert!(ops_t >= 4, "proxy, judge, (web), synth: got {ops_t}");
 }
 
 #[test]
-fn doc_qa_naive_all_schemes() {
-    if !have_artifacts() {
-        return;
-    }
+fn sim_doc_qa_naive_all_schemes() {
     let _g = SERIAL.lock().unwrap();
     for scheme in Scheme::all() {
-        let (ms, ops) = run_app(AppKind::DocQaNaive, scheme, DatasetKind::TruthfulQa, 2);
+        let (ms, ops) = run_app_sim(AppKind::DocQaNaive, scheme, DatasetKind::TruthfulQa, 2);
         assert!(ms > 0.0, "{}", scheme.name());
         assert!(ops >= 7, "{}: {ops}", scheme.name());
     }
 }
 
 #[test]
-fn doc_qa_advanced_teola() {
-    if !have_artifacts() {
-        return;
-    }
+fn sim_doc_qa_advanced_teola() {
     let _g = SERIAL.lock().unwrap();
-    let (ms, ops) = run_app(AppKind::DocQaAdvanced, Scheme::Teola, DatasetKind::TruthfulQa, 3);
+    let (ms, ops) = run_app_sim(AppKind::DocQaAdvanced, Scheme::Teola, DatasetKind::TruthfulQa, 3);
     assert!(ms > 0.0);
     // expansion (pf+dec) + per-segment embeds + search + rerank +
     // refine chain (3x pf+dec) + indexing ops
@@ -87,12 +96,9 @@ fn doc_qa_advanced_teola() {
 }
 
 #[test]
-fn contextual_retrieval_teola() {
-    if !have_artifacts() {
-        return;
-    }
+fn sim_contextual_retrieval_teola() {
     let _g = SERIAL.lock().unwrap();
-    let (ms, ops) = run_app(
+    let (ms, ops) = run_app_sim(
         AppKind::ContextualRetrieval,
         Scheme::Teola,
         DatasetKind::FinQaBench,
@@ -103,12 +109,86 @@ fn contextual_retrieval_teola() {
 }
 
 #[test]
-fn agent_app_teola_and_autogen() {
+fn sim_agent_app_teola_and_autogen() {
+    let _g = SERIAL.lock().unwrap();
+    let (ms_t, _) = run_app_sim(AppKind::Agent, Scheme::Teola, DatasetKind::WebQuestions, 5);
+    let (ms_a, _) = run_app_sim(AppKind::Agent, Scheme::AutoGen, DatasetKind::WebQuestions, 5);
+    assert!(ms_t > 0.0 && ms_a > 0.0);
+}
+
+// ---- XLA backend: needs `make artifacts` ----
+
+#[test]
+fn xla_search_gen_teola_and_baseline() {
     if !have_artifacts() {
         return;
     }
     let _g = SERIAL.lock().unwrap();
-    let (ms_t, _) = run_app(AppKind::Agent, Scheme::Teola, DatasetKind::WebQuestions, 5);
-    let (ms_a, _) = run_app(AppKind::Agent, Scheme::AutoGen, DatasetKind::WebQuestions, 5);
+    let (ms_t, ops_t) =
+        run_app(AppKind::SearchGen, Scheme::Teola, DatasetKind::WebQuestions, 1, ExecBackend::Xla);
+    let (ms_b, _) = run_app(
+        AppKind::SearchGen,
+        Scheme::LlamaDistTO,
+        DatasetKind::WebQuestions,
+        1,
+        ExecBackend::Xla,
+    );
+    assert!(ms_t > 0.0 && ms_b > 0.0);
+    assert!(ops_t >= 4, "proxy, judge, (web), synth: got {ops_t}");
+}
+
+#[test]
+fn xla_doc_qa_naive_all_schemes() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    for scheme in Scheme::all() {
+        let (ms, ops) =
+            run_app(AppKind::DocQaNaive, scheme, DatasetKind::TruthfulQa, 2, ExecBackend::Xla);
+        assert!(ms > 0.0, "{}", scheme.name());
+        assert!(ops >= 7, "{}: {ops}", scheme.name());
+    }
+}
+
+#[test]
+fn xla_doc_qa_advanced_teola() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms, ops) =
+        run_app(AppKind::DocQaAdvanced, Scheme::Teola, DatasetKind::TruthfulQa, 3, ExecBackend::Xla);
+    assert!(ms > 0.0);
+    assert!(ops >= 10, "got {ops}");
+}
+
+#[test]
+fn xla_contextual_retrieval_teola() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms, ops) = run_app(
+        AppKind::ContextualRetrieval,
+        Scheme::Teola,
+        DatasetKind::FinQaBench,
+        4,
+        ExecBackend::Xla,
+    );
+    assert!(ms > 0.0);
+    assert!(ops >= 12, "6 chunks contextualized + retrieval: got {ops}");
+}
+
+#[test]
+fn xla_agent_app_teola_and_autogen() {
+    if !have_artifacts() {
+        return;
+    }
+    let _g = SERIAL.lock().unwrap();
+    let (ms_t, _) =
+        run_app(AppKind::Agent, Scheme::Teola, DatasetKind::WebQuestions, 5, ExecBackend::Xla);
+    let (ms_a, _) =
+        run_app(AppKind::Agent, Scheme::AutoGen, DatasetKind::WebQuestions, 5, ExecBackend::Xla);
     assert!(ms_t > 0.0 && ms_a > 0.0);
 }

@@ -1,19 +1,33 @@
-//! End-to-end orchestration integration: real engines, real artifacts,
-//! full two-tier scheduling over optimized e-graphs.
+//! End-to-end orchestration integration: real engines, full two-tier
+//! scheduling over optimized e-graphs.
+//!
+//! Every scenario runs unconditionally on the simulated backend
+//! (`ExecBackend::Sim` — no artifacts needed, deterministic outputs,
+//! profile-driven timing), and again on the XLA backend when an
+//! `artifacts/` directory is present (`make artifacts`).
 
 use teola::engines::profile::ProfileRegistry;
+use teola::engines::ExecBackend;
 use teola::graph::pgraph::{build_pgraph, instr_tokens};
 use teola::graph::template::*;
 use teola::graph::{run_passes, EGraph, OptFlags, Value};
 use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
 
 fn have_artifacts() -> bool {
-    let dir = teola::runtime::default_artifacts_dir();
-    let ok = dir.join("manifest.json").exists();
+    // Requires both artifacts on disk and a real (non-stub) XLA crate.
+    let ok = teola::runtime::xla_backend_available();
     if !ok {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        eprintln!("skipping XLA variant: no artifacts or XLA crate stubbed");
     }
     ok
+}
+
+fn platform(backend: ExecBackend) -> Platform {
+    let cfg = match backend {
+        ExecBackend::Sim => PlatformConfig::sim("llm-lite"),
+        ExecBackend::Xla => PlatformConfig::default_with("artifacts", "llm-lite"),
+    };
+    Platform::start(&cfg).unwrap()
 }
 
 fn naive_rag_template(llm: &str) -> WorkflowTemplate {
@@ -61,14 +75,7 @@ fn naive_rag_template(llm: &str) -> WorkflowTemplate {
     t
 }
 
-#[test]
-fn naive_rag_runs_end_to_end_optimized() {
-    if !have_artifacts() {
-        return;
-    }
-    let cfg = PlatformConfig::default_with("artifacts", "llm-lite");
-    let platform = Platform::start(&cfg).unwrap();
-
+fn naive_rag_end_to_end(platform: &Platform) {
     let t = naive_rag_template("llm-lite");
     let q = QueryConfig::example(42);
     let g = build_pgraph(&t, &q).unwrap();
@@ -86,17 +93,9 @@ fn naive_rag_runs_end_to_end_optimized() {
     }
     assert!(metrics.n_engine_ops >= 8, "ops: {}", metrics.n_engine_ops);
     assert!(metrics.exec_us > 0);
-    platform.shutdown();
 }
 
-#[test]
-fn coarse_and_optimized_agree_on_structure() {
-    if !have_artifacts() {
-        return;
-    }
-    let cfg = PlatformConfig::default_with("artifacts", "llm-lite")
-        .with_policy(BatchPolicy::BlindTO);
-    let platform = Platform::start(&cfg).unwrap();
+fn coarse_and_optimized_agree(platform: &Platform) {
     let t = naive_rag_template("llm-lite");
     let q = QueryConfig::example(43);
     let profiles = ProfileRegistry::with_defaults();
@@ -111,16 +110,9 @@ fn coarse_and_optimized_agree_on_structure() {
 
     // Same final-answer row count regardless of optimization level.
     assert_eq!(out1.rows().len(), out2.rows().len());
-    platform.shutdown();
 }
 
-#[test]
-fn concurrent_queries_complete() {
-    if !have_artifacts() {
-        return;
-    }
-    let cfg = PlatformConfig::default_with("artifacts", "llm-lite");
-    let platform = Platform::start(&cfg).unwrap();
+fn concurrent_queries(platform: &Platform) {
     let t = naive_rag_template("llm-lite");
     let profiles = ProfileRegistry::with_defaults();
 
@@ -136,5 +128,62 @@ fn concurrent_queries_complete() {
         assert!(!out.rows().is_empty());
         assert!(m.e2e_us > 0);
     }
-    platform.shutdown();
+}
+
+// ---- simulated backend: always runs (plain `cargo test`) ----
+
+#[test]
+fn sim_naive_rag_runs_end_to_end_optimized() {
+    let p = platform(ExecBackend::Sim);
+    naive_rag_end_to_end(&p);
+    p.shutdown();
+}
+
+#[test]
+fn sim_coarse_and_optimized_agree_on_structure() {
+    let cfg = PlatformConfig::sim("llm-lite").with_policy(BatchPolicy::BlindTO);
+    let p = Platform::start(&cfg).unwrap();
+    coarse_and_optimized_agree(&p);
+    p.shutdown();
+}
+
+#[test]
+fn sim_concurrent_queries_complete() {
+    let p = platform(ExecBackend::Sim);
+    concurrent_queries(&p);
+    p.shutdown();
+}
+
+// ---- XLA backend: needs `make artifacts` ----
+
+#[test]
+fn xla_naive_rag_runs_end_to_end_optimized() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = platform(ExecBackend::Xla);
+    naive_rag_end_to_end(&p);
+    p.shutdown();
+}
+
+#[test]
+fn xla_coarse_and_optimized_agree_on_structure() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PlatformConfig::default_with("artifacts", "llm-lite")
+        .with_policy(BatchPolicy::BlindTO);
+    let p = Platform::start(&cfg).unwrap();
+    coarse_and_optimized_agree(&p);
+    p.shutdown();
+}
+
+#[test]
+fn xla_concurrent_queries_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = platform(ExecBackend::Xla);
+    concurrent_queries(&p);
+    p.shutdown();
 }

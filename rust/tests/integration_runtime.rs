@@ -10,8 +10,8 @@ use teola::runtime::{HostTensor, Manifest, XlaContext};
 
 fn manifest() -> Option<Rc<Manifest>> {
     let dir = teola::runtime::default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+    if !teola::runtime::xla_backend_available() {
+        eprintln!("skipping: no artifacts at {dir:?} or XLA crate stubbed");
         return None;
     }
     Some(Rc::new(Manifest::load(dir).expect("manifest parses")))

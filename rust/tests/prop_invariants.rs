@@ -15,7 +15,9 @@ use std::time::{Duration, Instant};
 use teola::engines::llm::{pack_kv, unpack_kv, LlmDims, SeqState};
 use teola::engines::profile::ProfileRegistry;
 use teola::engines::EngineJob;
-use teola::graph::pgraph::{build_pgraph, instr_tokens};
+use teola::graph::passes::{pass1_prune, pass3_prefill_split, pass4_decode_pipeline};
+use teola::graph::pgraph::{build_pgraph, instr_tokens, PGraph};
+use teola::graph::primitive::{DataRef, PayloadSpec, PrimKind};
 use teola::graph::template::*;
 use teola::graph::{run_passes, OptFlags};
 use teola::scheduler::object_store::ObjectStore;
@@ -161,6 +163,252 @@ fn passes_preserve_acyclicity_and_data_deps() {
                 format!("depth monotonic on edge {a}->{b}"))?;
         }
         Ok(())
+    });
+}
+
+/// Every node/slice reference in the graph points at an existing node —
+/// payload data refs, hard deps, guards, decode segment targets, output.
+fn check_no_dangling(g: &PGraph) -> Result<(), String> {
+    let n = g.nodes.len();
+    for node in &g.nodes {
+        for d in node.payload.deps() {
+            if d >= n {
+                return Err(format!("node {} payload ref {} out of range", node.id, d));
+            }
+        }
+        if let PayloadSpec::Decode { segments, .. } = &node.payload {
+            for (target, len) in segments {
+                if *target >= n {
+                    return Err(format!("node {} segment target {target} dangling", node.id));
+                }
+                if *len == 0 {
+                    return Err(format!("node {} has an empty decode segment", node.id));
+                }
+            }
+        }
+        for &h in &node.hard_deps {
+            if h >= n {
+                return Err(format!("node {} hard dep {h} out of range", node.id));
+            }
+        }
+        if let Some((gd, _)) = node.guard {
+            if gd >= n {
+                return Err(format!("node {} guard {gd} out of range", node.id));
+            }
+        }
+    }
+    for (a, b) in &g.template_edges {
+        if *a >= n || *b >= n {
+            return Err(format!("template edge {a}->{b} out of range"));
+        }
+    }
+    if g.output >= n {
+        return Err(format!("output {} out of range", g.output));
+    }
+    Ok(())
+}
+
+fn count_kind(g: &PGraph, kind: PrimKind) -> usize {
+    g.nodes.iter().filter(|n| n.kind == kind).count()
+}
+
+#[test]
+fn pass3_split_arithmetic_acyclic_no_dangling() {
+    check(60, |rng| {
+        let (t, q) = random_workflow(rng);
+        let mut g = build_pgraph(&t, &q).map_err(|e| e.to_string())?;
+        // Pass 3 must be sound with or without dependency pruning first.
+        if rng.chance(0.5) {
+            pass1_prune(&mut g);
+        }
+        let n0 = g.nodes.len();
+        let prefills_before = count_kind(&g, PrimKind::Prefilling);
+
+        pass3_prefill_split(&mut g);
+
+        let partial = count_kind(&g, PrimKind::PartialPrefilling);
+        let full = count_kind(&g, PrimKind::FullPrefilling);
+        let prefills_after = count_kind(&g, PrimKind::Prefilling);
+        // Each split prefill with g groups adds g-1 partial nodes and
+        // converts the original node into the full-prefilling tail.
+        prop_assert(
+            g.nodes.len() == n0 + partial,
+            format!("node growth {} != partial prefills {partial}", g.nodes.len() - n0),
+        )?;
+        prop_assert(
+            full == prefills_before - prefills_after,
+            format!("{full} fulls vs {prefills_before} -> {prefills_after} prefills"),
+        )?;
+        prop_assert(partial >= full, "every full prefill has at least one partial")?;
+        g.topo_order().map_err(|e| format!("cycle after pass3: {e}"))?;
+        check_no_dangling(&g)?;
+        // The full-prefilling tail chains on a partial prefill.
+        for node in &g.nodes {
+            if node.kind == PrimKind::FullPrefilling {
+                prop_assert(
+                    node.hard_deps
+                        .iter()
+                        .any(|&d| g.nodes[d].kind == PrimKind::PartialPrefilling),
+                    format!("full prefill {} lost its chain dep", node.id),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Advanced-RAG shaped template (splittable expansion feeding a batchable
+/// embedding) with randomized segment/fan/chunk counts — the shape Pass 4
+/// co-splits.
+fn advanced_like_workflow(rng: &mut Rng) -> (WorkflowTemplate, QueryConfig) {
+    let mut t = WorkflowTemplate::new("adv-prop");
+    let idx = t.add(Component {
+        name: "idx".into(),
+        kind: ComponentKind::Indexing,
+        engine: "embedder".into(),
+        batchable: true,
+        splittable: false,
+    });
+    let segments = rng.range_usize(2, 6);
+    let expand = t.add(Component {
+        name: "expand".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: "llm-lite".into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("expand", rng.range_usize(6, 24))),
+                PromptPart::Question,
+            ],
+            out_tokens: rng.range_usize(6, 30),
+            segments,
+            fan: 1,
+        },
+        engine: "llm-lite".into(),
+        batchable: false,
+        splittable: true,
+    });
+    let qe = t.add(Component {
+        name: "qe".into(),
+        kind: ComponentKind::Embedding { of: EmbedSource::Upstream(expand) },
+        engine: "embedder".into(),
+        batchable: true,
+        splittable: false,
+    });
+    let se = t.add(Component {
+        name: "se".into(),
+        kind: ComponentKind::VectorSearching { top_k: rng.range_usize(2, 16) },
+        engine: "vdb".into(),
+        batchable: false,
+        splittable: false,
+    });
+    let syn = t.add(Component {
+        name: "syn".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: "llm-lite".into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("qa", rng.range_usize(6, 24))),
+                PromptPart::Question,
+                PromptPart::Upstream { component: se, slice: None },
+            ],
+            out_tokens: rng.range_usize(4, 24),
+            segments: 1,
+            fan: 1,
+        },
+        engine: "llm-lite".into(),
+        batchable: false,
+        splittable: false,
+    });
+    t.chain(&[idx, expand, qe, se, syn]);
+
+    let mut q = QueryConfig::example(rng.next_u64());
+    let n_chunks = rng.range_usize(2, 20);
+    q.doc_chunks = (0..n_chunks)
+        .map(|_| (0..rng.range_usize(4, 40)).map(|_| 4 + rng.zipf(0, 1000) as i32).collect())
+        .collect();
+    (t, q)
+}
+
+#[test]
+fn pass4_marker_arithmetic_acyclic_no_dangling() {
+    check(60, |rng| {
+        let (t, q) = advanced_like_workflow(rng);
+        let mut g = build_pgraph(&t, &q).map_err(|e| e.to_string())?;
+        if rng.chance(0.5) {
+            pass1_prune(&mut g);
+        }
+        let n0 = g.nodes.len();
+
+        // Expected growth per splittable multi-segment decode: k marker
+        // nodes, plus k embedding stages per batchable whole-output
+        // embedding consumer (the consumer itself becomes the aggregate).
+        let mut expected_markers = 0usize;
+        let mut expected_new = 0usize;
+        for node in &g.nodes {
+            if node.kind != PrimKind::Decoding || !node.splittable {
+                continue;
+            }
+            let PayloadSpec::Decode { segments, .. } = &node.payload else { continue };
+            let k = segments.len();
+            if k <= 1 {
+                continue;
+            }
+            let consumers = g
+                .nodes
+                .iter()
+                .filter(|c| {
+                    c.batchable
+                        && c.kind == PrimKind::Embedding
+                        && matches!(&c.payload, PayloadSpec::Embed { sources }
+                            if sources.iter().any(
+                                |s| matches!(s, DataRef::Node(x) if *x == node.id)))
+                })
+                .count();
+            expected_markers += k;
+            expected_new += k + k * consumers;
+        }
+        prop_assert(expected_markers > 0, "generator must produce a splittable decode")?;
+
+        pass4_decode_pipeline(&mut g);
+
+        let markers = count_kind(&g, PrimKind::PartialDecoding);
+        prop_assert(
+            markers == expected_markers,
+            format!("markers {markers} != expected {expected_markers}"),
+        )?;
+        prop_assert(
+            g.nodes.len() == n0 + expected_new,
+            format!("node growth {} != expected {expected_new}", g.nodes.len() - n0),
+        )?;
+        g.topo_order().map_err(|e| format!("cycle after pass4: {e}"))?;
+        check_no_dangling(&g)?;
+        // Every split decode's segments now point at marker nodes.
+        for node in &g.nodes {
+            if node.kind == PrimKind::Decoding && node.splittable {
+                if let PayloadSpec::Decode { segments, .. } = &node.payload {
+                    if segments.len() > 1 {
+                        for (target, _) in segments {
+                            prop_assert(
+                                g.nodes[*target].kind == PrimKind::PartialDecoding,
+                                format!("segment target {target} is not a marker"),
+                            )?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_passes_leave_no_dangling_refs() {
+    let profiles = ProfileRegistry::with_defaults();
+    check(40, |rng| {
+        let (t, q) = random_workflow(rng);
+        let g = build_pgraph(&t, &q).map_err(|e| e.to_string())?;
+        let g = run_passes(g, OptFlags::all(), &profiles).map_err(|e| e.to_string())?;
+        check_no_dangling(&g)
     });
 }
 

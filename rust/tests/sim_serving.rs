@@ -1,0 +1,158 @@
+//! Concurrent serving driver over the simulated backend: Poisson load,
+//! metric sanity, batching-policy comparison, and determinism — all
+//! without artifacts, on plain `cargo test`.
+
+use std::sync::Mutex;
+
+use teola::apps::{bind_answer_tokens, AppKind};
+use teola::baselines::Scheme;
+use teola::engines::profile::ProfileRegistry;
+use teola::graph::pgraph::{build_pgraph, instr_tokens};
+use teola::graph::template::*;
+use teola::graph::{run_passes, EGraph, OptFlags};
+use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
+use teola::serving::run_load_prepared;
+use teola::workload::{Dataset, DatasetKind, PoissonTrace};
+
+// The policy-comparison test is timing-sensitive; serialize everything in
+// this binary so platforms don't compete for cores.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Minimal sequential workflow: one prefill -> one decode.  Keeps the
+/// engine-op chain strictly sequential so per-query metric monotonicity
+/// (queue + exec <= e2e) is a hard invariant, and keeps a 64-query load
+/// run fast.
+fn one_shot_template(llm: &str, out_tokens: usize) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("one-shot");
+    t.add(Component {
+        name: "gen".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("load", 12)),
+                PromptPart::Question,
+            ],
+            out_tokens,
+            segments: 1,
+            fan: 1,
+        },
+        engine: llm.into(),
+        batchable: false,
+        splittable: false,
+    });
+    t
+}
+
+/// Build `n` optimized one-shot e-graphs from the seeded dataset.
+fn prepared_one_shot(n: usize, out_tokens: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    let t = one_shot_template("llm-lite", out_tokens);
+    let profiles = ProfileRegistry::with_defaults();
+    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
+    (0..n)
+        .map(|_| {
+            let q = ds.sample();
+            let g = build_pgraph(&t, &q).unwrap();
+            let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+            (EGraph::new(g).unwrap(), 0u64)
+        })
+        .collect()
+}
+
+#[test]
+fn sim_poisson_64_queries_complete_with_monotone_metrics() {
+    let _g = SERIAL.lock().unwrap();
+    let platform = Platform::start(&PlatformConfig::sim("llm-lite")).unwrap();
+    platform.set_policy(BatchPolicy::TopoAware);
+
+    let n = 64;
+    let trace = PoissonTrace::generate(400.0, n, 0x5E4);
+    let prepared = prepared_one_shot(n, 8, 0x5E4);
+    let report = run_load_prepared(&platform, prepared, &trace.arrivals).unwrap();
+    platform.shutdown();
+
+    // All queries completed (no deadlock) with sane latencies.
+    assert_eq!(report.latencies_ms.len(), n);
+    assert!(report.latencies_ms.iter().all(|&l| l > 0.0));
+    assert!(report.qps > 0.0);
+    assert!(report.wall_s < 60.0, "sim load run took {:.1}s", report.wall_s);
+
+    // Percentiles are ordered.
+    let s = &report.e2e_ms;
+    assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max, "{s:?}");
+
+    // Per-query metric monotonicity on a strictly sequential chain:
+    // time queued + time executing can never exceed end-to-end time
+    // (1 ms slack for micros truncation).
+    for (i, m) in report.metrics.iter().enumerate() {
+        assert!(
+            m.queue_us + m.exec_us <= m.e2e_us + 1_000,
+            "query {i}: queue {} + exec {} > e2e {}",
+            m.queue_us,
+            m.exec_us,
+            m.e2e_us
+        );
+        assert!(m.n_engine_ops >= 2, "query {i}: prefill + decode expected");
+    }
+}
+
+#[test]
+fn sim_topo_batching_no_worse_than_per_invocation() {
+    let _g = SERIAL.lock().unwrap();
+    let platform = Platform::start(&PlatformConfig::sim("llm-lite")).unwrap();
+
+    // High enough arrival rate that queues build and cross-query batching
+    // matters; identical seeded trace for both policies.
+    let n = 48;
+    let rate = 300.0;
+    let seed = 0xBA7C4;
+    let trace = PoissonTrace::generate(rate, n, seed);
+
+    platform.set_policy(BatchPolicy::PerInvocation);
+    let po = run_load_prepared(&platform, prepared_one_shot(n, 16, seed), &trace.arrivals)
+        .unwrap();
+
+    platform.set_policy(BatchPolicy::TopoAware);
+    let topo = run_load_prepared(&platform, prepared_one_shot(n, 16, seed), &trace.arrivals)
+        .unwrap();
+
+    platform.shutdown();
+
+    // Topology-aware batching shares decode iterations across queries, so
+    // under contention its latency must be at least as good as
+    // per-invocation scheduling.  Expected margin is ~3-4x; comparing
+    // medians with 1.5x slack keeps the invariant robust to wall-clock
+    // noise spikes on loaded CI runners.
+    assert!(
+        topo.e2e_ms.p50 <= po.e2e_ms.p50 * 1.5,
+        "topo p50 {:.1} ms vs per-invocation p50 {:.1} ms",
+        topo.e2e_ms.p50,
+        po.e2e_ms.p50
+    );
+}
+
+#[test]
+fn sim_runs_are_deterministic_for_fixed_seed_and_query_id() {
+    let _g = SERIAL.lock().unwrap();
+
+    let mut ds = Dataset::new(DatasetKind::TruthfulQa, 99);
+    let mut q = ds.sample();
+    q.doc_chunks.truncate(4);
+    q.answer_tokens = 8;
+
+    let run_once = || {
+        let platform = Platform::start(&PlatformConfig::sim("llm-lite")).unwrap();
+        let mut t = AppKind::DocQaNaive.template("llm-lite");
+        bind_answer_tokens(&mut t, q.answer_tokens);
+        let e = Scheme::Teola.build(&t, &q, &platform.profiles).unwrap();
+        let (out, m) = platform.run_query(4242, e).unwrap();
+        platform.shutdown();
+        (out, m.n_engine_ops)
+    };
+
+    let (out_a, ops_a) = run_once();
+    let (out_b, ops_b) = run_once();
+    assert_eq!(ops_a, ops_b);
+    assert_eq!(out_a, out_b, "sim outputs must be reproducible");
+    assert!(!out_a.rows().is_empty());
+}
