@@ -134,6 +134,25 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
     if let Some(backend) = ExecBackend::from_env() {
         cfg.backend = backend;
     }
+    // Scheduler knobs for bench sweeps: dynamic-batching window and the
+    // continuous-batching toggle (both also runtime-switchable on the
+    // Platform).
+    if let Some(us) =
+        std::env::var("TEOLA_BATCH_WINDOW_US").ok().and_then(|v| v.parse().ok())
+    {
+        cfg.batch_window_us = us;
+    }
+    if let Ok(v) = std::env::var("TEOLA_CONTINUOUS") {
+        // Same token set as the CLI's --continuous flag.
+        match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "on" | "true" => cfg.continuous = true,
+            "0" | "off" | "false" => cfg.continuous = false,
+            "" => {}
+            other => eprintln!(
+                "warning: unknown TEOLA_CONTINUOUS={other:?} (want on|off); ignoring"
+            ),
+        }
+    }
     cfg
 }
 

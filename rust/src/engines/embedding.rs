@@ -7,9 +7,9 @@
 use std::rc::Rc;
 use std::sync::mpsc::Sender;
 
-use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::instance::{for_chunks, spawn_instance, BatchExecutor, Instance};
 use crate::engines::profile::{charge_device, DeviceModel};
-use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput};
 use crate::error::{Result, TeolaError};
 use crate::runtime::{HostTensor, Manifest, XlaContext};
 
@@ -57,9 +57,7 @@ impl EmbeddingExecutor {
     fn embed_rows(&mut self, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(rows.len());
         let maxb = *self.batches.last().unwrap();
-        let mut i = 0;
-        while i < rows.len() {
-            let take = (rows.len() - i).min(maxb);
+        for_chunks(rows.len(), maxb, |i, take| {
             let bb = crate::engines::llm::pick_bucket(&self.batches, take);
             let mut tokens = vec![0i32; bb * self.seq];
             let mut mask = vec![0f32; bb * self.seq];
@@ -85,8 +83,8 @@ impl EmbeddingExecutor {
             for b in 0..take {
                 out.push(flat[b * self.d_model..(b + 1) * self.d_model].to_vec());
             }
-            i += take;
-        }
+            Ok(())
+        })?;
         Ok(out)
     }
 }
@@ -129,7 +127,7 @@ pub fn spawn_embedding_engine(
     n_instances: usize,
     warm: bool,
     backend: crate::engines::sim::ExecBackend,
-    free_tx: Sender<InstanceFree>,
+    free_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> Vec<Instance> {
     use crate::engines::sim::{ExecBackend, SimEmbedExecutor};

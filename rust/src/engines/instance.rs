@@ -1,47 +1,181 @@
 //! Generic engine-instance worker: one OS thread per instance, one
-//! `BatchExecutor` implementation per engine type.
+//! executor per engine type.
 //!
 //! The thread owns all non-`Send` XLA state (client, executables, weight
-//! buffers).  Batches arrive over a channel; completions are emitted to
-//! each request's reply channel; an `InstanceFree` token returns to the
-//! engine scheduler so it can dispatch the next batch.
+//! buffers).  Execution follows an *iteration-level* protocol: work is
+//! admitted between steps, each `step()` runs one unit of engine work (one
+//! chunked-prefill call, one decode iteration, or one full legacy batch),
+//! completions are emitted to each request's reply channel, and an
+//! `InstanceEvent` reports per-step occupancy back to the engine scheduler
+//! so it can admit new jobs into a partially occupied instance
+//! (continuous batching).  Run-to-completion engines participate through
+//! the [`RunToCompletion`] blanket adapter.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::engines::{Batch, Completion, ExecTiming, InstanceFree};
+use crate::engines::{
+    Batch, Completion, EngineJob, ExecTiming, InstanceEvent, NodeId, QueryId, RequestCtx,
+};
 use crate::error::Result;
 
 /// Engine-type-specific batched execution logic.  Implementations run on
 /// the instance thread and may emit multiple completions per job
-/// (streaming partial decodes).
+/// (streaming partial decodes).  Executors of this legacy trait always
+/// run a dispatched batch to completion; they are lifted into the stepped
+/// protocol by [`RunToCompletion`].
 pub trait BatchExecutor {
     /// Execute a batch; call `emit` for every (possibly partial) completion.
     fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()>;
+}
+
+/// Result of one [`StepExecutor::step`].
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Slot-rows still resident after the step.
+    pub resident: usize,
+    /// Slot-rows retired during the step.
+    pub retired_rows: usize,
+    /// (query, node) of jobs whose *final* completion was emitted this
+    /// step — the instance frees their request contexts.
+    pub retired: Vec<(QueryId, NodeId)>,
+}
+
+/// Iteration-level execution protocol (vLLM-style continuous batching).
+///
+/// The instance thread calls `admit` with newly arrived jobs between
+/// steps, then `step` repeatedly until `resident` reaches zero.  LLM
+/// executors implement this directly (interleaving chunked prefills and
+/// decode iterations over a resident sequence set); everything else goes
+/// through [`RunToCompletion`].
+pub trait StepExecutor {
+    /// Take new jobs into the resident set.  Called between steps; must
+    /// not block on device work (defer it to `step`).  Infallible by
+    /// contract: every job must be consumed — executors queue jobs they
+    /// cannot serve and retire them (without a completion) at the next
+    /// step, so scheduler load accounting never leaks.
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>);
+
+    /// Run one unit of work and emit any completions it produced.
+    fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome>;
+
+    /// Drop all resident work after an unrecoverable step error: clear
+    /// internal state and report everything retired so scheduler load
+    /// accounting stays balanced.  Completions for the dropped jobs are
+    /// never emitted (legacy failed-batch semantics).
+    fn abort(&mut self) -> StepOutcome;
+
+    /// Slot-rows currently admitted and not yet retired.
+    fn resident(&self) -> usize;
+}
+
+/// Blanket adapter running any [`BatchExecutor`] under the stepped
+/// protocol: admitted batches queue, each `step` executes exactly one
+/// batch to completion, and all of that batch's jobs retire together.
+/// Non-LLM engines (embedding, reranker, vector DB, web search, tools)
+/// keep their run-to-completion semantics through this adapter.
+pub struct RunToCompletion<E: BatchExecutor> {
+    inner: E,
+    pending: VecDeque<Batch>,
+    resident: usize,
+}
+
+impl<E: BatchExecutor> RunToCompletion<E> {
+    /// Wrap a batch executor.
+    pub fn new(inner: E) -> RunToCompletion<E> {
+        RunToCompletion { inner, pending: VecDeque::new(), resident: 0 }
+    }
+}
+
+impl<E: BatchExecutor> StepExecutor for RunToCompletion<E> {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+        self.resident += jobs.iter().map(|(_, j)| j.slot_rows()).sum::<usize>();
+        self.pending.push_back(Batch { jobs });
+    }
+
+    fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
+        let Some(batch) = self.pending.pop_front() else {
+            return Ok(StepOutcome::default());
+        };
+        let rows: usize = batch.jobs.iter().map(|(_, j)| j.slot_rows()).sum();
+        let retired: Vec<(QueryId, NodeId)> =
+            batch.jobs.iter().map(|(c, _)| (c.query, c.node)).collect();
+        if let Err(err) = self.inner.execute(batch, emit) {
+            // The batch is consumed either way; report its rows retired so
+            // scheduler load accounting cannot leak (legacy semantics: the
+            // batch is dropped with a log line).
+            let t = std::thread::current();
+            eprintln!("[{}] batch failed: {err}", t.name().unwrap_or("instance"));
+        }
+        self.resident = self.resident.saturating_sub(rows);
+        Ok(StepOutcome { resident: self.resident, retired_rows: rows, retired })
+    }
+
+    fn abort(&mut self) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        for batch in self.pending.drain(..) {
+            for (ctx, job) in batch.jobs {
+                out.retired_rows += job.slot_rows();
+                out.retired.push((ctx.query, ctx.node));
+            }
+        }
+        self.resident = 0;
+        out
+    }
+
+    fn resident(&self) -> usize {
+        self.resident
+    }
 }
 
 /// Handle to a spawned instance thread.
 pub struct Instance {
     pub sender: Sender<Batch>,
     pub handle: JoinHandle<()>,
-    /// Whether a batch is currently in flight (scheduler bookkeeping).
-    pub busy: bool,
 }
 
-/// Spawn an instance worker.  `make_executor` runs *on the new thread* so
-/// it can own non-Send XLA state; `free_tx` receives an `InstanceFree`
-/// after every batch.
-pub fn spawn_instance<F, E>(
+/// Resident-job bookkeeping on the instance thread.
+struct JobCtx {
+    query: QueryId,
+    node: NodeId,
+    /// Slot-rows this job was charged for (mirrors the scheduler's
+    /// admission accounting, so error-path sweeps retire exact counts).
+    rows: usize,
+    arrival: Instant,
+    admitted: Instant,
+    reply: Sender<Completion>,
+}
+
+fn register_and_admit<E: StepExecutor>(exec: &mut E, batch: Batch, ctxs: &mut Vec<JobCtx>) {
+    let now = Instant::now();
+    for (ctx, job) in &batch.jobs {
+        ctxs.push(JobCtx {
+            query: ctx.query,
+            node: ctx.node,
+            rows: job.slot_rows(),
+            arrival: ctx.arrival,
+            admitted: now,
+            reply: ctx.reply.clone(),
+        });
+    }
+    exec.admit(batch.jobs);
+}
+
+/// Spawn an instance worker running the stepped protocol.
+/// `make_executor` runs *on the new thread* so it can own non-Send XLA
+/// state; `event_tx` receives an `InstanceEvent` after every step.
+pub fn spawn_stepped_instance<F, E>(
     index: usize,
     name: String,
     make_executor: F,
-    free_tx: Sender<InstanceFree>,
+    event_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> Instance
 where
     F: FnOnce() -> Result<E> + Send + 'static,
-    E: BatchExecutor,
+    E: StepExecutor,
 {
     let (tx, rx): (Sender<Batch>, Receiver<Batch>) = channel();
     let handle = std::thread::Builder::new()
@@ -58,42 +192,161 @@ where
                     return;
                 }
             };
-            while let Ok(batch) = rx.recv() {
-                let started = Instant::now();
-                // (query, node, arrival, reply) per job, for routing.
-                let ctxs: Vec<(u64, usize, Instant, Sender<Completion>)> = batch
-                    .jobs
-                    .iter()
-                    .map(|(ctx, _)| (ctx.query, ctx.node, ctx.arrival, ctx.reply.clone()))
-                    .collect();
-                let mut route = |mut c: Completion| {
-                    // Exact (query, node) match first; segment completions
-                    // may target sibling nodes of the same query (partial
-                    // decodes), so fall back to any job of that query.
-                    let entry = ctxs
-                        .iter()
-                        .find(|(q, n, _, _)| *q == c.query && *n == c.node)
-                        .or_else(|| ctxs.iter().find(|(q, _, _, _)| *q == c.query));
-                    if let Some((_, _, arrival, reply)) = entry {
-                        c.timing.queued_us =
-                            started.duration_since(*arrival).as_micros() as u64;
-                        if c.timing.exec_us == 0 {
-                            c.timing.exec_us = started.elapsed().as_micros() as u64;
+            let mut ctxs: Vec<JobCtx> = Vec::new();
+            loop {
+                // Idle: block for work (and exit when the scheduler
+                // drops).  Mid-flight: only drain what has already
+                // arrived, so the iteration loop keeps stepping.
+                if exec.resident() == 0 {
+                    match rx.recv() {
+                        Ok(batch) => register_and_admit(&mut exec, batch, &mut ctxs),
+                        Err(_) => break,
+                    }
+                }
+                while let Ok(batch) = rx.try_recv() {
+                    register_and_admit(&mut exec, batch, &mut ctxs);
+                }
+                let mut aborted = false;
+                let mut outcome = {
+                    let ctxs_ref: &Vec<JobCtx> = &ctxs;
+                    let mut route = |mut c: Completion| {
+                        // Exact (query, node) match first; segment
+                        // completions may target sibling nodes of the same
+                        // query (partial decodes), so fall back to any
+                        // resident job of that query.
+                        let now = Instant::now();
+                        let entry = ctxs_ref
+                            .iter()
+                            .find(|j| j.query == c.query && j.node == c.node)
+                            .or_else(|| ctxs_ref.iter().find(|j| j.query == c.query));
+                        if let Some(j) = entry {
+                            c.timing.queued_us =
+                                j.admitted.duration_since(j.arrival).as_micros() as u64;
+                            if c.timing.exec_us == 0 {
+                                c.timing.exec_us =
+                                    now.duration_since(j.admitted).as_micros() as u64;
+                            }
+                            let _ = j.reply.send(c);
                         }
-                        let _ = reply.send(c);
+                    };
+                    match exec.step(&mut route) {
+                        Ok(o) => o,
+                        Err(err) => {
+                            eprintln!("[{name}] step failed: {err}");
+                            aborted = true;
+                            exec.abort()
+                        }
                     }
                 };
-                if let Err(err) = exec.execute(batch, &mut route) {
-                    eprintln!("[{name}] batch failed: {err}");
+                for (q, n) in &outcome.retired {
+                    if let Some(i) =
+                        ctxs.iter().position(|j| j.query == *q && j.node == *n)
+                    {
+                        ctxs.remove(i);
+                    }
                 }
-                let _ = free_tx.send(InstanceFree { instance: index });
+                if aborted {
+                    // Sweep contexts the executor lost track of mid-step
+                    // (e.g. a prefill group drained out of its queue
+                    // before the device call failed): retire their exact
+                    // slot-rows too, so scheduler load accounting stays
+                    // balanced and the instance remains routable.
+                    for j in ctxs.drain(..) {
+                        outcome.retired_rows += j.rows;
+                    }
+                    outcome.resident = 0;
+                }
+                let _ = event_tx.send(InstanceEvent {
+                    instance: index,
+                    resident: outcome.resident,
+                    retired: outcome.retired_rows,
+                });
             }
         })
         .expect("spawn instance thread");
-    Instance { sender: tx, handle, busy: false }
+    Instance { sender: tx, handle }
+}
+
+/// Spawn an instance worker for a run-to-completion engine: the executor
+/// is lifted into the stepped protocol via [`RunToCompletion`], so every
+/// dispatched batch executes atomically and retires as a whole (the
+/// legacy engine protocol, one event per batch).
+pub fn spawn_instance<F, E>(
+    index: usize,
+    name: String,
+    make_executor: F,
+    event_tx: Sender<InstanceEvent>,
+    ready_tx: Sender<()>,
+) -> Instance
+where
+    F: FnOnce() -> Result<E> + Send + 'static,
+    E: BatchExecutor,
+{
+    spawn_stepped_instance(
+        index,
+        name,
+        move || -> Result<RunToCompletion<E>> { Ok(RunToCompletion::new(make_executor()?)) },
+        event_tx,
+        ready_tx,
+    )
+}
+
+/// Split `n` rows into contiguous chunks of at most `max`, calling
+/// `f(start, len)` once per chunk — the one grouping loop shared by every
+/// executor that packs variable row counts into bounded device calls.
+pub fn for_chunks(
+    n: usize,
+    max: usize,
+    mut f: impl FnMut(usize, usize) -> Result<()>,
+) -> Result<()> {
+    let max = max.max(1);
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(max);
+        f(i, take)?;
+        i += take;
+    }
+    Ok(())
 }
 
 /// Build an ExecTiming carrying a measured execution time.
 pub fn timing_exec(exec_us: u64) -> ExecTiming {
     ExecTiming { queued_us: 0, exec_us }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_chunks_covers_all_rows() {
+        let mut seen = Vec::new();
+        for_chunks(10, 4, |start, len| {
+            seen.push((start, len));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(0, 4), (4, 4), (8, 2)]);
+        let total: usize = seen.iter().map(|(_, l)| l).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn for_chunks_handles_zero_and_degenerate_max() {
+        let mut calls = 0;
+        for_chunks(0, 4, |_, _| {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 0);
+        // max 0 is clamped to 1 instead of looping forever
+        let mut n = 0;
+        for_chunks(3, 0, |_, len| {
+            n += len;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 3);
+    }
 }

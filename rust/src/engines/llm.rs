@@ -1,25 +1,36 @@
 //! LLM serving engine: KV-cache management, chunked (partial/full)
-//! prefilling, batched streaming decode.
+//! prefilling, batched streaming decode — run as an *iteration-level*
+//! loop (vLLM-style continuous batching).
 //!
 //! This substitutes the paper's modified vLLM.  Each instance owns a PJRT
 //! context; sequences live in a store shared by all instances of the
 //! engine (KV state crosses instances as host `Vec<f32>`, the analog of
 //! the paper's KV-cache movement cost, cf. Table 3 discussion in §7.4).
 //!
+//! Execution is stepped: every `step()` runs one chunked-prefill call or
+//! one decode iteration over the *resident* batch.  Newly admitted decode
+//! sequences are packed incrementally into a free row of the resident KV
+//! tensor between iterations (growing to a larger batch bucket only when
+//! admission outruns free slots), and a row's KV is unpacked back to the
+//! store the moment it emits EOS — so a short decode can join an
+//! in-flight long decode and retire long before the batch tail.
+//!
 //! Decode streams: segment boundaries (forced SEP tokens — the stand-in
 //! for the paper's structured-output parser on JSON-ish decodes) emit
 //! completions *during* the loop, which is what makes Pass 4 (decoding
 //! pipelining) effective end-to-end.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
+use crate::engines::instance::{spawn_stepped_instance, Instance, StepExecutor, StepOutcome};
 use crate::engines::profile::{charge_device, DeviceModel};
-use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput, RequestCtx, SeqId};
+use crate::engines::{
+    Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput, RequestCtx, SegmentSpec, SeqId,
+};
 use crate::error::{Result, TeolaError};
 use crate::runtime::{HostTensor, Manifest, XlaContext};
 
@@ -119,16 +130,101 @@ struct PrefillRow {
     seq: SeqId,
     tokens: Vec<i32>,
     offset: usize,
+    /// False for an intermediate piece of an oversized chunk (completes
+    /// silently; the final piece emits the completion).
+    last: bool,
 }
 
-struct DecodeRow {
+/// A decode job admitted but not yet seated into the resident batch.
+struct PendingDecode {
     ctx: RequestCtx,
     seq: SeqId,
     first_token: i32,
-    segments: Vec<crate::engines::SegmentSpec>,
+    segments: Vec<SegmentSpec>,
 }
 
-/// The per-instance executor.
+/// Loop state of one resident decode row.
+struct ActiveDecode {
+    ctx: RequestCtx,
+    seq: SeqId,
+    segments: Vec<SegmentSpec>,
+    planned: usize,
+    produced: usize,
+    seg_idx: usize,
+    seg_tokens: Vec<i32>,
+    all_segments: Vec<Vec<i32>>,
+}
+
+/// The resident decode batch: KV packed once at admission and carried
+/// across iterations (not rebuilt per dispatch), grown to a larger batch
+/// bucket only when admission outruns free slots.
+struct ResidentDecode {
+    bb: usize,
+    kv: Vec<f32>,
+    positions: Vec<i32>,
+    tokens: Vec<i32>,
+    rows: Vec<Option<ActiveDecode>>,
+}
+
+impl ResidentDecode {
+    fn empty(dims: &LlmDims, bb: usize, eos: i32) -> ResidentDecode {
+        ResidentDecode {
+            bb,
+            kv: vec![0f32; dims.layers * 2 * bb * dims.plane()],
+            positions: vec![0i32; bb],
+            tokens: vec![eos; bb],
+            rows: (0..bb).map(|_| None).collect(),
+        }
+    }
+
+    /// Grow to a larger batch bucket, repacking the KV tensor (row strides
+    /// change with the bucket size); occupied rows keep their slot index.
+    fn grow(&mut self, dims: &LlmDims, new_bb: usize, eos: i32) {
+        let plane = dims.plane();
+        let old_bb = self.bb;
+        let mut kv = vec![0f32; dims.layers * 2 * new_bb * plane];
+        for l in 0..dims.layers {
+            for k in 0..2 {
+                for b in 0..old_bb {
+                    let src = ((l * 2 + k) * old_bb + b) * plane;
+                    let dst = ((l * 2 + k) * new_bb + b) * plane;
+                    kv[dst..dst + plane].copy_from_slice(&self.kv[src..src + plane]);
+                }
+            }
+        }
+        self.kv = kv;
+        self.bb = new_bb;
+        self.positions.resize(new_bb, 0);
+        self.tokens.resize(new_bb, eos);
+        while self.rows.len() < new_bb {
+            self.rows.push(None);
+        }
+    }
+
+    /// Copy one sequence's KV planes into slot `b` — incremental packing:
+    /// the rest of the batch tensor is untouched.  Slots left by retired
+    /// rows are fully overwritten (every plane is copied or zeroed).
+    fn pack_row(&mut self, dims: &LlmDims, b: usize, state: &SeqState) {
+        let plane = dims.plane();
+        for l in 0..dims.layers {
+            for k in 0..2 {
+                let src = (l * 2 + k) * plane;
+                let dst = ((l * 2 + k) * self.bb + b) * plane;
+                if state.kv.len() >= src + plane {
+                    self.kv[dst..dst + plane].copy_from_slice(&state.kv[src..src + plane]);
+                } else {
+                    self.kv[dst..dst + plane].iter_mut().for_each(|x| *x = 0.0);
+                }
+            }
+        }
+    }
+
+    fn occupied(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+/// The per-instance executor (stepped protocol).
 pub struct LlmExecutor {
     ctx: XlaContext,
     variant: String,
@@ -139,6 +235,14 @@ pub struct LlmExecutor {
     device: DeviceModel,
     sep: i32,
     eos: i32,
+    /// Host-side KV bookkeeping ops, executed at the start of the next step.
+    instant: Vec<(RequestCtx, EngineJob)>,
+    /// Jobs this engine cannot serve (mis-routed kinds): retired without
+    /// a completion at the next step so load accounting stays balanced.
+    rejected: Vec<(RequestCtx, usize)>,
+    prefills: VecDeque<PrefillRow>,
+    pending_decodes: VecDeque<PendingDecode>,
+    decode_batch: Option<ResidentDecode>,
 }
 
 impl LlmExecutor {
@@ -173,6 +277,11 @@ impl LlmExecutor {
             device: DeviceModel::for_engine(variant),
             sep,
             eos,
+            instant: Vec::new(),
+            rejected: Vec::new(),
+            prefills: VecDeque::new(),
+            pending_decodes: VecDeque::new(),
+            decode_batch: None,
         })
     }
 
@@ -212,15 +321,110 @@ impl LlmExecutor {
         })
     }
 
-    fn run_prefill_group(
+    /// Execute the queued host-side bookkeeping ops.
+    fn run_instant(&mut self, emit: &mut dyn FnMut(Completion), out: &mut StepOutcome) {
+        for (ctx, job) in self.instant.drain(..) {
+            match job {
+                EngineJob::ClonePrefix { src, dst, len } => {
+                    let mut store = self.store.lock().unwrap();
+                    if let Some(s) = store.get(&src).cloned() {
+                        let mut kv = s.kv.clone();
+                        // Zero positions >= len so only the prefix is reused.
+                        zero_after(&self.dims, &mut kv, len);
+                        store.insert(dst, SeqState { kv, len: len.min(s.len) });
+                    }
+                }
+                EngineJob::FreeQuery { query } => {
+                    let mut store = self.store.lock().unwrap();
+                    store.retain(|k, _| k.0 != query);
+                }
+                _ => unreachable!("only bookkeeping jobs are queued as instant"),
+            }
+            emit(Completion {
+                query: ctx.query,
+                node: ctx.node,
+                output: JobOutput::Unit,
+                timing: ExecTiming::default(),
+            });
+            out.retired_rows += 1;
+            out.retired.push((ctx.query, ctx.node));
+        }
+    }
+
+    /// Seat pending decode jobs into free rows of the resident batch,
+    /// growing its bucket when admission outruns capacity.  Jobs that
+    /// cannot be seated (bucket at max, no free slot) stay queued and are
+    /// re-tried after the next retirement; a decode on an unknown
+    /// sequence is dropped alone (rejected-job path) rather than
+    /// aborting co-resident work from other queries.
+    fn seat_pending(&mut self) {
+        while !self.pending_decodes.is_empty() {
+            if self.decode_batch.is_none() {
+                // Seed the bucket for the whole pending burst (clamped to
+                // the largest bucket) so a batched admission seats without
+                // growth repacks.
+                let bb = pick_bucket(&self.decode_batches, self.pending_decodes.len());
+                self.decode_batch = Some(ResidentDecode::empty(&self.dims, bb, self.eos));
+            }
+            let have_slot =
+                self.decode_batch.as_ref().unwrap().rows.iter().any(|r| r.is_none());
+            if !have_slot {
+                let cur_bb = self.decode_batch.as_ref().unwrap().bb;
+                let max_bb = *self.decode_batches.last().unwrap();
+                if cur_bb >= max_bb {
+                    break;
+                }
+                let new_bb = pick_bucket(&self.decode_batches, cur_bb + 1);
+                self.decode_batch.as_mut().unwrap().grow(&self.dims, new_bb, self.eos);
+            }
+            let pending = self.pending_decodes.pop_front().unwrap();
+            let state = {
+                let store = self.store.lock().unwrap();
+                store.get(&pending.seq).cloned()
+            };
+            let Some(state) = state else {
+                let t = std::thread::current();
+                eprintln!(
+                    "[{}] decode on unknown seq {:?}; dropping job",
+                    t.name().unwrap_or("instance"),
+                    pending.seq
+                );
+                self.rejected.push((pending.ctx, 1));
+                continue;
+            };
+            let dims = self.dims;
+            let rb = self.decode_batch.as_mut().unwrap();
+            let slot = rb.rows.iter().position(|r| r.is_none()).unwrap();
+            rb.pack_row(&dims, slot, &state);
+            rb.positions[slot] = state.len.min(dims.max_seq - 1) as i32;
+            rb.tokens[slot] = pending.first_token;
+            let planned = pending.segments.iter().map(|s| s.len).sum();
+            rb.rows[slot] = Some(ActiveDecode {
+                ctx: pending.ctx,
+                seq: pending.seq,
+                segments: pending.segments,
+                planned,
+                produced: 0,
+                seg_idx: 0,
+                seg_tokens: Vec::new(),
+                all_segments: Vec::new(),
+            });
+        }
+    }
+
+    /// One chunked-prefill call over the next group of queued prefill
+    /// rows.  Oversized chunks execute one bucket-sized piece per step
+    /// (intermediate pieces complete silently; sequential pieces of one
+    /// sequence never share a call — the later piece consumes the earlier
+    /// piece's KV).
+    fn step_prefill(
         &mut self,
-        rows: Vec<PrefillRow>,
         emit: &mut dyn FnMut(Completion),
+        out: &mut StepOutcome,
     ) -> Result<()> {
-        // Split oversized chunks into bucket-sized pieces (sequential calls
-        // on the same sequence preserve offsets).  The threshold is the
-        // largest chunk available in *multi-row* buckets so batched rows
-        // are never truncated to a smaller bucket.
+        let maxb = self.max_prefill_batch();
+        // The chunk cap is the largest chunk available in *multi-row*
+        // buckets so batched rows are never truncated to a smaller bucket.
         let max_c = self
             .prefill_buckets
             .iter()
@@ -228,38 +432,44 @@ impl LlmExecutor {
             .map(|(_, c)| *c)
             .max()
             .unwrap_or_else(|| self.prefill_buckets.iter().map(|(_, c)| *c).max().unwrap());
-        let mut work: Vec<PrefillRow> = Vec::new();
-        for mut r in rows {
-            while r.tokens.len() > max_c {
+        let mut group: Vec<PrefillRow> = Vec::new();
+        while group.len() < maxb {
+            let Some(front) = self.prefills.front() else { break };
+            if group.iter().any(|g| g.seq == front.seq) {
+                break;
+            }
+            let mut r = self.prefills.pop_front().unwrap();
+            if r.tokens.len() > max_c {
                 let head: Vec<i32> = r.tokens.drain(..max_c).collect();
                 let piece = PrefillRow {
                     ctx: r.ctx.clone(),
                     seq: r.seq,
                     tokens: head,
                     offset: r.offset,
+                    last: false,
                 };
                 r.offset += max_c;
-                // Intermediate pieces complete silently (no emit).
-                self.exec_prefill_batch(vec![piece], None)?;
+                // Requeue the remainder at the back: independent rows
+                // behind it can join this call (and run before the next
+                // piece), while the same-seq guard above keeps sequential
+                // pieces out of one another's calls.
+                self.prefills.push_back(r);
+                group.push(piece);
+            } else {
+                group.push(r);
             }
-            work.push(r);
         }
-
-        // Group rows into batch-bucket-sized calls.
-        let maxb = self.max_prefill_batch();
-        let mut i = 0;
-        while i < work.len() {
-            let take = (work.len() - i).min(maxb);
-            let group: Vec<PrefillRow> = work.drain(i..i + take).collect();
-            self.exec_prefill_batch(group, Some(emit))?;
+        if group.is_empty() {
+            return Ok(());
         }
-        Ok(())
+        self.exec_prefill_batch(group, emit, out)
     }
 
     fn exec_prefill_batch(
         &mut self,
         rows: Vec<PrefillRow>,
-        mut emit: Option<&mut dyn FnMut(Completion)>,
+        emit: &mut dyn FnMut(Completion),
+        out: &mut StepOutcome,
     ) -> Result<()> {
         let n = rows.len();
         let chunk_need = rows.iter().map(|r| r.tokens.len()).max().unwrap_or(1);
@@ -287,8 +497,8 @@ impl LlmExecutor {
         let kv_shape = vec![self.dims.layers, 2, bb, self.dims.heads, self.dims.max_seq, self.dims.head_dim];
         // Device-occupancy: charge for the *valid* tokens of this call.
         let valid_tokens: usize = rows.iter().map(|r| r.tokens.len().min(bc)).sum();
-        let started = std::time::Instant::now();
-        let out = self.ctx.run(
+        let started = Instant::now();
+        let outp = self.ctx.run(
             &artifact,
             Some(&self.variant.clone()),
             &[
@@ -299,10 +509,10 @@ impl LlmExecutor {
             ],
         )?;
         charge_device(started, self.device.prefill_us(1, valid_tokens));
-        let kv_out = out[0].to_vec::<f32>()?;
-        let next = out[2].to_vec::<i32>()?;
+        let kv_out = outp[0].to_vec::<f32>()?;
+        let next = outp[2].to_vec::<i32>()?;
 
-        // Write back sequence states and emit completions.
+        // Write back sequence states; emit + retire the final pieces.
         {
             let mut store = self.store.lock().unwrap();
             for (b, r) in rows.iter().enumerate() {
@@ -311,218 +521,219 @@ impl LlmExecutor {
                 store.insert(r.seq, SeqState { kv: kv_seq, len: new_len });
             }
         }
-        if let Some(emit) = emit.as_deref_mut() {
-            for (b, r) in rows.iter().enumerate() {
+        for (b, r) in rows.iter().enumerate() {
+            if r.last {
                 emit(Completion {
                     query: r.ctx.query,
                     node: r.ctx.node,
                     output: JobOutput::Tokens(vec![next[b]]),
                     timing: ExecTiming::default(),
                 });
+                out.retired_rows += 1;
+                out.retired.push((r.ctx.query, r.ctx.node));
             }
         }
         Ok(())
     }
 
-    fn run_decode_group(
+    /// One decode iteration over the resident batch: every occupied row
+    /// produces one token (host-side constrained sampling forces SEP at
+    /// segment boundaries, EOS at the end of the plan), segments stream
+    /// out mid-loop, and finished rows retire immediately — their KV is
+    /// unpacked back to the store and the slot freed for admission.
+    fn step_decode(
         &mut self,
-        rows: Vec<DecodeRow>,
         emit: &mut dyn FnMut(Completion),
+        out: &mut StepOutcome,
     ) -> Result<()> {
-        let maxb = *self.decode_batches.last().unwrap();
-        let mut i = 0;
-        let mut rows = rows;
-        while i < rows.len() {
-            let take = (rows.len() - i).min(maxb);
-            let group: Vec<DecodeRow> = rows.drain(i..i + take).collect();
-            self.exec_decode_batch(group, emit)?;
+        if self.decode_batch.as_ref().map_or(true, |rb| rb.occupied() == 0) {
+            self.decode_batch = None;
+            return Ok(());
         }
-        let _ = i;
-        Ok(())
-    }
-
-    fn exec_decode_batch(
-        &mut self,
-        rows: Vec<DecodeRow>,
-        emit: &mut dyn FnMut(Completion),
-    ) -> Result<()> {
-        let n = rows.len();
-        let bb = pick_bucket(&self.decode_batches, n);
-        let artifact = format!("{}__decode__b{}", self.variant, bb);
-        let s_cap = self.dims.max_seq;
-
-        // Gather KV + positions.
-        let states: Vec<Option<SeqState>> = {
-            let store = self.store.lock().unwrap();
-            rows.iter().map(|r| store.get(&r.seq).cloned()).collect()
-        };
-        let refs: Vec<Option<&SeqState>> = states.iter().map(|s| s.as_ref()).collect();
-        let mut kv = pack_kv(&self.dims, &refs, bb);
-        let kv_shape = vec![self.dims.layers, 2, bb, self.dims.heads, s_cap, self.dims.head_dim];
-
-        let mut positions: Vec<i32> = (0..bb).map(|_| 0).collect();
-        let mut tokens: Vec<i32> = vec![self.eos; bb];
-        // Per-row progress.
-        let mut planned: Vec<usize> = vec![0; bb];
-        let mut produced: Vec<usize> = vec![0; bb];
-        let mut seg_idx: Vec<usize> = vec![0; bb];
-        let mut seg_tokens: Vec<Vec<i32>> = vec![Vec::new(); bb];
-        let mut all_segments: Vec<Vec<Vec<i32>>> = vec![Vec::new(); bb];
-        for (b, r) in rows.iter().enumerate() {
-            let st = states[b]
-                .as_ref()
-                .ok_or_else(|| TeolaError::Engine(format!("decode on unknown seq {:?}", r.seq)))?;
-            positions[b] = st.len.min(s_cap - 1) as i32;
-            tokens[b] = r.first_token;
-            planned[b] = r.segments.iter().map(|s| s.len).sum();
-        }
-
-        let total_needed: usize = planned.iter().sum();
-        let mut emitted_total = 0usize;
-        // Autoregressive loop; all rows step together, finished rows decode
-        // into a clamped position and are ignored.
-        while emitted_total < total_needed {
-            let step_started = std::time::Instant::now();
-            let out = self.ctx.run(
+        let dims = self.dims;
+        let device = self.device;
+        let sep = self.sep;
+        let eos = self.eos;
+        let s_cap = dims.max_seq;
+        let drained;
+        {
+            let rb = self.decode_batch.as_mut().unwrap();
+            let bb = rb.bb;
+            let n = rb.occupied();
+            let artifact = format!("{}__decode__b{}", self.variant, bb);
+            let kv_shape =
+                vec![dims.layers, 2, bb, dims.heads, s_cap, dims.head_dim];
+            let kv_in = std::mem::take(&mut rb.kv);
+            let started = Instant::now();
+            let outp = self.ctx.run(
                 &artifact,
                 Some(&self.variant.clone()),
                 &[
-                    HostTensor::i32(vec![bb], tokens.clone()),
-                    HostTensor::f32(kv_shape.clone(), kv),
-                    HostTensor::i32(vec![bb], positions.clone()),
+                    HostTensor::i32(vec![bb], rb.tokens.clone()),
+                    HostTensor::f32(kv_shape, kv_in),
+                    HostTensor::i32(vec![bb], rb.positions.clone()),
                 ],
             )?;
-            charge_device(step_started, self.device.decode_step_us(n));
-            kv = out[0].to_vec::<f32>()?;
-            let next = out[2].to_vec::<i32>()?;
+            charge_device(started, device.decode_step_us(n));
+            rb.kv = outp[0].to_vec::<f32>()?;
+            let next = outp[2].to_vec::<i32>()?;
 
-            for (b, r) in rows.iter().enumerate() {
-                if produced[b] >= planned[b] {
-                    continue;
+            for b in 0..bb {
+                let mut finished = false;
+                if let Some(r) = rb.rows[b].as_mut() {
+                    if r.planned == 0 {
+                        finished = true;
+                    } else {
+                        let seg_node = r.segments[r.seg_idx].node;
+                        let seg_len = r.segments[r.seg_idx].len;
+                        let pos_in_seg = r.seg_tokens.len() + 1;
+                        let is_seg_end = pos_in_seg >= seg_len;
+                        let is_last = r.produced + 1 >= r.planned;
+                        let tok = if is_last {
+                            eos
+                        } else if is_seg_end {
+                            sep
+                        } else {
+                            let mut t = next[b];
+                            if t == eos || t == sep {
+                                t = 4 + (t.unsigned_abs() as i32 % 100);
+                            }
+                            t
+                        };
+                        r.seg_tokens.push(tok);
+                        r.produced += 1;
+                        rb.tokens[b] = tok;
+                        rb.positions[b] = (rb.positions[b] + 1).min(s_cap as i32 - 1);
+                        if is_seg_end || is_last {
+                            let out_tokens = std::mem::take(&mut r.seg_tokens);
+                            r.all_segments.push(out_tokens.clone());
+                            // Stream the segment to its marker node (Pass
+                            // 4); the decode node itself receives the full
+                            // output when its row finishes.
+                            if seg_node != r.ctx.node {
+                                emit(Completion {
+                                    query: r.ctx.query,
+                                    node: seg_node,
+                                    output: JobOutput::Tokens(out_tokens),
+                                    timing: ExecTiming::default(),
+                                });
+                            }
+                            if r.seg_idx + 1 < r.segments.len() {
+                                r.seg_idx += 1;
+                            }
+                        }
+                        finished = is_last;
+                    }
                 }
-                // Host-side constrained sampling: force SEP at segment
-                // boundaries, EOS at the end of the plan.
-                let seg = &r.segments[seg_idx[b]];
-                let pos_in_seg = seg_tokens[b].len() + 1;
-                let is_seg_end = pos_in_seg >= seg.len;
-                let is_last = produced[b] + 1 >= planned[b];
-                let tok = if is_last {
-                    self.eos
-                } else if is_seg_end {
-                    self.sep
-                } else {
-                    let mut t = next[b];
-                    if t == self.eos || t == self.sep {
-                        t = 4 + (t.unsigned_abs() as i32 % 100);
-                    }
-                    t
-                };
-                seg_tokens[b].push(tok);
-                produced[b] += 1;
-                emitted_total += 1;
-                tokens[b] = tok;
-                positions[b] = (positions[b] + 1).min(s_cap as i32 - 1);
-
-                if is_seg_end || is_last {
-                    let out_tokens = std::mem::take(&mut seg_tokens[b]);
-                    all_segments[b].push(out_tokens.clone());
-                    // Stream the segment to its marker node (Pass 4); the
-                    // decode node itself receives the full output when its
-                    // row finishes, so skip streaming when the target is
-                    // the decode node.
-                    if seg.node != r.ctx.node {
-                        emit(Completion {
-                            query: r.ctx.query,
-                            node: seg.node,
-                            output: JobOutput::Tokens(out_tokens),
-                            timing: ExecTiming::default(),
-                        });
-                    }
-                    if seg_idx[b] + 1 < r.segments.len() {
-                        seg_idx[b] += 1;
-                    }
-                    if is_last {
-                        // Row done: complete the decode node immediately
-                        // (don't make short rows wait for the batch tail).
-                        emit(Completion {
-                            query: r.ctx.query,
-                            node: r.ctx.node,
-                            output: JobOutput::TokenBatch(std::mem::take(
-                                &mut all_segments[b],
-                            )),
-                            timing: ExecTiming::default(),
-                        });
-                    }
+                if finished {
+                    // Row done: retire immediately (don't make short rows
+                    // wait for the batch tail) and free the slot.
+                    let row = rb.rows[b].take().unwrap();
+                    let kv_seq = unpack_kv(&dims, &rb.kv, bb, b);
+                    let len = (rb.positions[b] as usize + 1).min(s_cap);
+                    self.store.lock().unwrap().insert(row.seq, SeqState { kv: kv_seq, len });
+                    emit(Completion {
+                        query: row.ctx.query,
+                        node: row.ctx.node,
+                        output: JobOutput::TokenBatch(row.all_segments),
+                        timing: ExecTiming::default(),
+                    });
+                    out.retired_rows += 1;
+                    out.retired.push((row.ctx.query, row.ctx.node));
                 }
             }
+            drained = rb.occupied() == 0;
         }
-
-        // Persist final KV state (refine-mode reuses the sequence later).
-        {
-            let mut store = self.store.lock().unwrap();
-            for (b, r) in rows.iter().enumerate() {
-                let kv_seq = unpack_kv(&self.dims, &kv, bb, b);
-                let len = (positions[b] as usize + 1).min(s_cap);
-                store.insert(r.seq, SeqState { kv: kv_seq, len });
-            }
+        if drained && self.pending_decodes.is_empty() {
+            self.decode_batch = None;
         }
         Ok(())
     }
 }
 
-impl BatchExecutor for LlmExecutor {
-    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
-        let mut prefills: Vec<PrefillRow> = Vec::new();
-        let mut decodes: Vec<DecodeRow> = Vec::new();
-        for (ctx, job) in batch.jobs {
+impl StepExecutor for LlmExecutor {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+        for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, tokens, offset } => {
-                    prefills.push(PrefillRow { ctx, seq, tokens, offset })
+                    self.prefills.push_back(PrefillRow { ctx, seq, tokens, offset, last: true });
                 }
                 EngineJob::Decode { seq, first_token, segments } => {
-                    decodes.push(DecodeRow { ctx, seq, first_token, segments })
-                }
-                EngineJob::ClonePrefix { src, dst, len } => {
-                    let mut store = self.store.lock().unwrap();
-                    if let Some(s) = store.get(&src).cloned() {
-                        let mut kv = s.kv.clone();
-                        // Zero positions >= len so only the prefix is reused.
-                        zero_after(&self.dims, &mut kv, len);
-                        store.insert(dst, SeqState { kv, len: len.min(s.len) });
-                    }
-                    drop(store);
-                    emit(Completion {
-                        query: ctx.query,
-                        node: ctx.node,
-                        output: JobOutput::Unit,
-                        timing: ExecTiming::default(),
+                    self.pending_decodes.push_back(PendingDecode {
+                        ctx,
+                        seq,
+                        first_token,
+                        segments,
                     });
                 }
-                EngineJob::FreeQuery { query } => {
-                    let mut store = self.store.lock().unwrap();
-                    store.retain(|k, _| k.0 != query);
-                    drop(store);
-                    emit(Completion {
-                        query: ctx.query,
-                        node: ctx.node,
-                        output: JobOutput::Unit,
-                        timing: ExecTiming::default(),
-                    });
+                other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
+                    self.instant.push((ctx, other));
                 }
                 other => {
-                    return Err(TeolaError::Engine(format!(
-                        "LLM engine got non-LLM job {other:?}"
-                    )))
+                    let t = std::thread::current();
+                    eprintln!(
+                        "[{}] LLM engine dropping non-LLM job {other:?}",
+                        t.name().unwrap_or("instance")
+                    );
+                    self.rejected.push((ctx, other.slot_rows()));
                 }
             }
         }
-        if !prefills.is_empty() {
-            self.run_prefill_group(prefills, emit)?;
+    }
+
+    fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        for (ctx, rows) in self.rejected.drain(..) {
+            out.retired_rows += rows;
+            out.retired.push((ctx.query, ctx.node));
         }
-        if !decodes.is_empty() {
-            self.run_decode_group(decodes, emit)?;
+        self.run_instant(emit, &mut out);
+        self.seat_pending();
+        // One chunked-prefill call *or* one decode iteration per step;
+        // prefill first so newly admitted sequences reach the decode set
+        // quickly (vLLM-style prefill priority).
+        if !self.prefills.is_empty() {
+            self.step_prefill(emit, &mut out)?;
+        } else if self.decode_batch.is_some() {
+            self.step_decode(emit, &mut out)?;
         }
-        Ok(())
+        out.resident = self.resident();
+        Ok(out)
+    }
+
+    fn abort(&mut self) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        for (ctx, rows) in self.rejected.drain(..) {
+            out.retired_rows += rows;
+            out.retired.push((ctx.query, ctx.node));
+        }
+        for (ctx, _) in self.instant.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((ctx.query, ctx.node));
+        }
+        for r in self.prefills.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((r.ctx.query, r.ctx.node));
+        }
+        for p in self.pending_decodes.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((p.ctx.query, p.ctx.node));
+        }
+        if let Some(rb) = self.decode_batch.take() {
+            for row in rb.rows.into_iter().flatten() {
+                out.retired_rows += 1;
+                out.retired.push((row.ctx.query, row.ctx.node));
+            }
+        }
+        out
+    }
+
+    fn resident(&self) -> usize {
+        self.rejected.len()
+            + self.instant.len()
+            + self.prefills.len()
+            + self.pending_decodes.len()
+            + self.decode_batch.as_ref().map_or(0, |rb| rb.occupied())
     }
 }
 
@@ -544,14 +755,15 @@ fn zero_after(dims: &LlmDims, kv: &mut [f32], len: usize) {
 }
 
 /// Spawn `n_instances` LLM instance threads sharing one sequence store,
-/// executing either real XLA artifacts or the simulated backend.
+/// executing either real XLA artifacts or the simulated backend.  Both
+/// executors run the stepped (iteration-level) protocol.
 pub fn spawn_llm_engine(
     manifest: Rc<Manifest>,
     variant: &str,
     n_instances: usize,
     warm: bool,
     backend: crate::engines::sim::ExecBackend,
-    free_tx: Sender<InstanceFree>,
+    event_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> (Vec<Instance>, SeqStore) {
     use crate::engines::sim::{ExecBackend, SimLlmExecutor};
@@ -566,14 +778,14 @@ pub fn spawn_llm_engine(
                 let store_c = store.clone();
                 let dir_c = dir.clone();
                 let variant_c = variant.to_string();
-                let inst = spawn_instance(
+                let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
                         let m = Rc::new(Manifest::load(dir_c)?);
                         LlmExecutor::new(m, &variant_c, store_c, warm)
                     },
-                    free_tx.clone(),
+                    event_tx.clone(),
                     ready_tx.clone(),
                 );
                 instances.push(inst);
@@ -587,7 +799,7 @@ pub fn spawn_llm_engine(
             for i in 0..n_instances {
                 let store_c = store.clone();
                 let variant_c = variant.to_string();
-                let inst = spawn_instance(
+                let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
@@ -595,7 +807,7 @@ pub fn spawn_llm_engine(
                             &variant_c, store_c, sep, eos, max_seq,
                         ))
                     },
-                    free_tx.clone(),
+                    event_tx.clone(),
                     ready_tx.clone(),
                 );
                 instances.push(inst);
@@ -642,5 +854,26 @@ mod tests {
         assert_eq!(kv[2 * d.head_dim], 1.0);
         // position 3 is zeroed
         assert_eq!(kv[3 * d.head_dim], 0.0);
+    }
+
+    #[test]
+    fn resident_batch_pack_grow_roundtrip() {
+        let d = dims();
+        let n = d.seq_kv_elems();
+        let s0 = SeqState { kv: (0..n).map(|x| x as f32).collect(), len: 3 };
+        let s1 = SeqState { kv: (0..n).map(|x| (x * 3) as f32).collect(), len: 2 };
+        let mut rb = ResidentDecode::empty(&d, 2, 2);
+        rb.pack_row(&d, 0, &s0);
+        rb.pack_row(&d, 1, &s1);
+        assert_eq!(unpack_kv(&d, &rb.kv, 2, 0), s0.kv);
+        assert_eq!(unpack_kv(&d, &rb.kv, 2, 1), s1.kv);
+        // Growing the bucket preserves occupied rows at their slots.
+        rb.grow(&d, 4, 2);
+        assert_eq!(rb.bb, 4);
+        assert_eq!(rb.rows.len(), 4);
+        assert_eq!(rb.positions.len(), 4);
+        assert_eq!(unpack_kv(&d, &rb.kv, 4, 0), s0.kv);
+        assert_eq!(unpack_kv(&d, &rb.kv, 4, 1), s1.kv);
+        assert!(unpack_kv(&d, &rb.kv, 4, 2).iter().all(|&x| x == 0.0));
     }
 }

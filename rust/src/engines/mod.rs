@@ -9,8 +9,14 @@
 //! * model-free engines (vector DB, web search) are CPU-side services with
 //!   their own worker threads.
 //!
-//! All engines share one job/batch protocol so the lower-tier engine
+//! All engines share one job/admission protocol so the lower-tier engine
 //! schedulers (scheduler/engine_sched.rs) can batch primitives uniformly.
+//! Execution is iteration-level (instance.rs::StepExecutor): LLM engines
+//! interleave chunked-prefill calls and decode iterations over a resident
+//! sequence set and retire rows at EOS (continuous batching), while
+//! run-to-completion engines execute each admitted batch atomically
+//! through the `RunToCompletion` adapter; instances report per-step
+//! occupancy to their scheduler via `InstanceEvent`.
 
 pub mod embedding;
 pub mod instance;
@@ -106,6 +112,13 @@ pub enum EngineJob {
 }
 
 impl EngineJob {
+    /// Rows this job occupies for scheduler slot accounting.  Never zero,
+    /// so admission (`loads += slot_rows`) and retirement
+    /// (`loads -= retired`) stay balanced even for empty payloads.
+    pub fn slot_rows(&self) -> usize {
+        self.rows().max(1)
+    }
+
     /// Number of model "rows" this job contributes to a batch (for slot
     /// accounting in Algorithm 2).
     pub fn rows(&self) -> usize {
@@ -183,8 +196,30 @@ impl Batch {
     }
 }
 
-/// Message an instance sends its engine scheduler when a batch finishes.
+/// How an engine's executors consume admitted work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Iteration-level loop: jobs are admitted between steps and retire
+    /// individually the moment they finish (LLM engines — this is what
+    /// enables continuous batching in the engine scheduler).
+    Stepped,
+    /// Every dispatched batch runs to completion before the next one is
+    /// accepted (encoder-style and model-free engines).
+    FullBatch,
+}
+
+/// Per-iteration status report an instance sends its engine scheduler.
+///
+/// Replaces the old terminal-only `InstanceFree` token: stepped executors
+/// emit one event per iteration so the scheduler can observe occupancy
+/// and route new decode work to partially occupied instances (continuous
+/// batching); run-to-completion executors emit a single terminal event
+/// with `resident == 0` per batch, which reproduces the legacy protocol.
 #[derive(Debug, Clone, Copy)]
-pub struct InstanceFree {
+pub struct InstanceEvent {
     pub instance: usize,
+    /// Slot-rows still resident on the instance after this step.
+    pub resident: usize,
+    /// Slot-rows retired (final completion emitted) during this step.
+    pub retired: usize,
 }

@@ -6,7 +6,7 @@ use std::sync::mpsc::Sender;
 
 use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
 use crate::engines::profile::{charge_device, DeviceModel};
-use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput};
 use crate::error::{Result, TeolaError};
 use crate::runtime::{HostTensor, Manifest, XlaContext};
 
@@ -119,7 +119,7 @@ pub fn spawn_reranker_engine(
     n_instances: usize,
     warm: bool,
     backend: crate::engines::sim::ExecBackend,
-    free_tx: Sender<InstanceFree>,
+    free_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> Vec<Instance> {
     use crate::engines::sim::{ExecBackend, SimRerankExecutor};

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
-use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput};
 use crate::error::{Result, TeolaError};
 use crate::util::rng::Rng;
 
@@ -163,7 +163,7 @@ pub fn spawn_search_engine(
     corpus: Arc<Corpus>,
     net: NetModel,
     n_instances: usize,
-    free_tx: Sender<InstanceFree>,
+    free_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> Vec<Instance> {
     (0..n_instances)

@@ -3,21 +3,24 @@
 //! Produces shape-correct synthetic outputs — token streams, embeddings,
 //! rerank scores — with latencies charged from the `DeviceModel` profile,
 //! so the *entire* orchestration stack (graph passes, two-tier scheduling,
-//! batching policies, streaming partial decodes) runs without AOT
-//! artifacts, deterministically and in milliseconds.  This is a
-//! Parrot-style profile-driven simulation path: the executors mirror the XLA
-//! executors' batch semantics exactly — same grouping, same SEP/EOS
-//! forcing at segment boundaries, same completion routing — only the
+//! batching policies, streaming partial decodes, iteration-level
+//! continuous batching) runs without AOT artifacts, deterministically and
+//! in milliseconds.  This is a Parrot-style profile-driven simulation
+//! path: the executors mirror the XLA executors' batch semantics exactly —
+//! same grouping, same SEP/EOS forcing at segment boundaries, same
+//! completion routing, same stepped admission protocol — only the
 //! numerics are replaced by hashes of the inputs.
 //!
 //! Every output is a pure function of the job's inputs (sequence id,
-//! token content), never of batching order, so concurrent runs are
-//! reproducible: the same (query id, e-graph) always yields the same
-//! final value regardless of policy or load.
+//! token content, KV length at admission), never of batching order or of
+//! which rows shared an iteration, so concurrent runs are reproducible:
+//! the same (query id, e-graph) always yields the same final value
+//! regardless of policy, load, or mid-flight admission.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::engines::instance::BatchExecutor;
+use crate::engines::instance::{for_chunks, BatchExecutor, StepExecutor, StepOutcome};
 use crate::engines::llm::{SeqState, SeqStore};
 use crate::engines::profile::{charge_device, DeviceModel};
 use crate::engines::{
@@ -110,14 +113,28 @@ struct SimPrefillRow {
     offset: usize,
 }
 
+/// One resident decode sequence: all per-row loop state lives here so the
+/// row can advance one token per `step` and retire independently of the
+/// rest of the batch.
 struct SimDecodeRow {
     ctx: RequestCtx,
     seq: SeqId,
     segments: Vec<SegmentSpec>,
+    /// KV length at admission (token positions are addressed from here so
+    /// outputs never depend on which rows shared an iteration).
+    base_len: usize,
+    planned: usize,
+    produced: usize,
+    seg_idx: usize,
+    seg_tokens: Vec<i32>,
+    all_segments: Vec<Vec<i32>>,
 }
 
-/// Simulated LLM executor: chunked prefill + batched streaming decode over
-/// the shared sequence store, with device time from the variant's profile.
+/// Simulated LLM executor running the iteration-level protocol: chunked
+/// prefill calls and decode iterations interleave over a resident
+/// sequence set, new jobs are admitted between steps, and each row
+/// retires the moment it emits EOS — with device time from the variant's
+/// profile.
 pub struct SimLlmExecutor {
     store: SeqStore,
     device: DeviceModel,
@@ -125,6 +142,14 @@ pub struct SimLlmExecutor {
     max_decode_batch: usize,
     sep: i32,
     eos: i32,
+    /// Host-side KV bookkeeping ops (ClonePrefix/FreeQuery): executed at
+    /// the start of the next step, free of device time.
+    instant: Vec<(RequestCtx, EngineJob)>,
+    /// Jobs this engine cannot serve (mis-routed kinds): retired without
+    /// a completion at the next step so load accounting stays balanced.
+    rejected: Vec<(RequestCtx, usize)>,
+    prefills: VecDeque<SimPrefillRow>,
+    decodes: Vec<SimDecodeRow>,
 }
 
 impl SimLlmExecutor {
@@ -137,17 +162,46 @@ impl SimLlmExecutor {
             max_decode_batch: 8,
             sep,
             eos,
+            instant: Vec::new(),
+            rejected: Vec::new(),
+            prefills: VecDeque::new(),
+            decodes: Vec::new(),
         }
     }
 
-    fn run_prefill_group(
-        &mut self,
-        rows: Vec<SimPrefillRow>,
-        emit: &mut dyn FnMut(Completion),
-    ) -> Result<()> {
-        // One simulated device call over all rows; like the XLA path the
-        // charge is proportional to the *valid* tokens, so bucket padding
-        // costs nothing here and the batching economics match.
+    /// Execute the queued host-side bookkeeping ops.
+    fn run_instant(&mut self, emit: &mut dyn FnMut(Completion), out: &mut StepOutcome) {
+        for (ctx, job) in self.instant.drain(..) {
+            match job {
+                EngineJob::ClonePrefix { src, dst, len } => {
+                    let mut store = self.store.lock().unwrap();
+                    if let Some(s) = store.get(&src) {
+                        let len = len.min(s.len);
+                        store.insert(dst, SeqState { kv: Vec::new(), len });
+                    }
+                }
+                EngineJob::FreeQuery { query } => {
+                    let mut store = self.store.lock().unwrap();
+                    store.retain(|k, _| k.0 != query);
+                }
+                _ => unreachable!("only bookkeeping jobs are queued as instant"),
+            }
+            emit(Completion {
+                query: ctx.query,
+                node: ctx.node,
+                output: JobOutput::Unit,
+                timing: ExecTiming::default(),
+            });
+            out.retired_rows += 1;
+            out.retired.push((ctx.query, ctx.node));
+        }
+    }
+
+    /// One batched prefill call over every queued prefill row; like the
+    /// XLA path the charge is proportional to the *valid* tokens, so
+    /// bucket padding costs nothing here and the batching economics match.
+    fn step_prefill(&mut self, emit: &mut dyn FnMut(Completion), out: &mut StepOutcome) {
+        let rows: Vec<SimPrefillRow> = self.prefills.drain(..).collect();
         let started = Instant::now();
         let valid: usize = rows.iter().map(|r| r.tokens.len()).sum();
         let mut next = Vec::with_capacity(rows.len());
@@ -167,156 +221,169 @@ impl SimLlmExecutor {
                 output: JobOutput::Tokens(vec![next[i]]),
                 timing: ExecTiming::default(),
             });
+            out.retired_rows += 1;
+            out.retired.push((r.ctx.query, r.ctx.node));
         }
-        Ok(())
     }
 
-    fn run_decode_group(
-        &mut self,
-        mut rows: Vec<SimDecodeRow>,
-        emit: &mut dyn FnMut(Completion),
-    ) -> Result<()> {
-        while !rows.is_empty() {
-            let take = rows.len().min(self.max_decode_batch);
-            let group: Vec<SimDecodeRow> = rows.drain(..take).collect();
-            self.exec_decode_batch(group, emit)?;
-        }
-        Ok(())
-    }
+    /// One decode iteration over all resident rows: every row produces
+    /// one token, segments stream out mid-flight, and rows hitting the
+    /// end of their plan retire immediately — exactly the contract Pass 4
+    /// (decoding pipelining) and continuous batching rely on.
+    fn step_decode(&mut self, emit: &mut dyn FnMut(Completion), out: &mut StepOutcome) {
+        let started = Instant::now();
+        let n = self.decodes.len();
+        // Device charge: the iteration runs as sub-batches of the max
+        // decode width, each priced by the memory-bound step model.
+        let mut cost = 0u64;
+        let _ = for_chunks(n, self.max_decode_batch, |_, take| {
+            cost += self.device.decode_step_us(take);
+            Ok(())
+        });
+        charge_device(started, cost);
 
-    fn exec_decode_batch(
-        &mut self,
-        rows: Vec<SimDecodeRow>,
-        emit: &mut dyn FnMut(Completion),
-    ) -> Result<()> {
-        let n = rows.len();
-        let planned: Vec<usize> =
-            rows.iter().map(|r| r.segments.iter().map(|s| s.len).sum()).collect();
-        let base_len: Vec<usize> = {
-            let store = self.store.lock().unwrap();
-            rows.iter().map(|r| store.get(&r.seq).map(|s| s.len).unwrap_or(0)).collect()
-        };
-
-        let mut produced = vec![0usize; n];
-        let mut seg_idx = vec![0usize; n];
-        let mut seg_tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
-        let mut all_segments: Vec<Vec<Vec<i32>>> = vec![Vec::new(); n];
-        let total: usize = planned.iter().sum();
-        let mut emitted = 0usize;
-
-        // Autoregressive loop: all rows step together (one batched decode
-        // iteration per planned token), segments stream out mid-loop —
-        // exactly the contract Pass 4 (decoding pipelining) relies on.
-        while emitted < total {
-            let step_started = Instant::now();
-            charge_device(step_started, self.device.decode_step_us(n));
-            for (b, r) in rows.iter().enumerate() {
-                if produced[b] >= planned[b] {
-                    continue;
-                }
-                let seg = &r.segments[seg_idx[b]];
-                let pos_in_seg = seg_tokens[b].len() + 1;
-                let is_seg_end = pos_in_seg >= seg.len;
-                let is_last = produced[b] + 1 >= planned[b];
+        let sep = self.sep;
+        let eos = self.eos;
+        let mut b = 0;
+        while b < self.decodes.len() {
+            let mut is_last = true;
+            if self.decodes[b].planned > 0 {
+                let r = &mut self.decodes[b];
+                let seg_node = r.segments[r.seg_idx].node;
+                let seg_len = r.segments[r.seg_idx].len;
+                let pos_in_seg = r.seg_tokens.len() + 1;
+                let is_seg_end = pos_in_seg >= seg_len;
+                is_last = r.produced + 1 >= r.planned;
                 let tok = if is_last {
-                    self.eos
+                    eos
                 } else if is_seg_end {
-                    self.sep
+                    sep
                 } else {
-                    synth_token(r.seq, base_len[b] + produced[b])
+                    synth_token(r.seq, r.base_len + r.produced)
                 };
-                seg_tokens[b].push(tok);
-                produced[b] += 1;
-                emitted += 1;
-
+                r.seg_tokens.push(tok);
+                r.produced += 1;
                 if is_seg_end || is_last {
-                    let out_tokens = std::mem::take(&mut seg_tokens[b]);
-                    all_segments[b].push(out_tokens.clone());
-                    if seg.node != r.ctx.node {
+                    let out_tokens = std::mem::take(&mut r.seg_tokens);
+                    r.all_segments.push(out_tokens.clone());
+                    if seg_node != r.ctx.node {
                         emit(Completion {
                             query: r.ctx.query,
-                            node: seg.node,
+                            node: seg_node,
                             output: JobOutput::Tokens(out_tokens),
                             timing: ExecTiming::default(),
                         });
                     }
-                    if seg_idx[b] + 1 < r.segments.len() {
-                        seg_idx[b] += 1;
-                    }
-                    if is_last {
-                        emit(Completion {
-                            query: r.ctx.query,
-                            node: r.ctx.node,
-                            output: JobOutput::TokenBatch(std::mem::take(&mut all_segments[b])),
-                            timing: ExecTiming::default(),
-                        });
+                    if r.seg_idx + 1 < r.segments.len() {
+                        r.seg_idx += 1;
                     }
                 }
             }
-        }
-
-        {
-            let mut store = self.store.lock().unwrap();
-            for (b, r) in rows.iter().enumerate() {
-                let len = (base_len[b] + produced[b]).min(self.max_seq);
-                store.insert(r.seq, SeqState { kv: Vec::new(), len });
+            if is_last {
+                let r = self.decodes.swap_remove(b);
+                let len = (r.base_len + r.produced).min(self.max_seq);
+                self.store.lock().unwrap().insert(r.seq, SeqState { kv: Vec::new(), len });
+                emit(Completion {
+                    query: r.ctx.query,
+                    node: r.ctx.node,
+                    output: JobOutput::TokenBatch(r.all_segments),
+                    timing: ExecTiming::default(),
+                });
+                out.retired_rows += 1;
+                out.retired.push((r.ctx.query, r.ctx.node));
+                // swap_remove moved a later row into slot b: revisit it.
+            } else {
+                b += 1;
             }
         }
-        Ok(())
     }
 }
 
-impl BatchExecutor for SimLlmExecutor {
-    fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
-        let mut prefills: Vec<SimPrefillRow> = Vec::new();
-        let mut decodes: Vec<SimDecodeRow> = Vec::new();
-        for (ctx, job) in batch.jobs {
+impl StepExecutor for SimLlmExecutor {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+        for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, tokens, offset } => {
-                    prefills.push(SimPrefillRow { ctx, seq, tokens, offset })
+                    self.prefills.push_back(SimPrefillRow { ctx, seq, tokens, offset });
                 }
                 EngineJob::Decode { seq, segments, .. } => {
-                    decodes.push(SimDecodeRow { ctx, seq, segments })
-                }
-                EngineJob::ClonePrefix { src, dst, len } => {
-                    let mut store = self.store.lock().unwrap();
-                    if let Some(s) = store.get(&src) {
-                        let len = len.min(s.len);
-                        store.insert(dst, SeqState { kv: Vec::new(), len });
-                    }
-                    drop(store);
-                    emit(Completion {
-                        query: ctx.query,
-                        node: ctx.node,
-                        output: JobOutput::Unit,
-                        timing: ExecTiming::default(),
+                    let base_len = self
+                        .store
+                        .lock()
+                        .unwrap()
+                        .get(&seq)
+                        .map(|s| s.len)
+                        .unwrap_or(0);
+                    let planned = segments.iter().map(|s| s.len).sum();
+                    self.decodes.push(SimDecodeRow {
+                        ctx,
+                        seq,
+                        segments,
+                        base_len,
+                        planned,
+                        produced: 0,
+                        seg_idx: 0,
+                        seg_tokens: Vec::new(),
+                        all_segments: Vec::new(),
                     });
                 }
-                EngineJob::FreeQuery { query } => {
-                    let mut store = self.store.lock().unwrap();
-                    store.retain(|k, _| k.0 != query);
-                    drop(store);
-                    emit(Completion {
-                        query: ctx.query,
-                        node: ctx.node,
-                        output: JobOutput::Unit,
-                        timing: ExecTiming::default(),
-                    });
+                other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
+                    self.instant.push((ctx, other));
                 }
                 other => {
-                    return Err(TeolaError::Engine(format!(
-                        "sim LLM engine got non-LLM job {other:?}"
-                    )))
+                    let t = std::thread::current();
+                    eprintln!(
+                        "[{}] sim LLM engine dropping non-LLM job {other:?}",
+                        t.name().unwrap_or("instance")
+                    );
+                    self.rejected.push((ctx, other.slot_rows()));
                 }
             }
         }
-        if !prefills.is_empty() {
-            self.run_prefill_group(prefills, emit)?;
+    }
+
+    fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        for (ctx, rows) in self.rejected.drain(..) {
+            out.retired_rows += rows;
+            out.retired.push((ctx.query, ctx.node));
         }
-        if !decodes.is_empty() {
-            self.run_decode_group(decodes, emit)?;
+        self.run_instant(emit, &mut out);
+        // One chunked-prefill call *or* one decode iteration per step;
+        // prefill first so newly admitted sequences join the decode set
+        // quickly (vLLM-style prefill priority).
+        if !self.prefills.is_empty() {
+            self.step_prefill(emit, &mut out);
+        } else if !self.decodes.is_empty() {
+            self.step_decode(emit, &mut out);
         }
-        Ok(())
+        out.resident = self.resident();
+        Ok(out)
+    }
+
+    fn abort(&mut self) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        for (ctx, rows) in self.rejected.drain(..) {
+            out.retired_rows += rows;
+            out.retired.push((ctx.query, ctx.node));
+        }
+        for (ctx, _) in self.instant.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((ctx.query, ctx.node));
+        }
+        for r in self.prefills.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((r.ctx.query, r.ctx.node));
+        }
+        for r in self.decodes.drain(..) {
+            out.retired_rows += 1;
+            out.retired.push((r.ctx.query, r.ctx.node));
+        }
+        out
+    }
+
+    fn resident(&self) -> usize {
+        self.rejected.len() + self.instant.len() + self.prefills.len() + self.decodes.len()
     }
 }
 
@@ -357,16 +424,14 @@ impl BatchExecutor for SimEmbedExecutor {
             }
         }
         let mut embs = Vec::with_capacity(rows.len());
-        let mut i = 0;
-        while i < rows.len() {
-            let take = (rows.len() - i).min(self.max_batch);
+        for_chunks(rows.len(), self.max_batch, |start, take| {
             let started = Instant::now();
-            for row in &rows[i..i + take] {
+            for row in &rows[start..start + take] {
                 embs.push(synth_embedding(row, self.d_model));
             }
             charge_device(started, self.device.encoder_us(take));
-            i += take;
-        }
+            Ok(())
+        })?;
         for (ctx, start, count) in extents {
             emit(Completion {
                 query: ctx.query,
@@ -410,16 +475,14 @@ impl BatchExecutor for SimRerankExecutor {
             }
         }
         let mut scores = Vec::with_capacity(rows.len());
-        let mut i = 0;
-        while i < rows.len() {
-            let take = (rows.len() - i).min(self.max_batch);
+        for_chunks(rows.len(), self.max_batch, |start, take| {
             let started = Instant::now();
-            for row in &rows[i..i + take] {
+            for row in &rows[start..start + take] {
                 scores.push(synth_score(row));
             }
             charge_device(started, self.device.encoder_us(take));
-            i += take;
-        }
+            Ok(())
+        })?;
         for (ctx, start, count) in extents {
             emit(Completion {
                 query: ctx.query,
@@ -441,6 +504,13 @@ mod tests {
 
     fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
         RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
+    }
+
+    /// Drive a stepped executor until it drains, collecting completions.
+    fn run_to_idle(exec: &mut SimLlmExecutor, out: &mut Vec<Completion>) {
+        while exec.resident() > 0 {
+            exec.step(&mut |c| out.push(c)).unwrap();
+        }
     }
 
     #[test]
@@ -474,33 +544,29 @@ mod tests {
         let (tx, rx) = channel();
 
         // Prefill 10 tokens into seq (1, 0).
-        let batch = Batch {
-            jobs: vec![(
-                ctx(1, 0, tx.clone()),
-                EngineJob::Prefill { seq: (1, 0), tokens: vec![10; 10], offset: 0 },
-            )],
-        };
+        exec.admit(vec![(
+            ctx(1, 0, tx.clone()),
+            EngineJob::Prefill { seq: (1, 0), tokens: vec![10; 10], offset: 0 },
+        )]);
         let mut out = Vec::new();
-        exec.execute(batch, &mut |c| out.push(c)).unwrap();
+        run_to_idle(&mut exec, &mut out);
         assert_eq!(out.len(), 1);
         assert_eq!(store.lock().unwrap().get(&(1, 0)).unwrap().len, 10);
 
         // Decode 6 tokens in 2 segments streamed to marker nodes 8 and 9.
-        let batch = Batch {
-            jobs: vec![(
-                ctx(1, 5, tx),
-                EngineJob::Decode {
-                    seq: (1, 0),
-                    first_token: 42,
-                    segments: vec![
-                        SegmentSpec { node: 8, len: 3 },
-                        SegmentSpec { node: 9, len: 3 },
-                    ],
-                },
-            )],
-        };
+        exec.admit(vec![(
+            ctx(1, 5, tx),
+            EngineJob::Decode {
+                seq: (1, 0),
+                first_token: 42,
+                segments: vec![
+                    SegmentSpec { node: 8, len: 3 },
+                    SegmentSpec { node: 9, len: 3 },
+                ],
+            },
+        )]);
         let mut out = Vec::new();
-        exec.execute(batch, &mut |c| out.push(c)).unwrap();
+        run_to_idle(&mut exec, &mut out);
         drop(rx);
         // Two streamed segments + the final decode completion.
         assert_eq!(out.len(), 3);
@@ -518,6 +584,39 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(store.lock().unwrap().get(&(1, 0)).unwrap().len, 16);
+    }
+
+    #[test]
+    fn sim_llm_step_outcome_reports_retirement() {
+        let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+        let mut exec = SimLlmExecutor::new("llm-lite", store, 3, 2, 256);
+        let (tx, _rx) = channel();
+        exec.admit(vec![(
+            ctx(9, 1, tx.clone()),
+            EngineJob::Prefill { seq: (9, 0), tokens: vec![5; 4], offset: 0 },
+        )]);
+        assert_eq!(exec.resident(), 1);
+        let o = exec.step(&mut |_| {}).unwrap();
+        assert_eq!(o.retired_rows, 1);
+        assert_eq!(o.retired, vec![(9, 1)]);
+        assert_eq!(o.resident, 0);
+
+        exec.admit(vec![(
+            ctx(9, 2, tx),
+            EngineJob::Decode {
+                seq: (9, 0),
+                first_token: 7,
+                segments: vec![SegmentSpec { node: 2, len: 3 }],
+            },
+        )]);
+        // 3 planned tokens: two mid-steps, then retirement on the third.
+        let o = exec.step(&mut |_| {}).unwrap();
+        assert_eq!(o.retired_rows, 0);
+        assert_eq!(o.resident, 1);
+        let _ = exec.step(&mut |_| {}).unwrap();
+        let o = exec.step(&mut |_| {}).unwrap();
+        assert_eq!(o.retired_rows, 1);
+        assert_eq!(o.resident, 0);
     }
 
     #[test]

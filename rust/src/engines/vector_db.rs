@@ -13,7 +13,7 @@ use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::engines::instance::{spawn_instance, BatchExecutor, Instance};
-use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceFree, JobOutput, QueryId};
+use crate::engines::{Batch, Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput, QueryId};
 use crate::error::{Result, TeolaError};
 
 /// A stored chunk: unit-norm embedding + original tokens.
@@ -162,7 +162,7 @@ impl BatchExecutor for VectorDbExecutor {
 /// Spawn the vector-DB engine (model-free worker threads + shared store).
 pub fn spawn_vector_db(
     n_instances: usize,
-    free_tx: Sender<InstanceFree>,
+    free_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
 ) -> (Vec<Instance>, DbStore) {
     let store: DbStore = Arc::new(RwLock::new(HashMap::new()));

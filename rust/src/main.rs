@@ -8,10 +8,11 @@
 
 use teola::apps::{bind_answer_tokens, AppKind};
 use teola::baselines::Scheme;
-use teola::bench::{platform_for, run_trace, TraceRun};
+use teola::bench::{platform_for, TraceRun};
 use teola::engines::profile::ProfileRegistry;
 use teola::graph::template::QueryConfig;
 use teola::scheduler::Platform;
+use teola::serving::run_load;
 use teola::workload::DatasetKind;
 
 fn parse_flag(args: &[String], name: &str) -> Option<String> {
@@ -30,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -103,6 +104,20 @@ fn main() {
                 }
                 None => {}
             }
+            if let Some(us) =
+                parse_flag(&args, "--batch-window-us").and_then(|v| v.parse().ok())
+            {
+                cfg.batch_window_us = us;
+            }
+            match parse_flag(&args, "--continuous").as_deref() {
+                Some("on") | Some("1") | Some("true") => cfg.continuous = true,
+                Some("off") | Some("0") | Some("false") => cfg.continuous = false,
+                Some(other) => {
+                    eprintln!("unknown --continuous value {other:?} (want on|off)");
+                    std::process::exit(2);
+                }
+                None => {}
+            }
             let platform = Platform::start(&cfg).expect("platform");
             let run = TraceRun {
                 app,
@@ -113,19 +128,23 @@ fn main() {
                 n_queries: n,
                 seed: 42,
             };
-            let r = run_trace(&platform, &run).expect("trace");
+            let r = run_load(&platform, &run).expect("trace");
             println!(
-                "{} / {}: n={} rate={} -> mean {:.1} ms, p50 {:.1}, p90 {:.1}, p99 {:.1} (wall {:.1}s)",
+                "{} / {}: n={} rate={} -> mean {:.1} ms, p50 {:.1}, p95 {:.1}, p99 {:.1} (wall {:.1}s)",
                 app.name(),
                 scheme.name(),
                 n,
                 rate,
-                r.summary_ms.mean,
-                r.summary_ms.p50,
-                r.summary_ms.p90,
-                r.summary_ms.p99,
+                r.e2e_ms.mean,
+                r.e2e_ms.p50,
+                r.e2e_ms.p95,
+                r.e2e_ms.p99,
                 r.wall_s
             );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                r.write_json(&path).expect("write json report");
+                println!("wrote {path}");
+            }
             platform.shutdown();
         }
         _ => usage(),

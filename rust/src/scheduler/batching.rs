@@ -86,7 +86,7 @@ pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: us
             order.sort_by_key(|&i| queue[i].arrival);
             let class = job_class(&queue[order[0]].job);
             order.retain(|&i| job_class(&queue[i].job) == class);
-            take_rows(queue, order, max_slots, false)
+            take_rows(queue, order, max_slots, false, true)
         }
         BatchPolicy::PerInvocation => {
             // Oldest bundle only.
@@ -97,67 +97,88 @@ pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: us
                 .unwrap();
             let order: Vec<usize> =
                 (0..queue.len()).filter(|&i| queue[i].bundle == first).collect();
-            take_rows(queue, order, usize::MAX, false)
+            take_rows(queue, order, usize::MAX, false, true)
         }
         BatchPolicy::TopoAware => {
-            // Algorithm 2 Event 2.
-            // Bucket by query.
-            let mut buckets: BTreeMap<QueryId, Vec<usize>> = BTreeMap::new();
-            for (i, it) in queue.iter().enumerate() {
-                buckets.entry(it.query).or_default().push(i);
-            }
-            // Sort buckets by earliest arrival.
-            let mut bucket_list: Vec<(Instant, Vec<usize>)> = buckets
-                .into_values()
-                .map(|idxs| {
-                    let earliest = idxs.iter().map(|&i| queue[i].arrival).min().unwrap();
-                    (earliest, idxs)
-                })
-                .collect();
-            bucket_list.sort_by_key(|(t, _)| *t);
-            // Algorithm 2 line 14: sweep buckets taking each bucket's
-            // highest-depth nodes first, so other queries' contributive
-            // primitives share the batch before a query's lower-depth
-            // siblings (Fig. 7).  If slots remain after the first sweep,
-            // continue with the next depth level down — idle slots help
-            // nobody.
-            let mut order = Vec::new();
-            let mut remaining: Vec<Vec<usize>> =
-                bucket_list.into_iter().map(|(_, idxs)| idxs).collect();
-            while remaining.iter().any(|b| !b.is_empty()) {
-                for bucket in remaining.iter_mut() {
-                    if bucket.is_empty() {
-                        continue;
-                    }
-                    let maxd = bucket.iter().map(|&i| queue[i].depth).max().unwrap();
-                    let mut level: Vec<usize> = bucket
-                        .iter()
-                        .copied()
-                        .filter(|&i| queue[i].depth == maxd)
-                        .collect();
-                    bucket.retain(|&i| queue[i].depth != maxd);
-                    level.sort_by_key(|&i| queue[i].arrival);
-                    order.extend(level);
-                }
-            }
-            // Restrict to the highest-priority item's class.
+            // Algorithm 2 Event 2, restricted to the highest-priority
+            // item's class.
+            let mut order = topo_order(queue);
             if let Some(&first) = order.first() {
                 let class = job_class(&queue[first].job);
                 order.retain(|&i| job_class(&queue[i].job) == class);
             }
-            take_rows(queue, order, max_slots, true)
+            take_rows(queue, order, max_slots, true, true)
         }
     }
+}
+
+/// Continuous-admission path (stepped engines only): choose the next
+/// items, in topology-aware priority order, to join a *partially
+/// occupied* instance mid-flight, bounded by its spare slot budget.
+/// Unlike [`form_batch`] there is no job-class restriction — the stepped
+/// executor interleaves chunked-prefill calls and decode iterations
+/// internally — and an oversized item is never admitted over budget (it
+/// waits for a drained instance with the full slot budget).
+pub fn form_continuous_admission(queue: &mut Vec<QueueItem>, spare_rows: usize) -> Vec<QueueItem> {
+    if queue.is_empty() || spare_rows == 0 {
+        return Vec::new();
+    }
+    let order = topo_order(queue);
+    take_rows(queue, order, spare_rows, true, false)
+}
+
+/// Algorithm 2's priority order over the whole queue: bucket by query,
+/// order buckets by earliest arrival, then sweep buckets taking each
+/// bucket's highest-depth nodes first, so other queries' contributive
+/// primitives come before a query's lower-depth siblings (Fig. 7); the
+/// sweep continues level by level — idle slots help nobody.
+fn topo_order(queue: &[QueueItem]) -> Vec<usize> {
+    let mut buckets: BTreeMap<QueryId, Vec<usize>> = BTreeMap::new();
+    for (i, it) in queue.iter().enumerate() {
+        buckets.entry(it.query).or_default().push(i);
+    }
+    let mut bucket_list: Vec<(Instant, Vec<usize>)> = buckets
+        .into_values()
+        .map(|idxs| {
+            let earliest = idxs.iter().map(|&i| queue[i].arrival).min().unwrap();
+            (earliest, idxs)
+        })
+        .collect();
+    bucket_list.sort_by_key(|(t, _)| *t);
+    let mut order = Vec::new();
+    let mut remaining: Vec<Vec<usize>> =
+        bucket_list.into_iter().map(|(_, idxs)| idxs).collect();
+    while remaining.iter().any(|b| !b.is_empty()) {
+        for bucket in remaining.iter_mut() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let maxd = bucket.iter().map(|&i| queue[i].depth).max().unwrap();
+            let mut level: Vec<usize> = bucket
+                .iter()
+                .copied()
+                .filter(|&i| queue[i].depth == maxd)
+                .collect();
+            bucket.retain(|&i| queue[i].depth != maxd);
+            level.sort_by_key(|&i| queue[i].arrival);
+            order.extend(level);
+        }
+    }
+    order
 }
 
 /// Remove items in `order` while row budget lasts.  `skip_over` lets the
 /// topology-aware policy pass over an oversized item to admit later
 /// smaller ones (slot packing); FIFO policies stop at the first overflow.
+/// `admit_oversized` lets a single item exceeding the whole budget go out
+/// alone (the engine splits internally); the continuous-admission path
+/// disables it because a mid-flight instance has only its spare slots.
 fn take_rows(
     queue: &mut Vec<QueueItem>,
     order: Vec<usize>,
     max_slots: usize,
     skip_over: bool,
+    admit_oversized: bool,
 ) -> Vec<QueueItem> {
     let mut slots = max_slots;
     let mut chosen: Vec<usize> = Vec::new();
@@ -166,11 +187,10 @@ fn take_rows(
         if rows <= slots {
             slots -= rows;
             chosen.push(i);
-        } else if chosen.is_empty() {
+        } else if chosen.is_empty() && admit_oversized {
             // Oversized single item: admit alone (engine splits internally).
             chosen.push(i);
             slots = 0;
-            break;
         } else if !skip_over {
             break;
         }
@@ -263,6 +283,26 @@ mod tests {
         assert!(rows <= 10);
         // skip-over admits the 3-row item from query 2.
         assert!(batch.iter().any(|i| i.query == 2));
+    }
+
+    #[test]
+    fn continuous_admission_respects_spare_budget_and_skips_oversized() {
+        let t0 = Instant::now();
+        let mut q = vec![
+            item(1, 1, 2, 6, t0, 0),
+            item(2, 2, 2, 3, t0, 1),
+            item(3, 3, 2, 1, t0, 2),
+        ];
+        // 4 spare slots on a mid-flight instance: the 6-row item cannot
+        // join (no oversized admission), the 3- and 1-row items pack in.
+        let batch = form_continuous_admission(&mut q, 4);
+        let rows: usize = batch.iter().map(|i| i.rows).sum();
+        assert_eq!(rows, 4);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].rows, 6);
+        // Zero spare admits nothing.
+        assert!(form_continuous_admission(&mut q, 0).is_empty());
     }
 
     #[test]

@@ -1,64 +1,97 @@
 //! Lower-tier engine scheduler: owns the engine's instances, queues
 //! primitive requests from all queries, forms batches per policy and load
-//! balances across free instances (§5.2, §6).
+//! balances across instances (§5.2, §6).
+//!
+//! Dispatch runs in one of two modes, split by the engine's
+//! [`ExecMode`]:
+//!
+//! * **Full-batch** (encoder-style and model-free engines, and every
+//!   engine under the `BlindTO`/`PerInvocation` baselines): an instance
+//!   receives work only when fully drained (`loads == 0`), and each
+//!   dispatched batch runs to completion — the legacy protocol.
+//! * **Continuous** (stepped LLM engines under `TopoAware`, when
+//!   enabled): new work is admitted into *partially occupied* instances
+//!   mid-flight, bounded by their spare slot budget, in Algorithm 2
+//!   priority order.  A late-arriving short decode joins an in-flight
+//!   long decode's iteration loop instead of waiting behind its tail —
+//!   iteration-level continuous batching.
+//!
+//! Load accounting is event-driven: instances report per-step
+//! [`InstanceEvent`]s and the per-instance `loads` counter decreases by
+//! the retired rows, so occupancy is exact at iteration granularity.
 
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::engines::instance::Instance;
-use crate::engines::{Batch, InstanceFree};
-use crate::scheduler::batching::{form_batch, BatchPolicy, QueueItem};
+use crate::engines::{Batch, EngineJob, ExecMode, InstanceEvent, RequestCtx};
+use crate::scheduler::batching::{form_batch, form_continuous_admission, BatchPolicy, QueueItem};
 
 /// One engine's scheduler state (runs on its own thread).
 pub struct EngineScheduler {
     pub name: String,
     pub instances: Vec<Instance>,
-    pub free_rx: Receiver<InstanceFree>,
+    pub event_rx: Receiver<InstanceEvent>,
     pub job_rx: Receiver<QueueItem>,
     /// Shared, runtime-switchable policy (benches flip it per scheme).
     pub policy: Arc<AtomicU8>,
     /// Pre-tuned max batch rows (the TO tuning / Algorithm 2 slot budget);
     /// shared so harnesses can retune per experiment.
     pub max_slots: Arc<AtomicUsize>,
-    /// Load counter per instance (in-flight rows) for least-loaded routing.
+    /// Shared, runtime-switchable continuous-batching toggle (only
+    /// meaningful for `ExecMode::Stepped` engines under `TopoAware`).
+    pub continuous: Arc<AtomicBool>,
+    /// Dynamic-batching window in microseconds: when the queue holds
+    /// fewer rows than the slot budget, wait this long (from the oldest
+    /// arrival) for more requests before dispatching to an *idle*
+    /// instance — the Triton/vLLM-style accumulation delay the paper's
+    /// engines rely on.  Shared/atomic so benches and the CLI can sweep
+    /// it at runtime.
+    pub batch_window_us: Arc<AtomicU64>,
+    /// Whether this engine's executors run the stepped protocol.
+    mode: ExecMode,
+    /// In-flight rows per instance (admitted minus retired) for
+    /// least-loaded routing and spare-slot admission.
     loads: Vec<usize>,
-    in_flight_rows: Vec<usize>,
+    /// Instances whose channel died; never routed to again.
+    dead: Vec<bool>,
     queue: Vec<QueueItem>,
-    /// Dynamic-batching window: when the queue holds fewer rows than the
-    /// slot budget, wait this long (from the oldest arrival) for more
-    /// requests before dispatching — the Triton/vLLM-style accumulation
-    /// delay the paper's engines rely on.
-    batch_window: Duration,
 }
 
 impl EngineScheduler {
     /// Build a scheduler; `run()` consumes it on a dedicated thread.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         name: String,
         instances: Vec<Instance>,
-        free_rx: Receiver<InstanceFree>,
+        event_rx: Receiver<InstanceEvent>,
         job_rx: Receiver<QueueItem>,
         policy: Arc<AtomicU8>,
         max_slots: Arc<AtomicUsize>,
+        continuous: Arc<AtomicBool>,
+        batch_window_us: Arc<AtomicU64>,
+        mode: ExecMode,
     ) -> EngineScheduler {
         let n = instances.len();
         EngineScheduler {
             name,
             instances,
-            free_rx,
+            event_rx,
             job_rx,
             policy,
             max_slots,
+            continuous,
+            batch_window_us,
+            mode,
             loads: vec![0; n],
-            in_flight_rows: vec![0; n],
+            dead: vec![false; n],
             queue: Vec::new(),
-            batch_window: Duration::from_millis(3),
         }
     }
 
-    /// Scheduling loop: drain arrivals, mark freed instances, dispatch.
+    /// Scheduling loop: drain arrivals, fold in instance events, dispatch.
     pub fn run(mut self) {
         loop {
             // Block briefly for new work; exit when the platform drops.
@@ -66,82 +99,134 @@ impl EngineScheduler {
                 Ok(item) => self.queue.push(item),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
-                    if self.queue.is_empty() {
+                    let alive = self.dead.iter().any(|d| !d);
+                    if self.queue.is_empty() || !alive {
                         break;
                     }
+                    // The job channel is gone but queued work remains:
+                    // drain it at event pace instead of busy-spinning
+                    // (recv on a disconnected channel returns instantly).
+                    std::thread::sleep(Duration::from_micros(200));
                 }
             }
             // Drain everything already waiting.
             while let Ok(item) = self.job_rx.try_recv() {
                 self.queue.push(item);
             }
-            // Mark freed instances.
-            while let Ok(f) = self.free_rx.try_recv() {
-                self.instances[f.instance].busy = false;
-                self.loads[f.instance] =
-                    self.loads[f.instance].saturating_sub(self.in_flight_rows[f.instance]);
-                self.in_flight_rows[f.instance] = 0;
+            // Fold in per-step occupancy reports.
+            while let Ok(ev) = self.event_rx.try_recv() {
+                self.loads[ev.instance] = self.loads[ev.instance].saturating_sub(ev.retired);
             }
-            // Dispatch while a free instance and queued work exist.
-            loop {
-                let Some(inst) = self.pick_instance() else { break };
-                if self.queue.is_empty() {
-                    break;
-                }
-                let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
-                let slots = self.max_slots.load(Ordering::Relaxed).max(1);
-                // Dynamic-batching delay: give co-arriving requests a
-                // moment to accumulate unless the slot budget is already
-                // covered (or the policy bundles by construction).
-                if policy != BatchPolicy::PerInvocation {
-                    let rows: usize = self.queue.iter().map(|i| i.rows.max(1)).sum();
-                    let oldest = self.queue.iter().map(|i| i.arrival).min();
-                    if rows < slots {
-                        if let Some(t) = oldest {
-                            if t.elapsed() < self.batch_window {
-                                break;
-                            }
-                        }
-                    }
-                }
-                let items = form_batch(&mut self.queue, policy, slots);
-                if items.is_empty() {
-                    break;
-                }
-                let rows: usize = items.iter().map(|i| i.rows.max(1)).sum();
-                let jobs = items
-                    .into_iter()
-                    .map(|i| {
-                        (
-                            crate::engines::RequestCtx {
-                                query: i.query,
-                                node: i.node,
-                                depth: i.depth,
-                                arrival: i.arrival,
-                                reply: i.reply,
-                            },
-                            i.job,
-                        )
-                    })
-                    .collect();
-                self.loads[inst] += rows;
-                self.in_flight_rows[inst] = rows;
-                self.instances[inst].busy = true;
-                if self.instances[inst].sender.send(Batch { jobs }).is_err() {
-                    eprintln!("[{}] instance {inst} died", self.name);
-                    self.instances[inst].busy = true; // never pick again
-                }
-            }
+            self.dispatch();
         }
     }
 
-    /// Least-loaded free instance (KV-slot/request-count load balancing).
-    fn pick_instance(&self) -> Option<usize> {
-        self.instances
-            .iter()
-            .enumerate()
-            .filter(|(_, i)| !i.busy)
-            .min_by_key(|(idx, _)| self.loads[*idx])
-            .map(|(idx, _)| idx)
+    /// Dispatch while an eligible instance and queued work exist.
+    fn dispatch(&mut self) {
+        let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
+        let slots = self.max_slots.load(Ordering::Relaxed).max(1);
+        // Iteration-level admission applies to stepped engines under the
+        // topology-aware policy; the TO/PO baselines keep the legacy
+        // full-batch dispatch path untouched.
+        let continuous = self.mode == ExecMode::Stepped
+            && policy == BatchPolicy::TopoAware
+            && self.continuous.load(Ordering::Relaxed);
+        let window =
+            Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
+        loop {
+            if self.queue.is_empty() {
+                break;
+            }
+            let Some(inst) = self.pick_instance(continuous, slots) else { break };
+            let mid_flight = self.loads[inst] > 0;
+            // Dynamic-batching delay: give co-arriving requests a moment
+            // to accumulate before waking an idle instance, unless the
+            // slot budget is already covered (or the policy bundles by
+            // construction).  Joining an in-flight instance needs no
+            // delay — the resident batch *is* the accumulation.
+            if policy != BatchPolicy::PerInvocation && !mid_flight {
+                let rows: usize = self.queue.iter().map(|i| i.rows.max(1)).sum();
+                if rows < slots {
+                    if let Some(t) = self.queue.iter().map(|i| i.arrival).min() {
+                        if t.elapsed() < window {
+                            break;
+                        }
+                    }
+                }
+            }
+            let items = if mid_flight {
+                form_continuous_admission(
+                    &mut self.queue,
+                    slots.saturating_sub(self.loads[inst]),
+                )
+            } else {
+                form_batch(&mut self.queue, policy, slots)
+            };
+            if items.is_empty() {
+                break;
+            }
+            let rows: usize = items.iter().map(|i| i.rows.max(1)).sum();
+            let jobs: Vec<(RequestCtx, EngineJob)> = items
+                .into_iter()
+                .map(|i| {
+                    (
+                        RequestCtx {
+                            query: i.query,
+                            node: i.node,
+                            depth: i.depth,
+                            arrival: i.arrival,
+                            reply: i.reply,
+                        },
+                        i.job,
+                    )
+                })
+                .collect();
+            if let Err(unsent) = self.instances[inst].sender.send(Batch { jobs }) {
+                // Instance thread died: recover the unsent batch from the
+                // send error and requeue it so its queries don't hang,
+                // stop routing to the instance, and leave `loads`
+                // untouched (nothing was admitted) so least-loaded
+                // routing isn't skewed forever.
+                eprintln!(
+                    "[{}] instance {inst} died; requeueing {} job(s)",
+                    self.name,
+                    unsent.0.jobs.len()
+                );
+                self.dead[inst] = true;
+                for (ctx, job) in unsent.0.jobs {
+                    let rows = job.rows();
+                    self.queue.push(QueueItem {
+                        query: ctx.query,
+                        node: ctx.node,
+                        depth: ctx.depth,
+                        // Same per-node formula the graph scheduler uses
+                        // for invocation bundles.
+                        bundle: (ctx.query << 20) | ctx.node as u64,
+                        arrival: ctx.arrival,
+                        rows,
+                        job,
+                        reply: ctx.reply,
+                    });
+                }
+                continue;
+            }
+            self.loads[inst] += rows;
+        }
+    }
+
+    /// Least-loaded eligible instance.  Full-batch mode requires a fully
+    /// drained instance (legacy `busy` semantics); continuous mode admits
+    /// into any live instance with spare slot budget.
+    fn pick_instance(&self, continuous: bool, slots: usize) -> Option<usize> {
+        (0..self.instances.len())
+            .filter(|&i| !self.dead[i])
+            .filter(|&i| {
+                if continuous {
+                    self.loads[i] < slots
+                } else {
+                    self.loads[i] == 0
+                }
+            })
+            .min_by_key(|&i| self.loads[i])
     }
 }

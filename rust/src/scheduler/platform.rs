@@ -7,7 +7,7 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -16,7 +16,7 @@ use std::time::Instant;
 use crate::engines::profile::ProfileRegistry;
 use crate::engines::search::{Corpus, NetModel};
 use crate::engines::sim::ExecBackend;
-use crate::engines::{llm, search, vector_db, QueryId};
+use crate::engines::{llm, search, vector_db, ExecMode, QueryId};
 use crate::engines::embedding::spawn_embedding_engine;
 use crate::engines::reranker::spawn_reranker_engine;
 use crate::error::Result;
@@ -52,6 +52,15 @@ pub struct PlatformConfig {
     pub web_instances: usize,
     pub tool_instances: usize,
     pub policy: BatchPolicy,
+    /// Iteration-level continuous batching on the LLM engines: admit new
+    /// work into partially occupied instances between decode iterations.
+    /// Only active under `TopoAware` (the `BlindTO`/`PerInvocation`
+    /// baselines always use the legacy full-batch path); switchable at
+    /// runtime via [`Platform::set_continuous`].
+    pub continuous: bool,
+    /// Dynamic-batching accumulation window, microseconds; switchable at
+    /// runtime via [`Platform::set_batch_window_us`].
+    pub batch_window_us: u64,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -74,6 +83,8 @@ impl PlatformConfig {
             web_instances: 2,
             tool_instances: 2,
             policy: BatchPolicy::TopoAware,
+            continuous: true,
+            batch_window_us: 3_000,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -109,6 +120,8 @@ pub struct Platform {
     sched_handles: Vec<JoinHandle<()>>,
     policy: Arc<AtomicU8>,
     slots: HashMap<String, Arc<AtomicUsize>>,
+    continuous: Arc<AtomicBool>,
+    batch_window_us: Arc<AtomicU64>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -137,6 +150,8 @@ impl Platform {
         let mut sched_handles = Vec::new();
         let mut slots: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
         let policy = Arc::new(AtomicU8::new(cfg.policy.to_u8()));
+        let continuous = Arc::new(AtomicBool::new(cfg.continuous));
+        let batch_window_us = Arc::new(AtomicU64::new(cfg.batch_window_us));
         // Instances ack on this channel once their executor (including any
         // warm-up compilation) is constructed; start() blocks on all acks
         // so serving never races against compilation.
@@ -145,18 +160,21 @@ impl Platform {
 
         let mut spawn_sched = |name: String,
                                instances: Vec<crate::engines::instance::Instance>,
-                               free_rx,
+                               event_rx,
                                max_slots: usize,
-                               _p: BatchPolicy| {
+                               mode: ExecMode| {
             let (job_tx, job_rx) = channel::<QueueItem>();
             let slot_handle = Arc::new(AtomicUsize::new(max_slots));
             let sched = EngineScheduler::new(
                 name.clone(),
                 instances,
-                free_rx,
+                event_rx,
                 job_rx,
                 policy.clone(),
                 slot_handle.clone(),
+                continuous.clone(),
+                batch_window_us.clone(),
+                mode,
             );
             let h = std::thread::Builder::new()
                 .name(format!("sched-{name}"))
@@ -179,7 +197,7 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched(spec.name.clone(), instances, free_rx, spec.max_slots, cfg.policy);
+            spawn_sched(spec.name.clone(), instances, free_rx, spec.max_slots, ExecMode::Stepped);
         }
         {
             let (free_tx, free_rx) = channel();
@@ -198,7 +216,7 @@ impl Platform {
                 instances,
                 free_rx,
                 cfg.embedder.max_slots,
-                cfg.policy,
+                ExecMode::FullBatch,
             );
         }
         {
@@ -218,7 +236,7 @@ impl Platform {
                 instances,
                 free_rx,
                 cfg.reranker.max_slots,
-                cfg.policy,
+                ExecMode::FullBatch,
             );
         }
         {
@@ -226,7 +244,7 @@ impl Platform {
             let (instances, _store) =
                 vector_db::spawn_vector_db(cfg.vdb_instances, free_tx, ready_tx.clone());
             expected_ready += instances.len();
-            spawn_sched("vdb".into(), instances, free_rx, 64, cfg.policy);
+            spawn_sched("vdb".into(), instances, free_rx, 64, ExecMode::FullBatch);
         }
         let corpus = Arc::new(Corpus::synthetic(cfg.corpus_docs, 48, manifest.vocab.max(64), 11));
         {
@@ -239,7 +257,7 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("web".into(), instances, free_rx, 16, cfg.policy);
+            spawn_sched("web".into(), instances, free_rx, 16, ExecMode::FullBatch);
         }
         {
             let (free_tx, free_rx) = channel();
@@ -251,7 +269,7 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("tool".into(), instances, free_rx, 16, cfg.policy);
+            spawn_sched("tool".into(), instances, free_rx, 16, ExecMode::FullBatch);
         }
 
         // Block until every instance finished executor construction
@@ -262,13 +280,36 @@ impl Platform {
         }
 
         let sep = manifest.special.sep;
-        Ok(Platform { routers, sched_handles, policy, slots, profiles, manifest, sep })
+        Ok(Platform {
+            routers,
+            sched_handles,
+            policy,
+            slots,
+            continuous,
+            batch_window_us,
+            profiles,
+            manifest,
+            sep,
+        })
     }
 
     /// Switch every engine scheduler's batching policy at runtime (bench
     /// harnesses flip this per scheme without re-warming the engines).
     pub fn set_policy(&self, p: BatchPolicy) {
         self.policy.store(p.to_u8(), Ordering::Relaxed);
+    }
+
+    /// Toggle iteration-level continuous batching on the stepped (LLM)
+    /// engines at runtime; off means every engine uses the legacy
+    /// run-to-completion dispatch path.
+    pub fn set_continuous(&self, on: bool) {
+        self.continuous.store(on, Ordering::Relaxed);
+    }
+
+    /// Retune the dynamic-batching accumulation window at runtime
+    /// (microseconds; applies to every engine scheduler).
+    pub fn set_batch_window_us(&self, us: u64) {
+        self.batch_window_us.store(us, Ordering::Relaxed);
     }
 
     /// Retune one engine's slot budget (max batch rows) at runtime.

@@ -69,6 +69,22 @@ impl LoadReport {
     pub fn mean_exec_us(&self) -> f64 {
         mean(self.metrics.iter().map(|m| m.exec_us))
     }
+
+    /// Dump the latency percentiles to a JSON file (CI perf-trajectory
+    /// smoke artifacts, e.g. `BENCH_PR2.json`).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::json::{num, obj};
+        let doc = obj(vec![
+            ("n", num(self.latencies_ms.len() as f64)),
+            ("p50_ms", num(self.e2e_ms.p50)),
+            ("p95_ms", num(self.e2e_ms.p95)),
+            ("p99_ms", num(self.e2e_ms.p99)),
+            ("mean_ms", num(self.e2e_ms.mean)),
+            ("qps", num(self.qps)),
+            ("wall_s", num(self.wall_s)),
+        ]);
+        std::fs::write(path, doc.to_string())
+    }
 }
 
 fn mean(xs: impl Iterator<Item = u64>) -> f64 {
@@ -154,5 +170,22 @@ mod tests {
         let r = LoadReport::from_metrics(Vec::new(), 0.0);
         assert_eq!(r.e2e_ms.count, 0);
         assert_eq!(r.qps, 0.0);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let metrics: Vec<QueryMetrics> = (1..=10u64)
+            .map(|i| QueryMetrics { e2e_us: i * 1000, ..QueryMetrics::default() })
+            .collect();
+        let r = LoadReport::from_metrics(metrics, 1.0);
+        let path = std::env::temp_dir().join("teola_report_json_test.json");
+        r.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("n").and_then(|v| v.as_f64()), Some(10.0));
+        let p50 = doc.get("p50_ms").and_then(|v| v.as_f64()).unwrap();
+        let p99 = doc.get("p99_ms").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 <= p99);
+        let _ = std::fs::remove_file(&path);
     }
 }
