@@ -31,9 +31,10 @@ fn embed_total_time(platform: &Platform, n: usize, policy: BatchPolicy) -> f64 {
                 query: 9_000 + i as u64,
                 node: i,
                 depth: 1,
-                bundle: i as u64 / 4, // request-level bundles of 4
+                bundle: (0, i as u64 / 4), // request-level bundles of 4
                 arrival: Instant::now(),
                 rows: 1,
+                prefix: None,
                 job: EngineJob::Embed { chunks: vec![chunk] },
                 reply: tx.clone(),
             })
@@ -114,13 +115,15 @@ fn main() {
                     query,
                     node,
                     depth: 9,
-                    bundle: query,
+                    bundle: (query, node as u64),
                     arrival: Instant::now(),
                     rows: 1,
+                    prefix: None,
                     job: EngineJob::Prefill {
                         seq: (query, seq),
                         tokens: (0..64).map(|i| 5 + i % 900).collect(),
                         offset: 0,
+                        prefix: None,
                     },
                     reply: tx.clone(),
                 })
@@ -142,9 +145,10 @@ fn main() {
                 query,
                 node,
                 depth,
-                bundle: query,
+                bundle: (query, node as u64),
                 arrival: Instant::now(),
                 rows: 1,
+                prefix: None,
                 job: EngineJob::Decode {
                     seq: (query, seq),
                     first_token: tok,
@@ -159,13 +163,15 @@ fn main() {
                 query: dummy_q,
                 node: 0,
                 depth: 9,
-                bundle: dummy_q,
+                bundle: (dummy_q, 0),
                 arrival: Instant::now(),
                 rows: 1,
+                prefix: None,
                 job: EngineJob::Prefill {
                     seq: (dummy_q, 0),
                     tokens: (0..32).map(|i| 5 + i % 900).collect(),
                     offset: 0,
+                    prefix: None,
                 },
                 reply: tx.clone(),
             })

@@ -137,10 +137,23 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
     // Scheduler knobs for bench sweeps: dynamic-batching window and the
     // continuous-batching toggle (both also runtime-switchable on the
     // Platform).
-    if let Some(us) =
-        std::env::var("TEOLA_BATCH_WINDOW_US").ok().and_then(|v| v.parse().ok())
-    {
-        cfg.batch_window_us = us;
+    if let Ok(v) = std::env::var("TEOLA_BATCH_WINDOW_US") {
+        match v.parse() {
+            Ok(us) => cfg.batch_window_us = us,
+            Err(_) => eprintln!(
+                "warning: unparseable TEOLA_BATCH_WINDOW_US={v:?}; keeping {}",
+                cfg.batch_window_us
+            ),
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_PREFIX_SLOTS") {
+        match v.parse() {
+            Ok(n) => cfg.prefix_slots = n,
+            Err(_) => eprintln!(
+                "warning: unparseable TEOLA_PREFIX_SLOTS={v:?}; keeping {}",
+                cfg.prefix_slots
+            ),
+        }
     }
     if let Ok(v) = std::env::var("TEOLA_CONTINUOUS") {
         // Same token set as the CLI's --continuous flag.

@@ -22,11 +22,13 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engines::instance::{spawn_stepped_instance, Instance, StepExecutor, StepOutcome};
+use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::{charge_device, DeviceModel};
 use crate::engines::{
     Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput, RequestCtx, SegmentSpec, SeqId,
@@ -133,6 +135,14 @@ struct PrefillRow {
     /// False for an intermediate piece of an oversized chunk (completes
     /// silently; the final piece emits the completion).
     last: bool,
+    /// Shared-instruction fingerprint (registration key after a
+    /// from-scratch prefill computes the prefix KV).
+    prefix: Option<PrefixFp>,
+}
+
+/// A resident instruction prefix: its KV planes (positions >= len zeroed).
+struct PrefixKv {
+    kv: Vec<f32>,
 }
 
 /// A decode job admitted but not yet seated into the resident batch.
@@ -243,12 +253,22 @@ pub struct LlmExecutor {
     prefills: VecDeque<PrefillRow>,
     pending_decodes: VecDeque<PendingDecode>,
     decode_batch: Option<ResidentDecode>,
+    /// Resident instruction prefixes of this instance: a hit clones the
+    /// prefix KV rows into the new sequence instead of recomputing them.
+    prefixes: PrefixRegistry<PrefixKv>,
 }
 
 impl LlmExecutor {
     /// Build an executor bound to this thread; optionally pre-compile all
-    /// of the variant's buckets.
-    pub fn new(manifest: Rc<Manifest>, variant: &str, store: SeqStore, warm: bool) -> Result<LlmExecutor> {
+    /// of the variant's buckets.  `prefix_slots` is the shared
+    /// resident-prefix budget handle (0 disables prefix caching).
+    pub fn new(
+        manifest: Rc<Manifest>,
+        variant: &str,
+        store: SeqStore,
+        warm: bool,
+        prefix_slots: Arc<AtomicUsize>,
+    ) -> Result<LlmExecutor> {
         let dims = LlmDims::from_manifest(&manifest, variant)?;
         let prefill_buckets = manifest.prefill_buckets(variant);
         let decode_batches = manifest.decode_batches(variant);
@@ -282,6 +302,7 @@ impl LlmExecutor {
             prefills: VecDeque::new(),
             pending_decodes: VecDeque::new(),
             decode_batch: None,
+            prefixes: PrefixRegistry::new(prefix_slots),
         })
     }
 
@@ -447,6 +468,7 @@ impl LlmExecutor {
                     tokens: head,
                     offset: r.offset,
                     last: false,
+                    prefix: r.prefix,
                 };
                 r.offset += max_c;
                 // Requeue the remainder at the back: independent rows
@@ -513,10 +535,23 @@ impl LlmExecutor {
         let next = outp[2].to_vec::<i32>()?;
 
         // Write back sequence states; emit + retire the final pieces.
+        // A from-scratch piece that covered its full fingerprinted prefix
+        // also registers a zero-suffixed copy of its fresh KV as a
+        // resident prefix, so later queries sharing the instruction clone
+        // it instead of recomputing.  (Hit rows were trimmed at
+        // admission, so their offset is nonzero and they skip
+        // registration; their LRU recency was refreshed by the hit.)
         {
             let mut store = self.store.lock().unwrap();
             for (b, r) in rows.iter().enumerate() {
                 let kv_seq = unpack_kv(&self.dims, &kv_out, bb, b);
+                if let Some(fp) = r.prefix {
+                    if r.offset == 0 && r.tokens.len().min(bc) >= fp.len {
+                        let mut kv = kv_seq.clone();
+                        zero_after(&self.dims, &mut kv, fp.len);
+                        self.prefixes.insert(fp, PrefixKv { kv });
+                    }
+                }
                 let new_len = r.offset + r.tokens.len().min(bc);
                 store.insert(r.seq, SeqState { kv: kv_seq, len: new_len });
             }
@@ -655,8 +690,30 @@ impl StepExecutor for LlmExecutor {
     fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
         for (ctx, job) in jobs {
             match job {
-                EngineJob::Prefill { seq, tokens, offset } => {
-                    self.prefills.push_back(PrefillRow { ctx, seq, tokens, offset, last: true });
+                EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {
+                    // Resident-prefix hit: clone the instruction KV rows
+                    // into the new sequence instead of recomputing them,
+                    // then prefill only the un-cached suffix.
+                    if let Some(fp) = prefix {
+                        if offset == 0 && tokens.len() > fp.len {
+                            if let Some(p) = self.prefixes.hit(fp) {
+                                self.store
+                                    .lock()
+                                    .unwrap()
+                                    .insert(seq, SeqState { kv: p.kv.clone(), len: fp.len });
+                                tokens.drain(..fp.len);
+                                offset = fp.len;
+                            }
+                        }
+                    }
+                    self.prefills.push_back(PrefillRow {
+                        ctx,
+                        seq,
+                        tokens,
+                        offset,
+                        last: true,
+                        prefix,
+                    });
                 }
                 EngineJob::Decode { seq, first_token, segments } => {
                     self.pending_decodes.push_back(PendingDecode {
@@ -765,6 +822,7 @@ pub fn spawn_llm_engine(
     backend: crate::engines::sim::ExecBackend,
     event_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
+    prefix_slots: Arc<AtomicUsize>,
 ) -> (Vec<Instance>, SeqStore) {
     use crate::engines::sim::{ExecBackend, SimLlmExecutor};
 
@@ -778,12 +836,13 @@ pub fn spawn_llm_engine(
                 let store_c = store.clone();
                 let dir_c = dir.clone();
                 let variant_c = variant.to_string();
+                let slots_c = prefix_slots.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
                         let m = Rc::new(Manifest::load(dir_c)?);
-                        LlmExecutor::new(m, &variant_c, store_c, warm)
+                        LlmExecutor::new(m, &variant_c, store_c, warm, slots_c)
                     },
                     event_tx.clone(),
                     ready_tx.clone(),
@@ -799,12 +858,13 @@ pub fn spawn_llm_engine(
             for i in 0..n_instances {
                 let store_c = store.clone();
                 let variant_c = variant.to_string();
+                let slots_c = prefix_slots.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
                         Ok::<_, crate::error::TeolaError>(SimLlmExecutor::new(
-                            &variant_c, store_c, sep, eos, max_seq,
+                            &variant_c, store_c, sep, eos, max_seq, slots_c,
                         ))
                     },
                     event_tx.clone(),

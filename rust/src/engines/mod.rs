@@ -21,12 +21,14 @@
 pub mod embedding;
 pub mod instance;
 pub mod llm;
+pub mod prefix;
 pub mod profile;
 pub mod reranker;
 pub mod search;
 pub mod sim;
 pub mod vector_db;
 
+pub use prefix::{prefix_fingerprint, PrefixFp};
 pub use sim::ExecBackend;
 
 use std::sync::mpsc::Sender;
@@ -71,10 +73,15 @@ pub struct SegmentSpec {
 #[derive(Debug, Clone)]
 pub enum EngineJob {
     /// Chunked (partial or full) prefill of `tokens` into `seq` at `offset`.
+    /// `prefix` fingerprints the leading shared-instruction tokens (set by
+    /// the graph scheduler on from-scratch prefills whose first prompt part
+    /// is a `Const` instruction template): the engine scheduler routes on
+    /// it and a holding instance serves the prefix from its resident KV.
     Prefill {
         seq: SeqId,
         tokens: Vec<i32>,
         offset: usize,
+        prefix: Option<PrefixFp>,
     },
     /// Autoregressive decode after the seq's prefill completed.
     /// `segments` partitions the planned output; unsplit decodes use a
@@ -119,6 +126,15 @@ impl EngineJob {
         self.rows().max(1)
     }
 
+    /// Shared-prompt-prefix fingerprint of the job, if it carries one
+    /// (prefills only) — the engine scheduler's routing signal.
+    pub fn prefix(&self) -> Option<PrefixFp> {
+        match self {
+            EngineJob::Prefill { prefix, .. } => *prefix,
+            _ => None,
+        }
+    }
+
     /// Number of model "rows" this job contributes to a batch (for slot
     /// accounting in Algorithm 2).
     pub fn rows(&self) -> usize {
@@ -149,6 +165,10 @@ pub enum JobOutput {
     Scores(Vec<f32>),
     /// Side-effect only.
     Unit,
+    /// The engine could not serve the job and never will (e.g. every
+    /// instance of the engine is dead): the query must fail instead of
+    /// waiting for a completion that cannot come.
+    Failed(String),
 }
 
 /// Execution timing recorded by the instance for metrics/fig12.

@@ -1,0 +1,164 @@
+//! Cross-query KV prefix sharing (§8 scaling discussion; cf. Parrot /
+//! SGLang-style prompt-structure exposure).
+//!
+//! The paper's apps prepend a shared instruction template (~60 tokens) to
+//! every LLM call, so under serving load every query re-prefills the same
+//! leading tokens.  The graph scheduler fingerprints the leading `Const`
+//! prompt part when it lowers a from-scratch prefill; the fingerprint
+//! travels with the job ([`crate::engines::EngineJob::Prefill`]) and its
+//! queue item, the engine scheduler routes the job to an instance already
+//! holding the prefix (affinity traded against load imbalance), and the
+//! stepped LLM executors consume the hit — the sim executor charges only
+//! the un-cached suffix's prefill time, the XLA executor clones the
+//! resident prefix KV rows instead of recomputing them.
+//!
+//! Residency is bounded: every instance keeps at most
+//! `PlatformConfig::prefix_slots` prefixes in an LRU registry
+//! ([`PrefixRegistry`]); the engine scheduler mirrors the registries for
+//! routing.  A budget of 0 disables the feature entirely (no routing, no
+//! caching) — the on/off comparison `tests/prefix_routing.rs` benches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Prefixes shorter than this are not worth fingerprinting (the clone /
+/// bookkeeping overhead rivals the saved prefill).
+pub const MIN_PREFIX_LEN: usize = 4;
+
+/// Fingerprint of a shared leading prompt prefix: content hash + token
+/// length.  Two prefills with equal fingerprints share their first `len`
+/// prompt tokens (FNV-1a collisions are ignorable at this scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixFp {
+    pub hash: u64,
+    pub len: usize,
+}
+
+/// Fingerprint a token prefix (FNV-1a over the tokens).
+pub fn prefix_fingerprint(tokens: &[i32]) -> PrefixFp {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    PrefixFp { hash: h, len: tokens.len() }
+}
+
+/// LRU set of resident prefixes with a shared, runtime-switchable
+/// capacity.  Used twice per engine: each instance's executor keeps the
+/// authoritative registry (payload `T` = the prefix KV, or `()` on the
+/// sim path where KV is virtual), and the engine scheduler keeps a
+/// `PrefixRegistry<()>` mirror per instance for affinity routing.  Both
+/// share one capacity handle so retuning `prefix_slots` applies
+/// everywhere at once; capacity 0 disables lookups and drops all
+/// entries at the next insert.
+#[derive(Debug)]
+pub struct PrefixRegistry<T> {
+    cap: Arc<AtomicUsize>,
+    /// LRU order: least recently used first.
+    entries: Vec<(PrefixFp, T)>,
+}
+
+impl<T> PrefixRegistry<T> {
+    /// New registry bound to a shared capacity handle.
+    pub fn new(cap: Arc<AtomicUsize>) -> PrefixRegistry<T> {
+        PrefixRegistry { cap, entries: Vec::new() }
+    }
+
+    /// Current capacity (0 = feature disabled).
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Resident prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Non-touching residency probe (routing peek).
+    pub fn contains(&self, fp: PrefixFp) -> bool {
+        self.cap() > 0 && self.entries.iter().any(|(f, _)| *f == fp)
+    }
+
+    /// Touching lookup: on residency, the prefix moves to most-recently
+    /// used and its payload is returned.
+    pub fn hit(&mut self, fp: PrefixFp) -> Option<&T> {
+        if self.cap() == 0 {
+            return None;
+        }
+        let i = self.entries.iter().position(|(f, _)| *f == fp)?;
+        let e = self.entries.remove(i);
+        self.entries.push(e);
+        Some(&self.entries.last().unwrap().1)
+    }
+
+    /// Insert (or refresh) a prefix as most-recently used, evicting from
+    /// the LRU end down to the current capacity.
+    pub fn insert(&mut self, fp: PrefixFp, payload: T) {
+        let cap = self.cap();
+        if cap == 0 {
+            self.entries.clear();
+            return;
+        }
+        if let Some(i) = self.entries.iter().position(|(f, _)| *f == fp) {
+            self.entries.remove(i);
+        }
+        self.entries.push((fp, payload));
+        while self.entries.len() > cap {
+            self.entries.remove(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(seed: i32) -> PrefixFp {
+        prefix_fingerprint(&[seed, seed + 1, seed + 2, seed + 3])
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        assert_eq!(prefix_fingerprint(&[1, 2, 3]), prefix_fingerprint(&[1, 2, 3]));
+        assert_ne!(prefix_fingerprint(&[1, 2, 3]).hash, prefix_fingerprint(&[1, 2, 4]).hash);
+        assert_eq!(prefix_fingerprint(&[1, 2, 3]).len, 3);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cap = Arc::new(AtomicUsize::new(2));
+        let mut r: PrefixRegistry<u32> = PrefixRegistry::new(cap);
+        r.insert(fp(1), 10);
+        r.insert(fp(2), 20);
+        // Touch fp(1) so fp(2) becomes the LRU entry.
+        assert_eq!(r.hit(fp(1)), Some(&10));
+        r.insert(fp(3), 30);
+        assert!(r.contains(fp(1)));
+        assert!(!r.contains(fp(2)), "LRU entry must be evicted");
+        assert!(r.contains(fp(3)));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_everything() {
+        let cap = Arc::new(AtomicUsize::new(0));
+        let mut r: PrefixRegistry<()> = PrefixRegistry::new(cap.clone());
+        r.insert(fp(1), ());
+        assert!(r.is_empty());
+        assert!(!r.contains(fp(1)));
+        assert_eq!(r.hit(fp(1)), None);
+        // Capacity shrink to zero drops residents on the next insert.
+        cap.store(2, Ordering::Relaxed);
+        r.insert(fp(1), ());
+        assert_eq!(r.len(), 1);
+        cap.store(0, Ordering::Relaxed);
+        r.insert(fp(2), ());
+        assert!(r.is_empty());
+    }
+}

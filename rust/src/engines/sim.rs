@@ -18,10 +18,13 @@
 //! regardless of policy, load, or mid-flight admission.
 
 use std::collections::VecDeque;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engines::instance::{for_chunks, BatchExecutor, StepExecutor, StepOutcome};
 use crate::engines::llm::{SeqState, SeqStore};
+use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::{charge_device, DeviceModel};
 use crate::engines::{
     Batch, Completion, EngineJob, ExecTiming, JobOutput, RequestCtx, SegmentSpec, SeqId,
@@ -111,6 +114,7 @@ struct SimPrefillRow {
     seq: SeqId,
     tokens: Vec<i32>,
     offset: usize,
+    prefix: Option<PrefixFp>,
 }
 
 /// One resident decode sequence: all per-row loop state lives here so the
@@ -150,11 +154,26 @@ pub struct SimLlmExecutor {
     rejected: Vec<(RequestCtx, usize)>,
     prefills: VecDeque<SimPrefillRow>,
     decodes: Vec<SimDecodeRow>,
+    /// Resident instruction prefixes of this instance (the KV itself is
+    /// virtual on the sim path; residency is what matters for charging).
+    prefixes: PrefixRegistry<()>,
+    /// Valid prefill tokens charged so far (resident-prefix hits charge
+    /// only the suffix) — the test/metric observable for prefix reuse.
+    charged_prefill_tokens: usize,
 }
 
 impl SimLlmExecutor {
     /// Build an executor for an LLM variant (no artifacts required).
-    pub fn new(variant: &str, store: SeqStore, sep: i32, eos: i32, max_seq: usize) -> SimLlmExecutor {
+    /// `prefix_slots` is the shared resident-prefix budget handle (0
+    /// disables prefix caching).
+    pub fn new(
+        variant: &str,
+        store: SeqStore,
+        sep: i32,
+        eos: i32,
+        max_seq: usize,
+        prefix_slots: Arc<AtomicUsize>,
+    ) -> SimLlmExecutor {
         SimLlmExecutor {
             store,
             device: DeviceModel::for_engine(variant),
@@ -166,7 +185,15 @@ impl SimLlmExecutor {
             rejected: Vec::new(),
             prefills: VecDeque::new(),
             decodes: Vec::new(),
+            prefixes: PrefixRegistry::new(prefix_slots),
+            charged_prefill_tokens: 0,
         }
+    }
+
+    /// Total valid prefill tokens this instance has charged device time
+    /// for (prefix hits charge only the un-cached suffix).
+    pub fn charged_prefill_tokens(&self) -> usize {
+        self.charged_prefill_tokens
     }
 
     /// Execute the queued host-side bookkeeping ops.
@@ -204,6 +231,7 @@ impl SimLlmExecutor {
         let rows: Vec<SimPrefillRow> = self.prefills.drain(..).collect();
         let started = Instant::now();
         let valid: usize = rows.iter().map(|r| r.tokens.len()).sum();
+        self.charged_prefill_tokens += valid;
         let mut next = Vec::with_capacity(rows.len());
         {
             let mut store = self.store.lock().unwrap();
@@ -211,6 +239,18 @@ impl SimLlmExecutor {
                 let new_len = (r.offset + r.tokens.len()).min(self.max_seq);
                 store.insert(r.seq, SeqState { kv: Vec::new(), len: new_len });
                 next.push(synth_token(r.seq, new_len));
+            }
+        }
+        // Register freshly computed instruction prefixes: a from-scratch
+        // row that covered its full fingerprinted prefix now holds that
+        // KV, so later queries sharing it can prefill the suffix only.
+        // (Hit rows were trimmed at admission — their offset is nonzero —
+        // so they only refresh LRU recency, which `admit` already did.)
+        for r in &rows {
+            if let Some(fp) = r.prefix {
+                if r.offset == 0 && r.tokens.len() >= fp.len {
+                    self.prefixes.insert(fp, ());
+                }
             }
         }
         charge_device(started, self.device.prefill_us(1, valid));
@@ -303,8 +343,28 @@ impl StepExecutor for SimLlmExecutor {
     fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
         for (ctx, job) in jobs {
             match job {
-                EngineJob::Prefill { seq, tokens, offset } => {
-                    self.prefills.push_back(SimPrefillRow { ctx, seq, tokens, offset });
+                EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {
+                    // Resident-prefix hit: the shared instruction KV is
+                    // already on this instance — seed the sequence at the
+                    // prefix boundary and prefill only the suffix, so the
+                    // device charge covers the un-cached tokens alone.
+                    // Output arithmetic is untouched (the final KV length
+                    // is offset + tokens regardless), keeping sim runs
+                    // deterministic with routing on or off.
+                    if let Some(fp) = prefix {
+                        if offset == 0
+                            && tokens.len() > fp.len
+                            && self.prefixes.hit(fp).is_some()
+                        {
+                            self.store
+                                .lock()
+                                .unwrap()
+                                .insert(seq, SeqState { kv: Vec::new(), len: fp.len });
+                            tokens.drain(..fp.len);
+                            offset = fp.len;
+                        }
+                    }
+                    self.prefills.push_back(SimPrefillRow { ctx, seq, tokens, offset, prefix });
                 }
                 EngineJob::Decode { seq, segments, .. } => {
                     let base_len = self
@@ -506,6 +566,10 @@ mod tests {
         RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
     }
 
+    fn no_prefix_slots() -> Arc<AtomicUsize> {
+        Arc::new(AtomicUsize::new(0))
+    }
+
     /// Drive a stepped executor until it drains, collecting completions.
     fn run_to_idle(exec: &mut SimLlmExecutor, out: &mut Vec<Completion>) {
         while exec.resident() > 0 {
@@ -540,13 +604,13 @@ mod tests {
     fn sim_llm_prefill_then_decode_streams_segments() {
         let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
         let mut exec =
-            SimLlmExecutor::new("llm-lite", store.clone(), 3, 2, 256);
+            SimLlmExecutor::new("llm-lite", store.clone(), 3, 2, 256, no_prefix_slots());
         let (tx, rx) = channel();
 
         // Prefill 10 tokens into seq (1, 0).
         exec.admit(vec![(
             ctx(1, 0, tx.clone()),
-            EngineJob::Prefill { seq: (1, 0), tokens: vec![10; 10], offset: 0 },
+            EngineJob::Prefill { seq: (1, 0), tokens: vec![10; 10], offset: 0, prefix: None },
         )]);
         let mut out = Vec::new();
         run_to_idle(&mut exec, &mut out);
@@ -589,11 +653,11 @@ mod tests {
     #[test]
     fn sim_llm_step_outcome_reports_retirement() {
         let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
-        let mut exec = SimLlmExecutor::new("llm-lite", store, 3, 2, 256);
+        let mut exec = SimLlmExecutor::new("llm-lite", store, 3, 2, 256, no_prefix_slots());
         let (tx, _rx) = channel();
         exec.admit(vec![(
             ctx(9, 1, tx.clone()),
-            EngineJob::Prefill { seq: (9, 0), tokens: vec![5; 4], offset: 0 },
+            EngineJob::Prefill { seq: (9, 0), tokens: vec![5; 4], offset: 0, prefix: None },
         )]);
         assert_eq!(exec.resident(), 1);
         let o = exec.step(&mut |_| {}).unwrap();

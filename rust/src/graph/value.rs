@@ -30,6 +30,9 @@ impl Value {
             JobOutput::Embeddings(e) => Value::Embeddings(e),
             JobOutput::Scores(s) => Value::Scores(s),
             JobOutput::Unit => Value::Unit,
+            // Failure completions are intercepted by the query runner
+            // before conversion; a stray one degrades to Skipped.
+            JobOutput::Failed(_) => Value::Skipped,
         }
     }
 

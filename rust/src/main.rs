@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -104,10 +104,23 @@ fn main() {
                 }
                 None => {}
             }
-            if let Some(us) =
-                parse_flag(&args, "--batch-window-us").and_then(|v| v.parse().ok())
-            {
-                cfg.batch_window_us = us;
+            if let Some(v) = parse_flag(&args, "--batch-window-us") {
+                match v.parse() {
+                    Ok(us) => cfg.batch_window_us = us,
+                    Err(_) => {
+                        eprintln!("bad --batch-window-us value {v:?} (want an integer)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(v) = parse_flag(&args, "--prefix-slots") {
+                match v.parse() {
+                    Ok(n) => cfg.prefix_slots = n,
+                    Err(_) => {
+                        eprintln!("bad --prefix-slots value {v:?} (want an integer)");
+                        std::process::exit(2);
+                    }
+                }
             }
             match parse_flag(&args, "--continuous").as_deref() {
                 Some("on") | Some("1") | Some("true") => cfg.continuous = true,

@@ -14,7 +14,13 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::engines::{Completion, EngineJob, QueryId};
+use crate::engines::{Completion, EngineJob, PrefixFp, QueryId};
+
+/// Invocation-bundle identity: `(query, node)`.  Kept as a structured key
+/// — the packed `(query << 20) | node` form collided when a node id
+/// reached 2^20 and bled into the query bits, silently merging unrelated
+/// invocations into one PO bundle.
+pub type BundleId = (QueryId, u64);
 
 /// Batch-compatibility class of a job: prefill-type and decode-type LLM
 /// work never share a batch (a decode joining a prefill batch would wait
@@ -64,9 +70,12 @@ pub struct QueueItem {
     /// Reverse-topological depth (Algorithm 2 priority).
     pub depth: u32,
     /// Invocation bundle id (PO bundles; Teola uses one bundle per node).
-    pub bundle: u64,
+    pub bundle: BundleId,
     pub arrival: Instant,
     pub rows: usize,
+    /// Shared-prompt-prefix fingerprint of a prefill job (None for every
+    /// other job kind): the engine scheduler's routing signal.
+    pub prefix: Option<PrefixFp>,
     pub job: EngineJob,
     pub reply: Sender<Completion>,
 }
@@ -125,6 +134,21 @@ pub fn form_continuous_admission(queue: &mut Vec<QueueItem>, spare_rows: usize) 
     }
     let order = topo_order(queue);
     take_rows(queue, order, spare_rows, true, false)
+}
+
+/// Index of the item `form_batch` would dispatch first under `policy` —
+/// the queue's head in priority order.  The engine scheduler reads its
+/// prefix fingerprint *before* forming a batch so instance choice (prefix
+/// affinity) can precede batch formation.
+pub fn head_index(queue: &[QueueItem], policy: BatchPolicy) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
+    }
+    match policy {
+        BatchPolicy::TopoAware => topo_order(queue).first().copied(),
+        BatchPolicy::BlindTO | BatchPolicy::PerInvocation => (0..queue.len())
+            .min_by_key(|&i| queue[i].arrival),
+    }
 }
 
 /// Algorithm 2's priority order over the whole queue: bucket by query,
@@ -217,9 +241,10 @@ mod tests {
             query,
             node,
             depth,
-            bundle: query,
+            bundle: (query, 0),
             arrival: t0 + Duration::from_millis(ms),
             rows,
+            prefix: None,
             job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
             reply: tx,
         }
@@ -303,6 +328,21 @@ mod tests {
         assert_eq!(q[0].rows, 6);
         // Zero spare admits nothing.
         assert!(form_continuous_admission(&mut q, 0).is_empty());
+    }
+
+    #[test]
+    fn head_index_matches_form_batch_order() {
+        let t0 = Instant::now();
+        let q = vec![
+            item(1, 10, 1, 1, t0, 0),
+            item(1, 11, 3, 1, t0, 1),
+            item(2, 20, 2, 1, t0, 2),
+        ];
+        // TopoAware: earliest query's deepest node leads.
+        assert_eq!(head_index(&q, BatchPolicy::TopoAware), Some(1));
+        // FIFO policies: oldest arrival leads.
+        assert_eq!(head_index(&q, BatchPolicy::BlindTO), Some(0));
+        assert_eq!(head_index(&[], BatchPolicy::TopoAware), None);
     }
 
     #[test]

@@ -16,9 +16,22 @@
 //!   long decode's iteration loop instead of waiting behind its tail —
 //!   iteration-level continuous batching.
 //!
+//! Routing is **prefix-aware** on stepped engines: prefill jobs carry a
+//! fingerprint of their shared leading instruction tokens, the scheduler
+//! mirrors each instance's resident-prefix LRU registry, and
+//! `pick_instance` prefers a live instance already holding the head job's
+//! prefix (affinity traded against load imbalance, falling back to
+//! least-loaded) — so concurrent queries of one app land where their
+//! instruction KV already lives instead of re-prefilling it per instance.
+//!
 //! Load accounting is event-driven: instances report per-step
 //! [`InstanceEvent`]s and the per-instance `loads` counter decreases by
 //! the retired rows, so occupancy is exact at iteration granularity.
+//!
+//! Liveness: when the *last* live instance dies, queued (and any
+//! later-arriving) items are failed immediately with a
+//! [`JobOutput::Failed`] completion so query runners surface a
+//! `TeolaError` instead of blocking on a completion that can never come.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -26,8 +39,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::engines::instance::Instance;
-use crate::engines::{Batch, EngineJob, ExecMode, InstanceEvent, RequestCtx};
-use crate::scheduler::batching::{form_batch, form_continuous_admission, BatchPolicy, QueueItem};
+use crate::engines::prefix::{PrefixFp, PrefixRegistry};
+use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
+use crate::scheduler::batching::{
+    form_batch, form_continuous_admission, head_index, BatchPolicy, QueueItem,
+};
 
 /// One engine's scheduler state (runs on its own thread).
 pub struct EngineScheduler {
@@ -43,13 +59,16 @@ pub struct EngineScheduler {
     /// Shared, runtime-switchable continuous-batching toggle (only
     /// meaningful for `ExecMode::Stepped` engines under `TopoAware`).
     pub continuous: Arc<AtomicBool>,
-    /// Dynamic-batching window in microseconds: when the queue holds
-    /// fewer rows than the slot budget, wait this long (from the oldest
-    /// arrival) for more requests before dispatching to an *idle*
+    /// Dynamic-batching window in microseconds: when a formed batch holds
+    /// fewer rows than the slot budget, wait this long (from the batch's
+    /// own oldest arrival) for more requests before waking an *idle*
     /// instance — the Triton/vLLM-style accumulation delay the paper's
     /// engines rely on.  Shared/atomic so benches and the CLI can sweep
     /// it at runtime.
     pub batch_window_us: Arc<AtomicU64>,
+    /// Per-instance resident-prefix budget (0 disables prefix routing);
+    /// shares the handle with the executors' registries.
+    pub prefix_slots: Arc<AtomicUsize>,
     /// Whether this engine's executors run the stepped protocol.
     mode: ExecMode,
     /// In-flight rows per instance (admitted minus retired) for
@@ -57,6 +76,10 @@ pub struct EngineScheduler {
     loads: Vec<usize>,
     /// Instances whose channel died; never routed to again.
     dead: Vec<bool>,
+    /// Routing mirror of each instance's resident-prefix LRU registry:
+    /// updated on dispatch with the same (fingerprint order, budget) the
+    /// executor applies, so affinity predictions track actual residency.
+    prefix_homes: Vec<PrefixRegistry<()>>,
     queue: Vec<QueueItem>,
 }
 
@@ -72,9 +95,12 @@ impl EngineScheduler {
         max_slots: Arc<AtomicUsize>,
         continuous: Arc<AtomicBool>,
         batch_window_us: Arc<AtomicU64>,
+        prefix_slots: Arc<AtomicUsize>,
         mode: ExecMode,
     ) -> EngineScheduler {
         let n = instances.len();
+        let prefix_homes =
+            (0..n).map(|_| PrefixRegistry::new(prefix_slots.clone())).collect();
         EngineScheduler {
             name,
             instances,
@@ -84,9 +110,11 @@ impl EngineScheduler {
             max_slots,
             continuous,
             batch_window_us,
+            prefix_slots,
             mode,
             loads: vec![0; n],
             dead: vec![false; n],
+            prefix_homes,
             queue: Vec::new(),
         }
     }
@@ -100,7 +128,13 @@ impl EngineScheduler {
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     let alive = self.dead.iter().any(|d| !d);
-                    if self.queue.is_empty() || !alive {
+                    if !alive {
+                        // Nothing can ever serve the leftovers: fail them
+                        // so waiting query runners error out.
+                        self.fail_queue();
+                        break;
+                    }
+                    if self.queue.is_empty() {
                         break;
                     }
                     // The job channel is gone but queued work remains:
@@ -121,6 +155,23 @@ impl EngineScheduler {
         }
     }
 
+    /// Fail every queued item with an engine-dead completion: the engine
+    /// has no live instance left, so queries waiting on these replies
+    /// would otherwise hang forever.
+    fn fail_queue(&mut self) {
+        for it in self.queue.drain(..) {
+            let _ = it.reply.send(Completion {
+                query: it.query,
+                node: it.node,
+                output: JobOutput::Failed(format!(
+                    "engine '{}' is dead (all instances lost)",
+                    self.name
+                )),
+                timing: ExecTiming::default(),
+            });
+        }
+    }
+
     /// Dispatch while an eligible instance and queued work exist.
     fn dispatch(&mut self) {
         let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
@@ -131,29 +182,33 @@ impl EngineScheduler {
         let continuous = self.mode == ExecMode::Stepped
             && policy == BatchPolicy::TopoAware
             && self.continuous.load(Ordering::Relaxed);
+        // Prefix-affinity routing follows the same gating (it is a
+        // Teola-side optimization, not part of the baselines) but is
+        // independent of the continuous toggle.
+        let prefix_routing = self.mode == ExecMode::Stepped
+            && policy == BatchPolicy::TopoAware
+            && self.prefix_slots.load(Ordering::Relaxed) > 0;
         let window =
             Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
         loop {
             if self.queue.is_empty() {
                 break;
             }
-            let Some(inst) = self.pick_instance(continuous, slots) else { break };
-            let mid_flight = self.loads[inst] > 0;
-            // Dynamic-batching delay: give co-arriving requests a moment
-            // to accumulate before waking an idle instance, unless the
-            // slot budget is already covered (or the policy bundles by
-            // construction).  Joining an in-flight instance needs no
-            // delay — the resident batch *is* the accumulation.
-            if policy != BatchPolicy::PerInvocation && !mid_flight {
-                let rows: usize = self.queue.iter().map(|i| i.rows.max(1)).sum();
-                if rows < slots {
-                    if let Some(t) = self.queue.iter().map(|i| i.arrival).min() {
-                        if t.elapsed() < window {
-                            break;
-                        }
-                    }
-                }
+            if self.dead.iter().all(|d| *d) {
+                // Last instance died with work queued: fail fast rather
+                // than holding the queries hostage.
+                self.fail_queue();
+                break;
             }
+            let want_prefix = if prefix_routing {
+                head_index(&self.queue, policy).and_then(|i| self.queue[i].prefix)
+            } else {
+                None
+            };
+            let Some(inst) = self.pick_instance(continuous, slots, want_prefix) else {
+                break;
+            };
+            let mid_flight = self.loads[inst] > 0;
             let items = if mid_flight {
                 form_continuous_admission(
                     &mut self.queue,
@@ -166,6 +221,33 @@ impl EngineScheduler {
                 break;
             }
             let rows: usize = items.iter().map(|i| i.rows.max(1)).sum();
+            // Dynamic-batching delay, gated on the *formed candidate set*:
+            // give co-arriving requests a moment to accumulate before
+            // waking an idle instance, unless the batch already covers the
+            // slot budget (or the policy bundles by construction).  The
+            // window is measured from the batch's own oldest arrival — a
+            // stale item elsewhere in the queue (different class/bundle)
+            // no longer defeats accumulation for fresh co-arrivals.
+            // Joining an in-flight instance needs no delay — the resident
+            // batch *is* the accumulation.
+            if policy != BatchPolicy::PerInvocation
+                && !mid_flight
+                && rows < slots
+                && !batch_window_expired(&items, window)
+            {
+                self.queue.extend(items);
+                break;
+            }
+            // Keep the routing mirror in sync: after this dispatch the
+            // instance holds (or is about to compute and register) every
+            // fingerprinted prefix in the batch.
+            if prefix_routing {
+                for it in &items {
+                    if let Some(fp) = it.prefix {
+                        self.prefix_homes[inst].insert(fp, ());
+                    }
+                }
+            }
             let jobs: Vec<(RequestCtx, EngineJob)> = items
                 .into_iter()
                 .map(|i| {
@@ -186,7 +268,8 @@ impl EngineScheduler {
                 // send error and requeue it so its queries don't hang,
                 // stop routing to the instance, and leave `loads`
                 // untouched (nothing was admitted) so least-loaded
-                // routing isn't skewed forever.
+                // routing isn't skewed forever.  If that was the last
+                // live instance, the next loop iteration fails the queue.
                 eprintln!(
                     "[{}] instance {inst} died; requeueing {} job(s)",
                     self.name,
@@ -195,15 +278,17 @@ impl EngineScheduler {
                 self.dead[inst] = true;
                 for (ctx, job) in unsent.0.jobs {
                     let rows = job.rows();
+                    let prefix = job.prefix();
                     self.queue.push(QueueItem {
                         query: ctx.query,
                         node: ctx.node,
                         depth: ctx.depth,
-                        // Same per-node formula the graph scheduler uses
-                        // for invocation bundles.
-                        bundle: (ctx.query << 20) | ctx.node as u64,
+                        // Same per-node key the graph scheduler uses for
+                        // invocation bundles.
+                        bundle: (ctx.query, ctx.node as u64),
                         arrival: ctx.arrival,
                         rows,
+                        prefix,
                         job,
                         reply: ctx.reply,
                     });
@@ -214,19 +299,133 @@ impl EngineScheduler {
         }
     }
 
-    /// Least-loaded eligible instance.  Full-batch mode requires a fully
-    /// drained instance (legacy `busy` semantics); continuous mode admits
-    /// into any live instance with spare slot budget.
-    fn pick_instance(&self, continuous: bool, slots: usize) -> Option<usize> {
-        (0..self.instances.len())
-            .filter(|&i| !self.dead[i])
-            .filter(|&i| {
-                if continuous {
-                    self.loads[i] < slots
-                } else {
-                    self.loads[i] == 0
+    /// Eligible-instance choice.  Full-batch mode requires a fully drained
+    /// instance (legacy `busy` semantics); continuous mode admits into any
+    /// live instance with spare slot budget.  When the head job carries a
+    /// prefix fingerprint, an eligible instance already holding that
+    /// prefix is preferred — unless taking it would skew load by more
+    /// than half the slot budget over the least-loaded choice, in which
+    /// case load balance wins (affinity traded against imbalance).
+    fn pick_instance(
+        &self,
+        continuous: bool,
+        slots: usize,
+        want_prefix: Option<PrefixFp>,
+    ) -> Option<usize> {
+        let eligible = |i: &usize| -> bool {
+            let i = *i;
+            let fits = if continuous { self.loads[i] < slots } else { self.loads[i] == 0 };
+            !self.dead[i] && fits
+        };
+        let least = (0..self.instances.len())
+            .filter(eligible)
+            .min_by_key(|&i| self.loads[i])?;
+        if let Some(fp) = want_prefix {
+            let holder = (0..self.instances.len())
+                .filter(eligible)
+                .filter(|&i| self.prefix_homes[i].contains(fp))
+                .min_by_key(|&i| self.loads[i]);
+            if let Some(h) = holder {
+                let margin = (slots / 2).max(1);
+                if self.loads[h] <= self.loads[least] + margin {
+                    return Some(h);
                 }
-            })
-            .min_by_key(|&i| self.loads[i])
+            }
+        }
+        Some(least)
+    }
+}
+
+/// True when the batch's own accumulation window has elapsed: the oldest
+/// arrival *within the formed candidate set* is older than `window`.
+/// Pure so the window-per-batch policy is unit-testable.
+fn batch_window_expired(items: &[QueueItem], window: Duration) -> bool {
+    items
+        .iter()
+        .map(|i| i.arrival)
+        .min()
+        .map_or(true, |t| t.elapsed() >= window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn item_at(query: u64, node: usize, arrival: Instant, job: EngineJob) -> QueueItem {
+        let (tx, rx) = channel();
+        std::mem::forget(rx);
+        QueueItem {
+            query,
+            node,
+            depth: 0,
+            bundle: (query, node as u64),
+            arrival,
+            rows: 1,
+            prefix: None,
+            job,
+            reply: tx,
+        }
+    }
+
+    fn decode_job(q: u64) -> EngineJob {
+        EngineJob::Decode { seq: (q, 0), first_token: 5, segments: vec![] }
+    }
+
+    fn prefill_job(q: u64) -> EngineJob {
+        EngineJob::Prefill { seq: (q, 0), tokens: vec![7; 4], offset: 0, prefix: None }
+    }
+
+    #[test]
+    fn window_measured_on_formed_batch_not_whole_queue() {
+        let now = Instant::now();
+        let window = Duration::from_millis(50);
+        let stale = now - Duration::from_millis(200);
+
+        // Fresh co-arrivals alone: window still open -> accumulate.
+        let fresh = vec![
+            item_at(1, 1, now, prefill_job(1)),
+            item_at(2, 2, now, prefill_job(2)),
+        ];
+        assert!(!batch_window_expired(&fresh, window));
+
+        // A batch containing the stale item dispatches immediately.
+        let with_stale = vec![item_at(3, 3, stale, decode_job(3))];
+        assert!(batch_window_expired(&with_stale, window));
+    }
+
+    #[test]
+    fn stale_item_no_longer_defeats_window_for_fresh_coarrivals() {
+        // Regression shape: one stale decode sits in the queue while fresh
+        // prefills co-arrive.  The old whole-queue `min(arrival)` gate saw
+        // the stale arrival, declared the window elapsed, and dispatched
+        // the fresh prefills without accumulation.  With the
+        // per-candidate-set gate, the class-restricted batch containing
+        // the stale decode goes out at once, while the fresh prefills'
+        // own batch keeps its accumulation window.
+        let now = Instant::now();
+        let window = Duration::from_millis(50);
+        let mut queue = vec![
+            item_at(1, 1, now - Duration::from_millis(200), decode_job(1)),
+            item_at(2, 2, now, prefill_job(2)),
+            item_at(3, 3, now, prefill_job(3)),
+        ];
+        // First formed batch: the stale decode (earliest query bucket,
+        // class-restricted) — its own window has expired, dispatch now.
+        let first = form_batch(&mut queue, BatchPolicy::TopoAware, 8);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].node, 1);
+        assert!(batch_window_expired(&first, window));
+        // Second formed batch: the fresh prefills — their window is still
+        // open, so dispatch waits for more co-arrivals.
+        let second = form_batch(&mut queue, BatchPolicy::TopoAware, 8);
+        assert_eq!(second.len(), 2);
+        assert!(!batch_window_expired(&second, window));
+    }
+
+    #[test]
+    fn empty_batch_counts_as_expired() {
+        assert!(batch_window_expired(&[], Duration::from_millis(10)));
     }
 }

@@ -9,7 +9,8 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
 use std::time::Instant;
 
-use crate::engines::{Completion, EngineJob, NodeId, QueryId, SegmentSpec};
+use crate::engines::prefix::{prefix_fingerprint, MIN_PREFIX_LEN};
+use crate::engines::{Completion, EngineJob, JobOutput, NodeId, PrefixFp, QueryId, SegmentSpec};
 use crate::error::{Result, TeolaError};
 use crate::graph::egraph::EGraph;
 use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
@@ -110,6 +111,15 @@ impl QueryRunner {
             metrics.queue_us += c.timing.queued_us;
             metrics.exec_us += c.timing.exec_us;
             let node = c.node;
+            // A failure completion means the engine can never serve this
+            // node (e.g. every instance died): surface the error instead
+            // of waiting forever for a real completion.  Still release
+            // this query's KV sequences and vector-DB namespace on the
+            // surviving engines before bailing.
+            if let JobOutput::Failed(msg) = &c.output {
+                self.cleanup();
+                return Err(TeolaError::Engine(format!("node {node}: {msg}")));
+            }
             if store.has(node) {
                 continue; // duplicate stream delivery (benign)
             }
@@ -147,9 +157,10 @@ impl QueryRunner {
                     query: self.query,
                     node: usize::MAX,
                     depth: 0,
-                    bundle: 0,
+                    bundle: (self.query, u64::MAX),
                     arrival: Instant::now(),
                     rows: 0,
+                    prefix: None,
                     job: EngineJob::FreeQuery { query: self.query },
                     reply: tx,
                 });
@@ -331,10 +342,27 @@ impl QueryRunner {
                 if tokens.is_empty() {
                     tokens.push(self.sep);
                 }
+                // Cross-query prefix fingerprint: a from-scratch prefill
+                // whose first prompt part is a Const instruction template
+                // (shared by every query of the app) advertises it to the
+                // engine scheduler.  Only set when the full instruction
+                // survived truncation and a non-empty suffix follows.
+                let prefix: Option<PrefixFp> = if offset == 0 {
+                    match parts.first() {
+                        Some(DataRef::Const(rows)) if rows.len() == 1 => {
+                            let instr = &rows[0];
+                            (instr.len() >= MIN_PREFIX_LEN && tokens.len() > instr.len())
+                                .then(|| prefix_fingerprint(instr))
+                        }
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
                 seq_len.insert(*seq, offset + tokens.len());
                 self.send_job(
                     v,
-                    EngineJob::Prefill { seq: (self.query, *seq), tokens, offset },
+                    EngineJob::Prefill { seq: (self.query, *seq), tokens, offset, prefix },
                     tx,
                 )?;
             }
@@ -473,14 +501,16 @@ impl QueryRunner {
             TeolaError::Scheduler(format!("no engine registered for '{}'", node.engine))
         })?;
         let rows = job.rows();
+        let prefix = job.prefix();
         sender
             .send(QueueItem {
                 query: self.query,
                 node: v,
                 depth: self.egraph.depths[v],
-                bundle: (self.query << 20) | v as u64,
+                bundle: (self.query, v as u64),
                 arrival: Instant::now(),
                 rows,
+                prefix,
                 job,
                 reply: tx.clone(),
             })

@@ -12,7 +12,9 @@ pub mod graph_sched;
 pub mod object_store;
 pub mod platform;
 
-pub use batching::{form_batch, form_continuous_admission, BatchPolicy, QueueItem};
+pub use batching::{
+    form_batch, form_continuous_admission, head_index, BatchPolicy, BundleId, QueueItem,
+};
 pub use engine_sched::EngineScheduler;
 pub use graph_sched::{QueryMetrics, QueryRunner};
 pub use object_store::ObjectStore;

@@ -61,6 +61,13 @@ pub struct PlatformConfig {
     /// Dynamic-batching accumulation window, microseconds; switchable at
     /// runtime via [`Platform::set_batch_window_us`].
     pub batch_window_us: u64,
+    /// Per-instance resident-prefix budget for cross-query KV prefix
+    /// routing on the LLM engines: each instance keeps up to this many
+    /// shared instruction prefixes in an LRU registry, and the engine
+    /// scheduler routes prefills to an instance already holding their
+    /// prefix.  0 disables routing and caching entirely; switchable at
+    /// runtime via [`Platform::set_prefix_slots`].
+    pub prefix_slots: usize,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -85,6 +92,7 @@ impl PlatformConfig {
             policy: BatchPolicy::TopoAware,
             continuous: true,
             batch_window_us: 3_000,
+            prefix_slots: 8,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -122,6 +130,7 @@ pub struct Platform {
     slots: HashMap<String, Arc<AtomicUsize>>,
     continuous: Arc<AtomicBool>,
     batch_window_us: Arc<AtomicU64>,
+    prefix_slots: Arc<AtomicUsize>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -152,6 +161,7 @@ impl Platform {
         let policy = Arc::new(AtomicU8::new(cfg.policy.to_u8()));
         let continuous = Arc::new(AtomicBool::new(cfg.continuous));
         let batch_window_us = Arc::new(AtomicU64::new(cfg.batch_window_us));
+        let prefix_slots = Arc::new(AtomicUsize::new(cfg.prefix_slots));
         // Instances ack on this channel once their executor (including any
         // warm-up compilation) is constructed; start() blocks on all acks
         // so serving never races against compilation.
@@ -174,6 +184,7 @@ impl Platform {
                 slot_handle.clone(),
                 continuous.clone(),
                 batch_window_us.clone(),
+                prefix_slots.clone(),
                 mode,
             );
             let h = std::thread::Builder::new()
@@ -195,6 +206,7 @@ impl Platform {
                 cfg.backend,
                 free_tx,
                 ready_tx.clone(),
+                prefix_slots.clone(),
             );
             expected_ready += instances.len();
             spawn_sched(spec.name.clone(), instances, free_rx, spec.max_slots, ExecMode::Stepped);
@@ -287,6 +299,7 @@ impl Platform {
             slots,
             continuous,
             batch_window_us,
+            prefix_slots,
             profiles,
             manifest,
             sep,
@@ -310,6 +323,13 @@ impl Platform {
     /// (microseconds; applies to every engine scheduler).
     pub fn set_batch_window_us(&self, us: u64) {
         self.batch_window_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Retune the per-instance resident-prefix budget at runtime (0
+    /// disables cross-query KV prefix routing and caching; applies to the
+    /// LLM engine schedulers and their executors' registries at once).
+    pub fn set_prefix_slots(&self, n: usize) {
+        self.prefix_slots.store(n, Ordering::Relaxed);
     }
 
     /// Retune one engine's slot budget (max batch rows) at runtime.

@@ -4,6 +4,7 @@
 //! enabled vs disabled.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -28,11 +29,12 @@ fn new_exec() -> (SimLlmExecutor, SeqStore) {
     // write it exactly once (concurrent setenv calls are a data race).
     DEVICE_OFF.call_once(|| std::env::set_var("TEOLA_DEVICE_OFF", "1"));
     let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
-    (SimLlmExecutor::new("llm-lite", store.clone(), SEP, EOS, 1024), store)
+    let slots = Arc::new(AtomicUsize::new(0));
+    (SimLlmExecutor::new("llm-lite", store.clone(), SEP, EOS, 1024, slots), store)
 }
 
 fn prefill(q: u64, seq: u32, n_tokens: usize) -> EngineJob {
-    EngineJob::Prefill { seq: (q, seq), tokens: vec![7; n_tokens], offset: 0 }
+    EngineJob::Prefill { seq: (q, seq), tokens: vec![7; n_tokens], offset: 0, prefix: None }
 }
 
 fn decode(q: u64, node: usize, seq: u32, len: usize) -> EngineJob {

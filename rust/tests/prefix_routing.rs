@@ -1,0 +1,226 @@
+//! Cross-query KV prefix routing: executor-level hit accounting and LRU
+//! eviction on the sim LLM executor, the end-to-end p95 win on an
+//! instruction-heavy Poisson trace with routing on vs off, and output
+//! determinism with routing enabled.
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use teola::engines::instance::StepExecutor;
+use teola::engines::llm::SeqStore;
+use teola::engines::prefix::prefix_fingerprint;
+use teola::engines::profile::ProfileRegistry;
+use teola::engines::sim::SimLlmExecutor;
+use teola::engines::{Completion, EngineJob, RequestCtx};
+use teola::graph::pgraph::{build_pgraph, instr_tokens};
+use teola::graph::template::*;
+use teola::graph::{run_passes, EGraph, OptFlags};
+use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
+use teola::serving::run_load_prepared;
+use teola::workload::{Dataset, DatasetKind, PoissonTrace};
+
+// The serving comparison is timing-sensitive; serialize the platform
+// tests in this binary so they don't compete for cores.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const SEP: i32 = 3;
+const EOS: i32 = 2;
+
+static DEVICE_OFF: std::sync::Once = std::sync::Once::new();
+
+fn new_exec(prefix_slots: usize) -> SimLlmExecutor {
+    // Raw CPU pacing for the executor-level tests (charging is asserted
+    // via the valid-token counter, not wall time).  Set exactly once:
+    // concurrent setenv calls are a data race.
+    DEVICE_OFF.call_once(|| std::env::set_var("TEOLA_DEVICE_OFF", "1"));
+    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+    let slots = Arc::new(AtomicUsize::new(prefix_slots));
+    SimLlmExecutor::new("llm-lite", store, SEP, EOS, 1024, slots)
+}
+
+fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
+    RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
+}
+
+/// Admit one fingerprinted prefill (instruction ++ suffix) and run it.
+fn prefill_step(exec: &mut SimLlmExecutor, q: u64, instr: &[i32], suffix: usize) {
+    let (tx, _rx) = channel();
+    let mut tokens = instr.to_vec();
+    tokens.extend(std::iter::repeat(7).take(suffix));
+    exec.admit(vec![(
+        ctx(q, 0, tx),
+        EngineJob::Prefill {
+            seq: (q, 0),
+            tokens,
+            offset: 0,
+            prefix: Some(prefix_fingerprint(instr)),
+        },
+    )]);
+    while exec.resident() > 0 {
+        exec.step(&mut |_| {}).unwrap();
+    }
+}
+
+#[test]
+fn prefix_hit_charges_only_the_uncached_suffix() {
+    let mut exec = new_exec(4);
+    let instr = instr_tokens("shared-instr", 16);
+
+    // First query: cold — the full 16+8 tokens are charged and the
+    // instruction prefix becomes resident.
+    prefill_step(&mut exec, 1, &instr, 8);
+    assert_eq!(exec.charged_prefill_tokens(), 24);
+
+    // Second query sharing the instruction: only its 10-token suffix is
+    // charged.
+    prefill_step(&mut exec, 2, &instr, 10);
+    assert_eq!(exec.charged_prefill_tokens(), 34);
+
+    // A different instruction is cold again.
+    let other = instr_tokens("other-instr", 16);
+    prefill_step(&mut exec, 3, &other, 4);
+    assert_eq!(exec.charged_prefill_tokens(), 54);
+}
+
+#[test]
+fn prefix_registry_evicts_lru_at_prefix_slots() {
+    let mut exec = new_exec(2);
+    let a = instr_tokens("instr-a", 16);
+    let b = instr_tokens("instr-b", 16);
+    let c = instr_tokens("instr-c", 16);
+
+    prefill_step(&mut exec, 1, &a, 8); // miss: 24
+    prefill_step(&mut exec, 2, &b, 8); // miss: 24
+    prefill_step(&mut exec, 3, &a, 8); // hit: 8 (A refreshed, B now LRU)
+    prefill_step(&mut exec, 4, &c, 8); // miss: 24 (evicts B)
+    prefill_step(&mut exec, 5, &b, 8); // miss again: 24 — B was evicted
+    assert_eq!(exec.charged_prefill_tokens(), 24 + 24 + 8 + 24 + 24);
+}
+
+#[test]
+fn zero_prefix_slots_disables_caching() {
+    let mut exec = new_exec(0);
+    let instr = instr_tokens("shared-instr", 16);
+    prefill_step(&mut exec, 1, &instr, 8);
+    prefill_step(&mut exec, 2, &instr, 8);
+    // Both queries charged in full.
+    assert_eq!(exec.charged_prefill_tokens(), 48);
+}
+
+/// Instruction-heavy one-shot workflow: a 64-token shared instruction
+/// template dominates each query's prefill.
+fn instr_heavy_template(instr_name: &str, llm: &str, out_tokens: usize) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("instr-heavy");
+    t.add(Component {
+        name: "gen".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens(instr_name, 64)),
+                PromptPart::Question,
+            ],
+            out_tokens,
+            segments: 1,
+            fan: 1,
+        },
+        engine: llm.into(),
+        batchable: false,
+        splittable: false,
+    });
+    t
+}
+
+/// Build `n` optimized instruction-heavy e-graphs; queries alternate
+/// between two instruction templates (two distinct shared prefixes).
+fn prepared_instr_heavy(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    let profiles = ProfileRegistry::with_defaults();
+    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
+    (0..n)
+        .map(|i| {
+            let name = if i % 2 == 0 { "instr-even" } else { "instr-odd" };
+            let t = instr_heavy_template(name, "llm-lite", 4 + i % 3);
+            let q = ds.sample();
+            let g = build_pgraph(&t, &q).unwrap();
+            let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+            (EGraph::new(g).unwrap(), 0u64)
+        })
+        .collect()
+}
+
+#[test]
+fn prefix_routing_cuts_p95_on_instruction_heavy_trace() {
+    let _g = SERIAL.lock().unwrap();
+
+    // Two instances so affinity routing matters: with routing on, each
+    // instruction template sticks to the instance holding its KV and
+    // every query past the first prefills only its question suffix; with
+    // prefix_slots = 0 every query re-prefills the full 64-token
+    // instruction on whichever least-loaded instance it lands on.
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.llms[0].instances = 2;
+    cfg.prefix_slots = 8;
+    let platform = Platform::start(&cfg).unwrap();
+    platform.set_policy(BatchPolicy::TopoAware);
+
+    let n = 40;
+    let rate = 140.0;
+    let seed = 0xF1F0;
+    let trace = PoissonTrace::generate(rate, n, seed);
+
+    platform.set_prefix_slots(0);
+    let off =
+        run_load_prepared(&platform, prepared_instr_heavy(n, seed), &trace.arrivals).unwrap();
+
+    platform.set_prefix_slots(8);
+    let on =
+        run_load_prepared(&platform, prepared_instr_heavy(n, seed), &trace.arrivals).unwrap();
+
+    platform.shutdown();
+
+    assert_eq!(off.latencies_ms.len(), n);
+    assert_eq!(on.latencies_ms.len(), n);
+    // Prefix routing must strictly beat the routing-off baseline at the
+    // tail on the same seeded trace: the shared instruction prefill is
+    // ~2/3 of every query's prefill work.
+    assert!(
+        on.e2e_ms.p95 < off.e2e_ms.p95,
+        "prefix routing p95 {:.1} ms should beat routing-off p95 {:.1} ms",
+        on.e2e_ms.p95,
+        off.e2e_ms.p95
+    );
+}
+
+#[test]
+fn outputs_identical_with_prefix_routing_on_and_off() {
+    let _g = SERIAL.lock().unwrap();
+
+    let run_once = |prefix_slots: usize| {
+        let mut cfg = PlatformConfig::sim("llm-lite");
+        cfg.prefix_slots = prefix_slots;
+        let platform = Platform::start(&cfg).unwrap();
+        let profiles = ProfileRegistry::with_defaults();
+        let mut ds = Dataset::new(DatasetKind::TruthfulQa, 51);
+        let q = ds.sample();
+        let t = instr_heavy_template("det-instr", "llm-lite", 8);
+        let g = build_pgraph(&t, &q).unwrap();
+        let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+        let e = EGraph::new(g).unwrap();
+        // Two queries back to back so the second sees a resident prefix
+        // when routing is on.
+        let (warm, _) = platform.run_query(7001, e.clone()).unwrap();
+        let (out, _) = platform.run_query(7002, e).unwrap();
+        platform.shutdown();
+        (warm, out)
+    };
+
+    let (warm_on, out_on) = run_once(8);
+    let (warm_off, out_off) = run_once(0);
+    // A prefix hit changes where KV work happens, never the tokens.
+    assert_eq!(warm_on, warm_off);
+    assert_eq!(out_on, out_off, "prefix reuse must not change outputs");
+    assert!(!out_on.rows().is_empty());
+}

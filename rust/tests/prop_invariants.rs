@@ -419,12 +419,56 @@ fn mk_item(rng: &mut Rng, t0: Instant) -> QueueItem {
         query: rng.range(1, 6),
         node: rng.range_usize(0, 50),
         depth: rng.range(0, 8) as u32,
-        bundle: rng.range(0, 4),
+        bundle: (0, rng.range(0, 4)),
         arrival: t0 + Duration::from_micros(rng.range(0, 5000)),
         rows: rng.range_usize(1, 9),
+        prefix: None,
         job: EngineJob::ToolCall { name: "x".into(), cost_us: 0 },
         reply: tx,
     }
+}
+
+/// Regression (bundle-collision): the invocation-bundle key used to be
+/// the packed `(query << 20) | node`, so a node id crossing 2^20 bled
+/// into the query bits — e.g. (query=1, node=2^20+5) collided with
+/// (query=2, node=5) — and PerInvocation silently merged unrelated
+/// invocations into one bundle.  With the structured `(query, node)` key
+/// every PO batch must consist of exactly one invocation, even when node
+/// ids straddle the old 20-bit boundary.
+#[test]
+fn per_invocation_never_merges_distinct_invocations() {
+    check(120, |rng| {
+        let t0 = Instant::now();
+        let n = rng.range_usize(2, 24);
+        let mut queue: Vec<QueueItem> = (0..n)
+            .map(|_| {
+                let query = rng.range(1, 5);
+                // Node ids around and above 2^20 — the old packing's
+                // collision zone.
+                let node = (rng.range_usize(0, 4) << 20) | rng.range_usize(0, 8);
+                let mut it = mk_item(rng, t0);
+                it.query = query;
+                it.node = node;
+                it.bundle = (query, node as u64);
+                it
+            })
+            .collect();
+        let total = queue.len();
+        let batch = form_batch(&mut queue, BatchPolicy::PerInvocation, 64);
+        prop_assert(!batch.is_empty(), "progress")?;
+        prop_assert(batch.len() + queue.len() == total, "no items lost")?;
+        let head = batch[0].bundle;
+        for it in &batch {
+            prop_assert(
+                it.bundle == head && (it.query, it.node as u64) == head,
+                format!(
+                    "cross-invocation merge: ({}, {}) in bundle {head:?}",
+                    it.query, it.node
+                ),
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,140 @@
+//! Engine-death liveness: when the *last* live instance of an engine
+//! dies, queued work must fail with an engine-dead error surfaced as a
+//! `TeolaError` by the query runner — never hang waiting for a
+//! completion that cannot come.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use teola::engines::instance::Instance;
+use teola::engines::profile::ProfileRegistry;
+use teola::engines::{Batch, Completion, EngineJob, ExecMode, InstanceEvent, JobOutput};
+use teola::graph::pgraph::{build_pgraph, instr_tokens};
+use teola::graph::template::*;
+use teola::graph::{run_passes, EGraph, OptFlags};
+use teola::scheduler::{BatchPolicy, EngineScheduler, QueryRunner, QueueItem};
+
+/// An instance whose worker thread is already gone: every send fails.
+fn dead_instance() -> Instance {
+    let (tx, rx) = channel::<Batch>();
+    drop(rx);
+    Instance { sender: tx, handle: std::thread::spawn(|| {}) }
+}
+
+/// Spawn an engine scheduler named `name` whose only instance is dead;
+/// returns the job sender and the scheduler thread handle (plus the event
+/// sender, kept alive so the scheduler's event loop stays connected).
+fn dead_engine(
+    name: &str,
+) -> (Sender<QueueItem>, std::thread::JoinHandle<()>, Sender<InstanceEvent>) {
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let (job_tx, job_rx) = channel::<QueueItem>();
+    let sched = EngineScheduler::new(
+        name.to_string(),
+        vec![dead_instance()],
+        ev_rx,
+        job_rx,
+        Arc::new(AtomicU8::new(BatchPolicy::TopoAware.to_u8())),
+        Arc::new(AtomicUsize::new(8)),
+        Arc::new(AtomicBool::new(true)),
+        Arc::new(AtomicU64::new(0)),
+        Arc::new(AtomicUsize::new(8)),
+        ExecMode::Stepped,
+    );
+    let h = std::thread::spawn(move || sched.run());
+    (job_tx, h, ev_tx)
+}
+
+fn one_shot_egraph(llm: &str) -> EGraph {
+    let mut t = WorkflowTemplate::new("liveness");
+    t.add(Component {
+        name: "gen".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("liveness", 12)),
+                PromptPart::Question,
+            ],
+            out_tokens: 8,
+            segments: 1,
+            fan: 1,
+        },
+        engine: llm.into(),
+        batchable: false,
+        splittable: false,
+    });
+    let q = QueryConfig::example(17);
+    let g = build_pgraph(&t, &q).unwrap();
+    let g = run_passes(g, OptFlags::all(), &ProfileRegistry::with_defaults()).unwrap();
+    EGraph::new(g).unwrap()
+}
+
+#[test]
+fn query_errors_instead_of_hanging_when_last_instance_dies() {
+    let (job_tx, sched_h, _ev_tx) = dead_engine("llm-lite");
+    let egraph = one_shot_egraph("llm-lite");
+    let mut routers = HashMap::new();
+    routers.insert("llm-lite".to_string(), job_tx);
+
+    // Run the query on its own thread and bound the wait: a regression
+    // here means the runner blocks forever on a dead engine.
+    let (res_tx, res_rx) = channel();
+    std::thread::spawn(move || {
+        let runner = QueryRunner::new(71, egraph, routers, 3);
+        let _ = res_tx.send(runner.run());
+    });
+    let res = res_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("query must complete (with an error), not hang");
+    let err = res.expect_err("dead engine must surface an error");
+    let msg = err.to_string();
+    assert!(msg.contains("dead"), "unexpected error: {msg}");
+
+    // The scheduler itself must also exit once its job channel closes.
+    sched_h.join().expect("scheduler thread exits");
+}
+
+#[test]
+fn queued_and_later_items_both_fail_fast_on_dead_engine() {
+    let (job_tx, sched_h, _ev_tx) = dead_engine("llm-test");
+
+    let send_prefill = |q: u64| -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        job_tx
+            .send(QueueItem {
+                query: q,
+                node: 1,
+                depth: 0,
+                bundle: (q, 1),
+                arrival: Instant::now(),
+                rows: 1,
+                prefix: None,
+                job: EngineJob::Prefill {
+                    seq: (q, 0),
+                    tokens: vec![7; 8],
+                    offset: 0,
+                    prefix: None,
+                },
+                reply: tx,
+            })
+            .unwrap();
+        rx
+    };
+
+    // The item that triggers the death is failed...
+    let rx1 = send_prefill(1);
+    let c1 = rx1.recv_timeout(Duration::from_secs(5)).expect("first item fails fast");
+    assert!(matches!(c1.output, JobOutput::Failed(_)), "got {:?}", c1.output);
+
+    // ...and so is any item arriving after the engine is already dead.
+    let rx2 = send_prefill(2);
+    let c2 = rx2.recv_timeout(Duration::from_secs(5)).expect("later item fails fast");
+    assert!(matches!(c2.output, JobOutput::Failed(_)), "got {:?}", c2.output);
+
+    drop(job_tx);
+    sched_h.join().expect("scheduler thread exits");
+}
