@@ -35,6 +35,7 @@ fn embed_total_time(platform: &Platform, n: usize, policy: BatchPolicy) -> f64 {
                 arrival: Instant::now(),
                 rows: 1,
                 prefix: None,
+                wcp_us: 0,
                 job: EngineJob::Embed { chunks: vec![chunk] },
                 reply: tx.clone(),
             })
@@ -119,6 +120,7 @@ fn main() {
                     arrival: Instant::now(),
                     rows: 1,
                     prefix: None,
+                    wcp_us: 0,
                     job: EngineJob::Prefill {
                         seq: (query, seq),
                         tokens: (0..64).map(|i| 5 + i % 900).collect(),
@@ -149,6 +151,7 @@ fn main() {
                 arrival: Instant::now(),
                 rows: 1,
                 prefix: None,
+                wcp_us: 0,
                 job: EngineJob::Decode {
                     seq: (query, seq),
                     first_token: tok,
@@ -167,6 +170,7 @@ fn main() {
                 arrival: Instant::now(),
                 rows: 1,
                 prefix: None,
+                wcp_us: 0,
                 job: EngineJob::Prefill {
                     seq: (dummy_q, 0),
                     tokens: (0..32).map(|i| 5 + i % 900).collect(),

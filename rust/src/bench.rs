@@ -10,15 +10,21 @@ use std::time::Instant;
 
 use crate::apps::{bind_answer_tokens, AppKind};
 use crate::baselines::Scheme;
+use crate::engines::profile::ProfileRegistry;
 use crate::engines::sim::ExecBackend;
 use crate::engines::QueryId;
 use crate::error::Result;
-use crate::graph::template::QueryConfig;
+use crate::graph::egraph::EGraph;
+use crate::graph::pgraph::{build_pgraph, instr_tokens};
+use crate::graph::template::{
+    Component, ComponentKind, PromptPart, QueryConfig, SynthesisMode, WorkflowTemplate,
+};
+use crate::graph::{run_passes, OptFlags};
 use crate::json::{num, obj, s, Json};
 use crate::scheduler::graph_sched::QueryMetrics;
 use crate::scheduler::{Platform, PlatformConfig};
 use crate::util::stats::Summary;
-use crate::workload::DatasetKind;
+use crate::workload::{Dataset, DatasetKind};
 
 static NEXT_QUERY: AtomicU64 = AtomicU64::new(1);
 
@@ -106,6 +112,69 @@ pub fn run_trace(platform: &Platform, run: &TraceRun) -> Result<TraceResult> {
     })
 }
 
+/// One-shot workflow (instruction + question -> `out_tokens` decode) —
+/// the building block of the heterogeneous PR4 trace and the shared test
+/// harness (`tests/common/`).
+pub fn one_shot_template(
+    llm: &str,
+    instr_name: &str,
+    instr_len: usize,
+    out_tokens: usize,
+) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("one-shot");
+    t.add(Component {
+        name: "gen".into(),
+        kind: ComponentKind::LlmGenerate {
+            variant: llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens(instr_name, instr_len)),
+                PromptPart::Question,
+            ],
+            out_tokens,
+            segments: 1,
+            fan: 1,
+        },
+        engine: llm.into(),
+        batchable: false,
+        splittable: false,
+    });
+    t
+}
+
+/// Build `n` optimized e-graphs from the seeded dataset, one workflow
+/// template per query index.
+pub fn prepared_graphs(
+    n: usize,
+    seed: u64,
+    template_of: impl Fn(usize) -> WorkflowTemplate,
+) -> Vec<(EGraph, u64)> {
+    let profiles = ProfileRegistry::with_defaults();
+    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
+    (0..n)
+        .map(|i| {
+            let t = template_of(i);
+            let q = ds.sample();
+            let g = build_pgraph(&t, &q).unwrap();
+            let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
+            (EGraph::new(g).unwrap(), 0u64)
+        })
+        .collect()
+}
+
+/// The heterogeneous sim trace behind `BENCH_PR4.json` and
+/// `tests/wcp_scheduling.rs`: mostly short RAG-style queries (8-16
+/// token decodes) with a long-tail minority (every 8th query decodes
+/// 128 tokens), so arrival-order scheduling strands the long critical
+/// paths behind bursts of short work and weighted-critical-path
+/// ordering has something to win.
+pub fn hetero_prepared(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    prepared_graphs(n, seed, |i| {
+        let out_tokens = if i % 8 == 3 { 128 } else { 8 + i % 9 };
+        one_shot_template("llm-lite", "hetero", 24, out_tokens)
+    })
+}
+
 /// True when a Platform can start: either the simulated backend was
 /// selected via `TEOLA_BACKEND=sim`, or the XLA backend is fully usable
 /// (real crate linked *and* artifacts present).  The figure benches gate
@@ -164,6 +233,17 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             other => eprintln!(
                 "warning: unknown TEOLA_CONTINUOUS={other:?} (want on|off); ignoring"
             ),
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_WCP") {
+        // Same token set as the CLI's --wcp flag.
+        match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "on" | "true" => cfg.wcp = true,
+            "0" | "off" | "false" => cfg.wcp = false,
+            "" => {}
+            other => {
+                eprintln!("warning: unknown TEOLA_WCP={other:?} (want on|off); ignoring")
+            }
         }
     }
     cfg

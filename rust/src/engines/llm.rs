@@ -443,6 +443,26 @@ impl LlmExecutor {
         emit: &mut dyn FnMut(Completion),
         out: &mut StepOutcome,
     ) -> Result<()> {
+        // Late resident-prefix hits: a prefix registered after these rows
+        // were admitted (e.g. computed by a co-admitted query's row in the
+        // previous call) serves them now — clone the KV and trim to the
+        // suffix exactly as an admit-time hit would, so same-prefix
+        // prefills admitted in one burst pay one cold prefill, not two.
+        if self.prefixes.cap() > 0 {
+            for r in self.prefills.iter_mut() {
+                let Some(fp) = r.prefix else { continue };
+                if r.offset == 0 && r.tokens.len() > fp.len {
+                    if let Some(p) = self.prefixes.hit(fp) {
+                        self.store
+                            .lock()
+                            .unwrap()
+                            .insert(r.seq, SeqState { kv: p.kv.clone(), len: fp.len });
+                        r.tokens.drain(..fp.len);
+                        r.offset = fp.len;
+                    }
+                }
+            }
+        }
         let maxb = self.max_prefill_batch();
         // The chunk cap is the largest chunk available in *multi-row*
         // buckets so batched rows are never truncated to a smaller bucket.
@@ -458,6 +478,18 @@ impl LlmExecutor {
             let Some(front) = self.prefills.front() else { break };
             if group.iter().any(|g| g.seq == front.seq) {
                 break;
+            }
+            // Never co-batch a second from-scratch row of a prefix this
+            // very call is about to compute: it stays queued and the
+            // late-hit pass above serves it next step from the freshly
+            // registered KV (single cold prefill per prefix).
+            if let Some(fp) = front.prefix {
+                if front.offset == 0
+                    && self.prefixes.cap() > 0
+                    && group.iter().any(|g| g.offset == 0 && g.prefix == Some(fp))
+                {
+                    break;
+                }
             }
             let mut r = self.prefills.pop_front().unwrap();
             if r.tokens.len() > max_c {
@@ -688,6 +720,9 @@ impl LlmExecutor {
 
 impl StepExecutor for LlmExecutor {
     fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+        // Apply any mid-run `prefix_slots` retune before consulting
+        // residency (a shrink must evict now, not at the next insert).
+        self.prefixes.resync();
         for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {

@@ -199,6 +199,11 @@ pub struct RequestCtx {
     pub depth: u32,
     /// When the job entered the engine scheduler queue.
     pub arrival: Instant,
+    /// Remaining critical-path stamp of the owning query (see
+    /// `QueueItem::wcp_us`); carried through dispatch so a
+    /// requeue-on-instance-death rebuilds the queue item with its
+    /// priority intact.
+    pub wcp_us: u64,
     /// Completion channel of the owning query's graph scheduler.
     pub reply: Sender<Completion>,
 }

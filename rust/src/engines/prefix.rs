@@ -113,6 +113,20 @@ impl<T> PrefixRegistry<T> {
             self.entries.remove(0);
         }
     }
+
+    /// Re-apply the current capacity without an insert, evicting from the
+    /// LRU end.  Eviction used to happen only on the next insert, so a
+    /// mid-run `prefix_slots` shrink left the engine scheduler's routing
+    /// mirror holding prefixes the executors had already dropped — and
+    /// affinity kept routing prefills at phantom residency until entries
+    /// churned.  The scheduler (each dispatch) and the executors (each
+    /// admission) call this to resync with the shared budget immediately.
+    pub fn resync(&mut self) {
+        let cap = self.cap();
+        if self.entries.len() > cap {
+            self.entries.drain(..self.entries.len() - cap);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -160,5 +174,30 @@ mod tests {
         cap.store(0, Ordering::Relaxed);
         r.insert(fp(2), ());
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn resync_applies_a_mid_run_capacity_shrink() {
+        let cap = Arc::new(AtomicUsize::new(4));
+        let mut r: PrefixRegistry<u32> = PrefixRegistry::new(cap.clone());
+        for i in 0..4 {
+            r.insert(fp(i), i as u32);
+        }
+        // Shrink 4 -> 1: only the most recently used prefix may survive.
+        cap.store(1, Ordering::Relaxed);
+        r.resync();
+        assert_eq!(r.len(), 1);
+        assert!(r.contains(fp(3)), "MRU entry survives the shrink");
+        for i in 0..3 {
+            assert!(!r.contains(fp(i)), "fp({i}) must be evicted by resync");
+        }
+        // Shrink to 0 clears everything; resync under capacity is a no-op.
+        cap.store(0, Ordering::Relaxed);
+        r.resync();
+        assert!(r.is_empty());
+        cap.store(8, Ordering::Relaxed);
+        r.insert(fp(9), 9);
+        r.resync();
+        assert_eq!(r.len(), 1);
     }
 }

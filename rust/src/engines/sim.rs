@@ -228,7 +228,29 @@ impl SimLlmExecutor {
     /// XLA path the charge is proportional to the *valid* tokens, so
     /// bucket padding costs nothing here and the batching economics match.
     fn step_prefill(&mut self, emit: &mut dyn FnMut(Completion), out: &mut StepOutcome) {
-        let rows: Vec<SimPrefillRow> = self.prefills.drain(..).collect();
+        let mut rows: Vec<SimPrefillRow> = self.prefills.drain(..).collect();
+        // Pending-queue dedupe: prefix registration used to happen only
+        // at step time, so two same-prefix prefills admitted in one burst
+        // both prefilled cold.  Within this batched call the *first*
+        // from-scratch row of each fingerprint computes the prefix; every
+        // later co-admitted row is trimmed to its suffix exactly as an
+        // admit-time hit would be (same final KV length, so outputs are
+        // unchanged — only the charge shrinks).
+        if self.prefixes.cap() > 0 {
+            let mut warm: Vec<PrefixFp> = Vec::new();
+            for r in rows.iter_mut() {
+                let Some(fp) = r.prefix else { continue };
+                if r.offset != 0 {
+                    continue;
+                }
+                if warm.contains(&fp) && r.tokens.len() > fp.len {
+                    r.tokens.drain(..fp.len);
+                    r.offset = fp.len;
+                } else if r.tokens.len() >= fp.len {
+                    warm.push(fp);
+                }
+            }
+        }
         let started = Instant::now();
         let valid: usize = rows.iter().map(|r| r.tokens.len()).sum();
         self.charged_prefill_tokens += valid;
@@ -341,6 +363,10 @@ impl SimLlmExecutor {
 
 impl StepExecutor for SimLlmExecutor {
     fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+        // Apply any mid-run `prefix_slots` retune before consulting
+        // residency, so a shrink evicts immediately instead of at the
+        // next insert.
+        self.prefixes.resync();
         for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {
@@ -563,7 +589,7 @@ mod tests {
     use std::sync::{Arc, Mutex};
 
     fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
-        RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
+        RequestCtx { query, node, depth: 0, arrival: Instant::now(), wcp_us: 0, reply }
     }
 
     fn no_prefix_slots() -> Arc<AtomicUsize> {

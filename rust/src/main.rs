@@ -11,7 +11,7 @@ use teola::baselines::Scheme;
 use teola::bench::{platform_for, TraceRun};
 use teola::engines::profile::ProfileRegistry;
 use teola::graph::template::QueryConfig;
-use teola::scheduler::Platform;
+use teola::scheduler::{Platform, PlatformConfig};
 use teola::serving::run_load;
 use teola::workload::DatasetKind;
 
@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -131,6 +131,15 @@ fn main() {
                 }
                 None => {}
             }
+            match parse_flag(&args, "--wcp").as_deref() {
+                Some("on") | Some("1") | Some("true") => cfg.wcp = true,
+                Some("off") | Some("0") | Some("false") => cfg.wcp = false,
+                Some(other) => {
+                    eprintln!("unknown --wcp value {other:?} (want on|off)");
+                    std::process::exit(2);
+                }
+                None => {}
+            }
             let platform = Platform::start(&cfg).expect("platform");
             let run = TraceRun {
                 app,
@@ -159,6 +168,38 @@ fn main() {
                 println!("wrote {path}");
             }
             platform.shutdown();
+        }
+        Some("wcp-bench") => {
+            // The PR4 heterogeneous-trace smoke: one seeded Poisson trace
+            // of mixed short/long queries replayed with weighted
+            // critical-path ordering off and on (sim backend, single LLM
+            // instance so queueing is visible), percentiles merged into
+            // one JSON document (BENCH_PR4.json in CI).
+            let n: usize = parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(40);
+            let rate: f64 =
+                parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(150.0);
+            let seed: u64 =
+                parse_flag(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(0x9C4);
+            let mut cfg = PlatformConfig::sim("llm-lite");
+            cfg.llms[0].instances = 1;
+            cfg.warm = false;
+            let platform = Platform::start(&cfg).expect("platform");
+            let (off, on) =
+                teola::serving::run_wcp_comparison(&platform, n, rate, seed).expect("trace");
+            platform.shutdown();
+            println!(
+                "wcp off: p50 {:.1} ms, p95 {:.1}, p99 {:.1} | wcp on: p50 {:.1} ms, p95 {:.1}, p99 {:.1}",
+                off.e2e_ms.p50, off.e2e_ms.p95, off.e2e_ms.p99,
+                on.e2e_ms.p50, on.e2e_ms.p95, on.e2e_ms.p99
+            );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                let doc = teola::json::obj(vec![
+                    ("wcp_on", on.to_json()),
+                    ("wcp_off", off.to_json()),
+                ]);
+                std::fs::write(&path, doc.to_string()).expect("write json report");
+                println!("wrote {path}");
+            }
         }
         _ => usage(),
     }

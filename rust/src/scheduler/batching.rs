@@ -9,10 +9,18 @@
 //! * `PerInvocation` — latency-oriented bundles: all requests of one
 //!   invocation are scheduled together and nothing else joins the batch
 //!   (the paper's PO baseline).
+//!
+//! Under `TopoAware` the bucket *order* has two modes, selected by the
+//! `wcp` flag (paper §8): weighted-critical-path ordering ranks query
+//! buckets by descending remaining critical-path device time (the
+//! `QueueItem::wcp_us` stamp from the graph scheduler's `WcpTracker`)
+//! plus an aging term so short-tail queries cannot starve; with `wcp`
+//! off, buckets fall back to earliest-arrival order (Algorithm 2 as
+//! written).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::engines::{Completion, EngineJob, PrefixFp, QueryId};
 
@@ -76,14 +84,44 @@ pub struct QueueItem {
     /// Shared-prompt-prefix fingerprint of a prefill job (None for every
     /// other job kind): the engine scheduler's routing signal.
     pub prefix: Option<PrefixFp>,
+    /// Remaining critical-path device time of the owning query at dispatch
+    /// time (microseconds; the graph scheduler's `WcpTracker` stamp).
+    /// Drives weighted-critical-path bucket ordering; the engine scheduler
+    /// may discount it when the item's prefix is already resident.
+    pub wcp_us: u64,
     pub job: EngineJob,
     pub reply: Sender<Completion>,
 }
 
+/// Aging weight of weighted-critical-path ordering: every microsecond a
+/// bucket has waited counts as this many microseconds of remaining path,
+/// so a short-tail query under sustained long-query load overtakes a
+/// fresh long query after `path_gap / WCP_AGING_WEIGHT` of queueing —
+/// bounded starvation instead of strict longest-path-first.  At 2, a
+/// long query can jump at most half its own remaining device time's
+/// worth of queued short work — enough to start its tail promptly, while
+/// a displaced short query waits at most `path_gap / 2` extra.
+pub const WCP_AGING_WEIGHT: u64 = 2;
+
+/// Effective bucket priority under weighted-critical-path ordering:
+/// remaining path plus the aging bonus.  Pure so starvation-freedom is
+/// unit-testable.
+pub fn wcp_priority_us(remaining_path_us: u64, waited: Duration) -> u64 {
+    let waited_us = waited.as_micros().min(u64::MAX as u128) as u64;
+    remaining_path_us.saturating_add(waited_us.saturating_mul(WCP_AGING_WEIGHT))
+}
+
 /// Form the next batch according to `policy`, removing the chosen items
 /// from `queue`.  `max_slots` is the engine's pre-tuned max batch rows
-/// (token-size analog for LLMs).  Returns an empty vec when nothing fits.
-pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: usize) -> Vec<QueueItem> {
+/// (token-size analog for LLMs).  `wcp` selects weighted-critical-path
+/// bucket ordering under `TopoAware` (the baselines ignore it).  Returns
+/// an empty vec when nothing fits.
+pub fn form_batch(
+    queue: &mut Vec<QueueItem>,
+    policy: BatchPolicy,
+    max_slots: usize,
+    wcp: bool,
+) -> Vec<QueueItem> {
     if queue.is_empty() {
         return Vec::new();
     }
@@ -111,7 +149,7 @@ pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: us
         BatchPolicy::TopoAware => {
             // Algorithm 2 Event 2, restricted to the highest-priority
             // item's class.
-            let mut order = topo_order(queue);
+            let mut order = topo_order(queue, wcp);
             if let Some(&first) = order.first() {
                 let class = job_class(&queue[first].job);
                 order.retain(|&i| job_class(&queue[i].job) == class);
@@ -128,11 +166,15 @@ pub fn form_batch(queue: &mut Vec<QueueItem>, policy: BatchPolicy, max_slots: us
 /// executor interleaves chunked-prefill calls and decode iterations
 /// internally — and an oversized item is never admitted over budget (it
 /// waits for a drained instance with the full slot budget).
-pub fn form_continuous_admission(queue: &mut Vec<QueueItem>, spare_rows: usize) -> Vec<QueueItem> {
+pub fn form_continuous_admission(
+    queue: &mut Vec<QueueItem>,
+    spare_rows: usize,
+    wcp: bool,
+) -> Vec<QueueItem> {
     if queue.is_empty() || spare_rows == 0 {
         return Vec::new();
     }
-    let order = topo_order(queue);
+    let order = topo_order(queue, wcp);
     take_rows(queue, order, spare_rows, true, false)
 }
 
@@ -140,38 +182,55 @@ pub fn form_continuous_admission(queue: &mut Vec<QueueItem>, spare_rows: usize) 
 /// the queue's head in priority order.  The engine scheduler reads its
 /// prefix fingerprint *before* forming a batch so instance choice (prefix
 /// affinity) can precede batch formation.
-pub fn head_index(queue: &[QueueItem], policy: BatchPolicy) -> Option<usize> {
+pub fn head_index(queue: &[QueueItem], policy: BatchPolicy, wcp: bool) -> Option<usize> {
     if queue.is_empty() {
         return None;
     }
     match policy {
-        BatchPolicy::TopoAware => topo_order(queue).first().copied(),
+        BatchPolicy::TopoAware => topo_order(queue, wcp).first().copied(),
         BatchPolicy::BlindTO | BatchPolicy::PerInvocation => (0..queue.len())
             .min_by_key(|&i| queue[i].arrival),
     }
 }
 
 /// Algorithm 2's priority order over the whole queue: bucket by query,
-/// order buckets by earliest arrival, then sweep buckets taking each
-/// bucket's highest-depth nodes first, so other queries' contributive
-/// primitives come before a query's lower-depth siblings (Fig. 7); the
-/// sweep continues level by level — idle slots help nobody.
-fn topo_order(queue: &[QueueItem]) -> Vec<usize> {
+/// order buckets by weighted-critical-path priority (descending
+/// remaining-path + aging; `wcp` on) or earliest arrival (`wcp` off),
+/// then sweep buckets taking each bucket's highest-depth nodes first, so
+/// other queries' contributive primitives come before a query's
+/// lower-depth siblings (Fig. 7); the sweep continues level by level —
+/// idle slots help nobody.
+fn topo_order(queue: &[QueueItem], wcp: bool) -> Vec<usize> {
     let mut buckets: BTreeMap<QueryId, Vec<usize>> = BTreeMap::new();
     for (i, it) in queue.iter().enumerate() {
         buckets.entry(it.query).or_default().push(i);
     }
-    let mut bucket_list: Vec<(Instant, Vec<usize>)> = buckets
+    let now = Instant::now();
+    // BTreeMap iteration is query-ascending, and both sorts below are
+    // stable, so full ties break deterministically by query id.
+    let mut bucket_list: Vec<(Instant, u64, Vec<usize>)> = buckets
         .into_values()
         .map(|idxs| {
             let earliest = idxs.iter().map(|&i| queue[i].arrival).min().unwrap();
-            (earliest, idxs)
+            let effective = if wcp {
+                // The freshest upper bound on the query's remaining path
+                // is the largest stamp among its queued items.
+                let path = idxs.iter().map(|&i| queue[i].wcp_us).max().unwrap_or(0);
+                wcp_priority_us(path, now.saturating_duration_since(earliest))
+            } else {
+                0
+            };
+            (earliest, effective, idxs)
         })
         .collect();
-    bucket_list.sort_by_key(|(t, _)| *t);
+    if wcp {
+        bucket_list.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    } else {
+        bucket_list.sort_by_key(|(t, _, _)| *t);
+    }
     let mut order = Vec::new();
     let mut remaining: Vec<Vec<usize>> =
-        bucket_list.into_iter().map(|(_, idxs)| idxs).collect();
+        bucket_list.into_iter().map(|(_, _, idxs)| idxs).collect();
     while remaining.iter().any(|b| !b.is_empty()) {
         for bucket in remaining.iter_mut() {
             if bucket.is_empty() {
@@ -245,6 +304,7 @@ mod tests {
             arrival: t0 + Duration::from_millis(ms),
             rows,
             prefix: None,
+            wcp_us: 0,
             job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
             reply: tx,
         }
@@ -260,7 +320,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 1),
             item(2, 20, 3, 1, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 2);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 2, false);
         let picked: Vec<(u64, usize)> = batch.iter().map(|i| (i.query, i.node)).collect();
         // Fig. 7: A (deep, query 1) + H (deep, query 2); B waits.
         assert!(picked.contains(&(1, 10)));
@@ -277,7 +337,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 1),
             item(2, 20, 3, 1, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::BlindTO, 2);
+        let batch = form_batch(&mut q, BatchPolicy::BlindTO, 2, false);
         let picked: Vec<usize> = batch.iter().map(|i| i.node).collect();
         assert!(picked.contains(&10) && picked.contains(&11));
     }
@@ -290,7 +350,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 0),
             item(2, 20, 3, 1, t0, 1),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::PerInvocation, 64);
+        let batch = form_batch(&mut q, BatchPolicy::PerInvocation, 64, false);
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|i| i.query == 1));
     }
@@ -303,7 +363,7 @@ mod tests {
             item(1, 2, 2, 6, t0, 1),
             item(2, 3, 2, 3, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 10);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 10, false);
         let rows: usize = batch.iter().map(|i| i.rows).sum();
         assert!(rows <= 10);
         // skip-over admits the 3-row item from query 2.
@@ -320,14 +380,14 @@ mod tests {
         ];
         // 4 spare slots on a mid-flight instance: the 6-row item cannot
         // join (no oversized admission), the 3- and 1-row items pack in.
-        let batch = form_continuous_admission(&mut q, 4);
+        let batch = form_continuous_admission(&mut q, 4, false);
         let rows: usize = batch.iter().map(|i| i.rows).sum();
         assert_eq!(rows, 4);
         assert_eq!(batch.len(), 2);
         assert_eq!(q.len(), 1);
         assert_eq!(q[0].rows, 6);
         // Zero spare admits nothing.
-        assert!(form_continuous_admission(&mut q, 0).is_empty());
+        assert!(form_continuous_admission(&mut q, 0, false).is_empty());
     }
 
     #[test]
@@ -339,17 +399,17 @@ mod tests {
             item(2, 20, 2, 1, t0, 2),
         ];
         // TopoAware: earliest query's deepest node leads.
-        assert_eq!(head_index(&q, BatchPolicy::TopoAware), Some(1));
+        assert_eq!(head_index(&q, BatchPolicy::TopoAware, false), Some(1));
         // FIFO policies: oldest arrival leads.
-        assert_eq!(head_index(&q, BatchPolicy::BlindTO), Some(0));
-        assert_eq!(head_index(&[], BatchPolicy::TopoAware), None);
+        assert_eq!(head_index(&q, BatchPolicy::BlindTO, false), Some(0));
+        assert_eq!(head_index(&[], BatchPolicy::TopoAware, false), None);
     }
 
     #[test]
     fn oversized_item_admitted_alone() {
         let t0 = Instant::now();
         let mut q = vec![item(1, 1, 2, 100, t0, 0), item(2, 2, 2, 1, t0, 1)];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16, false);
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].rows, 100);
     }

@@ -40,6 +40,7 @@ use std::time::Duration;
 
 use crate::engines::instance::Instance;
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
+use crate::engines::profile::DeviceModel;
 use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
 use crate::scheduler::batching::{
     form_batch, form_continuous_admission, head_index, BatchPolicy, QueueItem,
@@ -69,8 +70,14 @@ pub struct EngineScheduler {
     /// Per-instance resident-prefix budget (0 disables prefix routing);
     /// shares the handle with the executors' registries.
     pub prefix_slots: Arc<AtomicUsize>,
+    /// Shared, runtime-switchable weighted-critical-path toggle: under
+    /// `TopoAware`, order query buckets by descending remaining
+    /// critical-path device time (+ aging) instead of arrival.
+    pub wcp: Arc<AtomicBool>,
     /// Whether this engine's executors run the stepped protocol.
     mode: ExecMode,
+    /// Cost model of this engine (prefix-hit discounts on `wcp_us`).
+    device: DeviceModel,
     /// In-flight rows per instance (admitted minus retired) for
     /// least-loaded routing and spare-slot admission.
     loads: Vec<usize>,
@@ -96,11 +103,13 @@ impl EngineScheduler {
         continuous: Arc<AtomicBool>,
         batch_window_us: Arc<AtomicU64>,
         prefix_slots: Arc<AtomicUsize>,
+        wcp: Arc<AtomicBool>,
         mode: ExecMode,
     ) -> EngineScheduler {
         let n = instances.len();
         let prefix_homes =
             (0..n).map(|_| PrefixRegistry::new(prefix_slots.clone())).collect();
+        let device = DeviceModel::for_engine(&name);
         EngineScheduler {
             name,
             instances,
@@ -111,7 +120,9 @@ impl EngineScheduler {
             continuous,
             batch_window_us,
             prefix_slots,
+            wcp,
             mode,
+            device,
             loads: vec![0; n],
             dead: vec![false; n],
             prefix_homes,
@@ -124,7 +135,7 @@ impl EngineScheduler {
         loop {
             // Block briefly for new work; exit when the platform drops.
             match self.job_rx.recv_timeout(Duration::from_micros(500)) {
-                Ok(item) => self.queue.push(item),
+                Ok(item) => self.enqueue(item),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     let alive = self.dead.iter().any(|d| !d);
@@ -145,7 +156,7 @@ impl EngineScheduler {
             }
             // Drain everything already waiting.
             while let Ok(item) = self.job_rx.try_recv() {
-                self.queue.push(item);
+                self.enqueue(item);
             }
             // Fold in per-step occupancy reports.
             while let Ok(ev) = self.event_rx.try_recv() {
@@ -153,6 +164,27 @@ impl EngineScheduler {
             }
             self.dispatch();
         }
+    }
+
+    /// Queue an arriving item, applying the prefix-hit cost feedback: a
+    /// prefill whose fingerprinted prefix is already resident on a live
+    /// instance will only prefill its suffix, so that much device time
+    /// leaves the owning query's remaining-critical-path stamp before
+    /// bucket ordering reads it.  (Applied once, at enqueue; residency
+    /// observed later doesn't retro-discount — the stamp is a scheduling
+    /// weight, not an accounting ledger.)
+    fn enqueue(&mut self, mut item: QueueItem) {
+        if let Some(fp) = item.prefix {
+            let routing = self.prefix_slots.load(Ordering::Relaxed) > 0;
+            if routing
+                && (0..self.instances.len())
+                    .any(|i| !self.dead[i] && self.prefix_homes[i].contains(fp))
+            {
+                let discount = (self.device.prefill_us_per_token * fp.len as f64) as u64;
+                item.wcp_us = item.wcp_us.saturating_sub(discount);
+            }
+        }
+        self.queue.push(item);
     }
 
     /// Fail every queued item with an engine-dead completion: the engine
@@ -188,8 +220,17 @@ impl EngineScheduler {
         let prefix_routing = self.mode == ExecMode::Stepped
             && policy == BatchPolicy::TopoAware
             && self.prefix_slots.load(Ordering::Relaxed) > 0;
+        // Weighted-critical-path bucket ordering: Teola-side (TopoAware)
+        // only; the TO/PO baselines keep their arrival semantics.
+        let wcp = policy == BatchPolicy::TopoAware && self.wcp.load(Ordering::Relaxed);
         let window =
             Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
+        // A mid-run `prefix_slots` retune must reach the routing mirrors
+        // immediately: trim them to the current budget so affinity never
+        // routes toward a prefix the executors have already evicted.
+        for home in &mut self.prefix_homes {
+            home.resync();
+        }
         loop {
             if self.queue.is_empty() {
                 break;
@@ -201,7 +242,7 @@ impl EngineScheduler {
                 break;
             }
             let want_prefix = if prefix_routing {
-                head_index(&self.queue, policy).and_then(|i| self.queue[i].prefix)
+                head_index(&self.queue, policy, wcp).and_then(|i| self.queue[i].prefix)
             } else {
                 None
             };
@@ -213,9 +254,10 @@ impl EngineScheduler {
                 form_continuous_admission(
                     &mut self.queue,
                     slots.saturating_sub(self.loads[inst]),
+                    wcp,
                 )
             } else {
-                form_batch(&mut self.queue, policy, slots)
+                form_batch(&mut self.queue, policy, slots, wcp)
             };
             if items.is_empty() {
                 break;
@@ -257,6 +299,7 @@ impl EngineScheduler {
                             node: i.node,
                             depth: i.depth,
                             arrival: i.arrival,
+                            wcp_us: i.wcp_us,
                             reply: i.reply,
                         },
                         i.job,
@@ -279,6 +322,9 @@ impl EngineScheduler {
                 for (ctx, job) in unsent.0.jobs {
                     let rows = job.rows();
                     let prefix = job.prefix();
+                    // Plain push, not `enqueue`: the critical-path stamp
+                    // survived the round trip through `RequestCtx` and
+                    // already carries any prefix discount.
                     self.queue.push(QueueItem {
                         query: ctx.query,
                         node: ctx.node,
@@ -289,6 +335,7 @@ impl EngineScheduler {
                         arrival: ctx.arrival,
                         rows,
                         prefix,
+                        wcp_us: ctx.wcp_us,
                         job,
                         reply: ctx.reply,
                     });
@@ -364,6 +411,7 @@ mod tests {
             arrival,
             rows: 1,
             prefix: None,
+            wcp_us: 0,
             job,
             reply: tx,
         }
@@ -413,13 +461,13 @@ mod tests {
         ];
         // First formed batch: the stale decode (earliest query bucket,
         // class-restricted) — its own window has expired, dispatch now.
-        let first = form_batch(&mut queue, BatchPolicy::TopoAware, 8);
+        let first = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false);
         assert_eq!(first.len(), 1);
         assert_eq!(first[0].node, 1);
         assert!(batch_window_expired(&first, window));
         // Second formed batch: the fresh prefills — their window is still
         // open, so dispatch waits for more co-arrivals.
-        let second = form_batch(&mut queue, BatchPolicy::TopoAware, 8);
+        let second = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false);
         assert_eq!(second.len(), 2);
         assert!(!batch_window_expired(&second, window));
     }

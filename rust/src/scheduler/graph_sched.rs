@@ -17,6 +17,7 @@ use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
 use crate::graph::value::Value;
 use crate::scheduler::batching::QueueItem;
 use crate::scheduler::object_store::ObjectStore;
+use crate::scheduler::wcp::WcpTracker;
 
 /// Per-query latency accounting (feeds Figs. 1, 12 and EXPERIMENTS.md).
 #[derive(Debug, Clone, Default)]
@@ -75,6 +76,9 @@ impl QueryRunner {
         let mut seq_len: HashMap<u32, usize> = HashMap::new();
         let mut pending_rerank: HashMap<NodeId, (Vec<Vec<i32>>, usize)> = HashMap::new();
         let mut done = 0usize;
+        // Remaining critical-path estimate (§8): stamped onto every
+        // dispatched queue item, tightened as nodes complete.
+        let mut wcp = WcpTracker::new(&self.egraph);
 
         // Local completion worklist (host ops complete synchronously).
         let mut ready: Vec<NodeId> = self.egraph.sources();
@@ -93,11 +97,13 @@ impl QueryRunner {
                         &mut metrics,
                         &mut state,
                         &mut local_done,
+                        wcp.remaining_us(),
                     )?;
                 }
             }
             // Apply synchronous completions.
             if let Some((v, val)) = local_done.pop() {
+                wcp.complete(v);
                 self.complete(v, val, &mut store, &mut indeg, &mut ready, &mut state, &mut done)?;
                 continue;
             }
@@ -139,6 +145,7 @@ impl QueryRunner {
                 }
             }
             metrics.n_engine_ops += 1;
+            wcp.complete(node);
             self.complete(node, value, &mut store, &mut indeg, &mut ready, &mut state, &mut done)?;
         }
 
@@ -161,6 +168,7 @@ impl QueryRunner {
                     arrival: Instant::now(),
                     rows: 0,
                     prefix: None,
+                    wcp_us: 0,
                     job: EngineJob::FreeQuery { query: self.query },
                     reply: tx,
                 });
@@ -237,6 +245,7 @@ impl QueryRunner {
         metrics: &mut QueryMetrics,
         state: &mut [NodeState],
         local_done: &mut Vec<(NodeId, Value)>,
+        wcp_us: u64,
     ) -> Result<()> {
         let node = &self.egraph.graph.nodes[v];
         state[v] = NodeState::Dispatched;
@@ -284,7 +293,7 @@ impl QueryRunner {
                 for s in sources {
                     chunks.extend(self.rows_of(store, s)?);
                 }
-                self.send_job(v, EngineJob::Embed { chunks }, tx)?;
+                self.send_job(v, EngineJob::Embed { chunks }, tx, wcp_us)?;
             }
             PayloadSpec::Ingest { chunks, embeddings } => {
                 let mut rows = Vec::new();
@@ -296,6 +305,7 @@ impl QueryRunner {
                     v,
                     EngineJob::Ingest { namespace: self.query, chunks: rows, embeddings: embs },
                     tx,
+                    wcp_us,
                 )?;
             }
             PayloadSpec::VectorSearch { embeddings, top_k } => {
@@ -308,6 +318,7 @@ impl QueryRunner {
                         top_k: *top_k,
                     },
                     tx,
+                    wcp_us,
                 )?;
             }
             PayloadSpec::Rerank { query, candidates, top_k } => {
@@ -327,7 +338,7 @@ impl QueryRunner {
                     })
                     .collect();
                 pending_rerank.insert(v, (cands, *top_k));
-                self.send_job(v, EngineJob::Rerank { pairs }, tx)?;
+                self.send_job(v, EngineJob::Rerank { pairs }, tx, wcp_us)?;
             }
             PayloadSpec::Prefill { seq, parts } => {
                 let mut tokens = Vec::new();
@@ -364,6 +375,7 @@ impl QueryRunner {
                     v,
                     EngineJob::Prefill { seq: (self.query, *seq), tokens, offset, prefix },
                     tx,
+                    wcp_us,
                 )?;
             }
             PayloadSpec::Decode { seq, first_from, segments } => {
@@ -383,6 +395,7 @@ impl QueryRunner {
                         segments: segs,
                     },
                     tx,
+                    wcp_us,
                 )?;
             }
             PayloadSpec::WebSearch { queries, top_k } => {
@@ -390,7 +403,7 @@ impl QueryRunner {
                 for q in queries {
                     rows.extend(self.rows_of(store, q)?);
                 }
-                self.send_job(v, EngineJob::WebSearch { queries: rows, top_k: *top_k }, tx)?;
+                self.send_job(v, EngineJob::WebSearch { queries: rows, top_k: *top_k }, tx, wcp_us)?;
             }
             PayloadSpec::ClonePrefix { src_seq, dst_seq, len, .. } => {
                 seq_len.insert(*dst_seq, *len);
@@ -402,6 +415,7 @@ impl QueryRunner {
                         len: *len,
                     },
                     tx,
+                    wcp_us,
                 )?;
             }
             PayloadSpec::Tool { name, cost_us } => {
@@ -409,6 +423,7 @@ impl QueryRunner {
                     v,
                     EngineJob::ToolCall { name: name.clone(), cost_us: *cost_us },
                     tx,
+                    wcp_us,
                 )?;
             }
         }
@@ -495,7 +510,13 @@ impl QueryRunner {
         }
     }
 
-    fn send_job(&self, v: NodeId, job: EngineJob, tx: &Sender<Completion>) -> Result<()> {
+    fn send_job(
+        &self,
+        v: NodeId,
+        job: EngineJob,
+        tx: &Sender<Completion>,
+        wcp_us: u64,
+    ) -> Result<()> {
         let node = &self.egraph.graph.nodes[v];
         let sender = self.routers.get(&node.engine).ok_or_else(|| {
             TeolaError::Scheduler(format!("no engine registered for '{}'", node.engine))
@@ -511,6 +532,7 @@ impl QueryRunner {
                 arrival: Instant::now(),
                 rows,
                 prefix,
+                wcp_us,
                 job,
                 reply: tx.clone(),
             })

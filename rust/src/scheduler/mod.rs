@@ -11,11 +11,14 @@ pub mod engine_sched;
 pub mod graph_sched;
 pub mod object_store;
 pub mod platform;
+pub mod wcp;
 
 pub use batching::{
-    form_batch, form_continuous_admission, head_index, BatchPolicy, BundleId, QueueItem,
+    form_batch, form_continuous_admission, head_index, wcp_priority_us, BatchPolicy, BundleId,
+    QueueItem, WCP_AGING_WEIGHT,
 };
 pub use engine_sched::EngineScheduler;
 pub use graph_sched::{QueryMetrics, QueryRunner};
 pub use object_store::ObjectStore;
 pub use platform::{EngineSpec, Platform, PlatformConfig};
+pub use wcp::{node_cost_us, WcpTracker};

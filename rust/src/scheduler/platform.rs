@@ -68,6 +68,13 @@ pub struct PlatformConfig {
     /// prefix.  0 disables routing and caching entirely; switchable at
     /// runtime via [`Platform::set_prefix_slots`].
     pub prefix_slots: usize,
+    /// Weighted-critical-path scheduling (paper §8): under `TopoAware`,
+    /// engine schedulers order query buckets by descending remaining
+    /// critical-path device time (with aging) instead of arrival, so a
+    /// query whose workflow tail is long gets engine slots first.  The
+    /// TO/PO baselines ignore it; switchable at runtime via
+    /// [`Platform::set_wcp`].
+    pub wcp: bool,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -93,6 +100,7 @@ impl PlatformConfig {
             continuous: true,
             batch_window_us: 3_000,
             prefix_slots: 8,
+            wcp: true,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -131,6 +139,7 @@ pub struct Platform {
     continuous: Arc<AtomicBool>,
     batch_window_us: Arc<AtomicU64>,
     prefix_slots: Arc<AtomicUsize>,
+    wcp: Arc<AtomicBool>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -162,6 +171,7 @@ impl Platform {
         let continuous = Arc::new(AtomicBool::new(cfg.continuous));
         let batch_window_us = Arc::new(AtomicU64::new(cfg.batch_window_us));
         let prefix_slots = Arc::new(AtomicUsize::new(cfg.prefix_slots));
+        let wcp = Arc::new(AtomicBool::new(cfg.wcp));
         // Instances ack on this channel once their executor (including any
         // warm-up compilation) is constructed; start() blocks on all acks
         // so serving never races against compilation.
@@ -185,6 +195,7 @@ impl Platform {
                 continuous.clone(),
                 batch_window_us.clone(),
                 prefix_slots.clone(),
+                wcp.clone(),
                 mode,
             );
             let h = std::thread::Builder::new()
@@ -300,6 +311,7 @@ impl Platform {
             continuous,
             batch_window_us,
             prefix_slots,
+            wcp,
             profiles,
             manifest,
             sep,
@@ -330,6 +342,12 @@ impl Platform {
     /// LLM engine schedulers and their executors' registries at once).
     pub fn set_prefix_slots(&self, n: usize) {
         self.prefix_slots.store(n, Ordering::Relaxed);
+    }
+
+    /// Toggle weighted-critical-path bucket ordering at runtime (applies
+    /// to every engine scheduler; only effective under `TopoAware`).
+    pub fn set_wcp(&self, on: bool) {
+        self.wcp.store(on, Ordering::Relaxed);
     }
 
     /// Retune one engine's slot budget (max batch rows) at runtime.

@@ -1,0 +1,214 @@
+//! Weighted critical-path (WCP) estimation (paper §8, "exploitation of
+//! critical path"): per-query remaining critical-path *device time*.
+//!
+//! Algorithm 2 orders query buckets by arrival; the §8 discussion argues
+//! engine slots should instead go to the query whose *remaining workflow*
+//! is longest — its critical path lower-bounds its completion time, so
+//! delaying it delays the application tail one-for-one, while short-tail
+//! queries can catch up in the parallel slack.  The graph scheduler builds
+//! a [`WcpTracker`] per query: every node gets a `DeviceModel`-weighted
+//! cost estimate, `path_us[v]` is the longest cost-weighted path from `v`
+//! to the sink, and the query's remaining critical path is the maximum
+//! `path_us` over incomplete nodes — recomputed incrementally as nodes
+//! complete (a child can never finish before its parents, so an
+//! incomplete node's entire downstream path is still outstanding and the
+//! static `path_us` stays exact).
+//!
+//! The tracker's `remaining_us()` is stamped onto every dispatched
+//! [`crate::scheduler::batching::QueueItem`]; the engine schedulers order
+//! query buckets by it (descending, with an aging term — see
+//! `batching::wcp_priority_us`) when the `wcp` knob is on.
+
+use crate::engines::profile::DeviceModel;
+use crate::engines::NodeId;
+use crate::graph::egraph::EGraph;
+use crate::graph::primitive::{DataRef, PayloadSpec, Primitive};
+
+/// Token estimate for a prompt part whose rows are produced at runtime
+/// (upstream node outputs are unknown at graph-build time).
+const FALLBACK_PART_TOKENS: usize = 24;
+/// Row estimate for an encoder input of unknown (runtime) cardinality.
+const FALLBACK_ROWS: usize = 8;
+/// Host-side service calls (vector DB ops) — cheap but not free.
+const VDB_COST_US: u64 = 2_000;
+/// Web search carries the simulated network envelope (`NetModel` base).
+const WEB_COST_US: u64 = 35_000;
+/// KV prefix clone: host-side copy, far below a prefill.
+const CLONE_COST_US: u64 = 500;
+
+fn part_tokens(r: &DataRef) -> usize {
+    match r {
+        DataRef::Const(rows) => rows.iter().map(|row| row.len()).sum(),
+        DataRef::Node(_) | DataRef::NodeSlice(_, _, _) => FALLBACK_PART_TOKENS,
+    }
+}
+
+fn part_rows(r: &DataRef) -> usize {
+    r.static_rows().unwrap_or(FALLBACK_ROWS)
+}
+
+/// `DeviceModel`-weighted cost estimate of one primitive node,
+/// microseconds.  Estimates only need to be *relatively* right — they
+/// weigh critical-path comparisons across queries, they are never charged
+/// anywhere — so runtime-unknown inputs use coarse fallbacks.
+pub fn node_cost_us(node: &Primitive) -> u64 {
+    match &node.payload {
+        PayloadSpec::Prefill { parts, .. } => {
+            let dm = DeviceModel::for_engine(&node.engine);
+            let tokens: usize = parts.iter().map(part_tokens).sum();
+            dm.prefill_us(1, tokens.max(1))
+        }
+        PayloadSpec::Decode { segments, .. } => {
+            let dm = DeviceModel::for_engine(&node.engine);
+            let planned: usize = segments.iter().map(|(_, l)| *l).sum();
+            dm.decode_step_us(1).saturating_mul(planned.max(1) as u64)
+        }
+        PayloadSpec::Embed { sources } => {
+            let dm = DeviceModel::for_engine(&node.engine);
+            dm.encoder_us(sources.iter().map(part_rows).sum::<usize>().max(1))
+        }
+        PayloadSpec::Rerank { candidates, .. } => {
+            let dm = DeviceModel::for_engine(&node.engine);
+            dm.encoder_us(candidates.iter().map(part_rows).sum::<usize>().max(1))
+        }
+        PayloadSpec::Ingest { .. } | PayloadSpec::VectorSearch { .. } => VDB_COST_US,
+        PayloadSpec::WebSearch { .. } => WEB_COST_US,
+        PayloadSpec::Tool { cost_us, .. } => *cost_us,
+        PayloadSpec::ClonePrefix { .. } => CLONE_COST_US,
+        // Host-side control flow is evaluated inline by the graph
+        // scheduler; partial-decode markers complete from a stream the
+        // decode node already pays for.
+        PayloadSpec::Condition { .. }
+        | PayloadSpec::Aggregate { .. }
+        | PayloadSpec::PartialDecode { .. } => 0,
+    }
+}
+
+/// Per-query remaining-critical-path tracker.
+///
+/// Invariant (see `tests/prop_invariants.rs`): `remaining_us()` is
+/// monotonically non-increasing as nodes complete, and reaches 0 when all
+/// nodes have.
+#[derive(Debug)]
+pub struct WcpTracker {
+    /// Longest cost-weighted path from node v to the sink (includes v's
+    /// own cost).  Static: completion order cannot change it because no
+    /// descendant of an incomplete node can be complete.
+    path_us: Vec<u64>,
+    done: Vec<bool>,
+    remaining: u64,
+}
+
+impl WcpTracker {
+    /// Estimate paths over an e-graph (one pass in reverse topo order).
+    pub fn new(egraph: &EGraph) -> WcpTracker {
+        let n = egraph.len();
+        let mut path_us = vec![0u64; n];
+        if let Ok(order) = egraph.graph.topo_order() {
+            for &v in order.iter().rev() {
+                let downstream =
+                    egraph.children[v].iter().map(|&c| path_us[c]).max().unwrap_or(0);
+                path_us[v] = node_cost_us(&egraph.graph.nodes[v]).saturating_add(downstream);
+            }
+        }
+        let remaining = path_us.iter().copied().max().unwrap_or(0);
+        WcpTracker { path_us, done: vec![false; n], remaining }
+    }
+
+    /// Remaining critical-path device time of the query, microseconds.
+    pub fn remaining_us(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Static root-to-sink path estimate through `v`.
+    pub fn path_us(&self, v: NodeId) -> u64 {
+        self.path_us.get(v).copied().unwrap_or(0)
+    }
+
+    /// Mark a node complete and refresh the remaining-path estimate.
+    /// Idempotent; clamped so the estimate never increases.
+    pub fn complete(&mut self, v: NodeId) {
+        if v >= self.done.len() || self.done[v] {
+            return;
+        }
+        self.done[v] = true;
+        let frontier = self
+            .path_us
+            .iter()
+            .zip(&self.done)
+            .filter(|(_, d)| !**d)
+            .map(|(p, _)| *p)
+            .max()
+            .unwrap_or(0);
+        self.remaining = self.remaining.min(frontier);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pgraph::{build_pgraph, instr_tokens};
+    use crate::graph::template::*;
+
+    fn one_shot_egraph(out_tokens: usize) -> EGraph {
+        let mut t = WorkflowTemplate::new("wcp");
+        t.add(Component {
+            name: "gen".into(),
+            kind: ComponentKind::LlmGenerate {
+                variant: "llm-lite".into(),
+                mode: SynthesisMode::OneShot,
+                prompt: vec![
+                    PromptPart::Instruction(instr_tokens("i", 16)),
+                    PromptPart::Question,
+                ],
+                out_tokens,
+                segments: 1,
+                fan: 0,
+            },
+            engine: "llm-lite".into(),
+            batchable: false,
+            splittable: false,
+        });
+        let q = QueryConfig::example(5);
+        EGraph::new(build_pgraph(&t, &q).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn longer_decode_means_longer_path() {
+        let short = WcpTracker::new(&one_shot_egraph(8));
+        let long = WcpTracker::new(&one_shot_egraph(96));
+        assert!(short.remaining_us() > 0);
+        assert!(
+            long.remaining_us() > short.remaining_us(),
+            "96-token tail {} must out-weigh 8-token tail {}",
+            long.remaining_us(),
+            short.remaining_us()
+        );
+    }
+
+    #[test]
+    fn remaining_shrinks_as_nodes_complete_and_ends_at_zero() {
+        let e = one_shot_egraph(8);
+        let mut w = WcpTracker::new(&e);
+        let order = e.graph.topo_order().unwrap();
+        let mut prev = w.remaining_us();
+        for v in order {
+            w.complete(v);
+            assert!(w.remaining_us() <= prev, "remaining grew at node {v}");
+            prev = w.remaining_us();
+        }
+        assert_eq!(w.remaining_us(), 0);
+        // Idempotent on repeat completion.
+        w.complete(0);
+        assert_eq!(w.remaining_us(), 0);
+    }
+
+    #[test]
+    fn source_path_covers_whole_chain() {
+        let e = one_shot_egraph(8);
+        let w = WcpTracker::new(&e);
+        let src = e.sources()[0];
+        assert_eq!(w.path_us(src), w.remaining_us());
+        assert_eq!(w.path_us(usize::MAX), 0);
+    }
+}

@@ -10,9 +10,11 @@
 
 use std::time::{Duration, Instant};
 
-use crate::bench::{build_egraph, next_query_id, TraceRun};
+use crate::bench::{build_egraph, hetero_prepared, next_query_id, TraceRun};
+use crate::engines::QueryId;
 use crate::error::Result;
 use crate::graph::egraph::EGraph;
+use crate::graph::value::Value;
 use crate::scheduler::graph_sched::QueryMetrics;
 use crate::scheduler::Platform;
 use crate::util::stats::Summary;
@@ -31,6 +33,9 @@ pub struct LoadReport {
     pub exec_ms: Summary,
     /// Full per-query metrics, in arrival order.
     pub metrics: Vec<QueryMetrics>,
+    /// Final output value per query, in arrival order (determinism
+    /// comparisons across scheduler modes).
+    pub outputs: Vec<Value>,
     /// Wall time of the whole run, seconds.
     pub wall_s: f64,
     /// Completed queries per second of wall time.
@@ -38,7 +43,7 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
-    fn from_metrics(metrics: Vec<QueryMetrics>, wall_s: f64) -> LoadReport {
+    fn from_metrics(metrics: Vec<QueryMetrics>, outputs: Vec<Value>, wall_s: f64) -> LoadReport {
         let latencies_ms: Vec<f64> =
             metrics.iter().map(|m| m.e2e_us as f64 / 1000.0).collect();
         let queue: Vec<f64> = metrics.iter().map(|m| m.queue_us as f64 / 1000.0).collect();
@@ -50,6 +55,7 @@ impl LoadReport {
             exec_ms: Summary::of(&exec),
             latencies_ms,
             metrics,
+            outputs,
             wall_s,
             qps,
         }
@@ -70,11 +76,11 @@ impl LoadReport {
         mean(self.metrics.iter().map(|m| m.exec_us))
     }
 
-    /// Dump the latency percentiles to a JSON file (CI perf-trajectory
-    /// smoke artifacts, e.g. `BENCH_PR2.json`).
-    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    /// Latency percentiles as a JSON value (CI perf-trajectory smoke
+    /// artifacts, e.g. `BENCH_PR2.json` / the merged `BENCH_PR4.json`).
+    pub fn to_json(&self) -> crate::json::Json {
         use crate::json::{num, obj};
-        let doc = obj(vec![
+        obj(vec![
             ("n", num(self.latencies_ms.len() as f64)),
             ("p50_ms", num(self.e2e_ms.p50)),
             ("p95_ms", num(self.e2e_ms.p95)),
@@ -82,8 +88,12 @@ impl LoadReport {
             ("mean_ms", num(self.e2e_ms.mean)),
             ("qps", num(self.qps)),
             ("wall_s", num(self.wall_s)),
-        ]);
-        std::fs::write(path, doc.to_string())
+        ])
+    }
+
+    /// Dump the latency percentiles to a JSON file.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
     }
 }
 
@@ -106,6 +116,19 @@ pub fn run_load_prepared(
     prepared: Vec<(EGraph, u64)>,
     arrivals: &[Duration],
 ) -> Result<LoadReport> {
+    run_load_prepared_ids(platform, prepared, arrivals, |_| next_query_id())
+}
+
+/// [`run_load_prepared`] with caller-chosen query ids.  Sim outputs are a
+/// pure function of (query id, e-graph), so replaying a trace with fixed
+/// ids lets two runs be compared bit-for-bit (the WCP/prefix determinism
+/// tests); the default path keeps process-unique ids.
+pub fn run_load_prepared_ids(
+    platform: &Platform,
+    prepared: Vec<(EGraph, u64)>,
+    arrivals: &[Duration],
+    id_of: impl Fn(usize) -> QueryId,
+) -> Result<LoadReport> {
     let start = Instant::now();
     let mut handles = Vec::with_capacity(prepared.len());
     for (i, (e, opt_us)) in prepared.into_iter().enumerate() {
@@ -113,16 +136,52 @@ pub fn run_load_prepared(
         if let Some(wait) = due.checked_sub(start.elapsed()) {
             std::thread::sleep(wait);
         }
-        handles.push((opt_us, platform.spawn_query(next_query_id(), e)));
+        handles.push((opt_us, platform.spawn_query(id_of(i), e)));
     }
     let mut metrics = Vec::with_capacity(handles.len());
+    let mut outputs = Vec::with_capacity(handles.len());
     for (opt_us, h) in handles {
-        let (_out, mut m) = h.join().expect("query thread")?;
+        let (out, mut m) = h.join().expect("query thread")?;
         m.opt_us = opt_us;
         metrics.push(m);
+        outputs.push(out);
     }
     let wall_s = start.elapsed().as_secs_f64();
-    Ok(LoadReport::from_metrics(metrics, wall_s))
+    Ok(LoadReport::from_metrics(metrics, outputs, wall_s))
+}
+
+/// The PR4 heterogeneous-trace comparison: replay one seeded Poisson
+/// trace of mixed short-RAG / long-multistep queries twice — weighted
+/// critical-path ordering off, then on — with fixed query ids so the two
+/// reports' outputs are comparable bit-for-bit.  Returns `(off, on)` and
+/// leaves the platform with WCP re-enabled.
+pub fn run_wcp_comparison(
+    platform: &Platform,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<(LoadReport, LoadReport)> {
+    let trace = PoissonTrace::generate(rate, n, seed);
+    let id_of = |i: usize| 0x9C4_0000 + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half: every hetero query carries the same fingerprinted prefix, so
+    // without this the 'off' half alone would pay the cold prefix
+    // prefill — a bias in WCP's favor unrelated to scheduling.
+    if let Some((e, _)) = hetero_prepared(1, seed).pop() {
+        let _ = platform.run_query(0x9C4_FFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    platform.set_wcp(false);
+    drain(); // let the previous half's queued FreeQuery cleanup land
+    let off = run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+    platform.set_wcp(true);
+    // Both halves reuse the same query ids (bit-identical outputs need
+    // identical (id, e-graph) pairs); drain between them so the first
+    // half's fire-and-forget FreeQuery items cannot execute after the
+    // second half re-admits the same id and wipe its live KV.
+    drain();
+    let on = run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+    Ok((off, on))
 }
 
 /// Open-loop Poisson load for one (app, scheme, dataset) configuration:
@@ -156,7 +215,7 @@ mod tests {
                 ..QueryMetrics::default()
             })
             .collect();
-        let r = LoadReport::from_metrics(metrics, 2.0);
+        let r = LoadReport::from_metrics(metrics, Vec::new(), 2.0);
         assert_eq!(r.latencies_ms.len(), 100);
         assert_eq!(r.e2e_ms.count, 100);
         assert!(r.e2e_ms.p50 <= r.e2e_ms.p95 && r.e2e_ms.p95 <= r.e2e_ms.p99);
@@ -167,7 +226,7 @@ mod tests {
 
     #[test]
     fn empty_report_is_zeroed() {
-        let r = LoadReport::from_metrics(Vec::new(), 0.0);
+        let r = LoadReport::from_metrics(Vec::new(), Vec::new(), 0.0);
         assert_eq!(r.e2e_ms.count, 0);
         assert_eq!(r.qps, 0.0);
     }
@@ -177,7 +236,7 @@ mod tests {
         let metrics: Vec<QueryMetrics> = (1..=10u64)
             .map(|i| QueryMetrics { e2e_us: i * 1000, ..QueryMetrics::default() })
             .collect();
-        let r = LoadReport::from_metrics(metrics, 1.0);
+        let r = LoadReport::from_metrics(metrics, Vec::new(), 1.0);
         let path = std::env::temp_dir().join("teola_report_json_test.json");
         r.write_json(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

@@ -1,0 +1,124 @@
+//! Deterministic scheduler-trace harness shared by the scheduler-level
+//! integration tests (`wcp_scheduling.rs`, `prefix_routing.rs`,
+//! `continuous_batching.rs`, `sim_serving.rs`) — replaces their
+//! copy-pasted Poisson/trace/executor setup.
+//!
+//! Everything here is seeded and sim-backed: the same (seed, template,
+//! query-id) always reproduces the same trace and outputs, so on/off
+//! scheduler comparisons are apples-to-apples.
+
+#![allow(dead_code)] // each test binary uses its own slice of the harness
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex, MutexGuard, Once};
+use std::time::Instant;
+
+use teola::bench::{one_shot_template, prepared_graphs};
+use teola::engines::llm::SeqStore;
+use teola::engines::sim::SimLlmExecutor;
+use teola::engines::{Completion, EngineJob, RequestCtx, SegmentSpec};
+use teola::graph::egraph::EGraph;
+use teola::graph::template::WorkflowTemplate;
+
+pub const SEP: i32 = 3;
+pub const EOS: i32 = 2;
+
+/// Serialize the platform tests within one test binary: the serving
+/// comparisons are timing-sensitive and must not compete for cores.
+pub fn serial() -> MutexGuard<'static, ()> {
+    static SERIAL: Mutex<()> = Mutex::new(());
+    SERIAL.lock().unwrap()
+}
+
+/// Disable the device-occupancy model for executor-level tests (charging
+/// is asserted via token counters, not wall time).  Set exactly once:
+/// concurrent setenv calls are a data race.
+pub fn device_off() {
+    static DEVICE_OFF: Once = Once::new();
+    DEVICE_OFF.call_once(|| std::env::set_var("TEOLA_DEVICE_OFF", "1"));
+}
+
+/// Standalone sim LLM executor (llm-lite, raw CPU pacing) with the given
+/// resident-prefix budget, plus its sequence store.
+pub fn sim_llm_exec(prefix_slots: usize) -> (SimLlmExecutor, SeqStore) {
+    let (exec, store, _slots) = sim_llm_exec_with_slots(prefix_slots);
+    (exec, store)
+}
+
+/// [`sim_llm_exec`] also returning the shared `prefix_slots` capacity
+/// handle, for tests that retune the budget mid-run.
+pub fn sim_llm_exec_with_slots(
+    prefix_slots: usize,
+) -> (SimLlmExecutor, SeqStore, Arc<AtomicUsize>) {
+    device_off();
+    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+    let slots = Arc::new(AtomicUsize::new(prefix_slots));
+    (
+        SimLlmExecutor::new("llm-lite", store.clone(), SEP, EOS, 1024, slots.clone()),
+        store,
+        slots,
+    )
+}
+
+/// Request context for direct executor tests.
+pub fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
+    RequestCtx { query, node, depth: 0, arrival: Instant::now(), wcp_us: 0, reply }
+}
+
+/// A from-scratch prefill job of `n_tokens` identical tokens.
+pub fn prefill_job(q: u64, seq: u32, n_tokens: usize) -> EngineJob {
+    EngineJob::Prefill { seq: (q, seq), tokens: vec![7; n_tokens], offset: 0, prefix: None }
+}
+
+/// A single-segment decode job of `len` tokens streamed to `node`.
+pub fn decode_job(q: u64, node: usize, seq: u32, len: usize) -> EngineJob {
+    EngineJob::Decode {
+        seq: (q, seq),
+        first_token: 42,
+        segments: vec![SegmentSpec { node, len }],
+    }
+}
+
+/// Step a sim executor until it drains, recording every completion;
+/// panics if the resident set fails to drain within `max_steps`
+/// (starvation guard).
+pub fn run_to_idle(exec: &mut SimLlmExecutor, out: &mut Vec<Completion>, max_steps: usize) {
+    use teola::engines::instance::StepExecutor;
+    let mut steps = 0;
+    while exec.resident() > 0 {
+        exec.step(&mut |c| out.push(c)).unwrap();
+        steps += 1;
+        assert!(steps <= max_steps, "executor failed to drain in {max_steps} steps");
+    }
+}
+
+/// Instruction-heavy one-shot workflow: a 64-token shared instruction
+/// template dominates each query's prefill (the prefix-routing shape).
+pub fn instr_heavy_template(instr_name: &str, llm: &str, out_tokens: usize) -> WorkflowTemplate {
+    one_shot_template(llm, instr_name, 64, out_tokens)
+}
+
+/// Build `n` optimized one-shot e-graphs whose decode length is chosen
+/// per query index (mixed short/long workloads).
+pub fn prepared_with_tokens(
+    n: usize,
+    seed: u64,
+    out_tokens: impl Fn(usize) -> usize,
+) -> Vec<(EGraph, u64)> {
+    prepared_graphs(n, seed, |i| one_shot_template("llm-lite", "load", 12, out_tokens(i)))
+}
+
+/// Build `n` optimized one-shot e-graphs with a fixed decode length.
+pub fn prepared_one_shot(n: usize, out_tokens: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    prepared_with_tokens(n, seed, |_| out_tokens)
+}
+
+/// Build `n` optimized instruction-heavy e-graphs; queries alternate
+/// between two instruction templates (two distinct shared prefixes).
+pub fn prepared_instr_heavy(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    prepared_graphs(n, seed, |i| {
+        let name = if i % 2 == 0 { "instr-even" } else { "instr-odd" };
+        instr_heavy_template(name, "llm-lite", 4 + i % 3)
+    })
+}

@@ -1,70 +1,26 @@
 //! Executor-level tests of the iteration-level (continuous-batching)
 //! protocol on the simulated LLM engine: mid-flight admission, per-row
 //! retirement, starvation-freedom, and output determinism with admission
-//! enabled vs disabled.
+//! enabled vs disabled.  Executor setup comes from the shared harness in
+//! `tests/common/`.
 
-use std::collections::HashMap;
-use std::sync::atomic::AtomicUsize;
+mod common;
+
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
+use common::{ctx, decode_job, prefill_job, run_to_idle, sim_llm_exec};
 use teola::engines::instance::StepExecutor;
-use teola::engines::llm::SeqStore;
-use teola::engines::sim::SimLlmExecutor;
-use teola::engines::{Completion, EngineJob, JobOutput, RequestCtx, SegmentSpec};
-
-const SEP: i32 = 3;
-const EOS: i32 = 2;
-
-fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
-    RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
-}
-
-static DEVICE_OFF: std::sync::Once = std::sync::Once::new();
-
-fn new_exec() -> (SimLlmExecutor, SeqStore) {
-    // Raw CPU pacing (no DeviceModel sleeps) keeps these loops instant.
-    // The env var is per-process and tests run on parallel threads, so
-    // write it exactly once (concurrent setenv calls are a data race).
-    DEVICE_OFF.call_once(|| std::env::set_var("TEOLA_DEVICE_OFF", "1"));
-    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
-    let slots = Arc::new(AtomicUsize::new(0));
-    (SimLlmExecutor::new("llm-lite", store.clone(), SEP, EOS, 1024, slots), store)
-}
-
-fn prefill(q: u64, seq: u32, n_tokens: usize) -> EngineJob {
-    EngineJob::Prefill { seq: (q, seq), tokens: vec![7; n_tokens], offset: 0, prefix: None }
-}
-
-fn decode(q: u64, node: usize, seq: u32, len: usize) -> EngineJob {
-    EngineJob::Decode {
-        seq: (q, seq),
-        first_token: 42,
-        segments: vec![SegmentSpec { node, len }],
-    }
-}
-
-/// Step until the executor drains, recording every completion; panics if
-/// the resident set fails to drain within `max_steps` (starvation guard).
-fn run_to_idle(exec: &mut SimLlmExecutor, out: &mut Vec<Completion>, max_steps: usize) {
-    let mut steps = 0;
-    while exec.resident() > 0 {
-        exec.step(&mut |c| out.push(c)).unwrap();
-        steps += 1;
-        assert!(steps <= max_steps, "executor failed to drain in {max_steps} steps");
-    }
-}
+use teola::engines::{Completion, JobOutput};
 
 #[test]
 fn late_short_decode_joins_inflight_long_and_finishes_first() {
-    let (mut exec, _store) = new_exec();
+    let (mut exec, _store) = sim_llm_exec(0);
     let (tx, _rx) = channel();
 
     // Long decode: 96 planned tokens on query 1.
-    exec.admit(vec![(ctx(1, 10, tx.clone()), prefill(1, 0, 12))]);
+    exec.admit(vec![(ctx(1, 10, tx.clone()), prefill_job(1, 0, 12))]);
     exec.step(&mut |_| {}).unwrap(); // prefill completes
-    exec.admit(vec![(ctx(1, 11, tx.clone()), decode(1, 11, 0, 96))]);
+    exec.admit(vec![(ctx(1, 11, tx.clone()), decode_job(1, 11, 0, 96))]);
 
     // Let the long decode run a few iterations alone.
     for _ in 0..5 {
@@ -72,9 +28,9 @@ fn late_short_decode_joins_inflight_long_and_finishes_first() {
     }
 
     // A short (8-token) decode arrives late and joins mid-flight.
-    exec.admit(vec![(ctx(2, 20, tx.clone()), prefill(2, 0, 6))]);
+    exec.admit(vec![(ctx(2, 20, tx.clone()), prefill_job(2, 0, 6))]);
     exec.step(&mut |_| {}).unwrap(); // chunked-prefill step (decode pauses one step)
-    exec.admit(vec![(ctx(2, 21, tx), decode(2, 21, 0, 8))]);
+    exec.admit(vec![(ctx(2, 21, tx), decode_job(2, 21, 0, 8))]);
 
     let mut finals: Vec<(u64, usize)> = Vec::new();
     let mut out = Vec::new();
@@ -93,7 +49,7 @@ fn late_short_decode_joins_inflight_long_and_finishes_first() {
 
 #[test]
 fn every_admitted_row_retires_under_staggered_admission() {
-    let (mut exec, _store) = new_exec();
+    let (mut exec, _store) = sim_llm_exec(0);
     let (tx, _rx) = channel();
 
     // Admit 12 queries with mixed decode lengths, one every other step,
@@ -101,9 +57,9 @@ fn every_admitted_row_retires_under_staggered_admission() {
     let mut expected: Vec<(u64, usize)> = Vec::new();
     for q in 0..12u64 {
         let len = 4 + (q as usize % 7) * 9; // 4..=58 tokens
-        exec.admit(vec![(ctx(q, 100, tx.clone()), prefill(q, 0, 5))]);
+        exec.admit(vec![(ctx(q, 100, tx.clone()), prefill_job(q, 0, 5))]);
         exec.step(&mut |_| {}).unwrap();
-        exec.admit(vec![(ctx(q, 101, tx.clone()), decode(q, 101, 0, len))]);
+        exec.admit(vec![(ctx(q, 101, tx.clone()), decode_job(q, 101, 0, len))]);
         expected.push((q, 101));
         exec.step(&mut |_| {}).unwrap();
         exec.step(&mut |_| {}).unwrap();
@@ -129,21 +85,22 @@ fn outputs_identical_with_and_without_midflight_admission() {
     // between iterations (continuous shape), must produce identical final
     // outputs: sim tokens are content-addressed per sequence, never
     // functions of batch composition.
-    let jobs: Vec<(u64, usize, usize)> = (0..6u64).map(|q| (q, 50 + q as usize, 6 + q as usize * 11)).collect();
+    let jobs: Vec<(u64, usize, usize)> =
+        (0..6u64).map(|q| (q, 50 + q as usize, 6 + q as usize * 11)).collect();
 
     let collect_finals = |staggered: bool| -> Vec<(u64, usize, Vec<Vec<i32>>)> {
-        let (mut exec, _store) = new_exec();
+        let (mut exec, _store) = sim_llm_exec(0);
         let (tx, _rx) = channel();
         // Identical prefills first so every sequence has the same base.
         for &(q, node, _) in &jobs {
-            exec.admit(vec![(ctx(q, node, tx.clone()), prefill(q, 0, 10))]);
+            exec.admit(vec![(ctx(q, node, tx.clone()), prefill_job(q, 0, 10))]);
         }
-        let mut out = Vec::new();
+        let mut out: Vec<Completion> = Vec::new();
         run_to_idle(&mut exec, &mut out, 100);
 
         let mut out = Vec::new();
         for &(q, node, len) in &jobs {
-            exec.admit(vec![(ctx(q, node, tx.clone()), decode(q, node, 0, len))]);
+            exec.admit(vec![(ctx(q, node, tx.clone()), decode_job(q, node, 0, len))]);
             if staggered {
                 // Interleave admissions with live iterations.
                 exec.step(&mut |c| out.push(c)).unwrap();

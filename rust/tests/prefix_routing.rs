@@ -1,72 +1,49 @@
 //! Cross-query KV prefix routing: executor-level hit accounting and LRU
-//! eviction on the sim LLM executor, the end-to-end p95 win on an
-//! instruction-heavy Poisson trace with routing on vs off, and output
-//! determinism with routing enabled.
+//! eviction on the sim LLM executor, pending-queue dedupe of co-admitted
+//! same-prefix prefills, mid-run `prefix_slots` retune semantics, the
+//! end-to-end p95 win on an instruction-heavy Poisson trace with routing
+//! on vs off, and output determinism with routing enabled.  Trace setup
+//! comes from the shared harness in `tests/common/`.
 
-use std::collections::HashMap;
-use std::sync::atomic::AtomicUsize;
+mod common;
+
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
+use common::{ctx, instr_heavy_template, prepared_instr_heavy, run_to_idle, serial, sim_llm_exec};
 use teola::engines::instance::StepExecutor;
-use teola::engines::llm::SeqStore;
 use teola::engines::prefix::prefix_fingerprint;
 use teola::engines::profile::ProfileRegistry;
 use teola::engines::sim::SimLlmExecutor;
-use teola::engines::{Completion, EngineJob, RequestCtx};
+use teola::engines::EngineJob;
 use teola::graph::pgraph::{build_pgraph, instr_tokens};
-use teola::graph::template::*;
 use teola::graph::{run_passes, EGraph, OptFlags};
 use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
 use teola::serving::run_load_prepared;
 use teola::workload::{Dataset, DatasetKind, PoissonTrace};
 
-// The serving comparison is timing-sensitive; serialize the platform
-// tests in this binary so they don't compete for cores.
-static SERIAL: Mutex<()> = Mutex::new(());
-
-const SEP: i32 = 3;
-const EOS: i32 = 2;
-
-static DEVICE_OFF: std::sync::Once = std::sync::Once::new();
-
-fn new_exec(prefix_slots: usize) -> SimLlmExecutor {
-    // Raw CPU pacing for the executor-level tests (charging is asserted
-    // via the valid-token counter, not wall time).  Set exactly once:
-    // concurrent setenv calls are a data race.
-    DEVICE_OFF.call_once(|| std::env::set_var("TEOLA_DEVICE_OFF", "1"));
-    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
-    let slots = Arc::new(AtomicUsize::new(prefix_slots));
-    SimLlmExecutor::new("llm-lite", store, SEP, EOS, 1024, slots)
-}
-
-fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
-    RequestCtx { query, node, depth: 0, arrival: Instant::now(), reply }
-}
-
-/// Admit one fingerprinted prefill (instruction ++ suffix) and run it.
-fn prefill_step(exec: &mut SimLlmExecutor, q: u64, instr: &[i32], suffix: usize) {
-    let (tx, _rx) = channel();
+/// One fingerprinted prefill job (instruction ++ suffix).
+fn fp_prefill(q: u64, instr: &[i32], suffix: usize) -> EngineJob {
     let mut tokens = instr.to_vec();
     tokens.extend(std::iter::repeat(7).take(suffix));
-    exec.admit(vec![(
-        ctx(q, 0, tx),
-        EngineJob::Prefill {
-            seq: (q, 0),
-            tokens,
-            offset: 0,
-            prefix: Some(prefix_fingerprint(instr)),
-        },
-    )]);
-    while exec.resident() > 0 {
-        exec.step(&mut |_| {}).unwrap();
+    EngineJob::Prefill {
+        seq: (q, 0),
+        tokens,
+        offset: 0,
+        prefix: Some(prefix_fingerprint(instr)),
     }
+}
+
+/// Admit one fingerprinted prefill and run it to completion.
+fn prefill_step(exec: &mut SimLlmExecutor, q: u64, instr: &[i32], suffix: usize) {
+    let (tx, _rx) = channel();
+    exec.admit(vec![(ctx(q, 0, tx), fp_prefill(q, instr, suffix))]);
+    run_to_idle(exec, &mut Vec::new(), 100);
 }
 
 #[test]
 fn prefix_hit_charges_only_the_uncached_suffix() {
-    let mut exec = new_exec(4);
+    let (mut exec, _store) = sim_llm_exec(4);
     let instr = instr_tokens("shared-instr", 16);
 
     // First query: cold — the full 16+8 tokens are charged and the
@@ -87,7 +64,7 @@ fn prefix_hit_charges_only_the_uncached_suffix() {
 
 #[test]
 fn prefix_registry_evicts_lru_at_prefix_slots() {
-    let mut exec = new_exec(2);
+    let (mut exec, _store) = sim_llm_exec(2);
     let a = instr_tokens("instr-a", 16);
     let b = instr_tokens("instr-b", 16);
     let c = instr_tokens("instr-c", 16);
@@ -102,7 +79,7 @@ fn prefix_registry_evicts_lru_at_prefix_slots() {
 
 #[test]
 fn zero_prefix_slots_disables_caching() {
-    let mut exec = new_exec(0);
+    let (mut exec, _store) = sim_llm_exec(0);
     let instr = instr_tokens("shared-instr", 16);
     prefill_step(&mut exec, 1, &instr, 8);
     prefill_step(&mut exec, 2, &instr, 8);
@@ -110,50 +87,67 @@ fn zero_prefix_slots_disables_caching() {
     assert_eq!(exec.charged_prefill_tokens(), 48);
 }
 
-/// Instruction-heavy one-shot workflow: a 64-token shared instruction
-/// template dominates each query's prefill.
-fn instr_heavy_template(instr_name: &str, llm: &str, out_tokens: usize) -> WorkflowTemplate {
-    let mut t = WorkflowTemplate::new("instr-heavy");
-    t.add(Component {
-        name: "gen".into(),
-        kind: ComponentKind::LlmGenerate {
-            variant: llm.into(),
-            mode: SynthesisMode::OneShot,
-            prompt: vec![
-                PromptPart::Instruction(instr_tokens(instr_name, 64)),
-                PromptPart::Question,
-            ],
-            out_tokens,
-            segments: 1,
-            fan: 1,
-        },
-        engine: llm.into(),
-        batchable: false,
-        splittable: false,
-    });
-    t
+/// Regression (PR 3 gap): prefix registration happened only at step
+/// time, so two same-prefix prefills admitted in one burst both
+/// prefilled cold.  With pending-queue dedupe the co-admitted batch pays
+/// exactly one cold prefill plus one suffix-only charge.
+#[test]
+fn co_admitted_same_prefix_prefills_pay_one_cold_prefill() {
+    let (mut exec, store) = sim_llm_exec(4);
+    let instr = instr_tokens("burst-instr", 16);
+    let (tx, _rx) = channel();
+
+    // One admission burst, no step in between: the old behavior charged
+    // (16+8) + (16+10) = 50; deduped it is (16+8) + 10 = 34.
+    exec.admit(vec![
+        (ctx(1, 0, tx.clone()), fp_prefill(1, &instr, 8)),
+        (ctx(2, 0, tx), fp_prefill(2, &instr, 10)),
+    ]);
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(
+        exec.charged_prefill_tokens(),
+        34,
+        "second co-admitted prefill must be charged suffix-only"
+    );
+    // KV lengths are unchanged by the dedupe (outputs stay identical).
+    assert_eq!(store.lock().unwrap().get(&(1, 0)).unwrap().len, 24);
+    assert_eq!(store.lock().unwrap().get(&(2, 0)).unwrap().len, 26);
+
+    // A third query still hits the registered prefix as usual.
+    prefill_step(&mut exec, 3, &instr, 4);
+    assert_eq!(exec.charged_prefill_tokens(), 38);
 }
 
-/// Build `n` optimized instruction-heavy e-graphs; queries alternate
-/// between two instruction templates (two distinct shared prefixes).
-fn prepared_instr_heavy(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
-    let profiles = ProfileRegistry::with_defaults();
-    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
-    (0..n)
-        .map(|i| {
-            let name = if i % 2 == 0 { "instr-even" } else { "instr-odd" };
-            let t = instr_heavy_template(name, "llm-lite", 4 + i % 3);
-            let q = ds.sample();
-            let g = build_pgraph(&t, &q).unwrap();
-            let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
-            (EGraph::new(g).unwrap(), 0u64)
-        })
-        .collect()
+/// Regression (PR 3 gap): a mid-run `prefix_slots` shrink only took
+/// effect at the next insert, so lookups kept serving prefixes past the
+/// new budget.  `resync` at admission applies the shrink immediately —
+/// an evicted prefix can never serve another hit.
+#[test]
+fn mid_run_prefix_slots_shrink_evicts_immediately() {
+    let (mut exec, _store, slots) = common::sim_llm_exec_with_slots(4);
+    let a = instr_tokens("retune-a", 16);
+    let b = instr_tokens("retune-b", 16);
+    let c = instr_tokens("retune-c", 16);
+    prefill_step(&mut exec, 1, &a, 8);
+    prefill_step(&mut exec, 2, &b, 8);
+    prefill_step(&mut exec, 3, &c, 8); // resident (LRU -> MRU): a, b, c
+    let charged = exec.charged_prefill_tokens();
+
+    // Shrink 4 -> 1: only the MRU prefix (c) may survive.  A and B must
+    // charge cold again; C still hits.
+    slots.store(1, Ordering::Relaxed);
+    prefill_step(&mut exec, 4, &a, 8);
+    assert_eq!(exec.charged_prefill_tokens(), charged + 24, "evicted prefix must miss");
+    // A is now the single resident prefix; C was displaced.
+    prefill_step(&mut exec, 5, &c, 8);
+    assert_eq!(exec.charged_prefill_tokens(), charged + 48, "displaced prefix must miss");
+    prefill_step(&mut exec, 6, &c, 8);
+    assert_eq!(exec.charged_prefill_tokens(), charged + 56, "resident prefix still hits");
 }
 
 #[test]
 fn prefix_routing_cuts_p95_on_instruction_heavy_trace() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
 
     // Two instances so affinity routing matters: with routing on, each
     // instruction template sticks to the instance holding its KV and
@@ -194,9 +188,39 @@ fn prefix_routing_cuts_p95_on_instruction_heavy_trace() {
     );
 }
 
+/// Mid-run retune end-to-end: shrinking `prefix_slots` between trace
+/// halves must neither hang nor change outputs (the scheduler mirror
+/// resyncs instead of routing at phantom residency).
+#[test]
+fn mid_run_prefix_slots_retune_keeps_serving_correctly() {
+    let _g = serial();
+
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.llms[0].instances = 2;
+    cfg.prefix_slots = 8;
+    let platform = Platform::start(&cfg).unwrap();
+
+    let n = 16;
+    let seed = 0x7E7E;
+    let trace = PoissonTrace::generate(200.0, n, seed);
+    let first =
+        run_load_prepared(&platform, prepared_instr_heavy(n, seed), &trace.arrivals).unwrap();
+    // Shrink the shared budget mid-run, then replay the same trace.
+    platform.set_prefix_slots(1);
+    let second =
+        run_load_prepared(&platform, prepared_instr_heavy(n, seed), &trace.arrivals).unwrap();
+    platform.shutdown();
+
+    assert_eq!(first.outputs.len(), n);
+    assert_eq!(
+        first.outputs, second.outputs,
+        "a prefix_slots retune moves KV work, never changes outputs"
+    );
+}
+
 #[test]
 fn outputs_identical_with_prefix_routing_on_and_off() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
 
     let run_once = |prefix_slots: usize| {
         let mut cfg = PlatformConfig::sim("llm-lite");

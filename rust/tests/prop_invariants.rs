@@ -21,7 +21,7 @@ use teola::graph::primitive::{DataRef, PayloadSpec, PrimKind};
 use teola::graph::template::*;
 use teola::graph::{run_passes, OptFlags};
 use teola::scheduler::object_store::ObjectStore;
-use teola::scheduler::{form_batch, BatchPolicy, QueueItem};
+use teola::scheduler::{form_batch, BatchPolicy, QueueItem, WcpTracker};
 use teola::util::proptest::{check, prop_assert, vec_of};
 use teola::util::rng::Rng;
 
@@ -423,6 +423,7 @@ fn mk_item(rng: &mut Rng, t0: Instant) -> QueueItem {
         arrival: t0 + Duration::from_micros(rng.range(0, 5000)),
         rows: rng.range_usize(1, 9),
         prefix: None,
+        wcp_us: rng.range(0, 500_000),
         job: EngineJob::ToolCall { name: "x".into(), cost_us: 0 },
         reply: tx,
     }
@@ -454,7 +455,7 @@ fn per_invocation_never_merges_distinct_invocations() {
             })
             .collect();
         let total = queue.len();
-        let batch = form_batch(&mut queue, BatchPolicy::PerInvocation, 64);
+        let batch = form_batch(&mut queue, BatchPolicy::PerInvocation, 64, rng.chance(0.5));
         prop_assert(!batch.is_empty(), "progress")?;
         prop_assert(batch.len() + queue.len() == total, "no items lost")?;
         let head = batch[0].bundle;
@@ -483,7 +484,7 @@ fn batching_respects_slots_and_makes_progress() {
         );
         let max_slots = rng.range_usize(1, 20);
         let total_before = queue.len();
-        let batch = form_batch(&mut queue, policy, max_slots);
+        let batch = form_batch(&mut queue, policy, max_slots, rng.chance(0.5));
         prop_assert(!batch.is_empty(), "non-empty queue must yield progress")?;
         prop_assert(
             batch.len() + queue.len() == total_before,
@@ -507,14 +508,53 @@ fn batching_drains_completely() {
         let mut queue: Vec<QueueItem> = (0..n).map(|_| mk_item(rng, t0)).collect();
         let mut drained = 0;
         let mut rounds = 0;
+        let wcp = rng.chance(0.5);
         while !queue.is_empty() {
-            let b = form_batch(&mut queue, BatchPolicy::TopoAware, 8);
+            let b = form_batch(&mut queue, BatchPolicy::TopoAware, 8, wcp);
             prop_assert(!b.is_empty(), "stuck queue")?;
             drained += b.len();
             rounds += 1;
             prop_assert(rounds <= n * 2 + 2, "too many rounds")?;
         }
         prop_assert(drained == n, "all items drained")
+    });
+}
+
+/// WCP invariant: the per-query remaining-critical-path estimate is
+/// monotonically non-increasing as nodes complete (in any valid
+/// completion order) and reaches zero once every node has completed.
+#[test]
+fn wcp_remaining_path_monotone_nonincreasing() {
+    let profiles = ProfileRegistry::with_defaults();
+    check(60, |rng| {
+        let (t, q) = random_workflow(rng);
+        let g = build_pgraph(&t, &q).map_err(|e| e.to_string())?;
+        let flags = if rng.chance(0.5) { OptFlags::all() } else { OptFlags::none() };
+        let g = run_passes(g, flags, &profiles).map_err(|e| e.to_string())?;
+        let e = teola::graph::EGraph::new(g).map_err(|e| e.to_string())?;
+        let mut w = WcpTracker::new(&e);
+        prop_assert(w.remaining_us() > 0, "a workflow with LLM calls has device time")?;
+
+        // Complete in a randomized valid order: repeatedly pick any node
+        // whose parents are all done (the runtime's only guarantee).
+        let n = e.len();
+        let mut done = vec![false; n];
+        let mut prev = w.remaining_us();
+        for _ in 0..n {
+            let eligible: Vec<usize> = (0..n)
+                .filter(|&v| !done[v] && e.parents[v].iter().all(|&p| done[p]))
+                .collect();
+            prop_assert(!eligible.is_empty(), "acyclic graph always has a frontier")?;
+            let v = *teola::util::proptest::pick(rng, &eligible);
+            done[v] = true;
+            w.complete(v);
+            prop_assert(
+                w.remaining_us() <= prev,
+                format!("remaining grew at node {v}: {} -> {}", prev, w.remaining_us()),
+            )?;
+            prev = w.remaining_us();
+        }
+        prop_assert(w.remaining_us() == 0, "all nodes complete => remaining 0")
     });
 }
 

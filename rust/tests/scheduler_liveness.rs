@@ -42,6 +42,7 @@ fn dead_engine(
         Arc::new(AtomicBool::new(true)),
         Arc::new(AtomicU64::new(0)),
         Arc::new(AtomicUsize::new(8)),
+        Arc::new(AtomicBool::new(true)),
         ExecMode::Stepped,
     );
     let h = std::thread::spawn(move || sched.run());
@@ -113,6 +114,7 @@ fn queued_and_later_items_both_fail_fast_on_dead_engine() {
                 arrival: Instant::now(),
                 rows: 1,
                 prefix: None,
+                wcp_us: 0,
                 job: EngineJob::Prefill {
                     seq: (q, 0),
                     tokens: vec![7; 8],

@@ -1,78 +1,21 @@
 //! Concurrent serving driver over the simulated backend: Poisson load,
 //! metric sanity, batching-policy comparison, iteration-level continuous
 //! batching vs the legacy run-to-completion path, and determinism — all
-//! without artifacts, on plain `cargo test`.
+//! without artifacts, on plain `cargo test`.  Trace/workload setup comes
+//! from the shared harness in `tests/common/`.
 
-use std::sync::Mutex;
+mod common;
 
+use common::{prepared_one_shot, prepared_with_tokens, serial};
 use teola::apps::{bind_answer_tokens, AppKind};
 use teola::baselines::Scheme;
-use teola::engines::profile::ProfileRegistry;
-use teola::graph::pgraph::{build_pgraph, instr_tokens};
-use teola::graph::template::*;
-use teola::graph::{run_passes, EGraph, OptFlags};
 use teola::scheduler::{BatchPolicy, Platform, PlatformConfig};
 use teola::serving::run_load_prepared;
 use teola::workload::{Dataset, DatasetKind, PoissonTrace};
 
-// The policy-comparison test is timing-sensitive; serialize everything in
-// this binary so platforms don't compete for cores.
-static SERIAL: Mutex<()> = Mutex::new(());
-
-/// Minimal sequential workflow: one prefill -> one decode.  Keeps the
-/// engine-op chain strictly sequential so per-query metric monotonicity
-/// (queue + exec <= e2e) is a hard invariant, and keeps a 64-query load
-/// run fast.
-fn one_shot_template(llm: &str, out_tokens: usize) -> WorkflowTemplate {
-    let mut t = WorkflowTemplate::new("one-shot");
-    t.add(Component {
-        name: "gen".into(),
-        kind: ComponentKind::LlmGenerate {
-            variant: llm.into(),
-            mode: SynthesisMode::OneShot,
-            prompt: vec![
-                PromptPart::Instruction(instr_tokens("load", 12)),
-                PromptPart::Question,
-            ],
-            out_tokens,
-            segments: 1,
-            fan: 1,
-        },
-        engine: llm.into(),
-        batchable: false,
-        splittable: false,
-    });
-    t
-}
-
-/// Build `n` optimized one-shot e-graphs from the seeded dataset.
-fn prepared_one_shot(n: usize, out_tokens: usize, seed: u64) -> Vec<(EGraph, u64)> {
-    prepared_with_tokens(n, seed, |_| out_tokens)
-}
-
-/// Build `n` optimized one-shot e-graphs whose decode length is chosen
-/// per query index (mixed short/long workloads).
-fn prepared_with_tokens(
-    n: usize,
-    seed: u64,
-    out_tokens: impl Fn(usize) -> usize,
-) -> Vec<(EGraph, u64)> {
-    let profiles = ProfileRegistry::with_defaults();
-    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
-    (0..n)
-        .map(|i| {
-            let t = one_shot_template("llm-lite", out_tokens(i));
-            let q = ds.sample();
-            let g = build_pgraph(&t, &q).unwrap();
-            let g = run_passes(g, OptFlags::all(), &profiles).unwrap();
-            (EGraph::new(g).unwrap(), 0u64)
-        })
-        .collect()
-}
-
 #[test]
 fn sim_poisson_64_queries_complete_with_monotone_metrics() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
     let platform = Platform::start(&PlatformConfig::sim("llm-lite")).unwrap();
     platform.set_policy(BatchPolicy::TopoAware);
 
@@ -84,6 +27,7 @@ fn sim_poisson_64_queries_complete_with_monotone_metrics() {
 
     // All queries completed (no deadlock) with sane latencies.
     assert_eq!(report.latencies_ms.len(), n);
+    assert_eq!(report.outputs.len(), n);
     assert!(report.latencies_ms.iter().all(|&l| l > 0.0));
     assert!(report.qps > 0.0);
     assert!(report.wall_s < 60.0, "sim load run took {:.1}s", report.wall_s);
@@ -109,7 +53,7 @@ fn sim_poisson_64_queries_complete_with_monotone_metrics() {
 
 #[test]
 fn sim_topo_batching_no_worse_than_per_invocation() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
     let platform = Platform::start(&PlatformConfig::sim("llm-lite")).unwrap();
 
     // High enough arrival rate that queues build and cross-query batching
@@ -144,7 +88,7 @@ fn sim_topo_batching_no_worse_than_per_invocation() {
 
 #[test]
 fn sim_continuous_batching_cuts_p95_on_mixed_decodes() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
 
     // One LLM instance so head-of-line blocking is visible: under the
     // legacy run-to-completion path a short decode arriving while a long
@@ -193,7 +137,7 @@ fn sim_continuous_batching_cuts_p95_on_mixed_decodes() {
 
 #[test]
 fn sim_runs_are_deterministic_for_fixed_seed_and_query_id() {
-    let _g = SERIAL.lock().unwrap();
+    let _g = serial();
 
     let mut ds = Dataset::new(DatasetKind::TruthfulQa, 99);
     let mut q = ds.sample();

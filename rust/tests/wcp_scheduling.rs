@@ -1,0 +1,152 @@
+//! Weighted critical-path (WCP) query scheduling (paper §8): bucket
+//! ordering by remaining critical-path device time at the unit level,
+//! the strict p95 win on a heterogeneous Poisson trace with WCP on vs
+//! off, starvation-freedom under sustained short-query load (aging), and
+//! bit-identical outputs between modes.  Trace setup comes from the
+//! shared harness in `tests/common/`.
+
+mod common;
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use common::serial;
+use teola::engines::EngineJob;
+use teola::scheduler::{
+    form_batch, form_continuous_admission, wcp_priority_us, BatchPolicy, Platform,
+    PlatformConfig, QueueItem, WCP_AGING_WEIGHT,
+};
+use teola::serving::run_wcp_comparison;
+
+/// Queue item with an explicit remaining-critical-path stamp; `age_ms`
+/// backdates the arrival to simulate time already spent queued.
+fn item(query: u64, node: usize, wcp_us: u64, now: Instant, age_ms: u64) -> QueueItem {
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    QueueItem {
+        query,
+        node,
+        depth: 1,
+        bundle: (query, node as u64),
+        arrival: now - Duration::from_millis(age_ms),
+        rows: 1,
+        prefix: None,
+        wcp_us,
+        job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
+        reply: tx,
+    }
+}
+
+/// (a) A long-tail query admitted *after* a short one gets the engine
+/// slot first under WCP ordering — and not under arrival ordering.
+#[test]
+fn long_tail_query_overtakes_earlier_short_query() {
+    let now = Instant::now();
+    let mk = || {
+        vec![
+            // Short query 1 arrived 5 ms before long query 2.
+            item(1, 10, 50_000, now, 5),
+            item(2, 20, 400_000, now, 0),
+        ]
+    };
+
+    let mut q = mk();
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    assert_eq!(batch.len(), 1);
+    assert_eq!(batch[0].query, 2, "WCP: the longer remaining path goes first");
+
+    let mut q = mk();
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, false);
+    assert_eq!(batch[0].query, 1, "arrival order: the earlier query goes first");
+
+    // Continuous admission into a partially occupied instance follows the
+    // same ordering.
+    let mut q = mk();
+    let admitted = form_continuous_admission(&mut q, 1, true);
+    assert_eq!(admitted[0].query, 2);
+}
+
+/// (c) Starvation-freedom: the aging term lets a waiting short-tail
+/// query overtake fresh long-tail arrivals once it has queued for more
+/// than `path_gap / WCP_AGING_WEIGHT`.
+#[test]
+fn aged_short_query_overtakes_sustained_long_query_load() {
+    let long_path = 200_000u64;
+    let short_path = 10_000u64;
+    // The pure priority function crosses over exactly at the bound.
+    let bound_us = (long_path - short_path) / WCP_AGING_WEIGHT;
+    assert!(
+        wcp_priority_us(short_path, Duration::from_micros(bound_us + 1_000)) > long_path,
+        "a short query waiting past the bound must outrank a fresh long query"
+    );
+    assert!(
+        wcp_priority_us(short_path, Duration::from_micros(bound_us / 2)) < long_path,
+        "before the bound the long query keeps priority"
+    );
+
+    // End-to-end through form_batch: sustained fresh long-query load
+    // cannot hold back a short query that has aged past the bound.
+    let now = Instant::now();
+    let mut q = vec![item(1, 1, short_path, now, 150)]; // 150 ms queued
+    for k in 0..8u64 {
+        q.push(item(100 + k, 1, long_path, now, 0));
+    }
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    assert_eq!(batch[0].query, 1, "aged short query must win the next slot");
+
+    // A *fresh* short query still yields to the long-tail load.
+    let mut q = vec![item(1, 1, short_path, now, 1)];
+    for k in 0..8u64 {
+        q.push(item(100 + k, 1, long_path, now, 0));
+    }
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    assert_ne!(batch[0].query, 1);
+}
+
+/// (b) + (d): on a heterogeneous seeded Poisson trace (mixed short-RAG /
+/// long-multistep decodes, one LLM instance so queueing is visible), WCP
+/// ordering strictly beats arrival ordering at the tail — and produces
+/// bit-identical outputs (scheduling moves work in time, never changes
+/// results).
+#[test]
+fn wcp_cuts_p95_on_heterogeneous_trace_with_identical_outputs() {
+    let _g = serial();
+
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.llms[0].instances = 1;
+    let platform = Platform::start(&cfg).unwrap();
+
+    let n = 40;
+    let (off, on) = run_wcp_comparison(&platform, n, 150.0, 0x9C4).unwrap();
+    platform.shutdown();
+
+    assert_eq!(off.latencies_ms.len(), n);
+    assert_eq!(on.latencies_ms.len(), n);
+    assert!(
+        on.e2e_ms.p95 < off.e2e_ms.p95,
+        "WCP p95 {:.1} ms should beat arrival-order p95 {:.1} ms",
+        on.e2e_ms.p95,
+        off.e2e_ms.p95
+    );
+    assert_eq!(on.outputs.len(), n);
+    assert_eq!(
+        on.outputs, off.outputs,
+        "WCP must not change any query's output, only its timing"
+    );
+}
+
+/// WCP is a TopoAware refinement: the TO/PO baselines ignore the flag
+/// entirely, so their dispatch order cannot depend on it.
+#[test]
+fn baselines_ignore_the_wcp_flag() {
+    let now = Instant::now();
+    for policy in [BatchPolicy::BlindTO, BatchPolicy::PerInvocation] {
+        let mk = || vec![item(1, 10, 50_000, now, 5), item(2, 20, 400_000, now, 0)];
+        let (mut a, mut b) = (mk(), mk());
+        let on: Vec<u64> =
+            form_batch(&mut a, policy, 1, true).iter().map(|i| i.query).collect();
+        let off: Vec<u64> =
+            form_batch(&mut b, policy, 1, false).iter().map(|i| i.query).collect();
+        assert_eq!(on, off, "{policy:?} must not read the wcp flag");
+    }
+}
