@@ -34,6 +34,8 @@ fn embed_total_time(platform: &Platform, n: usize, policy: BatchPolicy) -> f64 {
                 bundle: (0, i as u64 / 4), // request-level bundles of 4
                 arrival: Instant::now(),
                 rows: 1,
+                tokens: 1,
+                wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
                 job: EngineJob::Embed { chunks: vec![chunk] },
@@ -99,6 +101,10 @@ fn main() {
             spec.instances = 1;
             spec.max_slots = 2;
         }
+        // The Fig. 7 snapshot is defined in row slots (max batch of 2):
+        // keep legacy row accounting so token-denominated admission
+        // doesn't widen the batch.
+        cfg.kv_tokens_per_instance = Some(0);
         let platform = Platform::start(&cfg).expect("platform");
         let mut qbase = 21u64;
         let mut run_fig7 = |policy: BatchPolicy| -> f64 {
@@ -119,6 +125,8 @@ fn main() {
                     bundle: (query, node as u64),
                     arrival: Instant::now(),
                     rows: 1,
+                    tokens: 64,
+                    wcp_discounted: false,
                     prefix: None,
                     wcp_us: 0,
                     job: EngineJob::Prefill {
@@ -150,6 +158,8 @@ fn main() {
                 bundle: (query, node as u64),
                 arrival: Instant::now(),
                 rows: 1,
+                tokens: 1,
+                wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
                 job: EngineJob::Decode {
@@ -169,6 +179,8 @@ fn main() {
                 bundle: (dummy_q, 0),
                 arrival: Instant::now(),
                 rows: 1,
+                tokens: 1,
+                wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
                 job: EngineJob::Prefill {

@@ -175,6 +175,18 @@ pub fn hetero_prepared(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
     })
 }
 
+/// The PR5 token-accounting variant of the mixed 8-16/128-token trace
+/// (`BENCH_PR5.json`, `tests/kv_accounting.rs`): only queries 7 and 23
+/// decode 128 tokens, so the p95 of a 40-query run lands on the worst
+/// *short* query — the one that row-slot accounting strands behind slot
+/// exhaustion while its KV demand is a few dozen tokens.
+pub fn kv_hetero_prepared(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    prepared_graphs(n, seed, |i| {
+        let out_tokens = if i == 7 || i == 23 { 128 } else { 8 + i % 9 };
+        one_shot_template("llm-lite", "hetero", 24, out_tokens)
+    })
+}
+
 /// True when a Platform can start: either the simulated backend was
 /// selected via `TEOLA_BACKEND=sim`, or the XLA backend is fully usable
 /// (real crate linked *and* artifacts present).  The figure benches gate
@@ -233,6 +245,19 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             other => eprintln!(
                 "warning: unknown TEOLA_CONTINUOUS={other:?} (want on|off); ignoring"
             ),
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_KV_TOKENS") {
+        // Per-instance KV token budget: 0 = legacy row-slot accounting,
+        // empty = keep the derived default.
+        match v.trim() {
+            "" => {}
+            t => match t.parse() {
+                Ok(n) => cfg.kv_tokens_per_instance = Some(n),
+                Err(_) => eprintln!(
+                    "warning: unparseable TEOLA_KV_TOKENS={v:?} (want a token count); ignoring"
+                ),
+            },
         }
     }
     if let Ok(v) = std::env::var("TEOLA_WCP") {

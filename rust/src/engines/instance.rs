@@ -51,12 +51,18 @@ pub struct StepOutcome {
 /// decode iterations over a resident sequence set); everything else goes
 /// through [`RunToCompletion`].
 pub trait StepExecutor {
-    /// Take new jobs into the resident set.  Called between steps; must
-    /// not block on device work (defer it to `step`).  Infallible by
-    /// contract: every job must be consumed — executors queue jobs they
-    /// cannot serve and retire them (without a completion) at the next
-    /// step, so scheduler load accounting never leaks.
-    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>);
+    /// Take new jobs into the resident set, returning any it cannot
+    /// admit *yet* (over the executor's KV token budget); the instance
+    /// thread backlogs those and re-offers them after later steps free
+    /// capacity.  Called between steps; must not block on device work
+    /// (defer it to `step`).  Liveness contract: an executor with an
+    /// empty reservation ledger must accept any job regardless of size
+    /// (oversized work is chunked internally), so a backlogged job can
+    /// never starve once the instance drains.  Jobs an executor can
+    /// *never* serve (mis-routed kinds) are still consumed — queued
+    /// internally and retired (without a completion) at the next step,
+    /// so scheduler load accounting never leaks.
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) -> Vec<(RequestCtx, EngineJob)>;
 
     /// Run one unit of work and emit any completions it produced.
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome>;
@@ -90,9 +96,12 @@ impl<E: BatchExecutor> RunToCompletion<E> {
 }
 
 impl<E: BatchExecutor> StepExecutor for RunToCompletion<E> {
-    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) -> Vec<(RequestCtx, EngineJob)> {
+        // Run-to-completion engines are row-budgeted by the scheduler
+        // alone: everything offered is accepted.
         self.resident += jobs.iter().map(|(_, j)| j.slot_rows()).sum::<usize>();
         self.pending.push_back(Batch { jobs });
+        Vec::new()
     }
 
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
@@ -143,24 +152,44 @@ struct JobCtx {
     /// Slot-rows this job was charged for (mirrors the scheduler's
     /// admission accounting, so error-path sweeps retire exact counts).
     rows: usize,
+    /// KV tokens the scheduler reserved at dispatch; echoed back in the
+    /// retirement event so the scheduler's token ledger releases exactly
+    /// what it reserved.
+    kv_tokens: usize,
     arrival: Instant,
     admitted: Instant,
     reply: Sender<Completion>,
 }
 
-fn register_and_admit<E: StepExecutor>(exec: &mut E, batch: Batch, ctxs: &mut Vec<JobCtx>) {
+/// Offer `jobs` to the executor, registering contexts for the accepted
+/// ones; jobs the executor bounced (over its KV budget) are returned for
+/// the caller's backlog.
+fn register_and_admit<E: StepExecutor>(
+    exec: &mut E,
+    jobs: Vec<(RequestCtx, EngineJob)>,
+    ctxs: &mut Vec<JobCtx>,
+) -> Vec<(RequestCtx, EngineJob)> {
     let now = Instant::now();
-    for (ctx, job) in &batch.jobs {
+    for (ctx, job) in &jobs {
         ctxs.push(JobCtx {
             query: ctx.query,
             node: ctx.node,
             rows: job.slot_rows(),
+            kv_tokens: ctx.kv_tokens,
             arrival: ctx.arrival,
             admitted: now,
             reply: ctx.reply.clone(),
         });
     }
-    exec.admit(batch.jobs);
+    let bounced = exec.admit(jobs);
+    for (ctx, _) in &bounced {
+        if let Some(i) =
+            ctxs.iter().rposition(|j| j.query == ctx.query && j.node == ctx.node)
+        {
+            ctxs.remove(i);
+        }
+    }
+    bounced
 }
 
 /// Spawn an instance worker running the stepped protocol.
@@ -193,19 +222,36 @@ where
                 }
             };
             let mut ctxs: Vec<JobCtx> = Vec::new();
+            // Jobs the executor bounced (over its KV token budget):
+            // re-offered when admission could have changed — new arrivals
+            // or a retirement freed capacity — not on every step (a
+            // saturated instance would otherwise re-register and bounce
+            // the whole backlog per iteration for nothing).
+            let mut backlog: VecDeque<(RequestCtx, EngineJob)> = VecDeque::new();
+            let mut retry_backlog = true;
             loop {
-                // Idle: block for work (and exit when the scheduler
-                // drops).  Mid-flight: only drain what has already
-                // arrived, so the iteration loop keeps stepping.
-                if exec.resident() == 0 {
+                // Idle with no backlog: block for work (and exit when the
+                // scheduler drops).  Mid-flight or backlogged: only drain
+                // what has already arrived, so the iteration loop keeps
+                // stepping and the backlog keeps retrying.
+                if exec.resident() == 0 && backlog.is_empty() {
                     match rx.recv() {
-                        Ok(batch) => register_and_admit(&mut exec, batch, &mut ctxs),
+                        Ok(batch) => {
+                            backlog.extend(batch.jobs);
+                            retry_backlog = true;
+                        }
                         Err(_) => break,
                     }
                 }
                 while let Ok(batch) = rx.try_recv() {
-                    register_and_admit(&mut exec, batch, &mut ctxs);
+                    backlog.extend(batch.jobs);
+                    retry_backlog = true;
                 }
+                if retry_backlog && !backlog.is_empty() {
+                    let offer: Vec<(RequestCtx, EngineJob)> = backlog.drain(..).collect();
+                    backlog.extend(register_and_admit(&mut exec, offer, &mut ctxs));
+                }
+                retry_backlog = false;
                 let mut aborted = false;
                 let mut outcome = {
                     let ctxs_ref: &Vec<JobCtx> = &ctxs;
@@ -238,10 +284,12 @@ where
                         }
                     }
                 };
+                let mut retired_tokens = 0usize;
                 for (q, n) in &outcome.retired {
                     if let Some(i) =
                         ctxs.iter().position(|j| j.query == *q && j.node == *n)
                     {
+                        retired_tokens += ctxs[i].kv_tokens;
                         ctxs.remove(i);
                     }
                 }
@@ -249,17 +297,25 @@ where
                     // Sweep contexts the executor lost track of mid-step
                     // (e.g. a prefill group drained out of its queue
                     // before the device call failed): retire their exact
-                    // slot-rows too, so scheduler load accounting stays
-                    // balanced and the instance remains routable.
+                    // slot-rows and token reservations too, so scheduler
+                    // load accounting stays balanced and the instance
+                    // remains routable.
                     for j in ctxs.drain(..) {
                         outcome.retired_rows += j.rows;
+                        retired_tokens += j.kv_tokens;
                     }
                     outcome.resident = 0;
+                }
+                if outcome.retired_rows > 0 {
+                    // Retirement freed executor capacity: the backlog is
+                    // worth re-offering next iteration.
+                    retry_backlog = true;
                 }
                 let _ = event_tx.send(InstanceEvent {
                     instance: index,
                     resident: outcome.resident,
                     retired: outcome.retired_rows,
+                    retired_tokens,
                 });
             }
         })

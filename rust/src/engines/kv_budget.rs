@@ -1,0 +1,199 @@
+//! Token-denominated KV memory accounting (PR5 tentpole).
+//!
+//! Real LLM engines admit work by KV memory, not by batch rows: a
+//! 2048-token prefill and an 8-token prefill have wildly different memory
+//! footprints, so row-slot budgets either overcommit on long prompts or
+//! waste capacity on short ones (cf. Parrot's application-aware serving
+//! and vLLM's token-block accounting).  [`KvBudget`] is the reservation
+//! ledger both sides of the admission protocol share:
+//!
+//! * the **engine scheduler** keeps one per instance, reserving a job's
+//!   token estimate at dispatch and releasing the *same charge* when the
+//!   instance reports the job retired (the charge rides
+//!   [`crate::engines::RequestCtx::kv_tokens`] so reserve/release pair
+//!   exactly — the ledger drains to zero, never negative);
+//! * the **stepped LLM executors** keep their own, rejecting over-budget
+//!   admissions back to the instance backlog until retirements free
+//!   space (vLLM-style admission control).
+//!
+//! The reservation of a job is its KV growth: prompt tokens for a
+//! prefill (suffix-only when the shared instruction prefix is already
+//! resident — routing hits get cheaper admission), planned new tokens
+//! for a decode.  Over a sequence's life this sums to the classic
+//! `prompt_tokens + max_new_tokens` reserve-at-admit.
+//!
+//! All arithmetic is saturating: a release can never push the ledger
+//! negative, and [`KvBudget::release`] reports how much was actually
+//! released so invariant tests (`tests/prop_invariants.rs`) can detect
+//! any reserve/release mispairing.
+
+/// Per-instance KV token budget: capacity plus the reservation ledger.
+///
+/// A capacity of 0 means "unlimited" (the legacy row-slot mode is in
+/// force and the token ledger is maintained only for observability).
+#[derive(Debug, Clone, Default)]
+pub struct KvBudget {
+    capacity: usize,
+    reserved: usize,
+}
+
+impl KvBudget {
+    /// New ledger with the given token capacity (0 = unlimited).
+    pub fn new(capacity: usize) -> KvBudget {
+        KvBudget { capacity, reserved: 0 }
+    }
+
+    /// Current token capacity (0 = unlimited).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Retune the capacity (runtime knob); existing reservations are
+    /// kept — the ledger simply stops admitting until enough retires.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+    }
+
+    /// Tokens currently reserved (admitted minus retired).
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    /// Spare tokens under the capacity (`usize::MAX` when unlimited).
+    pub fn spare(&self) -> usize {
+        if self.capacity == 0 {
+            usize::MAX
+        } else {
+            self.capacity.saturating_sub(self.reserved)
+        }
+    }
+
+    /// Whether a reservation of `tokens` fits under the capacity.
+    /// Always true when the capacity is 0 (unlimited).
+    pub fn fits(&self, tokens: usize) -> bool {
+        self.capacity == 0 || self.reserved.saturating_add(tokens) <= self.capacity
+    }
+
+    /// Reserve `tokens` (admission).  Saturating: the ledger cannot
+    /// overflow, and deliberate over-budget admissions (a single job
+    /// larger than the whole capacity must still run — the executors
+    /// chunk it internally) are recorded faithfully.
+    pub fn reserve(&mut self, tokens: usize) {
+        self.reserved = self.reserved.saturating_add(tokens);
+    }
+
+    /// Release up to `tokens` (retirement); returns the amount actually
+    /// released.  Saturating: the ledger never goes negative — a return
+    /// value smaller than `tokens` means a reserve/release mispairing
+    /// upstream (asserted against in the invariant tests).
+    pub fn release(&mut self, tokens: usize) -> usize {
+        let freed = tokens.min(self.reserved);
+        self.reserved -= freed;
+        freed
+    }
+
+    /// Drop every reservation (instance death: nothing resident will
+    /// ever retire, so the capacity must not stay phantom-occupied while
+    /// the batch is requeued elsewhere).  Returns what was held.
+    pub fn reset(&mut self) -> usize {
+        std::mem::take(&mut self.reserved)
+    }
+
+    /// Admission decision shared by the stepped executors: the
+    /// reservation fits, or the ledger is empty — an idle executor must
+    /// accept even an over-capacity job (it chunks internally), or a
+    /// backlogged oversized job could never run (liveness).
+    pub fn admits(&self, tokens: usize) -> bool {
+        self.fits(tokens) || self.reserved == 0
+    }
+}
+
+/// Token charge of a prefill whose leading `prefix_len` tokens are
+/// already resident on the serving instance: the un-cached suffix,
+/// never 0.  The one rule shared by the engine scheduler's dispatch
+/// charge and both stepped executors' admission reservations — change
+/// it here, not per call site.
+pub fn suffix_charge(prompt_tokens: usize, prefix_len: usize) -> usize {
+    prompt_tokens.saturating_sub(prefix_len).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_pair_exactly() {
+        let mut b = KvBudget::new(100);
+        assert!(b.fits(100));
+        assert!(!b.fits(101));
+        b.reserve(60);
+        assert_eq!(b.reserved(), 60);
+        assert_eq!(b.spare(), 40);
+        assert!(b.fits(40));
+        assert!(!b.fits(41));
+        assert_eq!(b.release(60), 60);
+        assert_eq!(b.reserved(), 0);
+        assert_eq!(b.spare(), 100);
+    }
+
+    #[test]
+    fn release_saturates_never_negative() {
+        let mut b = KvBudget::new(10);
+        b.reserve(4);
+        // Over-release is clamped and reported.
+        assert_eq!(b.release(9), 4);
+        assert_eq!(b.reserved(), 0);
+        assert_eq!(b.release(1), 0);
+        assert_eq!(b.reserved(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_means_unlimited() {
+        let mut b = KvBudget::new(0);
+        assert!(b.fits(usize::MAX));
+        b.reserve(1_000_000);
+        assert_eq!(b.spare(), usize::MAX);
+        assert_eq!(b.reserved(), 1_000_000);
+    }
+
+    #[test]
+    fn oversized_reservation_recorded_and_reset_clears() {
+        let mut b = KvBudget::new(8);
+        // A job larger than the whole budget still reserves faithfully
+        // (it was admitted alone; the executor chunks it).
+        b.reserve(32);
+        assert_eq!(b.reserved(), 32);
+        assert!(!b.fits(1));
+        assert_eq!(b.reset(), 32);
+        assert_eq!(b.reserved(), 0);
+        assert!(b.fits(8));
+    }
+
+    #[test]
+    fn admits_fits_or_idle() {
+        let mut b = KvBudget::new(10);
+        assert!(b.admits(100), "idle ledger accepts oversized (liveness)");
+        b.reserve(4);
+        assert!(b.admits(6));
+        assert!(!b.admits(7), "occupied ledger bounces over-budget work");
+    }
+
+    #[test]
+    fn suffix_charge_is_uncached_remainder() {
+        assert_eq!(suffix_charge(24, 16), 8);
+        assert_eq!(suffix_charge(16, 16), 1, "never 0 (load accounting)");
+        assert_eq!(suffix_charge(8, 16), 1, "saturates, never underflows");
+    }
+
+    #[test]
+    fn retune_keeps_reservations() {
+        let mut b = KvBudget::new(100);
+        b.reserve(80);
+        b.set_capacity(50);
+        assert_eq!(b.reserved(), 80);
+        assert!(!b.fits(1));
+        assert_eq!(b.spare(), 0);
+        b.set_capacity(200);
+        assert!(b.fits(120));
+    }
+}

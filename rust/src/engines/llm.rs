@@ -22,12 +22,13 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engines::instance::{spawn_stepped_instance, Instance, StepExecutor, StepOutcome};
+use crate::engines::kv_budget::{self, KvBudget};
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::{charge_device, DeviceModel};
 use crate::engines::{
@@ -138,6 +139,10 @@ struct PrefillRow {
     /// Shared-instruction fingerprint (registration key after a
     /// from-scratch prefill computes the prefix KV).
     prefix: Option<PrefixFp>,
+    /// Executor-side KV reservation; carried by the job's *final* piece
+    /// (intermediate pieces of an oversized chunk hold 0) and released
+    /// when that piece retires.
+    kv_res: usize,
 }
 
 /// A resident instruction prefix: its KV planes (positions >= len zeroed).
@@ -151,6 +156,8 @@ struct PendingDecode {
     seq: SeqId,
     first_token: i32,
     segments: Vec<SegmentSpec>,
+    /// Executor-side KV reservation (planned new tokens).
+    kv_res: usize,
 }
 
 /// Loop state of one resident decode row.
@@ -163,6 +170,8 @@ struct ActiveDecode {
     seg_idx: usize,
     seg_tokens: Vec<i32>,
     all_segments: Vec<Vec<i32>>,
+    /// Executor-side KV reservation, released at row retirement.
+    kv_res: usize,
 }
 
 /// The resident decode batch: KV packed once at admission and carried
@@ -256,6 +265,11 @@ pub struct LlmExecutor {
     /// Resident instruction prefixes of this instance: a hit clones the
     /// prefix KV rows into the new sequence instead of recomputing them.
     prefixes: PrefixRegistry<PrefixKv>,
+    /// Shared per-instance KV token capacity handle (0 = unlimited).
+    kv_capacity: Arc<AtomicUsize>,
+    /// Executor-side reservation ledger (see `SimLlmExecutor`): admit
+    /// bounces over-budget jobs back to the instance backlog.
+    kv: KvBudget,
 }
 
 impl LlmExecutor {
@@ -303,7 +317,17 @@ impl LlmExecutor {
             pending_decodes: VecDeque::new(),
             decode_batch: None,
             prefixes: PrefixRegistry::new(prefix_slots),
+            kv_capacity: Arc::new(AtomicUsize::new(0)),
+            kv: KvBudget::new(0),
         })
+    }
+
+    /// Bind the executor to a shared per-instance KV token capacity
+    /// handle (`PlatformConfig::kv_tokens_per_instance`); 0 keeps the
+    /// legacy unlimited behavior.
+    pub fn with_kv_budget(mut self, capacity: Arc<AtomicUsize>) -> LlmExecutor {
+        self.kv_capacity = capacity;
+        self
     }
 
     /// Max rows a prefill call supports.
@@ -410,6 +434,7 @@ impl LlmExecutor {
                     t.name().unwrap_or("instance"),
                     pending.seq
                 );
+                self.kv.release(pending.kv_res);
                 self.rejected.push((pending.ctx, 1));
                 continue;
             };
@@ -429,6 +454,7 @@ impl LlmExecutor {
                 seg_idx: 0,
                 seg_tokens: Vec::new(),
                 all_segments: Vec::new(),
+                kv_res: pending.kv_res,
             });
         }
     }
@@ -501,6 +527,9 @@ impl LlmExecutor {
                     offset: r.offset,
                     last: false,
                     prefix: r.prefix,
+                    // The reservation stays with the final piece (still
+                    // queued as the remainder below).
+                    kv_res: 0,
                 };
                 r.offset += max_c;
                 // Requeue the remainder at the back: independent rows
@@ -596,6 +625,7 @@ impl LlmExecutor {
                     output: JobOutput::Tokens(vec![next[b]]),
                     timing: ExecTiming::default(),
                 });
+                self.kv.release(r.kv_res);
                 out.retired_rows += 1;
                 out.retired.push((r.ctx.query, r.ctx.node));
             }
@@ -623,6 +653,9 @@ impl LlmExecutor {
         let eos = self.eos;
         let s_cap = dims.max_seq;
         let drained;
+        // Reservations freed by rows retiring this iteration (released
+        // after the resident-batch borrow ends).
+        let mut released_kv = 0usize;
         {
             let rb = self.decode_batch.as_mut().unwrap();
             let bb = rb.bb;
@@ -699,6 +732,7 @@ impl LlmExecutor {
                     let kv_seq = unpack_kv(&dims, &rb.kv, bb, b);
                     let len = (rb.positions[b] as usize + 1).min(s_cap);
                     self.store.lock().unwrap().insert(row.seq, SeqState { kv: kv_seq, len });
+                    released_kv += row.kv_res;
                     emit(Completion {
                         query: row.ctx.query,
                         node: row.ctx.node,
@@ -711,6 +745,7 @@ impl LlmExecutor {
             }
             drained = rb.occupied() == 0;
         }
+        self.kv.release(released_kv);
         if drained && self.pending_decodes.is_empty() {
             self.decode_batch = None;
         }
@@ -719,28 +754,44 @@ impl LlmExecutor {
 }
 
 impl StepExecutor for LlmExecutor {
-    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) -> Vec<(RequestCtx, EngineJob)> {
         // Apply any mid-run `prefix_slots` retune before consulting
         // residency (a shrink must evict now, not at the next insert).
         self.prefixes.resync();
+        self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
+        let mut bounced = Vec::new();
         for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {
                     // Resident-prefix hit: clone the instruction KV rows
                     // into the new sequence instead of recomputing them,
-                    // then prefill only the un-cached suffix.
-                    if let Some(fp) = prefix {
-                        if offset == 0 && tokens.len() > fp.len {
-                            if let Some(p) = self.prefixes.hit(fp) {
-                                self.store
-                                    .lock()
-                                    .unwrap()
-                                    .insert(seq, SeqState { kv: p.kv.clone(), len: fp.len });
-                                tokens.drain(..fp.len);
-                                offset = fp.len;
-                            }
+                    // then prefill (and reserve) only the un-cached
+                    // suffix.  Residency is probed without touching LRU
+                    // order first, so a bounced job mutates nothing.
+                    let hit = prefix.map_or(false, |fp| {
+                        offset == 0 && tokens.len() > fp.len && self.prefixes.contains(fp)
+                    });
+                    let kv_res = if hit {
+                        kv_budget::suffix_charge(tokens.len(), prefix.unwrap().len)
+                    } else {
+                        tokens.len().max(1)
+                    };
+                    if !self.kv.admits(kv_res) {
+                        bounced.push((ctx, EngineJob::Prefill { seq, tokens, offset, prefix }));
+                        continue;
+                    }
+                    if hit {
+                        let fp = prefix.unwrap();
+                        if let Some(p) = self.prefixes.hit(fp) {
+                            self.store
+                                .lock()
+                                .unwrap()
+                                .insert(seq, SeqState { kv: p.kv.clone(), len: fp.len });
+                            tokens.drain(..fp.len);
+                            offset = fp.len;
                         }
                     }
+                    self.kv.reserve(kv_res);
                     self.prefills.push_back(PrefillRow {
                         ctx,
                         seq,
@@ -748,14 +799,22 @@ impl StepExecutor for LlmExecutor {
                         offset,
                         last: true,
                         prefix,
+                        kv_res,
                     });
                 }
                 EngineJob::Decode { seq, first_token, segments } => {
+                    let kv_res = segments.iter().map(|s| s.len).sum::<usize>().max(1);
+                    if !self.kv.admits(kv_res) {
+                        bounced.push((ctx, EngineJob::Decode { seq, first_token, segments }));
+                        continue;
+                    }
+                    self.kv.reserve(kv_res);
                     self.pending_decodes.push_back(PendingDecode {
                         ctx,
                         seq,
                         first_token,
                         segments,
+                        kv_res,
                     });
                 }
                 other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
@@ -771,6 +830,7 @@ impl StepExecutor for LlmExecutor {
                 }
             }
         }
+        bounced
     }
 
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
@@ -817,6 +877,7 @@ impl StepExecutor for LlmExecutor {
                 out.retired.push((row.ctx.query, row.ctx.node));
             }
         }
+        self.kv.reset();
         out
     }
 
@@ -858,6 +919,7 @@ pub fn spawn_llm_engine(
     event_tx: Sender<InstanceEvent>,
     ready_tx: Sender<()>,
     prefix_slots: Arc<AtomicUsize>,
+    kv_tokens: Arc<AtomicUsize>,
 ) -> (Vec<Instance>, SeqStore) {
     use crate::engines::sim::{ExecBackend, SimLlmExecutor};
 
@@ -872,12 +934,14 @@ pub fn spawn_llm_engine(
                 let dir_c = dir.clone();
                 let variant_c = variant.to_string();
                 let slots_c = prefix_slots.clone();
+                let kv_c = kv_tokens.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
                         let m = Rc::new(Manifest::load(dir_c)?);
-                        LlmExecutor::new(m, &variant_c, store_c, warm, slots_c)
+                        Ok(LlmExecutor::new(m, &variant_c, store_c, warm, slots_c)?
+                            .with_kv_budget(kv_c))
                     },
                     event_tx.clone(),
                     ready_tx.clone(),
@@ -894,13 +958,17 @@ pub fn spawn_llm_engine(
                 let store_c = store.clone();
                 let variant_c = variant.to_string();
                 let slots_c = prefix_slots.clone();
+                let kv_c = kv_tokens.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
-                        Ok::<_, crate::error::TeolaError>(SimLlmExecutor::new(
-                            &variant_c, store_c, sep, eos, max_seq, slots_c,
-                        ))
+                        Ok::<_, crate::error::TeolaError>(
+                            SimLlmExecutor::new(
+                                &variant_c, store_c, sep, eos, max_seq, slots_c,
+                            )
+                            .with_kv_budget(kv_c),
+                        )
                     },
                     event_tx.clone(),
                     ready_tx.clone(),

@@ -20,6 +20,7 @@
 
 pub mod embedding;
 pub mod instance;
+pub mod kv_budget;
 pub mod llm;
 pub mod prefix;
 pub mod profile;
@@ -28,6 +29,7 @@ pub mod search;
 pub mod sim;
 pub mod vector_db;
 
+pub use kv_budget::KvBudget;
 pub use prefix::{prefix_fingerprint, PrefixFp};
 pub use sim::ExecBackend;
 
@@ -135,6 +137,22 @@ impl EngineJob {
         }
     }
 
+    /// KV token estimate of the job — its KV-cache growth on the serving
+    /// instance.  Prompt tokens for a prefill, planned new tokens for a
+    /// decode, row count for everything else (non-LLM engines stay
+    /// row-denominated).  This is the same token surface the WCP cost
+    /// estimates weigh; the graph scheduler stamps it onto the queue item
+    /// and token-denominated admission (`KvBudget`) reserves by it.
+    pub fn kv_tokens(&self) -> usize {
+        match self {
+            EngineJob::Prefill { tokens, .. } => tokens.len().max(1),
+            EngineJob::Decode { segments, .. } => {
+                segments.iter().map(|s| s.len).sum::<usize>().max(1)
+            }
+            _ => self.slot_rows(),
+        }
+    }
+
     /// Number of model "rows" this job contributes to a batch (for slot
     /// accounting in Algorithm 2).
     pub fn rows(&self) -> usize {
@@ -204,6 +222,16 @@ pub struct RequestCtx {
     /// requeue-on-instance-death rebuilds the queue item with its
     /// priority intact.
     pub wcp_us: u64,
+    /// KV tokens the engine scheduler reserved for this job at dispatch
+    /// (suffix-only on a prefix-routing hit).  The instance reports the
+    /// same amount back when the job retires, so the scheduler's
+    /// per-instance `KvBudget` reserve/release pairs exactly; a
+    /// requeue-on-instance-death restores it as the queue item's charge.
+    pub kv_tokens: usize,
+    /// Whether the prefix-residency WCP discount has already been applied
+    /// to `wcp_us` (applied at most once per item — see
+    /// `engine_sched::rediscount_resident_prefixes`).
+    pub wcp_discounted: bool,
     /// Completion channel of the owning query's graph scheduler.
     pub reply: Sender<Completion>,
 }
@@ -247,4 +275,8 @@ pub struct InstanceEvent {
     pub resident: usize,
     /// Slot-rows retired (final completion emitted) during this step.
     pub retired: usize,
+    /// KV tokens retired during this step: the sum of the retired jobs'
+    /// dispatch-time reservations (`RequestCtx::kv_tokens`), so the
+    /// scheduler's token ledger releases exactly what it reserved.
+    pub retired_tokens: usize,
 }

@@ -18,11 +18,12 @@
 //! regardless of policy, load, or mid-flight admission.
 
 use std::collections::VecDeque;
-use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engines::instance::{for_chunks, BatchExecutor, StepExecutor, StepOutcome};
+use crate::engines::kv_budget::{self, KvBudget};
 use crate::engines::llm::{SeqState, SeqStore};
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::{charge_device, DeviceModel};
@@ -115,6 +116,9 @@ struct SimPrefillRow {
     tokens: Vec<i32>,
     offset: usize,
     prefix: Option<PrefixFp>,
+    /// Executor-side KV reservation (suffix-only on an admit-time prefix
+    /// hit); released when the row retires.
+    kv_res: usize,
 }
 
 /// One resident decode sequence: all per-row loop state lives here so the
@@ -132,6 +136,9 @@ struct SimDecodeRow {
     seg_idx: usize,
     seg_tokens: Vec<i32>,
     all_segments: Vec<Vec<i32>>,
+    /// Executor-side KV reservation (the planned new tokens); released
+    /// when the row retires.
+    kv_res: usize,
 }
 
 /// Simulated LLM executor running the iteration-level protocol: chunked
@@ -160,6 +167,13 @@ pub struct SimLlmExecutor {
     /// Valid prefill tokens charged so far (resident-prefix hits charge
     /// only the suffix) — the test/metric observable for prefix reuse.
     charged_prefill_tokens: usize,
+    /// Shared per-instance KV token capacity handle (0 = unlimited, the
+    /// legacy row-slot mode).
+    kv_capacity: Arc<AtomicUsize>,
+    /// Executor-side reservation ledger: admissions that would overflow
+    /// it are bounced back to the instance backlog (vLLM-style admission
+    /// control); an empty ledger accepts anything (liveness).
+    kv: KvBudget,
 }
 
 impl SimLlmExecutor {
@@ -187,13 +201,30 @@ impl SimLlmExecutor {
             decodes: Vec::new(),
             prefixes: PrefixRegistry::new(prefix_slots),
             charged_prefill_tokens: 0,
+            kv_capacity: Arc::new(AtomicUsize::new(0)),
+            kv: KvBudget::new(0),
         }
+    }
+
+    /// Bind the executor to a shared per-instance KV token capacity
+    /// handle (`PlatformConfig::kv_tokens_per_instance`); 0 keeps the
+    /// legacy unlimited behavior.
+    pub fn with_kv_budget(mut self, capacity: Arc<AtomicUsize>) -> SimLlmExecutor {
+        self.kv_capacity = capacity;
+        self
     }
 
     /// Total valid prefill tokens this instance has charged device time
     /// for (prefix hits charge only the un-cached suffix).
     pub fn charged_prefill_tokens(&self) -> usize {
         self.charged_prefill_tokens
+    }
+
+    /// KV tokens currently reserved on this instance (executor-side
+    /// ledger: suffix-only prefill reservations plus planned decode
+    /// growth of every admitted, un-retired row).
+    pub fn kv_reserved(&self) -> usize {
+        self.kv.reserved()
     }
 
     /// Execute the queued host-side bookkeeping ops.
@@ -283,6 +314,7 @@ impl SimLlmExecutor {
                 output: JobOutput::Tokens(vec![next[i]]),
                 timing: ExecTiming::default(),
             });
+            self.kv.release(r.kv_res);
             out.retired_rows += 1;
             out.retired.push((r.ctx.query, r.ctx.node));
         }
@@ -351,6 +383,7 @@ impl SimLlmExecutor {
                     output: JobOutput::TokenBatch(r.all_segments),
                     timing: ExecTiming::default(),
                 });
+                self.kv.release(r.kv_res);
                 out.retired_rows += 1;
                 out.retired.push((r.ctx.query, r.ctx.node));
                 // swap_remove moved a later row into slot b: revisit it.
@@ -362,37 +395,59 @@ impl SimLlmExecutor {
 }
 
 impl StepExecutor for SimLlmExecutor {
-    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) {
+    fn admit(&mut self, jobs: Vec<(RequestCtx, EngineJob)>) -> Vec<(RequestCtx, EngineJob)> {
         // Apply any mid-run `prefix_slots` retune before consulting
         // residency, so a shrink evicts immediately instead of at the
         // next insert.
         self.prefixes.resync();
+        self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
+        let mut bounced = Vec::new();
         for (ctx, job) in jobs {
             match job {
                 EngineJob::Prefill { seq, mut tokens, mut offset, prefix } => {
                     // Resident-prefix hit: the shared instruction KV is
                     // already on this instance — seed the sequence at the
                     // prefix boundary and prefill only the suffix, so the
-                    // device charge covers the un-cached tokens alone.
-                    // Output arithmetic is untouched (the final KV length
-                    // is offset + tokens regardless), keeping sim runs
-                    // deterministic with routing on or off.
-                    if let Some(fp) = prefix {
-                        if offset == 0
-                            && tokens.len() > fp.len
-                            && self.prefixes.hit(fp).is_some()
-                        {
-                            self.store
-                                .lock()
-                                .unwrap()
-                                .insert(seq, SeqState { kv: Vec::new(), len: fp.len });
-                            tokens.drain(..fp.len);
-                            offset = fp.len;
-                        }
+                    // device charge (and the KV reservation) covers the
+                    // un-cached tokens alone.  Output arithmetic is
+                    // untouched (the final KV length is offset + tokens
+                    // regardless), keeping sim runs deterministic with
+                    // routing on or off.  Residency is probed without
+                    // touching LRU order first, so a bounced job mutates
+                    // nothing.
+                    let hit = prefix.map_or(false, |fp| {
+                        offset == 0 && tokens.len() > fp.len && self.prefixes.contains(fp)
+                    });
+                    let kv_res = if hit {
+                        kv_budget::suffix_charge(tokens.len(), prefix.unwrap().len)
+                    } else {
+                        tokens.len().max(1)
+                    };
+                    if !self.kv.admits(kv_res) {
+                        bounced.push((ctx, EngineJob::Prefill { seq, tokens, offset, prefix }));
+                        continue;
                     }
-                    self.prefills.push_back(SimPrefillRow { ctx, seq, tokens, offset, prefix });
+                    if hit {
+                        let fp = prefix.unwrap();
+                        self.prefixes.hit(fp); // refresh LRU recency
+                        self.store
+                            .lock()
+                            .unwrap()
+                            .insert(seq, SeqState { kv: Vec::new(), len: fp.len });
+                        tokens.drain(..fp.len);
+                        offset = fp.len;
+                    }
+                    self.kv.reserve(kv_res);
+                    self.prefills
+                        .push_back(SimPrefillRow { ctx, seq, tokens, offset, prefix, kv_res });
                 }
-                EngineJob::Decode { seq, segments, .. } => {
+                EngineJob::Decode { seq, segments, first_token } => {
+                    let planned: usize = segments.iter().map(|s| s.len).sum();
+                    let kv_res = planned.max(1);
+                    if !self.kv.admits(kv_res) {
+                        bounced.push((ctx, EngineJob::Decode { seq, segments, first_token }));
+                        continue;
+                    }
                     let base_len = self
                         .store
                         .lock()
@@ -400,7 +455,7 @@ impl StepExecutor for SimLlmExecutor {
                         .get(&seq)
                         .map(|s| s.len)
                         .unwrap_or(0);
-                    let planned = segments.iter().map(|s| s.len).sum();
+                    self.kv.reserve(kv_res);
                     self.decodes.push(SimDecodeRow {
                         ctx,
                         seq,
@@ -411,9 +466,11 @@ impl StepExecutor for SimLlmExecutor {
                         seg_idx: 0,
                         seg_tokens: Vec::new(),
                         all_segments: Vec::new(),
+                        kv_res,
                     });
                 }
                 other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
+                    // Host-side bookkeeping: no KV growth, always admitted.
                     self.instant.push((ctx, other));
                 }
                 other => {
@@ -426,6 +483,7 @@ impl StepExecutor for SimLlmExecutor {
                 }
             }
         }
+        bounced
     }
 
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
@@ -465,6 +523,7 @@ impl StepExecutor for SimLlmExecutor {
             out.retired_rows += 1;
             out.retired.push((r.ctx.query, r.ctx.node));
         }
+        self.kv.reset();
         out
     }
 
@@ -589,7 +648,16 @@ mod tests {
     use std::sync::{Arc, Mutex};
 
     fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
-        RequestCtx { query, node, depth: 0, arrival: Instant::now(), wcp_us: 0, reply }
+        RequestCtx {
+            query,
+            node,
+            depth: 0,
+            arrival: Instant::now(),
+            wcp_us: 0,
+            kv_tokens: 0,
+            wcp_discounted: false,
+            reply,
+        }
     }
 
     fn no_prefix_slots() -> Arc<AtomicUsize> {

@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -122,6 +122,16 @@ fn main() {
                     }
                 }
             }
+            if let Some(v) = parse_flag(&args, "--kv-tokens") {
+                // Per-instance KV token budget; 0 = legacy row-slot mode.
+                match v.parse() {
+                    Ok(n) => cfg.kv_tokens_per_instance = Some(n),
+                    Err(_) => {
+                        eprintln!("bad --kv-tokens value {v:?} (want an integer)");
+                        std::process::exit(2);
+                    }
+                }
+            }
             match parse_flag(&args, "--continuous").as_deref() {
                 Some("on") | Some("1") | Some("true") => cfg.continuous = true,
                 Some("off") | Some("0") | Some("false") => cfg.continuous = false,
@@ -196,6 +206,39 @@ fn main() {
                 let doc = teola::json::obj(vec![
                     ("wcp_on", on.to_json()),
                     ("wcp_off", off.to_json()),
+                ]);
+                std::fs::write(&path, doc.to_string()).expect("write json report");
+                println!("wrote {path}");
+            }
+        }
+        Some("kv-bench") => {
+            // The PR5 token-accounting smoke: the heterogeneous (mixed
+            // 8-16/128-token) trace replayed with legacy row-slot
+            // accounting and with token-denominated KV accounting (sim
+            // backend, single LLM instance so admission pressure is
+            // visible), percentiles merged into one JSON document
+            // (BENCH_PR5.json in CI).
+            let n: usize = parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(40);
+            let rate: f64 =
+                parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(200.0);
+            let seed: u64 =
+                parse_flag(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(0x9C5);
+            let mut cfg = PlatformConfig::sim("llm-lite");
+            cfg.llms[0].instances = 1;
+            cfg.warm = false;
+            let platform = Platform::start(&cfg).expect("platform");
+            let (off, on) =
+                teola::serving::run_kv_comparison(&platform, n, rate, seed).expect("trace");
+            platform.shutdown();
+            println!(
+                "kv off (rows): p50 {:.1} ms, p95 {:.1}, p99 {:.1} | kv on (tokens): p50 {:.1} ms, p95 {:.1}, p99 {:.1}",
+                off.e2e_ms.p50, off.e2e_ms.p95, off.e2e_ms.p99,
+                on.e2e_ms.p50, on.e2e_ms.p95, on.e2e_ms.p99
+            );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                let doc = teola::json::obj(vec![
+                    ("kv_on", on.to_json()),
+                    ("kv_off", off.to_json()),
                 ]);
                 std::fs::write(&path, doc.to_string()).expect("write json report");
                 println!("wrote {path}");

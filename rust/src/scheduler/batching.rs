@@ -17,6 +17,14 @@
 //! plus an aging term so short-tail queries cannot starve; with `wcp`
 //! off, buckets fall back to earliest-arrival order (Algorithm 2 as
 //! written).
+//!
+//! Packing is denominated by a [`SlotUnit`]: legacy **row** slots (the
+//! pre-tuned max batch rows) or **KV tokens** (`QueueItem::tokens`, the
+//! job's KV-cache growth).  Token packing is first-fit with skip-over,
+//! so one oversized prefill cannot block a window of short requests —
+//! the shorts pack around it and the oversized item waits for a drained
+//! instance (or goes out alone under the full-batch path, where the
+//! executor chunks it internally).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
@@ -70,6 +78,30 @@ impl BatchPolicy {
     }
 }
 
+/// Capacity denomination of batch packing and instance load accounting:
+/// legacy row slots, or the token-budgeted KV mode (PR5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SlotUnit {
+    /// One unit per model row (`QueueItem::rows`) — the historical
+    /// `max_slots` semantics; the TO/PO baselines always use this.
+    #[default]
+    Rows,
+    /// One unit per KV token (`QueueItem::tokens`): a 2048-token prefill
+    /// costs 256x an 8-token one instead of the same row slot.
+    Tokens,
+}
+
+impl SlotUnit {
+    /// Budget cost of one queued item in this denomination (never 0, so
+    /// admission and retirement stay balanced for empty payloads).
+    pub fn cost(self, it: &QueueItem) -> usize {
+        match self {
+            SlotUnit::Rows => it.rows.max(1),
+            SlotUnit::Tokens => it.tokens.max(1),
+        }
+    }
+}
+
 /// One queued primitive-node request.
 #[derive(Debug)]
 pub struct QueueItem {
@@ -81,6 +113,15 @@ pub struct QueueItem {
     pub bundle: BundleId,
     pub arrival: Instant,
     pub rows: usize,
+    /// KV token estimate of the job (`EngineJob::kv_tokens`), stamped by
+    /// the graph scheduler from the same token surface the WCP cost
+    /// estimates weigh.  Drives `SlotUnit::Tokens` packing and the
+    /// engine scheduler's per-instance `KvBudget` reservations.
+    pub tokens: usize,
+    /// Whether the prefix-residency WCP discount has been applied to
+    /// `wcp_us` (at most once per item; see
+    /// `engine_sched::rediscount_resident_prefixes`).
+    pub wcp_discounted: bool,
     /// Shared-prompt-prefix fingerprint of a prefill job (None for every
     /// other job kind): the engine scheduler's routing signal.
     pub prefix: Option<PrefixFp>,
@@ -112,15 +153,18 @@ pub fn wcp_priority_us(remaining_path_us: u64, waited: Duration) -> u64 {
 }
 
 /// Form the next batch according to `policy`, removing the chosen items
-/// from `queue`.  `max_slots` is the engine's pre-tuned max batch rows
-/// (token-size analog for LLMs).  `wcp` selects weighted-critical-path
-/// bucket ordering under `TopoAware` (the baselines ignore it).  Returns
-/// an empty vec when nothing fits.
+/// from `queue`.  `budget` is the engine's capacity per dispatch in
+/// `unit` denomination: pre-tuned max batch rows (`SlotUnit::Rows`, the
+/// legacy mode and always what the baselines get) or the per-instance KV
+/// token budget (`SlotUnit::Tokens`).  `wcp` selects
+/// weighted-critical-path bucket ordering under `TopoAware` (the
+/// baselines ignore it).  Returns an empty vec when nothing fits.
 pub fn form_batch(
     queue: &mut Vec<QueueItem>,
     policy: BatchPolicy,
-    max_slots: usize,
+    budget: usize,
     wcp: bool,
+    unit: SlotUnit,
 ) -> Vec<QueueItem> {
     if queue.is_empty() {
         return Vec::new();
@@ -133,7 +177,7 @@ pub fn form_batch(
             order.sort_by_key(|&i| queue[i].arrival);
             let class = job_class(&queue[order[0]].job);
             order.retain(|&i| job_class(&queue[i].job) == class);
-            take_rows(queue, order, max_slots, false, true)
+            take_budget(queue, order, budget, false, true, unit)
         }
         BatchPolicy::PerInvocation => {
             // Oldest bundle only.
@@ -144,7 +188,7 @@ pub fn form_batch(
                 .unwrap();
             let order: Vec<usize> =
                 (0..queue.len()).filter(|&i| queue[i].bundle == first).collect();
-            take_rows(queue, order, usize::MAX, false, true)
+            take_budget(queue, order, usize::MAX, false, true, unit)
         }
         BatchPolicy::TopoAware => {
             // Algorithm 2 Event 2, restricted to the highest-priority
@@ -154,28 +198,48 @@ pub fn form_batch(
                 let class = job_class(&queue[first].job);
                 order.retain(|&i| job_class(&queue[i].job) == class);
             }
-            take_rows(queue, order, max_slots, true, true)
+            take_budget(queue, order, budget, true, true, unit)
         }
     }
 }
 
 /// Continuous-admission path (stepped engines only): choose the next
 /// items, in topology-aware priority order, to join a *partially
-/// occupied* instance mid-flight, bounded by its spare slot budget.
-/// Unlike [`form_batch`] there is no job-class restriction — the stepped
-/// executor interleaves chunked-prefill calls and decode iterations
-/// internally — and an oversized item is never admitted over budget (it
-/// waits for a drained instance with the full slot budget).
+/// occupied* instance mid-flight, bounded by its spare budget (`unit`
+/// denomination).  Unlike [`form_batch`] there is no job-class
+/// restriction — the stepped executor interleaves chunked-prefill calls
+/// and decode iterations internally — and an oversized item is never
+/// admitted over budget (it waits for a drained instance with the full
+/// budget); smaller items behind it first-fit into the spare capacity.
 pub fn form_continuous_admission(
     queue: &mut Vec<QueueItem>,
-    spare_rows: usize,
+    spare: usize,
     wcp: bool,
+    unit: SlotUnit,
 ) -> Vec<QueueItem> {
-    if queue.is_empty() || spare_rows == 0 {
+    if queue.is_empty() || spare == 0 {
         return Vec::new();
     }
     let order = topo_order(queue, wcp);
-    take_rows(queue, order, spare_rows, true, false)
+    take_budget(queue, order, spare, true, false, unit)
+}
+
+/// True when the queue's priority head can only ever run *alone on a
+/// drained instance*: its cost exceeds the whole per-dispatch budget, so
+/// no spare-capacity continuous admission can ever take it.  The engine
+/// scheduler stops feeding new work into mid-flight instances while this
+/// holds — otherwise skip-over packing would admit shorter items around
+/// the oversized head forever and starve it (a real risk in token
+/// denomination, where a long prefill can exceed a small `kv_tokens`
+/// budget; row-mode LLM jobs are single-row and never trigger it).
+pub fn head_needs_drained_instance(
+    queue: &[QueueItem],
+    policy: BatchPolicy,
+    wcp: bool,
+    budget: usize,
+    unit: SlotUnit,
+) -> bool {
+    head_index(queue, policy, wcp).map_or(false, |h| unit.cost(&queue[h]) > budget)
 }
 
 /// Index of the item `form_batch` would dispatch first under `policy` —
@@ -250,34 +314,38 @@ fn topo_order(queue: &[QueueItem], wcp: bool) -> Vec<usize> {
     order
 }
 
-/// Remove items in `order` while row budget lasts.  `skip_over` lets the
-/// topology-aware policy pass over an oversized item to admit later
-/// smaller ones (slot packing); FIFO policies stop at the first overflow.
-/// `admit_oversized` lets a single item exceeding the whole budget go out
-/// alone (the engine splits internally); the continuous-admission path
-/// disables it because a mid-flight instance has only its spare slots.
-fn take_rows(
+/// Remove items in `order` while the budget (rows or KV tokens, per
+/// `unit`) lasts — first-fit.  `skip_over` lets the topology-aware
+/// policy pass over an oversized item to admit later smaller ones
+/// (packing; this is what keeps one oversized prefill from blocking a
+/// window of short requests); FIFO policies stop at the first overflow.
+/// `admit_oversized` lets a single item exceeding the whole budget go
+/// out alone (the engine splits internally); the continuous-admission
+/// path disables it because a mid-flight instance has only its spare
+/// capacity.
+fn take_budget(
     queue: &mut Vec<QueueItem>,
     order: Vec<usize>,
-    max_slots: usize,
+    budget: usize,
     skip_over: bool,
     admit_oversized: bool,
+    unit: SlotUnit,
 ) -> Vec<QueueItem> {
-    let mut slots = max_slots;
+    let mut left = budget;
     let mut chosen: Vec<usize> = Vec::new();
     for i in order {
-        let rows = queue[i].rows.max(1);
-        if rows <= slots {
-            slots -= rows;
+        let cost = unit.cost(&queue[i]);
+        if cost <= left {
+            left -= cost;
             chosen.push(i);
         } else if chosen.is_empty() && admit_oversized {
             // Oversized single item: admit alone (engine splits internally).
             chosen.push(i);
-            slots = 0;
+            left = 0;
         } else if !skip_over {
             break;
         }
-        if slots == 0 {
+        if left == 0 {
             break;
         }
     }
@@ -303,11 +371,19 @@ mod tests {
             bundle: (query, 0),
             arrival: t0 + Duration::from_millis(ms),
             rows,
+            tokens: rows,
+            wcp_discounted: false,
             prefix: None,
             wcp_us: 0,
             job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
             reply: tx,
         }
+    }
+
+    fn token_item(query: u64, node: usize, tokens: usize, t0: Instant, ms: u64) -> QueueItem {
+        let mut it = item(query, node, 2, 1, t0, ms);
+        it.tokens = tokens;
+        it
     }
 
     #[test]
@@ -320,7 +396,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 1),
             item(2, 20, 3, 1, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 2, false);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 2, false, SlotUnit::Rows);
         let picked: Vec<(u64, usize)> = batch.iter().map(|i| (i.query, i.node)).collect();
         // Fig. 7: A (deep, query 1) + H (deep, query 2); B waits.
         assert!(picked.contains(&(1, 10)));
@@ -337,7 +413,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 1),
             item(2, 20, 3, 1, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::BlindTO, 2, false);
+        let batch = form_batch(&mut q, BatchPolicy::BlindTO, 2, false, SlotUnit::Rows);
         let picked: Vec<usize> = batch.iter().map(|i| i.node).collect();
         assert!(picked.contains(&10) && picked.contains(&11));
     }
@@ -350,7 +426,7 @@ mod tests {
             item(1, 11, 1, 1, t0, 0),
             item(2, 20, 3, 1, t0, 1),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::PerInvocation, 64, false);
+        let batch = form_batch(&mut q, BatchPolicy::PerInvocation, 64, false, SlotUnit::Rows);
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|i| i.query == 1));
     }
@@ -363,7 +439,7 @@ mod tests {
             item(1, 2, 2, 6, t0, 1),
             item(2, 3, 2, 3, t0, 2),
         ];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 10, false);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 10, false, SlotUnit::Rows);
         let rows: usize = batch.iter().map(|i| i.rows).sum();
         assert!(rows <= 10);
         // skip-over admits the 3-row item from query 2.
@@ -380,14 +456,14 @@ mod tests {
         ];
         // 4 spare slots on a mid-flight instance: the 6-row item cannot
         // join (no oversized admission), the 3- and 1-row items pack in.
-        let batch = form_continuous_admission(&mut q, 4, false);
+        let batch = form_continuous_admission(&mut q, 4, false, SlotUnit::Rows);
         let rows: usize = batch.iter().map(|i| i.rows).sum();
         assert_eq!(rows, 4);
         assert_eq!(batch.len(), 2);
         assert_eq!(q.len(), 1);
         assert_eq!(q[0].rows, 6);
         // Zero spare admits nothing.
-        assert!(form_continuous_admission(&mut q, 0, false).is_empty());
+        assert!(form_continuous_admission(&mut q, 0, false, SlotUnit::Rows).is_empty());
     }
 
     #[test]
@@ -406,10 +482,79 @@ mod tests {
     }
 
     #[test]
+    fn token_packing_skips_oversized_prefill_for_shorts() {
+        let t0 = Instant::now();
+        // One 128-token prefill ahead of four 8-token jobs; a mid-flight
+        // instance has 48 spare tokens.  The oversized item must not
+        // block the window: the shorts first-fit in, the oversized item
+        // waits for a drained instance.
+        let mut q = vec![
+            token_item(1, 1, 128, t0, 0),
+            token_item(2, 2, 8, t0, 1),
+            token_item(3, 3, 8, t0, 2),
+            token_item(4, 4, 8, t0, 3),
+            token_item(5, 5, 8, t0, 4),
+        ];
+        let admitted = form_continuous_admission(&mut q, 48, false, SlotUnit::Tokens);
+        let cost: usize = admitted.iter().map(|i| i.tokens).sum();
+        assert_eq!(admitted.len(), 4, "all four shorts join");
+        assert_eq!(cost, 32);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].tokens, 128, "oversized prefill left queued");
+    }
+
+    #[test]
+    fn token_budget_admits_many_short_rows_where_row_budget_would_not() {
+        let t0 = Instant::now();
+        // Six 8-token single-row jobs against a budget of 64: row
+        // denomination at the historical max batch of 2 takes two, token
+        // denomination takes all six — short prefills no longer burn a
+        // full row slot each.
+        let mk = || (0..6).map(|i| token_item(10 + i as u64, i, 8, t0, i as u64)).collect();
+        let mut q: Vec<QueueItem> = mk();
+        let by_rows = form_batch(&mut q, BatchPolicy::TopoAware, 2, false, SlotUnit::Rows);
+        assert_eq!(by_rows.len(), 2);
+        let mut q: Vec<QueueItem> = mk();
+        let by_tokens = form_batch(&mut q, BatchPolicy::TopoAware, 64, false, SlotUnit::Tokens);
+        assert_eq!(by_tokens.len(), 6);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn oversized_head_demands_a_drained_instance() {
+        let t0 = Instant::now();
+        // The 128-token prefill is the priority head (oldest); with a
+        // 64-token budget it can never join a mid-flight instance, so
+        // the scheduler must stop continuous admission and let an
+        // instance drain — otherwise the shorts behind it would be
+        // packed around it forever (starvation).
+        let q = vec![
+            token_item(1, 1, 128, t0, 0),
+            token_item(2, 2, 8, t0, 1),
+        ];
+        assert!(head_needs_drained_instance(&q, BatchPolicy::TopoAware, false, 64, SlotUnit::Tokens));
+        // A head that fits the budget never gates.
+        let q = vec![token_item(2, 2, 8, t0, 0), token_item(1, 1, 128, t0, 1)];
+        assert!(!head_needs_drained_instance(&q, BatchPolicy::TopoAware, false, 64, SlotUnit::Tokens));
+        // Row mode: single-row LLM jobs never trigger the gate.
+        assert!(!head_needs_drained_instance(&q, BatchPolicy::TopoAware, false, 8, SlotUnit::Rows));
+        assert!(!head_needs_drained_instance(&[], BatchPolicy::TopoAware, false, 8, SlotUnit::Tokens));
+    }
+
+    #[test]
+    fn oversized_token_item_admitted_alone_in_full_batch() {
+        let t0 = Instant::now();
+        let mut q = vec![token_item(1, 1, 500, t0, 0), token_item(2, 2, 8, t0, 1)];
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 64, false, SlotUnit::Tokens);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].tokens, 500, "oversized goes out alone; executor chunks it");
+    }
+
+    #[test]
     fn oversized_item_admitted_alone() {
         let t0 = Instant::now();
         let mut q = vec![item(1, 1, 2, 100, t0, 0), item(2, 2, 2, 1, t0, 1)];
-        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16, false);
+        let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16, false, SlotUnit::Rows);
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].rows, 100);
     }

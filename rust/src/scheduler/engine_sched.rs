@@ -24,14 +24,26 @@
 //! least-loaded) — so concurrent queries of one app land where their
 //! instruction KV already lives instead of re-prefilling it per instance.
 //!
-//! Load accounting is event-driven: instances report per-step
-//! [`InstanceEvent`]s and the per-instance `loads` counter decreases by
-//! the retired rows, so occupancy is exact at iteration granularity.
+//! Load accounting is event-driven and **dual-denominated**: instances
+//! report per-step [`InstanceEvent`]s carrying both retired rows and
+//! retired KV tokens, and the scheduler maintains a row counter *and* a
+//! per-instance token ledger ([`KvBudget`]) in lockstep, so occupancy is
+//! exact at iteration granularity in whichever denomination the current
+//! mode consults.  With a non-zero `kv_tokens` budget (stepped engines
+//! under `TopoAware` only), admission, least-loaded routing, the
+//! prefix-affinity skew threshold and spare-capacity continuous
+//! admission are all **token-denominated** — a 2048-token prefill costs
+//! 256x an 8-token one instead of the same row slot, so dense batches of
+//! short requests no longer wait behind row-slot exhaustion.  A budget
+//! of 0 keeps the legacy row mode (and the TO/PO baselines always run
+//! it).
 //!
 //! Liveness: when the *last* live instance dies, queued (and any
 //! later-arriving) items are failed immediately with a
 //! [`JobOutput::Failed`] completion so query runners surface a
 //! `TeolaError` instead of blocking on a completion that can never come.
+//! A dying instance's reserved rows/tokens are released before its batch
+//! is requeued, so the revived queue never double-counts capacity.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -39,11 +51,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::engines::instance::Instance;
+use crate::engines::kv_budget::{self, KvBudget};
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::DeviceModel;
 use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
 use crate::scheduler::batching::{
-    form_batch, form_continuous_admission, head_index, BatchPolicy, QueueItem,
+    form_batch, form_continuous_admission, head_index, BatchPolicy, QueueItem, SlotUnit,
 };
 
 /// One engine's scheduler state (runs on its own thread).
@@ -74,6 +87,10 @@ pub struct EngineScheduler {
     /// `TopoAware`, order query buckets by descending remaining
     /// critical-path device time (+ aging) instead of arrival.
     pub wcp: Arc<AtomicBool>,
+    /// Shared per-instance KV token capacity: > 0 switches admission,
+    /// routing and packing to token denomination on stepped engines
+    /// under `TopoAware`; 0 keeps the legacy row-slot mode.
+    pub kv_tokens: Arc<AtomicUsize>,
     /// Whether this engine's executors run the stepped protocol.
     mode: ExecMode,
     /// Cost model of this engine (prefix-hit discounts on `wcp_us`).
@@ -81,6 +98,11 @@ pub struct EngineScheduler {
     /// In-flight rows per instance (admitted minus retired) for
     /// least-loaded routing and spare-slot admission.
     loads: Vec<usize>,
+    /// In-flight KV token reservations per instance, maintained in
+    /// lockstep with `loads` (reserve at dispatch, release by the exact
+    /// reserved amount when the instance reports retirement) so the
+    /// denomination can be switched at runtime without drift.
+    kv: Vec<KvBudget>,
     /// Instances whose channel died; never routed to again.
     dead: Vec<bool>,
     /// Routing mirror of each instance's resident-prefix LRU registry:
@@ -104,6 +126,7 @@ impl EngineScheduler {
         batch_window_us: Arc<AtomicU64>,
         prefix_slots: Arc<AtomicUsize>,
         wcp: Arc<AtomicBool>,
+        kv_tokens: Arc<AtomicUsize>,
         mode: ExecMode,
     ) -> EngineScheduler {
         let n = instances.len();
@@ -121,9 +144,11 @@ impl EngineScheduler {
             batch_window_us,
             prefix_slots,
             wcp,
+            kv_tokens,
             mode,
             device,
             loads: vec![0; n],
+            kv: (0..n).map(|_| KvBudget::new(0)).collect(),
             dead: vec![false; n],
             prefix_homes,
             queue: Vec::new(),
@@ -158,32 +183,23 @@ impl EngineScheduler {
             while let Ok(item) = self.job_rx.try_recv() {
                 self.enqueue(item);
             }
-            // Fold in per-step occupancy reports.
+            // Fold in per-step occupancy reports: rows and KV tokens
+            // release in lockstep (the token amount is the echo of what
+            // dispatch reserved, so the ledger drains exactly to zero).
             while let Ok(ev) = self.event_rx.try_recv() {
                 self.loads[ev.instance] = self.loads[ev.instance].saturating_sub(ev.retired);
+                self.kv[ev.instance].release(ev.retired_tokens);
             }
             self.dispatch();
         }
     }
 
-    /// Queue an arriving item, applying the prefix-hit cost feedback: a
-    /// prefill whose fingerprinted prefix is already resident on a live
-    /// instance will only prefill its suffix, so that much device time
-    /// leaves the owning query's remaining-critical-path stamp before
-    /// bucket ordering reads it.  (Applied once, at enqueue; residency
-    /// observed later doesn't retro-discount — the stamp is a scheduling
-    /// weight, not an accounting ledger.)
-    fn enqueue(&mut self, mut item: QueueItem) {
-        if let Some(fp) = item.prefix {
-            let routing = self.prefix_slots.load(Ordering::Relaxed) > 0;
-            if routing
-                && (0..self.instances.len())
-                    .any(|i| !self.dead[i] && self.prefix_homes[i].contains(fp))
-            {
-                let discount = (self.device.prefill_us_per_token * fp.len as f64) as u64;
-                item.wcp_us = item.wcp_us.saturating_sub(discount);
-            }
-        }
+    /// Queue an arriving item.  The prefix-hit cost feedback on its
+    /// `wcp_us` stamp is applied by [`rediscount_resident_prefixes`] at
+    /// the top of every dispatch pass, so residency gained *after* an
+    /// item was enqueued still discounts it before bucket ordering reads
+    /// the stamp (closing the PR4 enqueue-only gap).
+    fn enqueue(&mut self, item: QueueItem) {
         self.queue.push(item);
     }
 
@@ -223,6 +239,15 @@ impl EngineScheduler {
         // Weighted-critical-path bucket ordering: Teola-side (TopoAware)
         // only; the TO/PO baselines keep their arrival semantics.
         let wcp = policy == BatchPolicy::TopoAware && self.wcp.load(Ordering::Relaxed);
+        // Token-denominated KV accounting (PR5): same Teola-side gating,
+        // enabled by a non-zero per-instance token budget.  0 keeps the
+        // legacy row-slot path (and the TO/PO baselines never leave it).
+        let kv_budget = self.kv_tokens.load(Ordering::Relaxed);
+        let token_mode = self.mode == ExecMode::Stepped
+            && policy == BatchPolicy::TopoAware
+            && kv_budget > 0;
+        let unit = if token_mode { SlotUnit::Tokens } else { SlotUnit::Rows };
+        let budget = if token_mode { kv_budget } else { slots };
         let window =
             Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
         // A mid-run `prefix_slots` retune must reach the routing mirrors
@@ -230,6 +255,20 @@ impl EngineScheduler {
         // routes toward a prefix the executors have already evicted.
         for home in &mut self.prefix_homes {
             home.resync();
+        }
+        // Prefix-hit cost feedback on the WCP stamps, re-checked every
+        // pass: a prefix that became resident while an item was already
+        // queued still discounts it before bucket ordering reads the
+        // stamp (PR4's discount applied at enqueue only).
+        if prefix_routing {
+            let homes = &self.prefix_homes;
+            let dead = &self.dead;
+            let n = self.instances.len();
+            rediscount_resident_prefixes(
+                &mut self.queue,
+                |fp| (0..n).any(|i| !dead[i] && homes[i].contains(fp)),
+                self.device.prefill_us_per_token,
+            );
         }
         loop {
             if self.queue.is_empty() {
@@ -241,58 +280,99 @@ impl EngineScheduler {
                 self.fail_queue();
                 break;
             }
+            let head = head_index(&self.queue, policy, wcp);
             let want_prefix = if prefix_routing {
-                head_index(&self.queue, policy, wcp).and_then(|i| self.queue[i].prefix)
+                head.and_then(|i| self.queue[i].prefix)
             } else {
                 None
             };
-            let Some(inst) = self.pick_instance(continuous, slots, want_prefix) else {
+            let Some(inst) =
+                self.pick_instance(continuous, token_mode, budget, want_prefix)
+            else {
                 break;
             };
-            let mid_flight = self.loads[inst] > 0;
+            let in_flight =
+                if token_mode { self.kv[inst].reserved() } else { self.loads[inst] };
+            let mid_flight = in_flight > 0;
+            // Oversized-drain gate: when the priority head exceeds the
+            // whole budget it can only dispatch alone to a drained
+            // instance — stop mid-flight admission (which would pack
+            // shorter items around it forever) and let the instance
+            // drain.  `pick_instance` prefers drained instances, so the
+            // gate only fires when every eligible instance is mid-flight.
+            if mid_flight
+                && head.map_or(false, |h| unit.cost(&self.queue[h]) > budget)
+            {
+                break;
+            }
             let items = if mid_flight {
                 form_continuous_admission(
                     &mut self.queue,
-                    slots.saturating_sub(self.loads[inst]),
+                    budget.saturating_sub(in_flight),
                     wcp,
+                    unit,
                 )
             } else {
-                form_batch(&mut self.queue, policy, slots, wcp)
+                form_batch(&mut self.queue, policy, budget, wcp, unit)
             };
             if items.is_empty() {
                 break;
             }
-            let rows: usize = items.iter().map(|i| i.rows.max(1)).sum();
+            let cost: usize = items.iter().map(|i| unit.cost(i)).sum();
+            // "Batch already full" for the accumulation window below: the
+            // budget is covered, or — in token mode, where the token
+            // budget dwarfs any short-request batch — the historical max
+            // batch rows are packed (waiting would not grow the batch's
+            // device efficiency, only its latency).
+            let batch_full = cost >= budget
+                || (token_mode && items.iter().map(|i| i.rows.max(1)).sum::<usize>() >= slots);
             // Dynamic-batching delay, gated on the *formed candidate set*:
             // give co-arriving requests a moment to accumulate before
             // waking an idle instance, unless the batch already covers the
-            // slot budget (or the policy bundles by construction).  The
-            // window is measured from the batch's own oldest arrival — a
-            // stale item elsewhere in the queue (different class/bundle)
-            // no longer defeats accumulation for fresh co-arrivals.
-            // Joining an in-flight instance needs no delay — the resident
-            // batch *is* the accumulation.
+            // budget (or the policy bundles by construction).  The window
+            // is measured from the batch's own oldest arrival — a stale
+            // item elsewhere in the queue (different class/bundle) no
+            // longer defeats accumulation for fresh co-arrivals.  Joining
+            // an in-flight instance needs no delay — the resident batch
+            // *is* the accumulation.
             if policy != BatchPolicy::PerInvocation
                 && !mid_flight
-                && rows < slots
+                && !batch_full
                 && !batch_window_expired(&items, window)
             {
                 self.queue.extend(items);
                 break;
             }
-            // Keep the routing mirror in sync: after this dispatch the
-            // instance holds (or is about to compute and register) every
-            // fingerprinted prefix in the batch.
-            if prefix_routing {
-                for it in &items {
-                    if let Some(fp) = it.prefix {
-                        self.prefix_homes[inst].insert(fp, ());
-                    }
-                }
-            }
+            let mut rows = 0usize;
+            let mut reserved = 0usize;
             let jobs: Vec<(RequestCtx, EngineJob)> = items
                 .into_iter()
                 .map(|i| {
+                    // Prefix-hit reservations are charged suffix-only: the
+                    // holding instance serves the shared instruction from
+                    // its resident KV, so a routing hit gets cheaper
+                    // admission.  The residency probe runs *before* this
+                    // item's own fingerprint is mirrored, so the first
+                    // (cold) prefill of a prefix pays in full and every
+                    // co-dispatched duplicate pays its suffix — matching
+                    // the executors' pending-queue dedupe.
+                    let hit = prefix_routing
+                        && i.prefix.map_or(false, |fp| self.prefix_homes[inst].contains(fp));
+                    if prefix_routing {
+                        // Keep the routing mirror in sync: after this
+                        // dispatch the instance holds (or is about to
+                        // compute and register) the prefix.
+                        if let Some(fp) = i.prefix {
+                            self.prefix_homes[inst].insert(fp, ());
+                        }
+                    }
+                    let charge = if hit {
+                        kv_budget::suffix_charge(i.tokens, i.prefix.unwrap().len)
+                    } else {
+                        i.tokens.max(1)
+                    };
+                    rows += i.rows.max(1);
+                    reserved += charge;
                     (
                         RequestCtx {
                             query: i.query,
@@ -300,6 +380,8 @@ impl EngineScheduler {
                             depth: i.depth,
                             arrival: i.arrival,
                             wcp_us: i.wcp_us,
+                            kv_tokens: charge,
+                            wcp_discounted: i.wcp_discounted,
                             reply: i.reply,
                         },
                         i.job,
@@ -309,19 +391,30 @@ impl EngineScheduler {
             if let Err(unsent) = self.instances[inst].sender.send(Batch { jobs }) {
                 // Instance thread died: recover the unsent batch from the
                 // send error and requeue it so its queries don't hang,
-                // stop routing to the instance, and leave `loads`
-                // untouched (nothing was admitted) so least-loaded
-                // routing isn't skewed forever.  If that was the last
-                // live instance, the next loop iteration fails the queue.
+                // and stop routing to the instance.  Nothing from *this*
+                // batch was charged yet, and whatever the dead instance
+                // still held in flight can never retire — release its
+                // rows and token reservations before the requeue so the
+                // revived queue isn't admitted against phantom capacity.
+                // If that was the last live instance, the next loop
+                // iteration fails the queue.
                 eprintln!(
                     "[{}] instance {inst} died; requeueing {} job(s)",
                     self.name,
                     unsent.0.jobs.len()
                 );
                 self.dead[inst] = true;
+                self.loads[inst] = 0;
+                self.kv[inst].reset();
                 for (ctx, job) in unsent.0.jobs {
                     let rows = job.rows();
                     let prefix = job.prefix();
+                    // Recompute the token estimate from the job itself
+                    // (the unsent payload is untrimmed): requeueing the
+                    // *charge* (suffix-only on a hit) would discount the
+                    // prefix a second time at re-dispatch, or
+                    // under-reserve on a holder miss.
+                    let tokens = job.kv_tokens();
                     // Plain push, not `enqueue`: the critical-path stamp
                     // survived the round trip through `RequestCtx` and
                     // already carries any prefix discount.
@@ -334,6 +427,8 @@ impl EngineScheduler {
                         bundle: (ctx.query, ctx.node as u64),
                         arrival: ctx.arrival,
                         rows,
+                        tokens,
+                        wcp_discounted: ctx.wcp_discounted,
                         prefix,
                         wcp_us: ctx.wcp_us,
                         job,
@@ -343,44 +438,93 @@ impl EngineScheduler {
                 continue;
             }
             self.loads[inst] += rows;
+            self.kv[inst].reserve(reserved);
+        }
+    }
+
+    /// In-flight load of an instance in the active denomination: KV
+    /// token reservations under token accounting, rows otherwise.
+    fn load_of(&self, i: usize, token_mode: bool) -> usize {
+        if token_mode {
+            self.kv[i].reserved()
+        } else {
+            self.loads[i]
         }
     }
 
     /// Eligible-instance choice.  Full-batch mode requires a fully drained
     /// instance (legacy `busy` semantics); continuous mode admits into any
-    /// live instance with spare slot budget.  When the head job carries a
-    /// prefix fingerprint, an eligible instance already holding that
-    /// prefix is preferred — unless taking it would skew load by more
-    /// than half the slot budget over the least-loaded choice, in which
-    /// case load balance wins (affinity traded against imbalance).
+    /// live instance with spare budget — row slots in the legacy mode, KV
+    /// tokens under token accounting (so a short request joins as long as
+    /// its KV fits, regardless of how many rows are resident).  When the
+    /// head job carries a prefix fingerprint, an eligible instance
+    /// already holding that prefix is preferred — unless taking it would
+    /// skew load by more than half the budget over the least-loaded
+    /// choice, in which case load balance wins (affinity traded against
+    /// imbalance, compared in the active denomination).
     fn pick_instance(
         &self,
         continuous: bool,
-        slots: usize,
+        token_mode: bool,
+        budget: usize,
         want_prefix: Option<PrefixFp>,
     ) -> Option<usize> {
         let eligible = |i: &usize| -> bool {
             let i = *i;
-            let fits = if continuous { self.loads[i] < slots } else { self.loads[i] == 0 };
+            let load = self.load_of(i, token_mode);
+            let fits = if continuous { load < budget } else { load == 0 };
             !self.dead[i] && fits
         };
         let least = (0..self.instances.len())
             .filter(eligible)
-            .min_by_key(|&i| self.loads[i])?;
+            .min_by_key(|&i| self.load_of(i, token_mode))?;
         if let Some(fp) = want_prefix {
             let holder = (0..self.instances.len())
                 .filter(eligible)
                 .filter(|&i| self.prefix_homes[i].contains(fp))
-                .min_by_key(|&i| self.loads[i]);
+                .min_by_key(|&i| self.load_of(i, token_mode));
             if let Some(h) = holder {
-                let margin = (slots / 2).max(1);
-                if self.loads[h] <= self.loads[least] + margin {
+                let margin = (budget / 2).max(1);
+                if self.load_of(h, token_mode)
+                    <= self.load_of(least, token_mode) + margin
+                {
                     return Some(h);
                 }
             }
         }
         Some(least)
     }
+}
+
+/// Apply the prefix-residency WCP discount to every queued item whose
+/// fingerprinted prefix `resident` reports as held on a live instance —
+/// at most once per item (the `wcp_discounted` flag).  Called at the top
+/// of every dispatch pass, so a prefix that becomes resident *after* an
+/// item was enqueued (another query's prefill computed it, or a requeue
+/// landed behind fresh registrations) still discounts the item's stamp
+/// before bucket ordering reads it — closing the PR4 gap where the
+/// discount was applied at enqueue only.  Returns how many items were
+/// discounted this pass; pure over its inputs so the hook is
+/// unit-testable (`tests/wcp_scheduling.rs`).
+pub fn rediscount_resident_prefixes(
+    queue: &mut [QueueItem],
+    resident: impl Fn(PrefixFp) -> bool,
+    prefill_us_per_token: f64,
+) -> usize {
+    let mut discounted = 0;
+    for it in queue.iter_mut() {
+        if it.wcp_discounted {
+            continue;
+        }
+        let Some(fp) = it.prefix else { continue };
+        if resident(fp) {
+            let discount = (prefill_us_per_token * fp.len as f64) as u64;
+            it.wcp_us = it.wcp_us.saturating_sub(discount);
+            it.wcp_discounted = true;
+            discounted += 1;
+        }
+    }
+    discounted
 }
 
 /// True when the batch's own accumulation window has elapsed: the oldest
@@ -403,6 +547,7 @@ mod tests {
     fn item_at(query: u64, node: usize, arrival: Instant, job: EngineJob) -> QueueItem {
         let (tx, rx) = channel();
         std::mem::forget(rx);
+        let tokens = job.kv_tokens();
         QueueItem {
             query,
             node,
@@ -410,6 +555,8 @@ mod tests {
             bundle: (query, node as u64),
             arrival,
             rows: 1,
+            tokens,
+            wcp_discounted: false,
             prefix: None,
             wcp_us: 0,
             job,
@@ -461,13 +608,13 @@ mod tests {
         ];
         // First formed batch: the stale decode (earliest query bucket,
         // class-restricted) — its own window has expired, dispatch now.
-        let first = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false);
+        let first = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false, SlotUnit::Rows);
         assert_eq!(first.len(), 1);
         assert_eq!(first[0].node, 1);
         assert!(batch_window_expired(&first, window));
         // Second formed batch: the fresh prefills — their window is still
         // open, so dispatch waits for more co-arrivals.
-        let second = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false);
+        let second = form_batch(&mut queue, BatchPolicy::TopoAware, 8, false, SlotUnit::Rows);
         assert_eq!(second.len(), 2);
         assert!(!batch_window_expired(&second, window));
     }

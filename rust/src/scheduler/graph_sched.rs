@@ -17,7 +17,7 @@ use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
 use crate::graph::value::Value;
 use crate::scheduler::batching::QueueItem;
 use crate::scheduler::object_store::ObjectStore;
-use crate::scheduler::wcp::WcpTracker;
+use crate::scheduler::wcp::{self, WcpTracker};
 
 /// Per-query latency accounting (feeds Figs. 1, 12 and EXPERIMENTS.md).
 #[derive(Debug, Clone, Default)]
@@ -136,6 +136,11 @@ impl QueryRunner {
                 _ => "other",
             };
             *metrics.per_component_us.entry((comp, class)).or_default() += c.timing.exec_us;
+            // Measured-latency feedback into the WCP cost surface: the
+            // per-(engine, op-class) EWMA correction narrows the gap
+            // between static build-time estimates and what this machine
+            // actually delivers (ROADMAP's PR4 gap).
+            wcp::observe_latency(&self.egraph.graph.nodes[node], c.timing.exec_us);
 
             let mut value = Value::from_output(c.output);
             // Rerank post-selection: scores -> top-k candidate rows.
@@ -167,6 +172,8 @@ impl QueryRunner {
                     bundle: (self.query, u64::MAX),
                     arrival: Instant::now(),
                     rows: 0,
+                    tokens: 0,
+                    wcp_discounted: false,
                     prefix: None,
                     wcp_us: 0,
                     job: EngineJob::FreeQuery { query: self.query },
@@ -523,6 +530,11 @@ impl QueryRunner {
         })?;
         let rows = job.rows();
         let prefix = job.prefix();
+        // KV token estimate from the same token surface the WCP cost
+        // estimates weigh: prompt tokens for prefills, planned new
+        // tokens for decodes.  The engine scheduler reserves by it under
+        // token-denominated accounting.
+        let tokens = job.kv_tokens();
         sender
             .send(QueueItem {
                 query: self.query,
@@ -531,6 +543,8 @@ impl QueryRunner {
                 bundle: (self.query, v as u64),
                 arrival: Instant::now(),
                 rows,
+                tokens,
+                wcp_discounted: false,
                 prefix,
                 wcp_us,
                 job,

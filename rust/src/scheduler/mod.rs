@@ -14,11 +14,14 @@ pub mod platform;
 pub mod wcp;
 
 pub use batching::{
-    form_batch, form_continuous_admission, head_index, wcp_priority_us, BatchPolicy, BundleId,
-    QueueItem, WCP_AGING_WEIGHT,
+    form_batch, form_continuous_admission, head_index, head_needs_drained_instance,
+    wcp_priority_us, BatchPolicy, BundleId, QueueItem, SlotUnit, WCP_AGING_WEIGHT,
 };
-pub use engine_sched::EngineScheduler;
+pub use engine_sched::{rediscount_resident_prefixes, EngineScheduler};
 pub use graph_sched::{QueryMetrics, QueryRunner};
 pub use object_store::ObjectStore;
 pub use platform::{EngineSpec, Platform, PlatformConfig};
-pub use wcp::{node_cost_us, WcpTracker};
+pub use wcp::{
+    latency_correction, node_cost_us, observe_latency, reset_latency_feedback,
+    static_node_cost_us, WcpTracker,
+};

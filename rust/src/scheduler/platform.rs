@@ -75,6 +75,14 @@ pub struct PlatformConfig {
     /// TO/PO baselines ignore it; switchable at runtime via
     /// [`Platform::set_wcp`].
     pub wcp: bool,
+    /// Per-instance KV token budget on the LLM engines (token-denominated
+    /// admission, PR5): `None` derives the backward-compatible default
+    /// `max_slots x` the variant's profile `max_seq` per engine,
+    /// `Some(0)` keeps the legacy row-slot accounting (the TO/PO
+    /// baselines always run row mode regardless), `Some(n)` sets an
+    /// explicit budget.  Switchable at runtime via
+    /// [`Platform::set_kv_tokens`].
+    pub kv_tokens_per_instance: Option<usize>,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -101,6 +109,7 @@ impl PlatformConfig {
             batch_window_us: 3_000,
             prefix_slots: 8,
             wcp: true,
+            kv_tokens_per_instance: None,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -140,6 +149,12 @@ pub struct Platform {
     batch_window_us: Arc<AtomicU64>,
     prefix_slots: Arc<AtomicUsize>,
     wcp: Arc<AtomicBool>,
+    /// Per-LLM-engine KV token budget handles (shared by the engine
+    /// scheduler and its executors' admission ledgers).
+    kv_tokens: HashMap<String, Arc<AtomicUsize>>,
+    /// The derived per-engine defaults (`max_slots x profile max_seq`),
+    /// restored by `set_kv_tokens(None)`.
+    kv_defaults: HashMap<String, usize>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -178,10 +193,13 @@ impl Platform {
         let (ready_tx, ready_rx) = channel::<()>();
         let mut expected_ready = 0usize;
 
+        let mut kv_tokens: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
+        let mut kv_defaults: HashMap<String, usize> = HashMap::new();
         let mut spawn_sched = |name: String,
                                instances: Vec<crate::engines::instance::Instance>,
                                event_rx,
                                max_slots: usize,
+                               kv: Arc<AtomicUsize>,
                                mode: ExecMode| {
             let (job_tx, job_rx) = channel::<QueueItem>();
             let slot_handle = Arc::new(AtomicUsize::new(max_slots));
@@ -196,6 +214,7 @@ impl Platform {
                 batch_window_us.clone(),
                 prefix_slots.clone(),
                 wcp.clone(),
+                kv,
                 mode,
             );
             let h = std::thread::Builder::new()
@@ -206,8 +225,21 @@ impl Platform {
             routers.insert(name, job_tx);
             sched_handles.push(h);
         };
+        // Non-LLM engines are row-denominated for good (no KV cache to
+        // budget): their schedulers get a pinned zero handle.
+        let row_mode = Arc::new(AtomicUsize::new(0));
 
         for spec in &cfg.llms {
+            // Token-denominated KV budget: explicit, or derived as
+            // `max_slots x` the variant's profiled max sequence length —
+            // the budget a fully packed row-slot batch of maximal
+            // sequences would need, so the default is backward-shaped.
+            let derived = spec.max_slots
+                * manifest.models.get(&spec.name).map(|m| m.max_seq).unwrap_or(256);
+            let budget = cfg.kv_tokens_per_instance.unwrap_or(derived);
+            let kv = Arc::new(AtomicUsize::new(budget));
+            kv_tokens.insert(spec.name.clone(), kv.clone());
+            kv_defaults.insert(spec.name.clone(), derived);
             let (free_tx, free_rx) = channel();
             let (instances, _store) = llm::spawn_llm_engine(
                 manifest.clone(),
@@ -218,9 +250,17 @@ impl Platform {
                 free_tx,
                 ready_tx.clone(),
                 prefix_slots.clone(),
+                kv.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched(spec.name.clone(), instances, free_rx, spec.max_slots, ExecMode::Stepped);
+            spawn_sched(
+                spec.name.clone(),
+                instances,
+                free_rx,
+                spec.max_slots,
+                kv,
+                ExecMode::Stepped,
+            );
         }
         {
             let (free_tx, free_rx) = channel();
@@ -239,6 +279,7 @@ impl Platform {
                 instances,
                 free_rx,
                 cfg.embedder.max_slots,
+                row_mode.clone(),
                 ExecMode::FullBatch,
             );
         }
@@ -259,6 +300,7 @@ impl Platform {
                 instances,
                 free_rx,
                 cfg.reranker.max_slots,
+                row_mode.clone(),
                 ExecMode::FullBatch,
             );
         }
@@ -267,7 +309,7 @@ impl Platform {
             let (instances, _store) =
                 vector_db::spawn_vector_db(cfg.vdb_instances, free_tx, ready_tx.clone());
             expected_ready += instances.len();
-            spawn_sched("vdb".into(), instances, free_rx, 64, ExecMode::FullBatch);
+            spawn_sched("vdb".into(), instances, free_rx, 64, row_mode.clone(), ExecMode::FullBatch);
         }
         let corpus = Arc::new(Corpus::synthetic(cfg.corpus_docs, 48, manifest.vocab.max(64), 11));
         {
@@ -280,7 +322,7 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("web".into(), instances, free_rx, 16, ExecMode::FullBatch);
+            spawn_sched("web".into(), instances, free_rx, 16, row_mode.clone(), ExecMode::FullBatch);
         }
         {
             let (free_tx, free_rx) = channel();
@@ -292,7 +334,7 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("tool".into(), instances, free_rx, 16, ExecMode::FullBatch);
+            spawn_sched("tool".into(), instances, free_rx, 16, row_mode.clone(), ExecMode::FullBatch);
         }
 
         // Block until every instance finished executor construction
@@ -312,6 +354,8 @@ impl Platform {
             batch_window_us,
             prefix_slots,
             wcp,
+            kv_tokens,
+            kv_defaults,
             profiles,
             manifest,
             sep,
@@ -348,6 +392,44 @@ impl Platform {
     /// to every engine scheduler; only effective under `TopoAware`).
     pub fn set_wcp(&self, on: bool) {
         self.wcp.store(on, Ordering::Relaxed);
+    }
+
+    /// Retune the per-instance KV token budget on every LLM engine at
+    /// runtime: `Some(0)` falls back to legacy row-slot accounting,
+    /// `Some(n)` sets an explicit token budget, `None` restores each
+    /// engine's derived default (`max_slots x profile max_seq`).  The
+    /// handles are shared with the executors' admission ledgers, so the
+    /// retune applies to scheduling and admission at once.
+    pub fn set_kv_tokens(&self, budget: Option<usize>) {
+        for (name, h) in &self.kv_tokens {
+            let v = budget.unwrap_or_else(|| self.kv_defaults.get(name).copied().unwrap_or(0));
+            h.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Current KV token budget of one LLM engine (None for engines
+    /// without token accounting, e.g. the encoders).
+    pub fn kv_tokens_of(&self, engine: &str) -> Option<usize> {
+        self.kv_tokens.get(engine).map(|h| h.load(Ordering::Relaxed))
+    }
+
+    /// Snapshot every LLM engine's current KV token budget, so a
+    /// comparison harness that pins the knob can restore the caller's
+    /// configuration (derived or explicit) instead of clobbering it.
+    pub fn kv_tokens_snapshot(&self) -> Vec<(String, usize)> {
+        self.kv_tokens
+            .iter()
+            .map(|(name, h)| (name.clone(), h.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Restore budgets captured by [`Platform::kv_tokens_snapshot`].
+    pub fn restore_kv_tokens(&self, snapshot: &[(String, usize)]) {
+        for (name, v) in snapshot {
+            if let Some(h) = self.kv_tokens.get(name) {
+                h.store(*v, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Retune one engine's slot budget (max batch rows) at runtime.

@@ -18,6 +18,21 @@
 //! [`crate::scheduler::batching::QueueItem`]; the engine schedulers order
 //! query buckets by it (descending, with an aging term — see
 //! `batching::wcp_priority_us`) when the `wcp` knob is on.
+//!
+//! **Measured-latency feedback**: the static estimates are built from
+//! the `DeviceModel` cost surface with coarse fallbacks for
+//! runtime-sized inputs, so they drift from what the machine actually
+//! delivers.  Every engine completion feeds its measured `ExecTiming`
+//! back through [`observe_latency`], which keeps a per-(engine,
+//! op-class) EWMA of the measured/static ratio; [`node_cost_us`]
+//! multiplies the static estimate by that clamped correction factor, so
+//! later queries' critical-path weights track observed latencies.  The
+//! correction only re-weights cross-query comparisons — it is never
+//! charged anywhere — and a tracker snapshots its costs at build time,
+//! so the monotone non-increasing invariant is unaffected.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::engines::profile::DeviceModel;
 use crate::engines::NodeId;
@@ -47,11 +62,100 @@ fn part_rows(r: &DataRef) -> usize {
     r.static_rows().unwrap_or(FALLBACK_ROWS)
 }
 
+/// EWMA smoothing factor of the measured-latency feedback.
+const EWMA_ALPHA: f64 = 0.2;
+/// Correction-factor clamp: measured `exec_us` is the *batched* call
+/// time shared by every row of the call (and falls back to residency
+/// time for streamed jobs), so single samples can swing wildly; the
+/// clamp keeps one outlier from inverting cross-query comparisons.
+const CORRECTION_MIN: f64 = 0.25;
+const CORRECTION_MAX: f64 = 4.0;
+
+/// Per-(engine, op-class) EWMA of measured/static latency ratios.
+/// Process-global: every query runner feeds it and every later
+/// `WcpTracker` build reads it (a Mutex'd map — completions are rare
+/// relative to scheduling work).
+static FEEDBACK: Mutex<Option<HashMap<(String, &'static str), f64>>> = Mutex::new(None);
+
+/// Op-class of a primitive for the latency feedback ("prefill",
+/// "decode", "encoder", "service"; host-evaluated primitives are "host"
+/// and never observed).
+pub fn cost_class(node: &Primitive) -> &'static str {
+    match &node.payload {
+        PayloadSpec::Prefill { .. } => "prefill",
+        PayloadSpec::Decode { .. } => "decode",
+        PayloadSpec::Embed { .. } | PayloadSpec::Rerank { .. } => "encoder",
+        PayloadSpec::Ingest { .. }
+        | PayloadSpec::VectorSearch { .. }
+        | PayloadSpec::WebSearch { .. }
+        | PayloadSpec::Tool { .. }
+        | PayloadSpec::ClonePrefix { .. } => "service",
+        PayloadSpec::Condition { .. }
+        | PayloadSpec::Aggregate { .. }
+        | PayloadSpec::PartialDecode { .. } => "host",
+    }
+}
+
+/// Feed one measured engine latency into the per-(engine, class) EWMA.
+/// Zero measurements and zero static estimates are ignored (nothing to
+/// correct against).
+pub fn observe_latency(node: &Primitive, measured_us: u64) {
+    let static_us = static_node_cost_us(node);
+    if static_us == 0 || measured_us == 0 {
+        return;
+    }
+    let ratio =
+        (measured_us as f64 / static_us as f64).clamp(CORRECTION_MIN, CORRECTION_MAX);
+    let mut guard = FEEDBACK.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    let entry = map
+        .entry((node.engine.clone(), cost_class(node)))
+        .or_insert(1.0);
+    *entry += EWMA_ALPHA * (ratio - *entry);
+}
+
+/// Current correction factor for an (engine, op-class); 1.0 until
+/// observations arrive.  The map holds a handful of (engine, class)
+/// pairs, so a borrowed linear scan beats hashing an allocated
+/// `String` key on this per-node hot path (`WcpTracker::new` calls it
+/// once per primitive at every query start).
+pub fn latency_correction(engine: &str, class: &'static str) -> f64 {
+    let guard = FEEDBACK.lock().unwrap();
+    let Some(map) = guard.as_ref() else { return 1.0 };
+    map.iter()
+        .find(|((e, c), _)| e == engine && *c == class)
+        .map(|(_, v)| *v)
+        .unwrap_or(1.0)
+        .clamp(CORRECTION_MIN, CORRECTION_MAX)
+}
+
+/// Drop every latency observation, returning all corrections to 1.0.
+/// The comparison harnesses (`run_wcp_comparison`, `run_kv_comparison`)
+/// call this before each half so the 'off' half's observations cannot
+/// train estimates only the 'on' half reads — each experiment varies
+/// exactly one knob, and seeded replays stay order-independent.
+pub fn reset_latency_feedback() {
+    let mut guard = FEEDBACK.lock().unwrap();
+    *guard = None;
+}
+
 /// `DeviceModel`-weighted cost estimate of one primitive node,
-/// microseconds.  Estimates only need to be *relatively* right — they
-/// weigh critical-path comparisons across queries, they are never charged
-/// anywhere — so runtime-unknown inputs use coarse fallbacks.
+/// microseconds, corrected by the measured-latency EWMA for the node's
+/// (engine, op-class).  Estimates only need to be *relatively* right —
+/// they weigh critical-path comparisons across queries, they are never
+/// charged anywhere.
 pub fn node_cost_us(node: &Primitive) -> u64 {
+    let stat = static_node_cost_us(node);
+    if stat == 0 {
+        return 0;
+    }
+    (stat as f64 * latency_correction(&node.engine, cost_class(node))) as u64
+}
+
+/// Static (build-time) cost estimate of one primitive node,
+/// microseconds, straight from the `DeviceModel` cost surface with
+/// coarse fallbacks for runtime-unknown inputs.
+pub fn static_node_cost_us(node: &Primitive) -> u64 {
     match &node.payload {
         PayloadSpec::Prefill { parts, .. } => {
             let dm = DeviceModel::for_engine(&node.engine);
@@ -150,12 +254,12 @@ mod tests {
     use crate::graph::pgraph::{build_pgraph, instr_tokens};
     use crate::graph::template::*;
 
-    fn one_shot_egraph(out_tokens: usize) -> EGraph {
+    fn one_shot_egraph_on(variant: &str, out_tokens: usize) -> EGraph {
         let mut t = WorkflowTemplate::new("wcp");
         t.add(Component {
             name: "gen".into(),
             kind: ComponentKind::LlmGenerate {
-                variant: "llm-lite".into(),
+                variant: variant.into(),
                 mode: SynthesisMode::OneShot,
                 prompt: vec![
                     PromptPart::Instruction(instr_tokens("i", 16)),
@@ -165,12 +269,16 @@ mod tests {
                 segments: 1,
                 fan: 0,
             },
-            engine: "llm-lite".into(),
+            engine: variant.into(),
             batchable: false,
             splittable: false,
         });
         let q = QueryConfig::example(5);
         EGraph::new(build_pgraph(&t, &q).unwrap()).unwrap()
+    }
+
+    fn one_shot_egraph(out_tokens: usize) -> EGraph {
+        one_shot_egraph_on("llm-lite", out_tokens)
     }
 
     #[test]
@@ -201,6 +309,45 @@ mod tests {
         // Idempotent on repeat completion.
         w.complete(0);
         assert_eq!(w.remaining_us(), 0);
+    }
+
+    #[test]
+    fn latency_feedback_corrects_estimates() {
+        // A dedicated engine name keeps this test's observations out of
+        // the llm-lite estimates other tests compare.
+        let e = one_shot_egraph_on("ewma-test-llm", 8);
+        let decode = e
+            .graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.payload, PayloadSpec::Decode { .. }))
+            .expect("one-shot workflow has a decode node");
+        assert_eq!(cost_class(decode), "decode");
+        assert_eq!(latency_correction("ewma-test-llm", "decode"), 1.0);
+        let stat = static_node_cost_us(decode);
+        assert!(stat > 0);
+        assert_eq!(node_cost_us(decode), stat, "no observations -> no correction");
+
+        // Consistently observing 2x the static estimate converges the
+        // correction toward 2.0 and scales the estimate with it.
+        for _ in 0..60 {
+            observe_latency(decode, stat * 2);
+        }
+        let c = latency_correction("ewma-test-llm", "decode");
+        assert!((1.8..=2.0).contains(&c), "EWMA converged to {c}");
+        let corrected = node_cost_us(decode);
+        assert!(
+            corrected > stat * 17 / 10 && corrected <= stat * 2,
+            "corrected {corrected} vs static {stat}"
+        );
+
+        // One absurd outlier is clamped, never inverting comparisons.
+        observe_latency(decode, stat.saturating_mul(1_000));
+        assert!(latency_correction("ewma-test-llm", "decode") <= 4.0);
+
+        // Zero measurements are ignored (nothing to correct against).
+        observe_latency(decode, 0);
+        assert!(latency_correction("ewma-test-llm", "decode") >= 1.0);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::bench::{build_egraph, hetero_prepared, next_query_id, TraceRun};
+use crate::bench::{build_egraph, hetero_prepared, kv_hetero_prepared, next_query_id, TraceRun};
 use crate::engines::QueryId;
 use crate::error::Result;
 use crate::graph::egraph::EGraph;
@@ -171,17 +171,81 @@ pub fn run_wcp_comparison(
         let _ = platform.run_query(0x9C4_FFFF, e)?;
     }
     let drain = || std::thread::sleep(Duration::from_millis(50));
-    platform.set_wcp(false);
-    drain(); // let the previous half's queued FreeQuery cleanup land
-    let off = run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+    // Pin legacy row-slot accounting for BOTH halves: the comparison
+    // varies the WCP knob alone.  Token-denominated admission (PR5)
+    // admits most of this trace on arrival, which would drain the queue
+    // WCP exists to order and mask the effect under test.
+    let kv_snapshot = platform.kv_tokens_snapshot();
+    // Inner closure so the caller's accounting mode (and the WCP flag)
+    // is restored even when a half errors out.
+    let result = (|| {
+        platform.set_kv_tokens(Some(0));
+        platform.set_wcp(false);
+        // Both halves start from identity latency corrections: the first
+        // half's completions must not train cost estimates only the
+        // second half's trackers read.
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain(); // let the previous half's queued FreeQuery cleanup land
+        let off =
+            run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        platform.set_wcp(true);
+        crate::scheduler::wcp::reset_latency_feedback();
+        // Both halves reuse the same query ids (bit-identical outputs
+        // need identical (id, e-graph) pairs); drain between them so the
+        // first half's fire-and-forget FreeQuery items cannot execute
+        // after the second half re-admits the same id and wipe its live
+        // KV.
+        drain();
+        let on =
+            run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        Ok((off, on))
+    })();
     platform.set_wcp(true);
-    // Both halves reuse the same query ids (bit-identical outputs need
-    // identical (id, e-graph) pairs); drain between them so the first
-    // half's fire-and-forget FreeQuery items cannot execute after the
-    // second half re-admits the same id and wipe its live KV.
-    drain();
-    let on = run_load_prepared_ids(platform, hetero_prepared(n, seed), &trace.arrivals, id_of)?;
-    Ok((off, on))
+    platform.restore_kv_tokens(&kv_snapshot);
+    result
+}
+
+/// The PR5 token-accounting comparison: replay one seeded Poisson trace
+/// of mixed short-RAG / long-multistep queries twice — legacy row-slot
+/// accounting (`kv_tokens = 0`), then token-denominated KV accounting at
+/// the derived budget — with fixed query ids so the two reports' outputs
+/// are comparable bit-for-bit.  Returns `(off, on)` and leaves the
+/// platform with token accounting at its derived default.
+pub fn run_kv_comparison(
+    platform: &Platform,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<(LoadReport, LoadReport)> {
+    let trace = PoissonTrace::generate(rate, n, seed);
+    let id_of = |i: usize| 0x9C5_0000 + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half (see run_wcp_comparison — the cold prefix prefill must not
+    // bias whichever half runs first).
+    if let Some((e, _)) = kv_hetero_prepared(1, seed).pop() {
+        let _ = platform.run_query(0x9C5_FFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    let kv_snapshot = platform.kv_tokens_snapshot();
+    // Inner closure so the caller's accounting mode is restored even
+    // when a half errors out.
+    let result = (|| {
+        platform.set_kv_tokens(Some(0)); // legacy row-slot accounting
+        // Identity latency corrections for both halves (the comparison
+        // varies the accounting knob alone).
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain(); // let queued FreeQuery cleanup land before reusing ids
+        let off =
+            run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        platform.set_kv_tokens(None); // derived token budget
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain();
+        let on =
+            run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        Ok((off, on))
+    })();
+    platform.restore_kv_tokens(&kv_snapshot);
+    result
 }
 
 /// Open-loop Poisson load for one (app, scheme, dataset) configuration:

@@ -63,7 +63,16 @@ pub fn sim_llm_exec_with_slots(
 
 /// Request context for direct executor tests.
 pub fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) -> RequestCtx {
-    RequestCtx { query, node, depth: 0, arrival: Instant::now(), wcp_us: 0, reply }
+    RequestCtx {
+        query,
+        node,
+        depth: 0,
+        arrival: Instant::now(),
+        wcp_us: 0,
+        kv_tokens: 0,
+        wcp_discounted: false,
+        reply,
+    }
 }
 
 /// A from-scratch prefill job of `n_tokens` identical tokens.

@@ -1,0 +1,175 @@
+//! Token-denominated KV memory accounting (PR5): executor-side admission
+//! control against the per-instance token budget (reserve-at-admit,
+//! release-at-retire, suffix-only reservations on prefix hits, bounce of
+//! over-budget admissions), and the end-to-end acceptance bar — on the
+//! mixed 8-16/128-token heterogeneous sim trace, token accounting
+//! strictly beats legacy row-slot accounting at the tail with
+//! bit-identical outputs.  Trace setup comes from the shared harness in
+//! `tests/common/`.
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use common::{ctx, decode_job, prefill_job, run_to_idle, serial, sim_llm_exec_with_slots};
+use teola::engines::instance::StepExecutor;
+use teola::engines::prefix::prefix_fingerprint;
+use teola::engines::EngineJob;
+use teola::scheduler::{Platform, PlatformConfig};
+use teola::serving::run_kv_comparison;
+
+/// Sim executor bound to a KV token budget of `cap` (prefix cache off).
+fn kv_exec(cap: usize) -> (teola::engines::sim::SimLlmExecutor, Arc<AtomicUsize>) {
+    let (exec, _store, _slots) = sim_llm_exec_with_slots(0);
+    let handle = Arc::new(AtomicUsize::new(cap));
+    (exec.with_kv_budget(handle.clone()), handle)
+}
+
+#[test]
+fn executor_reserves_at_admit_and_releases_at_retire() {
+    let (mut exec, _cap) = kv_exec(64);
+    let (tx, _rx) = channel();
+
+    // A 24-token prefill reserves 24; a 16-token decode reserves 16.
+    let bounced = exec.admit(vec![(ctx(1, 0, tx.clone()), prefill_job(1, 0, 24))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 24);
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0, "prefill retirement releases its reservation");
+
+    let bounced = exec.admit(vec![(ctx(1, 1, tx), decode_job(1, 1, 0, 16))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 16);
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0, "decode retirement releases its reservation");
+}
+
+#[test]
+fn executor_bounces_over_budget_admissions_until_space_frees() {
+    let (mut exec, _cap) = kv_exec(40);
+    let (tx, _rx) = channel();
+
+    let bounced = exec.admit(vec![(ctx(1, 0, tx.clone()), prefill_job(1, 0, 32))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 32);
+
+    // A second 32-token prefill exceeds the 40-token budget: bounced
+    // back (not dropped, not admitted), leaving the ledger untouched.
+    let bounced = exec.admit(vec![(ctx(2, 0, tx.clone()), prefill_job(2, 0, 32))]);
+    assert_eq!(bounced.len(), 1);
+    assert_eq!(bounced[0].0.query, 2);
+    assert_eq!(exec.kv_reserved(), 32);
+
+    // After the first prefill retires, the bounced job is admittable.
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0);
+    let bounced = exec.admit(bounced);
+    assert!(bounced.is_empty(), "freed budget must admit the retried job");
+    assert_eq!(exec.kv_reserved(), 32);
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+}
+
+#[test]
+fn idle_executor_accepts_oversized_job_for_liveness() {
+    let (mut exec, _cap) = kv_exec(16);
+    let (tx, _rx) = channel();
+
+    // 100 tokens > the whole 16-token budget, but the executor is empty:
+    // it must accept (and chunk internally) rather than starve the job.
+    let bounced = exec.admit(vec![(ctx(1, 0, tx), prefill_job(1, 0, 100))]);
+    assert!(bounced.is_empty(), "an empty executor accepts any job");
+    assert_eq!(exec.kv_reserved(), 100);
+    run_to_idle(&mut exec, &mut Vec::new(), 200);
+    assert_eq!(exec.kv_reserved(), 0);
+}
+
+#[test]
+fn prefix_hit_reservation_is_suffix_only() {
+    let (exec, _store, _slots) = sim_llm_exec_with_slots(4);
+    let handle = Arc::new(AtomicUsize::new(256));
+    let mut exec = exec.with_kv_budget(handle);
+    let (tx, _rx) = channel();
+    let instr: Vec<i32> = (0..16).map(|i| 50 + i).collect();
+    let fp = prefix_fingerprint(&instr);
+    let fp_prefill = |q: u64, suffix: usize| {
+        let mut tokens = instr.clone();
+        tokens.extend(std::iter::repeat(7).take(suffix));
+        EngineJob::Prefill { seq: (q, 0), tokens, offset: 0, prefix: Some(fp) }
+    };
+
+    // Cold: the full 16+8 tokens are reserved.
+    exec.admit(vec![(ctx(1, 0, tx.clone()), fp_prefill(1, 8))]);
+    assert_eq!(exec.kv_reserved(), 24);
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0);
+
+    // Warm: the resident 16-token instruction is served from KV, so the
+    // reservation covers only the 10-token suffix.
+    exec.admit(vec![(ctx(2, 0, tx), fp_prefill(2, 10))]);
+    assert_eq!(exec.kv_reserved(), 10, "prefix hit must reserve suffix only");
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0);
+}
+
+#[test]
+fn runtime_kv_retune_applies_at_next_admission() {
+    let (mut exec, cap) = kv_exec(24);
+    let (tx, _rx) = channel();
+
+    let bounced = exec.admit(vec![(ctx(1, 0, tx.clone()), prefill_job(1, 0, 20))]);
+    assert!(bounced.is_empty());
+    // 20/24 used: a 16-token decode bounces...
+    let bounced = exec.admit(vec![(ctx(1, 1, tx.clone()), decode_job(1, 1, 0, 16))]);
+    assert_eq!(bounced.len(), 1);
+    // ...until the shared handle is retuned upward mid-run.
+    cap.store(64, Ordering::Relaxed);
+    let bounced = exec.admit(bounced);
+    assert!(bounced.is_empty(), "retuned budget admits the bounced job");
+    run_to_idle(&mut exec, &mut Vec::new(), 100);
+    assert_eq!(exec.kv_reserved(), 0);
+}
+
+/// Acceptance bar (PR5): on the mixed 8-16/128-token heterogeneous sim
+/// trace (one LLM instance so admission pressure is visible), token
+/// accounting strictly beats legacy row-slot accounting at the tail —
+/// short prefills no longer burn a full row slot each, so they batch
+/// densely instead of queueing behind row exhaustion — and outputs are
+/// bit-identical across both modes (accounting moves work in time, never
+/// changes results).
+#[test]
+fn token_accounting_cuts_p95_on_heterogeneous_trace_with_identical_outputs() {
+    let _g = serial();
+
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.llms[0].instances = 1;
+    let platform = Platform::start(&cfg).unwrap();
+    // The derived default budget: max_slots (8) x sim max_seq (256).
+    assert_eq!(platform.kv_tokens_of("llm-lite"), Some(2048));
+    assert_eq!(platform.kv_tokens_of("embedder"), None, "encoders stay row-mode");
+
+    // Rate 200/s needs ~10 concurrent short rows to keep up — past the
+    // 8-row slot cap, so row mode queues structurally while the token
+    // budget (a few hundred KV tokens in flight vs 2048) absorbs it.
+    let n = 40;
+    let (off, on) = run_kv_comparison(&platform, n, 200.0, 0x9C5).unwrap();
+    // The comparison restores the caller's prior budget (the derived
+    // default here) when it finishes.
+    assert_eq!(platform.kv_tokens_of("llm-lite"), Some(2048));
+    platform.shutdown();
+
+    assert_eq!(off.latencies_ms.len(), n);
+    assert_eq!(on.latencies_ms.len(), n);
+    assert!(
+        on.e2e_ms.p95 < off.e2e_ms.p95,
+        "token accounting p95 {:.1} ms should beat row-slot p95 {:.1} ms",
+        on.e2e_ms.p95,
+        off.e2e_ms.p95
+    );
+    assert_eq!(on.outputs.len(), n);
+    assert_eq!(
+        on.outputs, off.outputs,
+        "KV accounting must not change any query's output, only its timing"
+    );
+}

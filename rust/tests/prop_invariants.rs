@@ -20,8 +20,9 @@ use teola::graph::pgraph::{build_pgraph, instr_tokens, PGraph};
 use teola::graph::primitive::{DataRef, PayloadSpec, PrimKind};
 use teola::graph::template::*;
 use teola::graph::{run_passes, OptFlags};
+use teola::engines::kv_budget::KvBudget;
 use teola::scheduler::object_store::ObjectStore;
-use teola::scheduler::{form_batch, BatchPolicy, QueueItem, WcpTracker};
+use teola::scheduler::{form_batch, BatchPolicy, QueueItem, SlotUnit, WcpTracker};
 use teola::util::proptest::{check, prop_assert, vec_of};
 use teola::util::rng::Rng;
 
@@ -422,6 +423,8 @@ fn mk_item(rng: &mut Rng, t0: Instant) -> QueueItem {
         bundle: (0, rng.range(0, 4)),
         arrival: t0 + Duration::from_micros(rng.range(0, 5000)),
         rows: rng.range_usize(1, 9),
+        tokens: rng.range_usize(1, 600),
+        wcp_discounted: false,
         prefix: None,
         wcp_us: rng.range(0, 500_000),
         job: EngineJob::ToolCall { name: "x".into(), cost_us: 0 },
@@ -455,7 +458,8 @@ fn per_invocation_never_merges_distinct_invocations() {
             })
             .collect();
         let total = queue.len();
-        let batch = form_batch(&mut queue, BatchPolicy::PerInvocation, 64, rng.chance(0.5));
+        let batch =
+            form_batch(&mut queue, BatchPolicy::PerInvocation, 64, rng.chance(0.5), SlotUnit::Rows);
         prop_assert(!batch.is_empty(), "progress")?;
         prop_assert(batch.len() + queue.len() == total, "no items lost")?;
         let head = batch[0].bundle;
@@ -482,19 +486,25 @@ fn batching_respects_slots_and_makes_progress() {
             rng,
             &[BatchPolicy::TopoAware, BatchPolicy::BlindTO, BatchPolicy::PerInvocation],
         );
-        let max_slots = rng.range_usize(1, 20);
+        // Either denomination must respect its budget.
+        let unit =
+            if rng.chance(0.5) { SlotUnit::Rows } else { SlotUnit::Tokens };
+        let budget = match unit {
+            SlotUnit::Rows => rng.range_usize(1, 20),
+            SlotUnit::Tokens => rng.range_usize(1, 1500),
+        };
         let total_before = queue.len();
-        let batch = form_batch(&mut queue, policy, max_slots, rng.chance(0.5));
+        let batch = form_batch(&mut queue, policy, budget, rng.chance(0.5), unit);
         prop_assert(!batch.is_empty(), "non-empty queue must yield progress")?;
         prop_assert(
             batch.len() + queue.len() == total_before,
             "no items lost or duplicated",
         )?;
-        let rows: usize = batch.iter().map(|i| i.rows).sum();
+        let cost: usize = batch.iter().map(|i| unit.cost(i)).sum();
         // A single oversized item may exceed the budget (engines split
         // internally); otherwise the budget holds.
         if batch.len() > 1 && policy != BatchPolicy::PerInvocation {
-            prop_assert(rows <= max_slots, format!("rows {rows} > slots {max_slots}"))?;
+            prop_assert(cost <= budget, format!("{unit:?} cost {cost} > budget {budget}"))?;
         }
         Ok(())
     });
@@ -510,7 +520,7 @@ fn batching_drains_completely() {
         let mut rounds = 0;
         let wcp = rng.chance(0.5);
         while !queue.is_empty() {
-            let b = form_batch(&mut queue, BatchPolicy::TopoAware, 8, wcp);
+            let b = form_batch(&mut queue, BatchPolicy::TopoAware, 8, wcp, SlotUnit::Rows);
             prop_assert(!b.is_empty(), "stuck queue")?;
             drained += b.len();
             rounds += 1;
@@ -555,6 +565,105 @@ fn wcp_remaining_path_monotone_nonincreasing() {
             prev = w.remaining_us();
         }
         prop_assert(w.remaining_us() == 0, "all nodes complete => remaining 0")
+    });
+}
+
+/// PR5 token conservation: replay the engine scheduler's reserve/release
+/// discipline against per-instance `KvBudget` ledgers under random
+/// admission, retire, and requeue-on-instance-death orders.  Invariants:
+/// every release pairs exactly with its reservation (the ledger never
+/// saturates, i.e. never would have gone negative), a live instance
+/// admitted under `fits` never exceeds its capacity, a dead instance's
+/// ledger is empty the moment it dies, and after the drain every
+/// instance's balance is exactly zero.
+#[test]
+fn kv_budget_balances_to_zero_under_random_orders() {
+    check(80, |rng| {
+        let n_inst = rng.range_usize(1, 5);
+        let cap = rng.range_usize(16, 4096);
+        let mut budgets: Vec<KvBudget> = (0..n_inst).map(|_| KvBudget::new(cap)).collect();
+        let mut alive = vec![true; n_inst];
+        // Pending jobs (token costs, possibly larger than the whole
+        // capacity — dispatched alone, the executor chunks internally)
+        // and the in-flight charge list per instance.
+        let mut pending: Vec<usize> =
+            (0..rng.range_usize(1, 48)).map(|_| rng.range_usize(1, 900)).collect();
+        let mut inflight: Vec<Vec<usize>> = vec![Vec::new(); n_inst];
+
+        let mut steps = 0usize;
+        loop {
+            let work_left =
+                !pending.is_empty() || inflight.iter().any(|v| !v.is_empty());
+            if !work_left {
+                break;
+            }
+            steps += 1;
+            prop_assert(steps < 20_000, "random schedule failed to drain")?;
+            match rng.range(0, 4) {
+                // Admit the head job to a random live instance, honoring
+                // the scheduler's rule: it must fit, unless the instance
+                // is idle (oversized admission).
+                0 | 1 if !pending.is_empty() => {
+                    let live: Vec<usize> = (0..n_inst).filter(|&i| alive[i]).collect();
+                    let i = *teola::util::proptest::pick(rng, &live);
+                    let cost = pending[0];
+                    if budgets[i].fits(cost) || budgets[i].reserved() == 0 {
+                        pending.remove(0);
+                        budgets[i].reserve(cost);
+                        inflight[i].push(cost);
+                        if cost <= cap {
+                            prop_assert(
+                                budgets[i].reserved() <= cap
+                                    || inflight[i].iter().any(|&c| c > cap),
+                                "fits-gated admission stays under capacity",
+                            )?;
+                        }
+                    }
+                }
+                // Retire a random in-flight job: release exactly its
+                // dispatch-time charge.
+                2 => {
+                    let occupied: Vec<usize> =
+                        (0..n_inst).filter(|&i| !inflight[i].is_empty()).collect();
+                    if occupied.is_empty() {
+                        continue;
+                    }
+                    let i = *teola::util::proptest::pick(rng, &occupied);
+                    let j = rng.range_usize(0, inflight[i].len());
+                    let cost = inflight[i].remove(j);
+                    let freed = budgets[i].release(cost);
+                    prop_assert(
+                        freed == cost,
+                        format!("release clamped: ledger would have gone negative ({freed} < {cost})"),
+                    )?;
+                }
+                // Instance death: its ledger resets and its in-flight
+                // jobs requeue for re-admission elsewhere (never back to
+                // a dead instance).  Keep at least one instance alive so
+                // the schedule always drains.
+                _ => {
+                    if alive.iter().filter(|a| **a).count() < 2 {
+                        continue;
+                    }
+                    let live: Vec<usize> = (0..n_inst).filter(|&i| alive[i]).collect();
+                    let i = *teola::util::proptest::pick(rng, &live);
+                    alive[i] = false;
+                    pending.extend(inflight[i].drain(..));
+                    budgets[i].reset();
+                    prop_assert(
+                        budgets[i].reserved() == 0,
+                        "dead instance holds no phantom reservations",
+                    )?;
+                }
+            }
+        }
+        for (i, b) in budgets.iter().enumerate() {
+            prop_assert(
+                b.reserved() == 0,
+                format!("instance {i} balance {} != 0 after drain", b.reserved()),
+            )?;
+        }
+        Ok(())
     });
 }
 

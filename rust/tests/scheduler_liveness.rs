@@ -1,16 +1,22 @@
 //! Engine-death liveness: when the *last* live instance of an engine
 //! dies, queued work must fail with an engine-dead error surfaced as a
 //! `TeolaError` by the query runner — never hang waiting for a
-//! completion that cannot come.
+//! completion that cannot come.  PR5 extends the suite to
+//! token-denominated KV accounting: the fail-fast path holds in token
+//! mode, and a dying instance's reserved tokens are released before its
+//! batch is requeued, so the surviving instance serves the revived queue
+//! against real (not phantom) capacity.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use teola::engines::instance::Instance;
+use teola::engines::instance::{spawn_stepped_instance, Instance};
+use teola::engines::llm::SeqStore;
 use teola::engines::profile::ProfileRegistry;
+use teola::engines::sim::SimLlmExecutor;
 use teola::engines::{Batch, Completion, EngineJob, ExecMode, InstanceEvent, JobOutput};
 use teola::graph::pgraph::{build_pgraph, instr_tokens};
 use teola::graph::template::*;
@@ -24,17 +30,20 @@ fn dead_instance() -> Instance {
     Instance { sender: tx, handle: std::thread::spawn(|| {}) }
 }
 
-/// Spawn an engine scheduler named `name` whose only instance is dead;
-/// returns the job sender and the scheduler thread handle (plus the event
-/// sender, kept alive so the scheduler's event loop stays connected).
-fn dead_engine(
+/// Spawn an engine scheduler named `name` over the given instances with a
+/// per-instance KV token budget (0 = legacy row mode); returns the job
+/// sender and the scheduler thread handle (plus the event sender, kept
+/// alive so the scheduler's event loop stays connected).
+fn engine_with(
     name: &str,
-) -> (Sender<QueueItem>, std::thread::JoinHandle<()>, Sender<InstanceEvent>) {
-    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    instances: Vec<Instance>,
+    ev_rx: Receiver<InstanceEvent>,
+    kv_tokens: usize,
+) -> (Sender<QueueItem>, std::thread::JoinHandle<()>) {
     let (job_tx, job_rx) = channel::<QueueItem>();
     let sched = EngineScheduler::new(
         name.to_string(),
-        vec![dead_instance()],
+        instances,
         ev_rx,
         job_rx,
         Arc::new(AtomicU8::new(BatchPolicy::TopoAware.to_u8())),
@@ -43,9 +52,19 @@ fn dead_engine(
         Arc::new(AtomicU64::new(0)),
         Arc::new(AtomicUsize::new(8)),
         Arc::new(AtomicBool::new(true)),
+        Arc::new(AtomicUsize::new(kv_tokens)),
         ExecMode::Stepped,
     );
     let h = std::thread::spawn(move || sched.run());
+    (job_tx, h)
+}
+
+/// Dead-engine shorthand: one already-dead instance, row mode.
+fn dead_engine(
+    name: &str,
+) -> (Sender<QueueItem>, std::thread::JoinHandle<()>, Sender<InstanceEvent>) {
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let (job_tx, h) = engine_with(name, vec![dead_instance()], ev_rx, 0);
     (job_tx, h, ev_tx)
 }
 
@@ -72,6 +91,28 @@ fn one_shot_egraph(llm: &str) -> EGraph {
     let g = build_pgraph(&t, &q).unwrap();
     let g = run_passes(g, OptFlags::all(), &ProfileRegistry::with_defaults()).unwrap();
     EGraph::new(g).unwrap()
+}
+
+fn prefill_item(q: u64, n_tokens: usize, reply: Sender<Completion>) -> QueueItem {
+    QueueItem {
+        query: q,
+        node: 1,
+        depth: 0,
+        bundle: (q, 1),
+        arrival: Instant::now(),
+        rows: 1,
+        tokens: n_tokens,
+        wcp_discounted: false,
+        prefix: None,
+        wcp_us: 0,
+        job: EngineJob::Prefill {
+            seq: (q, 0),
+            tokens: vec![7; n_tokens],
+            offset: 0,
+            prefix: None,
+        },
+        reply,
+    }
 }
 
 #[test]
@@ -105,25 +146,7 @@ fn queued_and_later_items_both_fail_fast_on_dead_engine() {
 
     let send_prefill = |q: u64| -> Receiver<Completion> {
         let (tx, rx) = channel();
-        job_tx
-            .send(QueueItem {
-                query: q,
-                node: 1,
-                depth: 0,
-                bundle: (q, 1),
-                arrival: Instant::now(),
-                rows: 1,
-                prefix: None,
-                wcp_us: 0,
-                job: EngineJob::Prefill {
-                    seq: (q, 0),
-                    tokens: vec![7; 8],
-                    offset: 0,
-                    prefix: None,
-                },
-                reply: tx,
-            })
-            .unwrap();
+        job_tx.send(prefill_item(q, 8, tx)).unwrap();
         rx
     };
 
@@ -136,6 +159,79 @@ fn queued_and_later_items_both_fail_fast_on_dead_engine() {
     let rx2 = send_prefill(2);
     let c2 = rx2.recv_timeout(Duration::from_secs(5)).expect("later item fails fast");
     assert!(matches!(c2.output, JobOutput::Failed(_)), "got {:?}", c2.output);
+
+    drop(job_tx);
+    sched_h.join().expect("scheduler thread exits");
+}
+
+/// Token-mode fail-fast: the dead-engine liveness contract is unchanged
+/// under token-denominated KV accounting.
+#[test]
+fn dead_engine_fails_fast_under_token_accounting() {
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let (job_tx, sched_h) = engine_with("llm-kv-dead", vec![dead_instance()], ev_rx, 256);
+    let _keep_events_alive = ev_tx;
+
+    let (tx, rx) = channel();
+    job_tx.send(prefill_item(1, 32, tx)).unwrap();
+    let c = rx.recv_timeout(Duration::from_secs(5)).expect("token-mode item fails fast");
+    assert!(matches!(c.output, JobOutput::Failed(_)), "got {:?}", c.output);
+
+    drop(job_tx);
+    sched_h.join().expect("scheduler thread exits");
+}
+
+/// PR5 bugfix coverage: instance 0 is dead, instance 1 is live, and the
+/// per-instance token budget only fits one admission wave at a time.  If
+/// the death path failed to release the dead instance's reservations (or
+/// charged the unsent batch anyway), the surviving instance's capacity
+/// would be phantom-occupied and later waves could never dispatch — the
+/// receive below would time out instead of draining every completion.
+#[test]
+fn dead_instance_releases_tokens_and_live_instance_serves_requeue() {
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+    let prefix_slots = Arc::new(AtomicUsize::new(0));
+    let (ready_tx, ready_rx) = channel();
+    let store_c = store.clone();
+    let live = spawn_stepped_instance(
+        1,
+        "kv-live-1".into(),
+        move || {
+            Ok::<_, teola::error::TeolaError>(SimLlmExecutor::new(
+                "llm-lite", store_c, 3, 2, 1024, prefix_slots,
+            ))
+        },
+        ev_tx.clone(),
+        ready_tx,
+    );
+    ready_rx.recv().expect("live instance ready");
+
+    // Budget of 40 tokens per instance: each 32-token prefill occupies
+    // most of it, so waves must retire before the next can dispatch.
+    let (job_tx, sched_h) =
+        engine_with("llm-kv-requeue", vec![dead_instance(), live], ev_rx, 40);
+
+    let (tx, rx) = channel();
+    for q in 0..6u64 {
+        job_tx.send(prefill_item(q, 32, tx.clone())).unwrap();
+    }
+    drop(tx);
+
+    // Every prefill completes through the surviving instance — 6 waves
+    // of ~1 admission each, all within the bounded wait.
+    let mut done = 0;
+    while done < 6 {
+        let c = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("live instance must keep serving after peer death");
+        assert!(
+            !matches!(c.output, JobOutput::Failed(_)),
+            "unexpected failure: {:?}",
+            c.output
+        );
+        done += 1;
+    }
 
     drop(job_tx);
     sched_h.join().expect("scheduler thread exits");

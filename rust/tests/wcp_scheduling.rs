@@ -11,10 +11,11 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use common::serial;
+use teola::engines::prefix::prefix_fingerprint;
 use teola::engines::EngineJob;
 use teola::scheduler::{
-    form_batch, form_continuous_admission, wcp_priority_us, BatchPolicy, Platform,
-    PlatformConfig, QueueItem, WCP_AGING_WEIGHT,
+    form_batch, form_continuous_admission, rediscount_resident_prefixes, wcp_priority_us,
+    BatchPolicy, Platform, PlatformConfig, QueueItem, SlotUnit, WCP_AGING_WEIGHT,
 };
 use teola::serving::run_wcp_comparison;
 
@@ -30,6 +31,8 @@ fn item(query: u64, node: usize, wcp_us: u64, now: Instant, age_ms: u64) -> Queu
         bundle: (query, node as u64),
         arrival: now - Duration::from_millis(age_ms),
         rows: 1,
+        tokens: 1,
+        wcp_discounted: false,
         prefix: None,
         wcp_us,
         job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
@@ -51,18 +54,18 @@ fn long_tail_query_overtakes_earlier_short_query() {
     };
 
     let mut q = mk();
-    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true, SlotUnit::Rows);
     assert_eq!(batch.len(), 1);
     assert_eq!(batch[0].query, 2, "WCP: the longer remaining path goes first");
 
     let mut q = mk();
-    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, false);
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, false, SlotUnit::Rows);
     assert_eq!(batch[0].query, 1, "arrival order: the earlier query goes first");
 
     // Continuous admission into a partially occupied instance follows the
     // same ordering.
     let mut q = mk();
-    let admitted = form_continuous_admission(&mut q, 1, true);
+    let admitted = form_continuous_admission(&mut q, 1, true, SlotUnit::Rows);
     assert_eq!(admitted[0].query, 2);
 }
 
@@ -91,7 +94,7 @@ fn aged_short_query_overtakes_sustained_long_query_load() {
     for k in 0..8u64 {
         q.push(item(100 + k, 1, long_path, now, 0));
     }
-    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true, SlotUnit::Rows);
     assert_eq!(batch[0].query, 1, "aged short query must win the next slot");
 
     // A *fresh* short query still yields to the long-tail load.
@@ -99,7 +102,7 @@ fn aged_short_query_overtakes_sustained_long_query_load() {
     for k in 0..8u64 {
         q.push(item(100 + k, 1, long_path, now, 0));
     }
-    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true);
+    let batch = form_batch(&mut q, BatchPolicy::TopoAware, 1, true, SlotUnit::Rows);
     assert_ne!(batch[0].query, 1);
 }
 
@@ -135,6 +138,63 @@ fn wcp_cuts_p95_on_heterogeneous_trace_with_identical_outputs() {
     );
 }
 
+/// Regression (PR 4 gap): the prefix-residency discount on a queued
+/// prefill's critical-path stamp used to be applied at enqueue only, so
+/// residency gained *while the item waited* (another query's prefill
+/// computed the prefix) never reached its priority.  The dispatch-time
+/// re-discount hook applies it as soon as residency appears — and at
+/// most once per item.
+#[test]
+fn queued_prefill_is_rediscounted_when_its_prefix_becomes_resident() {
+    let now = Instant::now();
+    let instr: Vec<i32> = (0..16).map(|i| 100 + i).collect();
+    let fp = prefix_fingerprint(&instr);
+    // llm-lite prefill cost: 100 us/token -> a 16-token resident prefix
+    // discounts 1600 us off the stamp.
+    let prefill_us_per_token = 100.0;
+
+    let mk = |wcp_us: u64| {
+        let mut it = item(1, 10, wcp_us, now, 0);
+        it.prefix = Some(fp);
+        it.tokens = 24;
+        it.job = EngineJob::Prefill {
+            seq: (1, 0),
+            tokens: instr.iter().copied().chain(std::iter::repeat(7).take(8)).collect(),
+            offset: 0,
+            prefix: Some(fp),
+        };
+        it
+    };
+
+    // Not resident yet: the queued item keeps its full stamp.
+    let mut queue = vec![mk(50_000)];
+    let n = rediscount_resident_prefixes(&mut queue, |_| false, prefill_us_per_token);
+    assert_eq!(n, 0);
+    assert_eq!(queue[0].wcp_us, 50_000);
+    assert!(!queue[0].wcp_discounted);
+
+    // The prefix becomes resident while the item is already queued: the
+    // next dispatch pass discounts the stamp by the prefix's prefill
+    // time.
+    let n = rediscount_resident_prefixes(&mut queue, |q| q == fp, prefill_us_per_token);
+    assert_eq!(n, 1);
+    assert_eq!(queue[0].wcp_us, 50_000 - 1_600);
+    assert!(queue[0].wcp_discounted);
+
+    // Re-running the hook must not double-discount.
+    let n = rediscount_resident_prefixes(&mut queue, |q| q == fp, prefill_us_per_token);
+    assert_eq!(n, 0);
+    assert_eq!(queue[0].wcp_us, 50_000 - 1_600);
+
+    // Items without a prefix are never touched; the discount saturates
+    // at zero instead of underflowing.
+    let mut queue = vec![item(2, 20, 5_000, now, 0), mk(100)];
+    let n = rediscount_resident_prefixes(&mut queue, |_| true, prefill_us_per_token);
+    assert_eq!(n, 1);
+    assert_eq!(queue[0].wcp_us, 5_000, "no prefix, no discount");
+    assert_eq!(queue[1].wcp_us, 0, "discount saturates at zero");
+}
+
 /// WCP is a TopoAware refinement: the TO/PO baselines ignore the flag
 /// entirely, so their dispatch order cannot depend on it.
 #[test]
@@ -144,9 +204,9 @@ fn baselines_ignore_the_wcp_flag() {
         let mk = || vec![item(1, 10, 50_000, now, 5), item(2, 20, 400_000, now, 0)];
         let (mut a, mut b) = (mk(), mk());
         let on: Vec<u64> =
-            form_batch(&mut a, policy, 1, true).iter().map(|i| i.query).collect();
+            form_batch(&mut a, policy, 1, true, SlotUnit::Rows).iter().map(|i| i.query).collect();
         let off: Vec<u64> =
-            form_batch(&mut b, policy, 1, false).iter().map(|i| i.query).collect();
+            form_batch(&mut b, policy, 1, false, SlotUnit::Rows).iter().map(|i| i.query).collect();
         assert_eq!(on, off, "{policy:?} must not read the wcp flag");
     }
 }
