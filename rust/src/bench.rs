@@ -260,6 +260,20 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             },
         }
     }
+    if let Ok(v) = std::env::var("TEOLA_KV_WATERMARK") {
+        // Persistent-residency watermark as a percent of the KV budget:
+        // 0 = residency off (PR5 release-at-retirement), empty = keep the
+        // config default.
+        match v.trim() {
+            "" => {}
+            t => match t.parse() {
+                Ok(pct) => cfg.kv_watermark = pct,
+                Err(_) => eprintln!(
+                    "warning: unparseable TEOLA_KV_WATERMARK={v:?} (want a percent); ignoring"
+                ),
+            },
+        }
+    }
     if let Ok(v) = std::env::var("TEOLA_WCP") {
         // Same token set as the CLI's --wcp flag.
         match v.trim().to_ascii_lowercase().as_str() {

@@ -17,7 +17,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::engines::{
-    Batch, Completion, EngineJob, ExecTiming, InstanceEvent, NodeId, QueryId, RequestCtx,
+    Batch, Completion, EngineJob, ExecTiming, InstanceEvent, JobOutput, NodeId, QueryId,
+    RequestCtx,
 };
 use crate::error::Result;
 
@@ -41,6 +42,12 @@ pub struct StepOutcome {
     /// (query, node) of jobs whose *final* completion was emitted this
     /// step — the instance frees their request contexts.
     pub retired: Vec<(QueryId, NodeId)>,
+    /// KV tokens committed to the executor's resident ledger this step
+    /// (persistent-residency mode; 0 otherwise).
+    pub resident_added: usize,
+    /// KV tokens of residency released this step (`FreeQuery` cleanup or
+    /// watermark eviction; 0 outside residency mode).
+    pub resident_freed: usize,
 }
 
 /// Iteration-level execution protocol (vLLM-style continuous batching).
@@ -113,13 +120,24 @@ impl<E: BatchExecutor> StepExecutor for RunToCompletion<E> {
             batch.jobs.iter().map(|(c, _)| (c.query, c.node)).collect();
         if let Err(err) = self.inner.execute(batch, emit) {
             // The batch is consumed either way; report its rows retired so
-            // scheduler load accounting cannot leak (legacy semantics: the
-            // batch is dropped with a log line).
+            // scheduler load accounting cannot leak — but the waiting
+            // query runners must hear about the failure too, or they
+            // block forever on completions that can never come.  Emit a
+            // `Failed` output per job so the error surfaces upstream as
+            // `TeolaError::Engine` (mirroring `fail_queue`).
             let t = std::thread::current();
             eprintln!("[{}] batch failed: {err}", t.name().unwrap_or("instance"));
+            for (q, n) in &retired {
+                emit(Completion {
+                    query: *q,
+                    node: *n,
+                    output: JobOutput::Failed(err.to_string()),
+                    timing: ExecTiming::default(),
+                });
+            }
         }
         self.resident = self.resident.saturating_sub(rows);
-        Ok(StepOutcome { resident: self.resident, retired_rows: rows, retired })
+        Ok(StepOutcome { resident: self.resident, retired_rows: rows, retired, ..StepOutcome::default() })
     }
 
     fn abort(&mut self) -> StepOutcome {
@@ -149,6 +167,10 @@ pub struct Instance {
 struct JobCtx {
     query: QueryId,
     node: NodeId,
+    /// Segment target nodes of a splittable decode (empty for everything
+    /// else): the only nodes, besides `node` itself, this job's
+    /// completions may legitimately be routed to.
+    seg_nodes: Vec<NodeId>,
     /// Slot-rows this job was charged for (mirrors the scheduler's
     /// admission accounting, so error-path sweeps retire exact counts).
     rows: usize,
@@ -171,9 +193,16 @@ fn register_and_admit<E: StepExecutor>(
 ) -> Vec<(RequestCtx, EngineJob)> {
     let now = Instant::now();
     for (ctx, job) in &jobs {
+        let seg_nodes = match job {
+            EngineJob::Decode { segments, .. } => {
+                segments.iter().map(|s| s.node).collect()
+            }
+            _ => Vec::new(),
+        };
         ctxs.push(JobCtx {
             query: ctx.query,
             node: ctx.node,
+            seg_nodes,
             rows: job.slot_rows(),
             kv_tokens: ctx.kv_tokens,
             arrival: ctx.arrival,
@@ -257,14 +286,22 @@ where
                     let ctxs_ref: &Vec<JobCtx> = &ctxs;
                     let mut route = |mut c: Completion| {
                         // Exact (query, node) match first; segment
-                        // completions may target sibling nodes of the same
-                        // query (partial decodes), so fall back to any
-                        // resident job of that query.
+                        // completions of a splittable decode may target
+                        // the decode's *declared* segment nodes, so fall
+                        // back only to the resident job whose segment
+                        // list names this node.  (Falling back to "any
+                        // job of the query" mis-delivered completions
+                        // when a query had two concurrent resident LLM
+                        // nodes.)
                         let now = Instant::now();
                         let entry = ctxs_ref
                             .iter()
                             .find(|j| j.query == c.query && j.node == c.node)
-                            .or_else(|| ctxs_ref.iter().find(|j| j.query == c.query));
+                            .or_else(|| {
+                                ctxs_ref.iter().find(|j| {
+                                    j.query == c.query && j.seg_nodes.contains(&c.node)
+                                })
+                            });
                         if let Some(j) = entry {
                             c.timing.queued_us =
                                 j.admitted.duration_since(j.arrival).as_micros() as u64;
@@ -316,6 +353,8 @@ where
                     resident: outcome.resident,
                     retired: outcome.retired_rows,
                     retired_tokens,
+                    resident_added: outcome.resident_added,
+                    resident_freed: outcome.resident_freed,
                 });
             }
         })

@@ -26,8 +26,24 @@
 //! negative, and [`KvBudget::release`] reports how much was actually
 //! released so invariant tests (`tests/prop_invariants.rs`) can detect
 //! any reserve/release mispairing.
+//!
+//! PR6 adds the second, **resident** ledger: KV a sequence keeps between
+//! jobs.  Under persistent residency a prefill's charge moves from
+//! "reserved" to "resident against its `SeqId`" at retirement
+//! ([`KvBudget::commit_resident`]) instead of being released, and only
+//! `FreeQuery` ([`KvBudget::free_query`]) or watermark preemption
+//! ([`KvBudget::evict_victim`] + [`KvBudget::free_seq`]) returns it.
+//! Capacity checks are against `reserved + resident`
+//! ([`KvBudget::occupied`]); with an empty resident ledger (the PR5
+//! reserve-at-admit mode) every method behaves exactly as before.
 
-/// Per-instance KV token budget: capacity plus the reservation ledger.
+use std::collections::HashMap;
+
+use crate::engines::{QueryId, SeqId};
+
+/// Per-instance KV token budget: capacity plus the reservation ledger
+/// (in-flight jobs) and the resident ledger (per-sequence KV kept
+/// between jobs; token count + latest WCP priority stamp).
 ///
 /// A capacity of 0 means "unlimited" (the legacy row-slot mode is in
 /// force and the token ledger is maintained only for observability).
@@ -35,12 +51,14 @@
 pub struct KvBudget {
     capacity: usize,
     reserved: usize,
+    resident: HashMap<SeqId, (usize, u64)>,
+    resident_total: usize,
 }
 
 impl KvBudget {
     /// New ledger with the given token capacity (0 = unlimited).
     pub fn new(capacity: usize) -> KvBudget {
-        KvBudget { capacity, reserved: 0 }
+        KvBudget { capacity, reserved: 0, resident: HashMap::new(), resident_total: 0 }
     }
 
     /// Current token capacity (0 = unlimited).
@@ -59,19 +77,41 @@ impl KvBudget {
         self.reserved
     }
 
+    /// Tokens held resident across jobs (per-sequence KV committed at
+    /// retirement, not yet freed).
+    pub fn resident_total(&self) -> usize {
+        self.resident_total
+    }
+
+    /// Resident sequences currently in the ledger.
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Whether `seq` currently holds resident KV in this ledger.
+    pub fn is_resident(&self, seq: SeqId) -> bool {
+        self.resident.contains_key(&seq)
+    }
+
+    /// Total tokens charged against the capacity: in-flight reservations
+    /// plus committed residency.
+    pub fn occupied(&self) -> usize {
+        self.reserved.saturating_add(self.resident_total)
+    }
+
     /// Spare tokens under the capacity (`usize::MAX` when unlimited).
     pub fn spare(&self) -> usize {
         if self.capacity == 0 {
             usize::MAX
         } else {
-            self.capacity.saturating_sub(self.reserved)
+            self.capacity.saturating_sub(self.occupied())
         }
     }
 
     /// Whether a reservation of `tokens` fits under the capacity.
     /// Always true when the capacity is 0 (unlimited).
     pub fn fits(&self, tokens: usize) -> bool {
-        self.capacity == 0 || self.reserved.saturating_add(tokens) <= self.capacity
+        self.capacity == 0 || self.occupied().saturating_add(tokens) <= self.capacity
     }
 
     /// Reserve `tokens` (admission).  Saturating: the ledger cannot
@@ -92,11 +132,79 @@ impl KvBudget {
         freed
     }
 
-    /// Drop every reservation (instance death: nothing resident will
-    /// ever retire, so the capacity must not stay phantom-occupied while
-    /// the batch is requeued elsewhere).  Returns what was held.
+    /// Move `tokens` of `seq`'s in-flight reservation into the resident
+    /// ledger (job retirement under persistent residency).  `prio` is the
+    /// retiring job's WCP stamp — the eviction policy's priority signal;
+    /// the latest stamp wins.  The reservation side is released
+    /// saturating, the resident side is credited the full charge, so the
+    /// resident ledger always reflects what the store actually holds.
+    pub fn commit_resident(&mut self, seq: SeqId, tokens: usize, prio: u64) {
+        self.release(tokens);
+        let e = self.resident.entry(seq).or_insert((0, prio));
+        e.0 = e.0.saturating_add(tokens);
+        e.1 = prio;
+        self.resident_total = self.resident_total.saturating_add(tokens);
+    }
+
+    /// Free one sequence's residency (watermark eviction / swap-out).
+    /// Returns the tokens freed (0 when `seq` was not resident).
+    pub fn free_seq(&mut self, seq: SeqId) -> usize {
+        match self.resident.remove(&seq) {
+            Some((tokens, _)) => {
+                self.resident_total = self.resident_total.saturating_sub(tokens);
+                tokens
+            }
+            None => 0,
+        }
+    }
+
+    /// Free every resident sequence belonging to `query` (the `FreeQuery`
+    /// bookkeeping op).  Returns the total tokens freed.
+    pub fn free_query(&mut self, query: QueryId) -> usize {
+        let mut freed = 0usize;
+        self.resident.retain(|seq, entry| {
+            if seq.0 == query {
+                freed = freed.saturating_add(entry.0);
+                false
+            } else {
+                true
+            }
+        });
+        self.resident_total = self.resident_total.saturating_sub(freed);
+        freed
+    }
+
+    /// Preemption victim: the lowest-WCP-priority (least urgent, smallest
+    /// `wcp_us` stamp) resident sequence not in `active`, with a
+    /// deterministic `SeqId` tie-break so victim choice is reproducible
+    /// across runs.  Returns the victim and its resident token count.
+    pub fn evict_victim(&self, active: &[SeqId]) -> Option<(SeqId, usize)> {
+        let mut best: Option<(SeqId, usize, u64)> = None;
+        for (&seq, &(tokens, prio)) in &self.resident {
+            if active.contains(&seq) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bseq, _, bprio)) => (prio, seq) < (bprio, bseq),
+            };
+            if better {
+                best = Some((seq, tokens, prio));
+            }
+        }
+        best.map(|(seq, tokens, _)| (seq, tokens))
+    }
+
+    /// Drop every reservation and all residency (instance death: nothing
+    /// resident will ever retire, so the capacity must not stay
+    /// phantom-occupied while the batch is requeued elsewhere).  Returns
+    /// what was held across both ledgers.
     pub fn reset(&mut self) -> usize {
-        std::mem::take(&mut self.reserved)
+        let held = self.occupied();
+        self.reserved = 0;
+        self.resident.clear();
+        self.resident_total = 0;
+        held
     }
 
     /// Admission decision shared by the stepped executors: the
@@ -183,6 +291,65 @@ mod tests {
         assert_eq!(suffix_charge(24, 16), 8);
         assert_eq!(suffix_charge(16, 16), 1, "never 0 (load accounting)");
         assert_eq!(suffix_charge(8, 16), 1, "saturates, never underflows");
+    }
+
+    #[test]
+    fn commit_resident_moves_tokens_without_changing_occupancy() {
+        let mut b = KvBudget::new(100);
+        b.reserve(60);
+        assert_eq!(b.occupied(), 60);
+        b.commit_resident((1, 0), 60, 500);
+        assert_eq!(b.reserved(), 0);
+        assert_eq!(b.resident_total(), 60);
+        assert_eq!(b.occupied(), 60, "commit moves tokens, never mints them");
+        assert!(b.is_resident((1, 0)));
+        assert!(b.fits(40));
+        assert!(!b.fits(41), "residency counts against the capacity");
+    }
+
+    #[test]
+    fn free_seq_and_free_query_drain_residency() {
+        let mut b = KvBudget::new(100);
+        b.reserve(30);
+        b.commit_resident((7, 0), 10, 1);
+        b.commit_resident((7, 1), 12, 2);
+        b.commit_resident((8, 0), 8, 3);
+        assert_eq!(b.reserved(), 0);
+        assert_eq!(b.resident_total(), 30);
+        assert_eq!(b.free_seq((7, 1)), 12);
+        assert_eq!(b.free_seq((7, 1)), 0, "double-free is a no-op");
+        assert_eq!(b.free_query(7), 10, "free_query drops every seq of the query");
+        assert_eq!(b.resident_total(), 8);
+        assert_eq!(b.free_query(8), 8);
+        assert_eq!(b.occupied(), 0, "ledger drains to zero after FreeQuery");
+    }
+
+    #[test]
+    fn evict_victim_picks_lowest_priority_inactive() {
+        let mut b = KvBudget::new(100);
+        b.reserve(24);
+        b.commit_resident((1, 0), 8, 50);
+        b.commit_resident((2, 0), 8, 10);
+        b.commit_resident((3, 0), 8, 90);
+        // Lowest stamp overall is (2,0), but it is active — skip it.
+        assert_eq!(b.evict_victim(&[(2, 0)]), Some(((1, 0), 8)));
+        assert_eq!(b.evict_victim(&[]), Some(((2, 0), 8)));
+        let freed = b.free_seq((2, 0));
+        assert_eq!(freed, 8);
+        assert_eq!(b.occupied(), 16);
+        // Everything active: no victim, caller must live with the overshoot.
+        assert_eq!(b.evict_victim(&[(1, 0), (3, 0)]), None);
+    }
+
+    #[test]
+    fn reset_clears_both_ledgers() {
+        let mut b = KvBudget::new(50);
+        b.reserve(20);
+        b.commit_resident((4, 0), 12, 7);
+        assert_eq!(b.reset(), 20, "8 still reserved + 12 resident");
+        assert_eq!(b.occupied(), 0);
+        assert_eq!(b.resident_count(), 0);
+        assert!(b.fits(50));
     }
 
     #[test]

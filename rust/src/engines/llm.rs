@@ -267,8 +267,12 @@ pub struct LlmExecutor {
     prefixes: PrefixRegistry<PrefixKv>,
     /// Shared per-instance KV token capacity handle (0 = unlimited).
     kv_capacity: Arc<AtomicUsize>,
-    /// Executor-side reservation ledger (see `SimLlmExecutor`): admit
-    /// bounces over-budget jobs back to the instance backlog.
+    /// Shared residency watermark handle, percent of capacity (0 =
+    /// persistent residency off; see `SimLlmExecutor::kv_watermark`).
+    kv_watermark: Arc<AtomicUsize>,
+    /// Executor-side reservation + resident ledger (see
+    /// `SimLlmExecutor`): admit bounces over-budget jobs back to the
+    /// instance backlog.
     kv: KvBudget,
 }
 
@@ -318,6 +322,7 @@ impl LlmExecutor {
             decode_batch: None,
             prefixes: PrefixRegistry::new(prefix_slots),
             kv_capacity: Arc::new(AtomicUsize::new(0)),
+            kv_watermark: Arc::new(AtomicUsize::new(0)),
             kv: KvBudget::new(0),
         })
     }
@@ -328,6 +333,47 @@ impl LlmExecutor {
     pub fn with_kv_budget(mut self, capacity: Arc<AtomicUsize>) -> LlmExecutor {
         self.kv_capacity = capacity;
         self
+    }
+
+    /// Bind the executor to a shared residency watermark handle (percent
+    /// of KV capacity; 0 keeps PR5 reserve-at-admit semantics).
+    pub fn with_kv_watermark(mut self, watermark: Arc<AtomicUsize>) -> LlmExecutor {
+        self.kv_watermark = watermark;
+        self
+    }
+
+    /// Whether persistent per-sequence residency is in force.
+    fn residency_on(&self) -> bool {
+        self.kv_watermark.load(Ordering::Relaxed) > 0
+    }
+
+    /// Evict idle resident sequences (lowest WCP stamp first) until the
+    /// occupancy drops back under the watermark or nothing evictable
+    /// remains.  Swap-out only: retired rows' KV already lives in the
+    /// host-side store between jobs, so eviction frees the device-budget
+    /// charge and the next decode re-charges it at admission (swap-in).
+    fn preempt_to_watermark(&mut self, out: &mut StepOutcome) {
+        let pct = self.kv_watermark.load(Ordering::Relaxed);
+        let cap = self.kv.capacity();
+        if pct == 0 || cap == 0 {
+            return;
+        }
+        let limit = cap.saturating_mul(pct) / 100;
+        while self.kv.occupied() > limit {
+            let mut active: Vec<SeqId> = self
+                .prefills
+                .iter()
+                .map(|r| r.seq)
+                .chain(self.pending_decodes.iter().map(|p| p.seq))
+                .collect();
+            if let Some(rb) = self.decode_batch.as_ref() {
+                active.extend(rb.rows.iter().flatten().map(|r| r.seq));
+            }
+            let Some((victim, _tokens)) = self.kv.evict_victim(&active) else {
+                break;
+            };
+            out.resident_freed += self.kv.free_seq(victim);
+        }
     }
 
     /// Max rows a prefill call supports.
@@ -382,6 +428,11 @@ impl LlmExecutor {
                 EngineJob::FreeQuery { query } => {
                     let mut store = self.store.lock().unwrap();
                     store.retain(|k, _| k.0 != query);
+                    drop(store);
+                    // Residency is freed only here (or by watermark
+                    // eviction): report it so the scheduler's mirror
+                    // drains in lockstep.  No-op outside residency mode.
+                    out.resident_freed += self.kv.free_query(query);
                 }
                 _ => unreachable!("only bookkeeping jobs are queued as instant"),
             }
@@ -617,6 +668,7 @@ impl LlmExecutor {
                 store.insert(r.seq, SeqState { kv: kv_seq, len: new_len });
             }
         }
+        let residency = self.residency_on();
         for (b, r) in rows.iter().enumerate() {
             if r.last {
                 emit(Completion {
@@ -625,7 +677,15 @@ impl LlmExecutor {
                     output: JobOutput::Tokens(vec![next[b]]),
                     timing: ExecTiming::default(),
                 });
-                self.kv.release(r.kv_res);
+                if residency {
+                    // The prefilled KV stays resident for the sequence's
+                    // decode: move the charge to the resident ledger
+                    // instead of releasing it.
+                    self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                    out.resident_added += r.kv_res;
+                } else {
+                    self.kv.release(r.kv_res);
+                }
                 out.retired_rows += 1;
                 out.retired.push((r.ctx.query, r.ctx.node));
             }
@@ -652,10 +712,16 @@ impl LlmExecutor {
         let sep = self.sep;
         let eos = self.eos;
         let s_cap = dims.max_seq;
+        let residency = self.residency_on();
         let drained;
         // Reservations freed by rows retiring this iteration (released
         // after the resident-batch borrow ends).
         let mut released_kv = 0usize;
+        // Per-iteration reservation growth (residency mode: one token
+        // per surviving row) and retirement commits, both applied after
+        // the resident-batch borrow ends.
+        let mut grown_kv = 0usize;
+        let mut commits: Vec<(SeqId, usize, u64)> = Vec::new();
         {
             let rb = self.decode_batch.as_mut().unwrap();
             let bb = rb.bb;
@@ -702,6 +768,12 @@ impl LlmExecutor {
                         };
                         r.seg_tokens.push(tok);
                         r.produced += 1;
+                        if residency && !is_last {
+                            // Decode reservations grow one token per
+                            // iteration instead of max_new at admission.
+                            r.kv_res += 1;
+                            grown_kv += 1;
+                        }
                         rb.tokens[b] = tok;
                         rb.positions[b] = (rb.positions[b] + 1).min(s_cap as i32 - 1);
                         if is_seg_end || is_last {
@@ -732,7 +804,11 @@ impl LlmExecutor {
                     let kv_seq = unpack_kv(&dims, &rb.kv, bb, b);
                     let len = (rb.positions[b] as usize + 1).min(s_cap);
                     self.store.lock().unwrap().insert(row.seq, SeqState { kv: kv_seq, len });
-                    released_kv += row.kv_res;
+                    if residency {
+                        commits.push((row.seq, row.kv_res, row.ctx.wcp_us));
+                    } else {
+                        released_kv += row.kv_res;
+                    }
                     emit(Completion {
                         query: row.ctx.query,
                         node: row.ctx.node,
@@ -745,7 +821,14 @@ impl LlmExecutor {
             }
             drained = rb.occupied() == 0;
         }
+        self.kv.reserve(grown_kv);
         self.kv.release(released_kv);
+        for (seq, tokens, prio) in commits {
+            // The grown KV stays resident for the query's next hop; only
+            // FreeQuery or eviction returns it.
+            self.kv.commit_resident(seq, tokens, prio);
+            out.resident_added += tokens;
+        }
         if drained && self.pending_decodes.is_empty() {
             self.decode_batch = None;
         }
@@ -803,7 +886,25 @@ impl StepExecutor for LlmExecutor {
                     });
                 }
                 EngineJob::Decode { seq, first_token, segments } => {
-                    let kv_res = segments.iter().map(|s| s.len).sum::<usize>().max(1);
+                    let kv_res = if self.residency_on() {
+                        // Per-iteration growth: reserve the first token
+                        // only, plus a swap-in charge when the
+                        // sequence's KV is not in the resident ledger
+                        // (cold after an eviction).
+                        let swap_in = if self.kv.is_resident(seq) {
+                            0
+                        } else {
+                            self.store
+                                .lock()
+                                .unwrap()
+                                .get(&seq)
+                                .map(|s| s.len)
+                                .unwrap_or(0)
+                        };
+                        swap_in.saturating_add(1)
+                    } else {
+                        segments.iter().map(|s| s.len).sum::<usize>().max(1)
+                    };
                     if !self.kv.admits(kv_res) {
                         bounced.push((ctx, EngineJob::Decode { seq, first_token, segments }));
                         continue;
@@ -835,11 +936,16 @@ impl StepExecutor for LlmExecutor {
 
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
+        self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
         for (ctx, rows) in self.rejected.drain(..) {
             out.retired_rows += rows;
             out.retired.push((ctx.query, ctx.node));
         }
         self.run_instant(emit, &mut out);
+        // Watermark preemption before compute: crossing the high
+        // watermark evicts idle residency so this step's admissions and
+        // per-iteration decode growth have headroom.
+        self.preempt_to_watermark(&mut out);
         self.seat_pending();
         // One chunked-prefill call *or* one decode iteration per step;
         // prefill first so newly admitted sequences reach the decode set
@@ -877,6 +983,10 @@ impl StepExecutor for LlmExecutor {
                 out.retired.push((row.ctx.query, row.ctx.node));
             }
         }
+        // The reset wipes residency with the reservations: report it so
+        // the scheduler's residency mirror drains too (the instance stays
+        // alive after an abort, so no dead-instance reset covers this).
+        out.resident_freed += self.kv.resident_total();
         self.kv.reset();
         out
     }
@@ -920,6 +1030,7 @@ pub fn spawn_llm_engine(
     ready_tx: Sender<()>,
     prefix_slots: Arc<AtomicUsize>,
     kv_tokens: Arc<AtomicUsize>,
+    kv_watermark: Arc<AtomicUsize>,
 ) -> (Vec<Instance>, SeqStore) {
     use crate::engines::sim::{ExecBackend, SimLlmExecutor};
 
@@ -935,13 +1046,15 @@ pub fn spawn_llm_engine(
                 let variant_c = variant.to_string();
                 let slots_c = prefix_slots.clone();
                 let kv_c = kv_tokens.clone();
+                let wm_c = kv_watermark.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
                     move || {
                         let m = Rc::new(Manifest::load(dir_c)?);
                         Ok(LlmExecutor::new(m, &variant_c, store_c, warm, slots_c)?
-                            .with_kv_budget(kv_c))
+                            .with_kv_budget(kv_c)
+                            .with_kv_watermark(wm_c))
                     },
                     event_tx.clone(),
                     ready_tx.clone(),
@@ -959,6 +1072,7 @@ pub fn spawn_llm_engine(
                 let variant_c = variant.to_string();
                 let slots_c = prefix_slots.clone();
                 let kv_c = kv_tokens.clone();
+                let wm_c = kv_watermark.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
@@ -967,7 +1081,8 @@ pub fn spawn_llm_engine(
                             SimLlmExecutor::new(
                                 &variant_c, store_c, sep, eos, max_seq, slots_c,
                             )
-                            .with_kv_budget(kv_c),
+                            .with_kv_budget(kv_c)
+                            .with_kv_watermark(wm_c),
                         )
                     },
                     event_tx.clone(),

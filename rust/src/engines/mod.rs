@@ -153,6 +153,15 @@ impl EngineJob {
         }
     }
 
+    /// Host-side bookkeeping jobs (`FreeQuery`, `ClonePrefix`) occupy no
+    /// model rows and grow no KV: they bypass budget admission and batch
+    /// packing entirely (the op that releases memory must never be
+    /// blocked on lack of memory) and the engine scheduler fast-paths
+    /// them to instances the moment they arrive.
+    pub fn is_bookkeeping(&self) -> bool {
+        matches!(self, EngineJob::FreeQuery { .. } | EngineJob::ClonePrefix { .. })
+    }
+
     /// Number of model "rows" this job contributes to a batch (for slot
     /// accounting in Algorithm 2).
     pub fn rows(&self) -> usize {
@@ -279,4 +288,12 @@ pub struct InstanceEvent {
     /// dispatch-time reservations (`RequestCtx::kv_tokens`), so the
     /// scheduler's token ledger releases exactly what it reserved.
     pub retired_tokens: usize,
+    /// KV tokens that became resident on the instance during this step
+    /// (persistent-residency mode: charges committed per-`SeqId` at job
+    /// retirement instead of released).  The scheduler accumulates these
+    /// into its per-instance residency mirror.
+    pub resident_added: usize,
+    /// KV tokens whose residency the instance released during this step
+    /// (`FreeQuery` cleanup or watermark eviction).
+    pub resident_freed: usize,
 }

@@ -64,6 +64,29 @@ impl ExecBackend {
     }
 }
 
+/// Process-wide residency observability counters for the sim LLM path
+/// (reset per measurement leg by the bench/test harnesses).  Statics
+/// rather than per-executor state so the serving comparisons can observe
+/// executors living on instance threads without re-plumbing the spawn
+/// signatures.
+static SIM_PEAK_RESIDENT_ROWS: AtomicUsize = AtomicUsize::new(0);
+static SIM_EVICTIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Reset the sim residency counters (start of a measurement leg).
+pub fn reset_residency_stats() {
+    SIM_PEAK_RESIDENT_ROWS.store(0, Ordering::Relaxed);
+    SIM_EVICTIONS.store(0, Ordering::Relaxed);
+}
+
+/// `(peak concurrent prefill+decode rows on any sim LLM executor step,
+/// watermark evictions)` since the last [`reset_residency_stats`].
+pub fn residency_stats() -> (usize, usize) {
+    (
+        SIM_PEAK_RESIDENT_ROWS.load(Ordering::Relaxed),
+        SIM_EVICTIONS.load(Ordering::Relaxed),
+    )
+}
+
 /// 64-bit finalizer (murmur3-style) for deterministic synthetic content.
 fn mix(mut h: u64) -> u64 {
     h ^= h >> 33;
@@ -170,9 +193,18 @@ pub struct SimLlmExecutor {
     /// Shared per-instance KV token capacity handle (0 = unlimited, the
     /// legacy row-slot mode).
     kv_capacity: Arc<AtomicUsize>,
-    /// Executor-side reservation ledger: admissions that would overflow
-    /// it are bounced back to the instance backlog (vLLM-style admission
-    /// control); an empty ledger accepts anything (liveness).
+    /// Shared high-watermark handle, percent of capacity (0 = persistent
+    /// residency off: PR5 reserve-at-admit/release-at-retire semantics).
+    /// When on, prefill charges become resident per `SeqId` at
+    /// retirement, decode reservations grow one token per step, and
+    /// crossing the watermark evicts the lowest-priority idle resident
+    /// sequence (swap-out: the ledger charge is freed, the host-side
+    /// store entry survives, and the next decode re-charges it on
+    /// admission — swap-in).
+    kv_watermark: Arc<AtomicUsize>,
+    /// Executor-side reservation + resident ledger: admissions that would
+    /// overflow it are bounced back to the instance backlog (vLLM-style
+    /// admission control); an empty ledger accepts anything (liveness).
     kv: KvBudget,
 }
 
@@ -202,6 +234,7 @@ impl SimLlmExecutor {
             prefixes: PrefixRegistry::new(prefix_slots),
             charged_prefill_tokens: 0,
             kv_capacity: Arc::new(AtomicUsize::new(0)),
+            kv_watermark: Arc::new(AtomicUsize::new(0)),
             kv: KvBudget::new(0),
         }
     }
@@ -212,6 +245,57 @@ impl SimLlmExecutor {
     pub fn with_kv_budget(mut self, capacity: Arc<AtomicUsize>) -> SimLlmExecutor {
         self.kv_capacity = capacity;
         self
+    }
+
+    /// Bind the executor to a shared residency watermark handle (percent
+    /// of KV capacity; 0 keeps PR5 reserve-at-admit semantics).
+    pub fn with_kv_watermark(mut self, watermark: Arc<AtomicUsize>) -> SimLlmExecutor {
+        self.kv_watermark = watermark;
+        self
+    }
+
+    /// Whether persistent per-sequence residency is in force.
+    fn residency_on(&self) -> bool {
+        self.kv_watermark.load(Ordering::Relaxed) > 0
+    }
+
+    /// KV tokens currently charged on this instance across both ledgers
+    /// (in-flight reservations + committed residency).
+    pub fn kv_occupied(&self) -> usize {
+        self.kv.occupied()
+    }
+
+    /// KV tokens held resident across jobs (0 outside residency mode).
+    pub fn kv_resident_total(&self) -> usize {
+        self.kv.resident_total()
+    }
+
+    /// Evict idle resident sequences (lowest WCP stamp first) until the
+    /// occupancy drops back under the watermark or no evictable sequence
+    /// remains.  Swap-out only: the host-side store entry survives, so a
+    /// later decode recomputes nothing — it re-charges the sequence's KV
+    /// on admission (swap-in) and outputs stay bit-identical.
+    fn preempt_to_watermark(&mut self, out: &mut StepOutcome) {
+        let pct = self.kv_watermark.load(Ordering::Relaxed);
+        let cap = self.kv.capacity();
+        if pct == 0 || cap == 0 {
+            return;
+        }
+        let limit = cap.saturating_mul(pct) / 100;
+        while self.kv.occupied() > limit {
+            let active: Vec<SeqId> = self
+                .prefills
+                .iter()
+                .map(|r| r.seq)
+                .chain(self.decodes.iter().map(|r| r.seq))
+                .collect();
+            let Some((victim, _tokens)) = self.kv.evict_victim(&active) else {
+                break;
+            };
+            let freed = self.kv.free_seq(victim);
+            out.resident_freed += freed;
+            SIM_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Total valid prefill tokens this instance has charged device time
@@ -241,6 +325,11 @@ impl SimLlmExecutor {
                 EngineJob::FreeQuery { query } => {
                     let mut store = self.store.lock().unwrap();
                     store.retain(|k, _| k.0 != query);
+                    drop(store);
+                    // Residency is freed only here (or by watermark
+                    // eviction): report it so the scheduler's mirror
+                    // drains in lockstep.  No-op outside residency mode.
+                    out.resident_freed += self.kv.free_query(query);
                 }
                 _ => unreachable!("only bookkeeping jobs are queued as instant"),
             }
@@ -307,6 +396,7 @@ impl SimLlmExecutor {
             }
         }
         charge_device(started, self.device.prefill_us(1, valid));
+        let residency = self.residency_on();
         for (i, r) in rows.iter().enumerate() {
             emit(Completion {
                 query: r.ctx.query,
@@ -314,7 +404,15 @@ impl SimLlmExecutor {
                 output: JobOutput::Tokens(vec![next[i]]),
                 timing: ExecTiming::default(),
             });
-            self.kv.release(r.kv_res);
+            if residency {
+                // The prefilled KV stays on the instance between jobs:
+                // move the charge from reserved to resident against the
+                // sequence instead of releasing it.
+                self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                out.resident_added += r.kv_res;
+            } else {
+                self.kv.release(r.kv_res);
+            }
             out.retired_rows += 1;
             out.retired.push((r.ctx.query, r.ctx.node));
         }
@@ -338,6 +436,7 @@ impl SimLlmExecutor {
 
         let sep = self.sep;
         let eos = self.eos;
+        let residency = self.residency_on();
         let mut b = 0;
         while b < self.decodes.len() {
             let mut is_last = true;
@@ -357,6 +456,13 @@ impl SimLlmExecutor {
                 };
                 r.seg_tokens.push(tok);
                 r.produced += 1;
+                if residency && !is_last {
+                    // Decode reservations grow one token per iteration
+                    // instead of max_new at admission: reserve the next
+                    // step's token now that this one materialized.
+                    r.kv_res += 1;
+                    self.kv.reserve(1);
+                }
                 if is_seg_end || is_last {
                     let out_tokens = std::mem::take(&mut r.seg_tokens);
                     r.all_segments.push(out_tokens.clone());
@@ -383,7 +489,14 @@ impl SimLlmExecutor {
                     output: JobOutput::TokenBatch(r.all_segments),
                     timing: ExecTiming::default(),
                 });
-                self.kv.release(r.kv_res);
+                if residency {
+                    // The grown KV stays resident for the query's next
+                    // hop; only FreeQuery or eviction returns it.
+                    self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                    out.resident_added += r.kv_res;
+                } else {
+                    self.kv.release(r.kv_res);
+                }
                 out.retired_rows += 1;
                 out.retired.push((r.ctx.query, r.ctx.node));
                 // swap_remove moved a later row into slot b: revisit it.
@@ -443,11 +556,6 @@ impl StepExecutor for SimLlmExecutor {
                 }
                 EngineJob::Decode { seq, segments, first_token } => {
                     let planned: usize = segments.iter().map(|s| s.len).sum();
-                    let kv_res = planned.max(1);
-                    if !self.kv.admits(kv_res) {
-                        bounced.push((ctx, EngineJob::Decode { seq, segments, first_token }));
-                        continue;
-                    }
                     let base_len = self
                         .store
                         .lock()
@@ -455,6 +563,22 @@ impl StepExecutor for SimLlmExecutor {
                         .get(&seq)
                         .map(|s| s.len)
                         .unwrap_or(0);
+                    let kv_res = if self.residency_on() {
+                        // Per-iteration growth: reserve the first token
+                        // only, plus a swap-in charge when the sequence's
+                        // KV is not in the resident ledger (cold after an
+                        // eviction, or produced before residency mode
+                        // switched on).
+                        let swap_in =
+                            if self.kv.is_resident(seq) { 0 } else { base_len };
+                        swap_in.saturating_add(1)
+                    } else {
+                        planned.max(1)
+                    };
+                    if !self.kv.admits(kv_res) {
+                        bounced.push((ctx, EngineJob::Decode { seq, segments, first_token }));
+                        continue;
+                    }
                     self.kv.reserve(kv_res);
                     self.decodes.push(SimDecodeRow {
                         ctx,
@@ -488,11 +612,18 @@ impl StepExecutor for SimLlmExecutor {
 
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
+        self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
         for (ctx, rows) in self.rejected.drain(..) {
             out.retired_rows += rows;
             out.retired.push((ctx.query, ctx.node));
         }
+        SIM_PEAK_RESIDENT_ROWS
+            .fetch_max(self.prefills.len() + self.decodes.len(), Ordering::Relaxed);
         self.run_instant(emit, &mut out);
+        // Watermark preemption before compute: crossing the high
+        // watermark evicts idle residency so this step's admissions and
+        // per-iteration decode growth have headroom.
+        self.preempt_to_watermark(&mut out);
         // One chunked-prefill call *or* one decode iteration per step;
         // prefill first so newly admitted sequences join the decode set
         // quickly (vLLM-style prefill priority).
@@ -523,6 +654,10 @@ impl StepExecutor for SimLlmExecutor {
             out.retired_rows += 1;
             out.retired.push((r.ctx.query, r.ctx.node));
         }
+        // The reset wipes residency with the reservations: report it so
+        // the scheduler's residency mirror drains too (the instance stays
+        // alive after an abort, so no dead-instance reset covers this).
+        out.resident_freed += self.kv.resident_total();
         self.kv.reset();
         out
     }

@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -128,6 +128,17 @@ fn main() {
                     Ok(n) => cfg.kv_tokens_per_instance = Some(n),
                     Err(_) => {
                         eprintln!("bad --kv-tokens value {v:?} (want an integer)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(v) = parse_flag(&args, "--kv-watermark") {
+                // Persistent-residency watermark (percent of the KV
+                // budget); 0 = residency off.
+                match v.parse() {
+                    Ok(pct) => cfg.kv_watermark = pct,
+                    Err(_) => {
+                        eprintln!("bad --kv-watermark value {v:?} (want a percent)");
                         std::process::exit(2);
                     }
                 }
@@ -229,16 +240,32 @@ fn main() {
             let platform = Platform::start(&cfg).expect("platform");
             let (off, on) =
                 teola::serving::run_kv_comparison(&platform, n, rate, seed).expect("trace");
-            platform.shutdown();
             println!(
                 "kv off (rows): p50 {:.1} ms, p95 {:.1}, p99 {:.1} | kv on (tokens): p50 {:.1} ms, p95 {:.1}, p99 {:.1}",
                 off.e2e_ms.p50, off.e2e_ms.p95, off.e2e_ms.p99,
                 on.e2e_ms.p50, on.e2e_ms.p95, on.e2e_ms.p99
             );
+            // PR6 residency leg: the same trace at a deliberately tight
+            // KV budget, residency off vs on (70% watermark), with peak
+            // executor concurrency and eviction counters.
+            let res =
+                teola::serving::run_residency_comparison(&platform, n, rate, seed).expect("trace");
+            platform.shutdown();
+            println!(
+                "residency off: p50 {:.1} ms, p95 {:.1}, peak rows {} | residency on: p50 {:.1} ms, p95 {:.1}, peak rows {}, evictions {}",
+                res.off.e2e_ms.p50, res.off.e2e_ms.p95, res.peak_rows_off,
+                res.on.e2e_ms.p50, res.on.e2e_ms.p95, res.peak_rows_on, res.evictions_on
+            );
             if let Some(path) = parse_flag(&args, "--json-out") {
+                use teola::json::num;
                 let doc = teola::json::obj(vec![
                     ("kv_on", on.to_json()),
                     ("kv_off", off.to_json()),
+                    ("residency_on", res.on.to_json()),
+                    ("residency_off", res.off.to_json()),
+                    ("residency_peak_rows_on", num(res.peak_rows_on as f64)),
+                    ("residency_peak_rows_off", num(res.peak_rows_off as f64)),
+                    ("residency_evictions_on", num(res.evictions_on as f64)),
                 ]);
                 std::fs::write(&path, doc.to_string()).expect("write json report");
                 println!("wrote {path}");

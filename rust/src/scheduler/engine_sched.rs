@@ -91,6 +91,11 @@ pub struct EngineScheduler {
     /// routing and packing to token denomination on stepped engines
     /// under `TopoAware`; 0 keeps the legacy row-slot mode.
     pub kv_tokens: Arc<AtomicUsize>,
+    /// Shared residency watermark (percent of capacity; 0 = persistent
+    /// residency off).  When on, decode dispatch charges one token (the
+    /// executor grows the reservation per iteration) and instance
+    /// occupancy includes the residency mirror.
+    pub kv_watermark: Arc<AtomicUsize>,
     /// Whether this engine's executors run the stepped protocol.
     mode: ExecMode,
     /// Cost model of this engine (prefix-hit discounts on `wcp_us`).
@@ -103,6 +108,13 @@ pub struct EngineScheduler {
     /// reserved amount when the instance reports retirement) so the
     /// denomination can be switched at runtime without drift.
     kv: Vec<KvBudget>,
+    /// Per-instance mirror of *resident* KV tokens (persistent-residency
+    /// mode): accumulated from `InstanceEvent::resident_added` and
+    /// drained by `resident_freed`.  Kept separate from the reservation
+    /// ledger `kv` — reservations are scheduler-charged and echoed back
+    /// verbatim, while residency amounts are executor-actual (swap-ins,
+    /// per-iteration decode growth) that the scheduler cannot predict.
+    resident_mirror: Vec<usize>,
     /// Instances whose channel died; never routed to again.
     dead: Vec<bool>,
     /// Routing mirror of each instance's resident-prefix LRU registry:
@@ -127,6 +139,7 @@ impl EngineScheduler {
         prefix_slots: Arc<AtomicUsize>,
         wcp: Arc<AtomicBool>,
         kv_tokens: Arc<AtomicUsize>,
+        kv_watermark: Arc<AtomicUsize>,
         mode: ExecMode,
     ) -> EngineScheduler {
         let n = instances.len();
@@ -145,10 +158,12 @@ impl EngineScheduler {
             prefix_slots,
             wcp,
             kv_tokens,
+            kv_watermark,
             mode,
             device,
             loads: vec![0; n],
             kv: (0..n).map(|_| KvBudget::new(0)).collect(),
+            resident_mirror: vec![0; n],
             dead: vec![false; n],
             prefix_homes,
             queue: Vec::new(),
@@ -189,6 +204,12 @@ impl EngineScheduler {
             while let Ok(ev) = self.event_rx.try_recv() {
                 self.loads[ev.instance] = self.loads[ev.instance].saturating_sub(ev.retired);
                 self.kv[ev.instance].release(ev.retired_tokens);
+                // Residency mirror (persistent-residency mode): track the
+                // executor-actual resident amounts so token-mode routing
+                // and admission see true per-instance occupancy.
+                self.resident_mirror[ev.instance] = self.resident_mirror[ev.instance]
+                    .saturating_add(ev.resident_added)
+                    .saturating_sub(ev.resident_freed);
             }
             self.dispatch();
         }
@@ -200,7 +221,83 @@ impl EngineScheduler {
     /// item was enqueued still discounts it before bucket ordering reads
     /// the stamp (closing the PR4 enqueue-only gap).
     fn enqueue(&mut self, item: QueueItem) {
+        if item.job.is_bookkeeping() {
+            self.dispatch_bookkeeping(item);
+            return;
+        }
         self.queue.push(item);
+    }
+
+    /// Fast-path host-side bookkeeping jobs straight to instances,
+    /// bypassing the queue, batch packing and budget admission entirely:
+    /// the op that *releases* memory (`FreeQuery`) must never be blocked
+    /// on lack of memory, and `ClonePrefix` is a host-side cache copy
+    /// with no model rows.  `FreeQuery` broadcasts to every live
+    /// instance — residency ledgers are per-executor, so each instance
+    /// must drain its own; `ClonePrefix` goes to one least-loaded live
+    /// instance.  Each target is charged one row (stepped executors
+    /// retire instant ops as a single row) and zero KV tokens.
+    fn dispatch_bookkeeping(&mut self, item: QueueItem) {
+        let broadcast = matches!(item.job, EngineJob::FreeQuery { .. });
+        let live = |me: &EngineScheduler| -> Vec<usize> {
+            (0..me.instances.len()).filter(|&i| !me.dead[i]).collect()
+        };
+        let mut sent = false;
+        loop {
+            let targets: Vec<usize> = if broadcast {
+                live(self)
+            } else {
+                // Single least-loaded live target; on a send failure the
+                // loop retries with the next-best live instance.
+                live(self)
+                    .into_iter()
+                    .min_by_key(|&i| self.loads[i])
+                    .map(|i| vec![i])
+                    .unwrap_or_default()
+            };
+            if targets.is_empty() {
+                break;
+            }
+            for inst in targets {
+                let ctx = RequestCtx {
+                    query: item.query,
+                    node: item.node,
+                    depth: item.depth,
+                    arrival: item.arrival,
+                    wcp_us: item.wcp_us,
+                    kv_tokens: 0,
+                    wcp_discounted: item.wcp_discounted,
+                    reply: item.reply.clone(),
+                };
+                let batch = Batch { jobs: vec![(ctx, item.job.clone())] };
+                if self.instances[inst].sender.send(batch).is_err() {
+                    self.dead[inst] = true;
+                    self.loads[inst] = 0;
+                    self.kv[inst].reset();
+                    self.resident_mirror[inst] = 0;
+                    continue;
+                }
+                self.loads[inst] += 1;
+                sent = true;
+            }
+            if sent || broadcast {
+                break;
+            }
+        }
+        if !sent {
+            // No live instance could take it: fail the reply so the
+            // owning query errors out instead of hanging.  (FreeQuery
+            // replies are fire-and-forget — the send is simply dropped.)
+            let _ = item.reply.send(Completion {
+                query: item.query,
+                node: item.node,
+                output: JobOutput::Failed(format!(
+                    "engine '{}' is dead (all instances lost)",
+                    self.name
+                )),
+                timing: ExecTiming::default(),
+            });
+        }
     }
 
     /// Fail every queued item with an engine-dead completion: the engine
@@ -246,6 +343,11 @@ impl EngineScheduler {
         let token_mode = self.mode == ExecMode::Stepped
             && policy == BatchPolicy::TopoAware
             && kv_budget > 0;
+        // Persistent-residency mode (PR6): decode dispatch charges a
+        // single token — the executor reserves the real swap-in cost and
+        // grows the reservation one token per iteration — so admission
+        // depth is no longer gated on worst-case `max_new` up front.
+        let residency = token_mode && self.kv_watermark.load(Ordering::Relaxed) > 0;
         let unit = if token_mode { SlotUnit::Tokens } else { SlotUnit::Rows };
         let budget = if token_mode { kv_budget } else { slots };
         let window =
@@ -291,8 +393,7 @@ impl EngineScheduler {
             else {
                 break;
             };
-            let in_flight =
-                if token_mode { self.kv[inst].reserved() } else { self.loads[inst] };
+            let in_flight = self.load_of(inst, token_mode);
             let mid_flight = in_flight > 0;
             // Oversized-drain gate: when the priority head exceeds the
             // whole budget it can only dispatch alone to a drained
@@ -366,7 +467,12 @@ impl EngineScheduler {
                             self.prefix_homes[inst].insert(fp, ());
                         }
                     }
-                    let charge = if hit {
+                    let charge = if residency && matches!(i.job, EngineJob::Decode { .. }) {
+                        // Residency mode: one-token optimistic decode
+                        // charge (the executor owns the real growth and
+                        // reports it through the residency mirror).
+                        1
+                    } else if hit {
                         kv_budget::suffix_charge(i.tokens, i.prefix.unwrap().len)
                     } else {
                         i.tokens.max(1)
@@ -406,6 +512,7 @@ impl EngineScheduler {
                 self.dead[inst] = true;
                 self.loads[inst] = 0;
                 self.kv[inst].reset();
+                self.resident_mirror[inst] = 0;
                 for (ctx, job) in unsent.0.jobs {
                     let rows = job.rows();
                     let prefix = job.prefix();
@@ -443,10 +550,12 @@ impl EngineScheduler {
     }
 
     /// In-flight load of an instance in the active denomination: KV
-    /// token reservations under token accounting, rows otherwise.
+    /// token reservations (plus the executor-reported residency mirror —
+    /// zero outside persistent-residency mode) under token accounting,
+    /// rows otherwise.
     fn load_of(&self, i: usize, token_mode: bool) -> usize {
         if token_mode {
-            self.kv[i].reserved()
+            self.kv[i].reserved().saturating_add(self.resident_mirror[i])
         } else {
             self.loads[i]
         }

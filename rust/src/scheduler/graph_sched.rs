@@ -175,7 +175,15 @@ impl QueryRunner {
                     tokens: 0,
                     wcp_discounted: false,
                     prefix: None,
-                    wcp_us: 0,
+                    // Top priority under WCP ordering: cleanup releases KV
+                    // residency, so it must never starve behind compute
+                    // work (the old `wcp_us: 0` stamp sorted it *last* in
+                    // descending-WCP buckets).  The engine scheduler
+                    // fast-paths bookkeeping jobs anyway, but a correct
+                    // stamp keeps any queued fallback path safe too.
+                    // (`wcp_priority_us` uses saturating arithmetic, so
+                    // MAX cannot overflow the aging term.)
+                    wcp_us: u64::MAX,
                     job: EngineJob::FreeQuery { query: self.query },
                     reply: tx,
                 });

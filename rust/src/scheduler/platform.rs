@@ -83,6 +83,17 @@ pub struct PlatformConfig {
     /// explicit budget.  Switchable at runtime via
     /// [`Platform::set_kv_tokens`].
     pub kv_tokens_per_instance: Option<usize>,
+    /// Persistent-KV-residency watermark on the LLM engines, as a percent
+    /// of each instance's KV token budget (PR6).  0 (the default)
+    /// disables residency entirely — prefill KV is released at job
+    /// retirement exactly as before.  A non-zero value keeps retired
+    /// sequences' KV resident against their `SeqId` until `FreeQuery`,
+    /// charges decode admission incrementally (one token per produced
+    /// iteration plus any swap-in), and evicts the lowest-priority
+    /// resident sequences whenever occupancy crosses
+    /// `capacity * watermark / 100`.  Switchable at runtime via
+    /// [`Platform::set_kv_watermark`].
+    pub kv_watermark: usize,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -110,6 +121,7 @@ impl PlatformConfig {
             prefix_slots: 8,
             wcp: true,
             kv_tokens_per_instance: None,
+            kv_watermark: 0,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -155,6 +167,10 @@ pub struct Platform {
     /// The derived per-engine defaults (`max_slots x profile max_seq`),
     /// restored by `set_kv_tokens(None)`.
     kv_defaults: HashMap<String, usize>,
+    /// Shared persistent-residency watermark handle (percent of KV
+    /// capacity; 0 = off), read by the LLM engine schedulers and their
+    /// executors.
+    kv_watermark: Arc<AtomicUsize>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -187,6 +203,7 @@ impl Platform {
         let batch_window_us = Arc::new(AtomicU64::new(cfg.batch_window_us));
         let prefix_slots = Arc::new(AtomicUsize::new(cfg.prefix_slots));
         let wcp = Arc::new(AtomicBool::new(cfg.wcp));
+        let kv_watermark = Arc::new(AtomicUsize::new(cfg.kv_watermark));
         // Instances ack on this channel once their executor (including any
         // warm-up compilation) is constructed; start() blocks on all acks
         // so serving never races against compilation.
@@ -215,6 +232,7 @@ impl Platform {
                 prefix_slots.clone(),
                 wcp.clone(),
                 kv,
+                kv_watermark.clone(),
                 mode,
             );
             let h = std::thread::Builder::new()
@@ -251,6 +269,7 @@ impl Platform {
                 ready_tx.clone(),
                 prefix_slots.clone(),
                 kv.clone(),
+                kv_watermark.clone(),
             );
             expected_ready += instances.len();
             spawn_sched(
@@ -356,6 +375,7 @@ impl Platform {
             wcp,
             kv_tokens,
             kv_defaults,
+            kv_watermark,
             profiles,
             manifest,
             sep,
@@ -405,6 +425,20 @@ impl Platform {
             let v = budget.unwrap_or_else(|| self.kv_defaults.get(name).copied().unwrap_or(0));
             h.store(v, Ordering::Relaxed);
         }
+    }
+
+    /// Retune the persistent-residency watermark at runtime (percent of
+    /// each LLM instance's KV token budget; 0 switches residency off and
+    /// restores PR5 release-at-retirement semantics).  The handle is
+    /// shared by the LLM engine schedulers and their executors, so the
+    /// flip applies to dispatch charging, admission and eviction at once.
+    pub fn set_kv_watermark(&self, pct: usize) {
+        self.kv_watermark.store(pct, Ordering::Relaxed);
+    }
+
+    /// Current persistent-residency watermark (percent; 0 = off).
+    pub fn kv_watermark(&self) -> usize {
+        self.kv_watermark.load(Ordering::Relaxed)
     }
 
     /// Current KV token budget of one LLM engine (None for engines

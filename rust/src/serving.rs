@@ -248,6 +248,81 @@ pub fn run_kv_comparison(
     result
 }
 
+/// Result of [`run_residency_comparison`]: the same trace served without
+/// and with persistent KV residency, plus the sim executors' concurrency
+/// and eviction counters per half.
+#[derive(Debug)]
+pub struct ResidencyComparison {
+    /// Residency off (`kv_watermark = 0`): PR5 release-at-retirement.
+    pub off: LoadReport,
+    /// Residency on (watermark preemption active).
+    pub on: LoadReport,
+    /// Peak concurrently resident executor rows during the off half.
+    pub peak_rows_off: usize,
+    /// Peak concurrently resident executor rows during the on half.
+    pub peak_rows_on: usize,
+    /// Watermark evictions during the on half.
+    pub evictions_on: usize,
+}
+
+/// Per-instance KV token budget pinned for both halves of the residency
+/// comparison: tight enough that the off half's reserve-the-whole-decode
+/// admission serializes the mixed 8-16/128-token trace, while the on
+/// half's incremental decode charging admits the same work deeper.
+pub const RESIDENCY_BENCH_KV: usize = 256;
+
+/// Watermark (percent of the KV budget) used by the residency-on half.
+pub const RESIDENCY_BENCH_WATERMARK: usize = 70;
+
+/// The PR6 persistent-residency comparison: replay one seeded Poisson
+/// trace of mixed short/long-decode queries twice at a deliberately
+/// tight KV budget — residency off (`kv_watermark = 0`, PR5 semantics),
+/// then on at a 70% watermark — with fixed query ids so the two reports'
+/// outputs are comparable bit-for-bit.  Watermark evictions model
+/// swap-out: a victim's ledger charge is freed while its host-side cache
+/// survives, so outputs stay deterministic across evictions.  Restores
+/// the caller's KV budget and watermark before returning.
+pub fn run_residency_comparison(
+    platform: &Platform,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<ResidencyComparison> {
+    let trace = PoissonTrace::generate(rate, n, seed);
+    let id_of = |i: usize| 0x9C6_0000 + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half (see run_wcp_comparison).
+    if let Some((e, _)) = kv_hetero_prepared(1, seed).pop() {
+        let _ = platform.run_query(0x9C6_FFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    let kv_snapshot = platform.kv_tokens_snapshot();
+    let wm_snapshot = platform.kv_watermark();
+    // Inner closure so the caller's knobs are restored even when a half
+    // errors out.
+    let result = (|| {
+        platform.set_kv_tokens(Some(RESIDENCY_BENCH_KV));
+        platform.set_kv_watermark(0); // PR5 release-at-retirement
+        crate::scheduler::wcp::reset_latency_feedback();
+        crate::engines::sim::reset_residency_stats();
+        drain(); // let queued FreeQuery cleanup land before reusing ids
+        let off =
+            run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        let (peak_rows_off, _) = crate::engines::sim::residency_stats();
+        platform.set_kv_watermark(RESIDENCY_BENCH_WATERMARK);
+        crate::scheduler::wcp::reset_latency_feedback();
+        crate::engines::sim::reset_residency_stats();
+        drain();
+        let on =
+            run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
+        let (peak_rows_on, evictions_on) = crate::engines::sim::residency_stats();
+        Ok(ResidencyComparison { off, on, peak_rows_off, peak_rows_on, evictions_on })
+    })();
+    platform.set_kv_watermark(wm_snapshot);
+    platform.restore_kv_tokens(&kv_snapshot);
+    result
+}
+
 /// Open-loop Poisson load for one (app, scheme, dataset) configuration:
 /// sample `n_queries` from the seeded dataset, build their e-graphs under
 /// the scheme (build time recorded as opt time, not serving time), then

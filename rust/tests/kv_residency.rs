@@ -1,0 +1,342 @@
+//! PR6 persistent KV residency: the dual-ledger lifecycle (reserved →
+//! resident → freed), watermark preemption, and the instance-protocol
+//! bugfixes that rode along — failed run-to-completion batches must
+//! surface `Failed` per job, segment completions must route to their
+//! owning job (not any job of the query), and bookkeeping ops must
+//! bypass budget admission.
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use teola::engines::instance::{
+    spawn_stepped_instance, BatchExecutor, RunToCompletion, StepExecutor,
+};
+use teola::engines::llm::SeqStore;
+use teola::engines::sim::{reset_residency_stats, residency_stats, SimLlmExecutor};
+use teola::engines::{Batch, Completion, EngineJob, JobOutput, SegmentSpec};
+use teola::error::TeolaError;
+use teola::scheduler::{Platform, PlatformConfig};
+use teola::serving::run_residency_comparison;
+
+mod common;
+use common::{ctx, decode_job, prefill_job, run_to_idle, sim_llm_exec_with_slots, EOS, SEP};
+
+/// Sim executor with a KV budget and residency watermark bound.
+fn residency_exec(cap: usize, watermark_pct: usize) -> SimLlmExecutor {
+    let (exec, _store, _slots) = sim_llm_exec_with_slots(0);
+    exec.with_kv_budget(Arc::new(AtomicUsize::new(cap)))
+        .with_kv_watermark(Arc::new(AtomicUsize::new(watermark_pct)))
+}
+
+/// Tentpole lifecycle: a prefill's charge moves reserved → resident at
+/// retirement (occupancy unchanged), a warm decode admits at 1 token and
+/// grows per iteration, and `FreeQuery` — and only `FreeQuery` — drains
+/// the residency back to zero.
+#[test]
+fn residency_lifecycle_reserved_to_resident_to_freed() {
+    let _guard = common::serial(); // sim residency counters are process-global
+    let mut exec = residency_exec(1000, 70);
+    let (tx, _rx) = channel();
+
+    let bounced = exec.admit(vec![(ctx(1, 1, tx.clone()), prefill_job(1, 0, 16))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 16, "prefill reserves its prompt at admit");
+    assert_eq!(exec.kv_resident_total(), 0);
+
+    let mut out = Vec::new();
+    run_to_idle(&mut exec, &mut out, 64);
+    assert_eq!(exec.kv_reserved(), 0, "retirement drains the reservation ledger");
+    assert_eq!(exec.kv_resident_total(), 16, "…into the resident ledger");
+    assert_eq!(exec.kv_occupied(), 16, "commit moves tokens, never mints them");
+
+    // Warm decode: the sequence's KV is resident, so admission charges a
+    // single token (growth is reserved per iteration, not max_new up
+    // front — the whole point of the residency mode).
+    let bounced = exec.admit(vec![(ctx(1, 5, tx.clone()), decode_job(1, 5, 0, 8))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 1, "warm decode admits at one token");
+    run_to_idle(&mut exec, &mut out, 64);
+    assert_eq!(exec.kv_reserved(), 0);
+    assert_eq!(
+        exec.kv_resident_total(),
+        24,
+        "8 decoded tokens joined the 16 prefilled ones in residency"
+    );
+
+    // FreeQuery is the release point of the whole query's residency.
+    let bounced = exec.admit(vec![(ctx(1, usize::MAX, tx), EngineJob::FreeQuery { query: 1 })]);
+    assert!(bounced.is_empty());
+    run_to_idle(&mut exec, &mut out, 8);
+    assert_eq!(exec.kv_occupied(), 0, "FreeQuery drains both ledgers to zero");
+    assert_eq!(exec.kv_resident_total(), 0);
+}
+
+/// Satellite-3 regression: bookkeeping jobs (FreeQuery / ClonePrefix)
+/// must never be bounced by budget admission — they *release* memory (or
+/// are free), and bouncing them wedges cleanup behind the very pressure
+/// it would relieve.  A regular job in the same ledger state is bounced.
+#[test]
+fn bookkeeping_jobs_bypass_budget_admission() {
+    let _guard = common::serial(); // sim residency counters are process-global
+    let mut exec = residency_exec(10, 100);
+    let (tx, _rx) = channel();
+
+    // Fill the ledger: an in-flight 8-token prefill against capacity 10.
+    let bounced = exec.admit(vec![(ctx(7, 1, tx.clone()), prefill_job(7, 0, 8))]);
+    assert!(bounced.is_empty());
+    // A second prefill does not fit and the ledger is not idle → bounced.
+    let bounced = exec.admit(vec![(ctx(8, 1, tx.clone()), prefill_job(8, 0, 8))]);
+    assert_eq!(bounced.len(), 1, "over-budget prefill is bounced");
+
+    // Same ledger state: bookkeeping ops are admitted unconditionally.
+    let bounced = exec.admit(vec![
+        (
+            ctx(9, 2, tx.clone()),
+            EngineJob::ClonePrefix { src: (7, 0), dst: (9, 0), len: 4 },
+        ),
+        (ctx(9, usize::MAX, tx.clone()), EngineJob::FreeQuery { query: 9 }),
+    ]);
+    assert!(bounced.is_empty(), "bookkeeping must bypass budget admission");
+
+    let mut out = Vec::new();
+    run_to_idle(&mut exec, &mut out, 64);
+    // Both bookkeeping ops completed (Unit outputs) alongside the prefill.
+    let units = out.iter().filter(|c| matches!(c.output, JobOutput::Unit)).count();
+    assert_eq!(units, 2);
+
+    let (tx2, _rx2) = channel();
+    let bounced =
+        exec.admit(vec![(ctx(7, usize::MAX, tx2), EngineJob::FreeQuery { query: 7 })]);
+    assert!(bounced.is_empty());
+    run_to_idle(&mut exec, &mut out, 8);
+    assert_eq!(exec.kv_occupied(), 0);
+}
+
+/// Watermark preemption: crossing `capacity * watermark / 100` evicts the
+/// lowest-WCP-priority idle resident sequence (swap-out: the ledger
+/// charge is freed, the host-side store entry survives), a later decode
+/// on the victim re-charges its swap-in, and every query still completes
+/// with deterministic outputs.
+#[test]
+fn watermark_preemption_evicts_and_queries_still_complete() {
+    let _guard = common::serial(); // residency_stats() is process-global
+    let mut exec = residency_exec(100, 50); // preemption limit: 50 tokens
+    reset_residency_stats();
+    let (tx, _rx) = channel();
+
+    // Four 16-token prefills from four queries, ascending WCP priority:
+    // q1 is the least urgent and must be the first eviction victim.
+    for q in 1..=4u64 {
+        let mut c = ctx(q, 1, tx.clone());
+        c.wcp_us = q * 10;
+        let bounced = exec.admit(vec![(c, prefill_job(q, 0, 16))]);
+        assert!(bounced.is_empty());
+    }
+    let mut out = Vec::new();
+    run_to_idle(&mut exec, &mut out, 64);
+    assert_eq!(exec.kv_resident_total(), 64, "all four prefills resident");
+    assert_eq!(residency_stats().1, 0, "no step has run above the watermark yet");
+
+    // A warm decode on q4 pushes occupancy to 65 > 50: the next step must
+    // preempt idle residency (q1 first — lowest priority; q4 is active).
+    let mut c = ctx(4, 5, tx.clone());
+    c.wcp_us = 40;
+    let bounced = exec.admit(vec![(c, decode_job(4, 5, 0, 4))]);
+    assert!(bounced.is_empty());
+    run_to_idle(&mut exec, &mut out, 64);
+    let evictions = residency_stats().1;
+    assert!(evictions >= 1, "watermark crossing must evict at least one sequence");
+    assert!(
+        exec.kv_resident_total() < 64,
+        "eviction freed ledger charge ({} resident)",
+        exec.kv_resident_total()
+    );
+
+    // Swap-in recharge: q1 was evicted (lowest priority), so a decode on
+    // its sequence must re-charge the full swapped-out KV length (16
+    // prefilled tokens) plus the first new token.
+    let bounced = exec.admit(vec![(ctx(1, 6, tx.clone()), decode_job(1, 6, 0, 4))]);
+    assert!(bounced.is_empty());
+    assert_eq!(exec.kv_reserved(), 17, "cold decode re-charges swap-in + 1");
+    run_to_idle(&mut exec, &mut out, 64);
+
+    // Every query completed: 4 prefill next-token completions + 2 decode
+    // finals, all with real outputs (eviction is swap-out only — the
+    // store survives, so the decodes completed despite preemption).
+    drop(tx);
+    assert_eq!(out.len(), 6, "4 prefills + 2 decode finals");
+    assert!(out.iter().all(|c| !matches!(c.output, JobOutput::Failed(_))));
+    let decode_finals = out
+        .iter()
+        .filter(|c| matches!(c.output, JobOutput::TokenBatch(_)))
+        .count();
+    assert_eq!(decode_finals, 2);
+
+    // Cleanup drains everything the evictions left behind.
+    let (tx2, _rx2) = channel();
+    for q in 1..=4u64 {
+        let bounced =
+            exec.admit(vec![(ctx(q, usize::MAX, tx2.clone()), EngineJob::FreeQuery { query: q })]);
+        assert!(bounced.is_empty());
+    }
+    run_to_idle(&mut exec, &mut out, 8);
+    assert_eq!(exec.kv_occupied(), 0, "dual ledger conserves: everything returned");
+}
+
+/// A run-to-completion executor whose every batch fails.
+struct FailingExec;
+
+impl BatchExecutor for FailingExec {
+    fn execute(
+        &mut self,
+        _batch: Batch,
+        _emit: &mut dyn FnMut(Completion),
+    ) -> teola::error::Result<()> {
+        Err(TeolaError::Engine("injected failure".into()))
+    }
+}
+
+/// Satellite-1 regression: when a run-to-completion batch fails, every
+/// job in it must receive a `Failed` completion — silently retiring the
+/// rows leaves the waiting query runners blocked forever.
+#[test]
+fn failed_batch_surfaces_failed_output_per_job() {
+    let mut exec = RunToCompletion::new(FailingExec);
+    let (tx, _rx) = channel();
+    let bounced = exec.admit(vec![
+        (ctx(1, 3, tx.clone()), EngineJob::ToolCall { name: "a".into(), cost_us: 0 }),
+        (ctx(2, 4, tx), EngineJob::ToolCall { name: "b".into(), cost_us: 0 }),
+    ]);
+    assert!(bounced.is_empty());
+
+    let mut out = Vec::new();
+    let outcome = exec.step(&mut |c| out.push(c)).unwrap();
+    assert_eq!(outcome.retired_rows, 2, "failed rows still retire (load accounting)");
+    assert_eq!(out.len(), 2, "every job of the failed batch hears about it");
+    for c in &out {
+        match &c.output {
+            JobOutput::Failed(msg) => {
+                assert!(msg.contains("injected failure"), "got {msg:?}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+    let mut who: Vec<(u64, usize)> = out.iter().map(|c| (c.query, c.node)).collect();
+    who.sort_unstable();
+    assert_eq!(who, vec![(1, 3), (2, 4)], "failure routed per job, not per batch");
+    assert_eq!(exec.resident(), 0);
+}
+
+/// Satellite-2 regression: two decode jobs of the *same query* resident
+/// together — each job's streamed segment completions must reach its own
+/// reply channel.  The old fallback routed any unmatched completion to
+/// the first job of the query, so job B's segments leaked to job A.
+#[test]
+fn segment_completions_route_to_owning_job() {
+    let _guard = common::serial(); // sim residency counters are process-global
+    common::device_off();
+    let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+    let slots = Arc::new(AtomicUsize::new(0));
+    let (ev_tx, ev_rx) = channel();
+    let (ready_tx, ready_rx) = channel();
+    let store_c = store.clone();
+    let inst = spawn_stepped_instance(
+        0,
+        "route-regression".into(),
+        move || {
+            Ok::<_, TeolaError>(SimLlmExecutor::new("llm-lite", store_c, SEP, EOS, 1024, slots))
+        },
+        ev_tx,
+        ready_tx,
+    );
+    ready_rx.recv().expect("instance ready");
+
+    let recv = |rx: &std::sync::mpsc::Receiver<Completion>| {
+        rx.recv_timeout(Duration::from_secs(10)).expect("completion within bound")
+    };
+
+    // Seed both sequences of query 5.
+    let (ptx, prx) = channel();
+    inst.sender
+        .send(Batch {
+            jobs: vec![
+                (ctx(5, 1, ptx.clone()), prefill_job(5, 0, 8)),
+                (ctx(5, 2, ptx.clone()), prefill_job(5, 1, 8)),
+            ],
+        })
+        .unwrap();
+    recv(&prx);
+    recv(&prx);
+
+    // Two same-query decodes with disjoint segment marker nodes; each
+    // job carries its own reply channel.
+    let (tx_a, rx_a) = channel();
+    let (tx_b, rx_b) = channel();
+    let decode = |seq: u32, marker: usize| EngineJob::Decode {
+        seq: (5, seq),
+        first_token: 42,
+        segments: vec![SegmentSpec { node: marker, len: 3 }],
+    };
+    inst.sender
+        .send(Batch {
+            jobs: vec![
+                (ctx(5, 10, tx_a), decode(0, 11)),
+                (ctx(5, 20, tx_b), decode(1, 21)),
+            ],
+        })
+        .unwrap();
+
+    // Job A: streamed segment at marker 11, final at node 10 — and
+    // nothing of job B's. Job B symmetric.
+    let a1 = recv(&rx_a);
+    let a2 = recv(&rx_a);
+    let mut a_nodes = vec![a1.node, a2.node];
+    a_nodes.sort_unstable();
+    assert_eq!(a_nodes, vec![10, 11], "job A's completions stay on job A's channel");
+    let b1 = recv(&rx_b);
+    let b2 = recv(&rx_b);
+    let mut b_nodes = vec![b1.node, b2.node];
+    b_nodes.sort_unstable();
+    assert_eq!(b_nodes, vec![20, 21], "job B's segments must not leak to job A");
+    assert!(rx_a.try_recv().is_err(), "no extra completions on A");
+    assert!(rx_b.try_recv().is_err(), "no extra completions on B");
+
+    drop(inst.sender);
+    inst.handle.join().expect("instance thread exits");
+    drop(ev_rx);
+}
+
+/// PR6 acceptance bar: on the mixed short/long-decode trace at a tight
+/// KV budget, residency-on admits strictly deeper executor concurrency
+/// at equal-or-better p95, with bit-identical outputs (eviction is
+/// swap-out only and synthesis is position-addressed).
+#[test]
+fn residency_admits_deeper_at_equal_or_better_p95() {
+    let _guard = common::serial();
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.llms[0].instances = 1;
+    cfg.warm = false;
+    let platform = Platform::start(&cfg).expect("platform");
+    let res = run_residency_comparison(&platform, 40, 200.0, 0x9C6).expect("trace");
+    platform.shutdown();
+
+    assert!(
+        res.peak_rows_on > res.peak_rows_off,
+        "residency must admit strictly deeper concurrency: on {} vs off {}",
+        res.peak_rows_on,
+        res.peak_rows_off
+    );
+    assert!(
+        res.on.e2e_ms.p95 <= res.off.e2e_ms.p95,
+        "residency-on p95 {:.1} ms must not regress off p95 {:.1} ms",
+        res.on.e2e_ms.p95,
+        res.off.e2e_ms.p95
+    );
+    assert_eq!(
+        res.on.outputs, res.off.outputs,
+        "outputs must be bit-identical across the residency modes"
+    );
+}

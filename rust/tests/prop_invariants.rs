@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use teola::engines::llm::{pack_kv, unpack_kv, LlmDims, SeqState};
 use teola::engines::profile::ProfileRegistry;
-use teola::engines::EngineJob;
+use teola::engines::{EngineJob, SeqId};
 use teola::graph::passes::{pass1_prune, pass3_prefill_split, pass4_decode_pipeline};
 use teola::graph::pgraph::{build_pgraph, instr_tokens, PGraph};
 use teola::graph::primitive::{DataRef, PayloadSpec, PrimKind};
@@ -664,6 +664,139 @@ fn kv_budget_balances_to_zero_under_random_orders() {
             )?;
         }
         Ok(())
+    });
+}
+
+/// PR6 dual-ledger token conservation: random interleavings of admit
+/// (reserve), release-retire, residency-commit, per-sequence free,
+/// per-query free, and watermark eviction must keep both ledgers in
+/// exact agreement with an independently tracked shadow model — tokens
+/// move between "reserved" and "resident" but are never minted or lost,
+/// and the ledger drains to zero once everything is freed.
+#[test]
+fn kv_dual_ledger_conserves_tokens_under_random_orders() {
+    check(80, |rng| {
+        let cap = rng.range_usize(32, 4096);
+        let mut b = KvBudget::new(cap);
+        // Shadow model: in-flight reservations and per-sequence residency.
+        let mut inflight: Vec<(SeqId, usize)> = Vec::new();
+        let mut resident: std::collections::HashMap<SeqId, usize> =
+            std::collections::HashMap::new();
+        let mut next_seq = 0u32;
+
+        for _ in 0..rng.range_usize(20, 200) {
+            match rng.range(0, 5) {
+                // Admit: reserve a fresh sequence's charge.
+                0 | 1 => {
+                    let q = rng.range(1, 6);
+                    let t = rng.range_usize(1, 400);
+                    let seq = (q, next_seq);
+                    next_seq += 1;
+                    b.reserve(t);
+                    inflight.push((seq, t));
+                }
+                // Retire without residency (PR5 path): release pairs
+                // exactly with the reservation, never clamps.
+                2 => {
+                    if inflight.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range_usize(0, inflight.len());
+                    let (_, t) = inflight.remove(i);
+                    let freed = b.release(t);
+                    prop_assert(
+                        freed == t,
+                        format!("release clamped ({freed} < {t}): ledger mispairing"),
+                    )?;
+                }
+                // Retire under residency: the charge moves ledgers.
+                3 => {
+                    if inflight.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range_usize(0, inflight.len());
+                    let (seq, t) = inflight.remove(i);
+                    let before = b.occupied();
+                    b.commit_resident(seq, t, rng.range(0, 1_000_000));
+                    prop_assert(
+                        b.occupied() == before,
+                        "commit_resident moves tokens, never mints or drops them",
+                    )?;
+                    *resident.entry(seq).or_insert(0) += t;
+                }
+                // Free residency: eviction victim, one sequence, or a
+                // whole query — each must return exactly the shadow
+                // model's token count.
+                _ => {
+                    if resident.is_empty() {
+                        continue;
+                    }
+                    if rng.chance(0.4) {
+                        let Some((victim, tokens)) = b.evict_victim(&[]) else {
+                            continue;
+                        };
+                        prop_assert(
+                            resident.get(&victim) == Some(&tokens),
+                            format!("victim {victim:?} holds {tokens}, shadow disagrees"),
+                        )?;
+                        let freed = b.free_seq(victim);
+                        prop_assert(freed == tokens, "free_seq returns the full charge")?;
+                        resident.remove(&victim);
+                    } else if rng.chance(0.5) {
+                        let keys: Vec<SeqId> = resident.keys().copied().collect();
+                        let seq = *teola::util::proptest::pick(rng, &keys);
+                        let expect = resident.remove(&seq).unwrap();
+                        prop_assert(
+                            b.free_seq(seq) == expect,
+                            format!("free_seq({seq:?}) != shadow {expect}"),
+                        )?;
+                    } else {
+                        let q = rng.range(1, 6);
+                        let expect: usize = resident
+                            .iter()
+                            .filter(|(s, _)| s.0 == q)
+                            .map(|(_, t)| *t)
+                            .sum();
+                        prop_assert(
+                            b.free_query(q) == expect,
+                            format!("free_query({q}) != shadow {expect}"),
+                        )?;
+                        resident.retain(|s, _| s.0 != q);
+                    }
+                }
+            }
+            // Conservation after every operation.
+            let exp_rsv: usize = inflight.iter().map(|(_, t)| *t).sum();
+            let exp_res: usize = resident.values().sum();
+            prop_assert(
+                b.reserved() == exp_rsv,
+                format!("reserved {} != shadow {exp_rsv}", b.reserved()),
+            )?;
+            prop_assert(
+                b.resident_total() == exp_res,
+                format!("resident {} != shadow {exp_res}", b.resident_total()),
+            )?;
+            prop_assert(
+                b.resident_count() == resident.len(),
+                "resident sequence count matches shadow",
+            )?;
+            prop_assert(
+                b.occupied() == exp_rsv + exp_res,
+                "occupied is exactly reserved + resident",
+            )?;
+        }
+
+        // Drain everything: the dual ledger must balance to zero.
+        for (_, t) in inflight.drain(..) {
+            let freed = b.release(t);
+            prop_assert(freed == t, "drain release pairs exactly")?;
+        }
+        let seqs: Vec<SeqId> = resident.keys().copied().collect();
+        for seq in seqs {
+            let expect = resident.remove(&seq).unwrap();
+            prop_assert(b.free_seq(seq) == expect, "drain free_seq pairs exactly")?;
+        }
+        prop_assert(b.occupied() == 0, "dual ledger drains to zero")
     });
 }
 

@@ -53,6 +53,7 @@ fn engine_with(
         Arc::new(AtomicUsize::new(8)),
         Arc::new(AtomicBool::new(true)),
         Arc::new(AtomicUsize::new(kv_tokens)),
+        Arc::new(AtomicUsize::new(0)),
         ExecMode::Stepped,
     );
     let h = std::thread::spawn(move || sched.run());
