@@ -187,6 +187,25 @@ pub fn kv_hetero_prepared(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
     })
 }
 
+/// Build `n` fully optimized e-graphs of one paper application from the
+/// seeded dataset (Teola scheme, default profiles) — the trace behind
+/// the PR7 pipeline comparison.  No platform needed: graph construction
+/// is pure, so the same (app, core_llm, n, seed) always yields the same
+/// graphs and fixed query ids make runs comparable bit-for-bit.
+pub fn app_prepared(app: AppKind, core_llm: &str, n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    let profiles = ProfileRegistry::with_defaults();
+    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
+    (0..n)
+        .map(|_| {
+            let q = ds.sample();
+            let mut t = app.template(core_llm);
+            bind_answer_tokens(&mut t, q.answer_tokens);
+            let e = Scheme::Teola.build(&t, &q, &profiles).unwrap();
+            (e, 0u64)
+        })
+        .collect()
+}
+
 /// True when a Platform can start: either the simulated backend was
 /// selected via `TEOLA_BACKEND=sim`, or the XLA backend is fully usable
 /// (real crate linked *and* artifacts present).  The figure benches gate
@@ -274,6 +293,30 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             },
         }
     }
+    // Per-engine-kind residency watermark overrides (percent), e.g.
+    // TEOLA_KV_WATERMARK_LLM=60; only the LLM kind acts on a watermark
+    // today, the others are parsed for forward compatibility.
+    for (suffix, kind) in [
+        ("LLM", crate::engines::EngineKind::Llm),
+        ("EMBEDDING", crate::engines::EngineKind::Embedding),
+        ("RERANKER", crate::engines::EngineKind::Reranker),
+        ("VECTORDB", crate::engines::EngineKind::VectorDb),
+        ("WEBSEARCH", crate::engines::EngineKind::WebSearch),
+        ("TOOL", crate::engines::EngineKind::Tool),
+    ] {
+        let var = format!("TEOLA_KV_WATERMARK_{suffix}");
+        if let Ok(v) = std::env::var(&var) {
+            match v.trim() {
+                "" => {}
+                t => match t.parse::<u8>() {
+                    Ok(pct) => cfg.kv_watermark_overrides.push((kind, pct)),
+                    Err(_) => eprintln!(
+                        "warning: unparseable {var}={v:?} (want a percent 0-100); ignoring"
+                    ),
+                },
+            }
+        }
+    }
     if let Ok(v) = std::env::var("TEOLA_WCP") {
         // Same token set as the CLI's --wcp flag.
         match v.trim().to_ascii_lowercase().as_str() {
@@ -282,6 +325,17 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             "" => {}
             other => {
                 eprintln!("warning: unknown TEOLA_WCP={other:?} (want on|off); ignoring")
+            }
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_PIPELINE") {
+        // Same token set as the CLI's --pipeline flag.
+        match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "on" | "true" => cfg.pipeline = true,
+            "0" | "off" | "false" => cfg.pipeline = false,
+            "" => {}
+            other => {
+                eprintln!("warning: unknown TEOLA_PIPELINE={other:?} (want on|off); ignoring")
             }
         }
     }

@@ -21,6 +21,7 @@ use crate::engines::{
     RequestCtx,
 };
 use crate::error::Result;
+use crate::scheduler::batching::{materialize_successor, SuccessorPlan};
 
 /// Engine-type-specific batched execution logic.  Implementations run on
 /// the instance thread and may emit multiple completions per job
@@ -181,6 +182,10 @@ struct JobCtx {
     arrival: Instant,
     admitted: Instant,
     reply: Sender<Completion>,
+    /// Direct-handoff plans for this job's ready successors: materialized
+    /// and injected into the target engine's queue the moment the
+    /// triggering completion is emitted (cross-engine pipelining).
+    successors: Vec<SuccessorPlan>,
 }
 
 /// Offer `jobs` to the executor, registering contexts for the accepted
@@ -208,6 +213,7 @@ fn register_and_admit<E: StepExecutor>(
             arrival: ctx.arrival,
             admitted: now,
             reply: ctx.reply.clone(),
+            successors: ctx.successors.clone(),
         });
     }
     let bounced = exec.admit(jobs);
@@ -309,7 +315,54 @@ where
                                 c.timing.exec_us =
                                     now.duration_since(j.admitted).as_micros() as u64;
                             }
+                            // Direct successor handoff (cross-engine
+                            // pipelining): materialize the downstream
+                            // jobs this completion unlocks, forward the
+                            // completion FIRST — mpsc preserves enqueue
+                            // order, so the query runner always observes
+                            // the trigger before any successor
+                            // completion — then inject the successors
+                            // into their target engines' queues.
+                            let mut inject = Vec::new();
+                            let mut fail = Vec::new();
+                            for plan in &j.successors {
+                                if plan.on_node != c.node || plan.fired.get() {
+                                    continue;
+                                }
+                                if matches!(c.output, JobOutput::Failed(_)) {
+                                    break; // runner bails on the trigger
+                                }
+                                plan.fired.set(true);
+                                match materialize_successor(plan, c.query, &c.output, &j.reply)
+                                {
+                                    Some(item) => inject.push((plan, item)),
+                                    None => fail.push(plan),
+                                }
+                            }
+                            let query = c.query;
+                            let reply = j.reply.clone();
                             let _ = j.reply.send(c);
+                            for (plan, item) in inject {
+                                if plan.engine.send(item).is_err() {
+                                    fail.push(plan);
+                                }
+                            }
+                            for plan in fail {
+                                // Fail loud: a successor that cannot be
+                                // handed off would otherwise hang its
+                                // query forever (the graph scheduler has
+                                // already ceded the node).
+                                let _ = reply.send(Completion {
+                                    query,
+                                    node: plan.node,
+                                    output: JobOutput::Failed(
+                                        "successor handoff failed \
+                                         (engine down or unusable output)"
+                                            .into(),
+                                    ),
+                                    timing: ExecTiming::default(),
+                                });
+                            }
                         }
                     };
                     match exec.step(&mut route) {

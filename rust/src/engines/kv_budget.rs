@@ -43,7 +43,7 @@ use crate::engines::{QueryId, SeqId};
 
 /// Per-instance KV token budget: capacity plus the reservation ledger
 /// (in-flight jobs) and the resident ledger (per-sequence KV kept
-/// between jobs; token count + latest WCP priority stamp).
+/// between jobs; token count, latest WCP priority stamp, last-use tick).
 ///
 /// A capacity of 0 means "unlimited" (the legacy row-slot mode is in
 /// force and the token ledger is maintained only for observability).
@@ -51,14 +51,39 @@ use crate::engines::{QueryId, SeqId};
 pub struct KvBudget {
     capacity: usize,
     reserved: usize,
-    resident: HashMap<SeqId, (usize, u64)>,
+    resident: HashMap<SeqId, (usize, u64, u64)>,
     resident_total: usize,
+    /// Eviction clock: advanced once per executor step, stamped onto a
+    /// sequence's resident entry whenever it is committed or touched, so
+    /// [`KvBudget::evict_victim`] can prefer the *stalest* sequence.
+    clock: u64,
 }
 
 impl KvBudget {
     /// New ledger with the given token capacity (0 = unlimited).
     pub fn new(capacity: usize) -> KvBudget {
-        KvBudget { capacity, reserved: 0, resident: HashMap::new(), resident_total: 0 }
+        KvBudget {
+            capacity,
+            reserved: 0,
+            resident: HashMap::new(),
+            resident_total: 0,
+            clock: 0,
+        }
+    }
+
+    /// Advance the eviction clock one tick (once per executor step).
+    /// Everything committed or touched within a step shares the tick, so
+    /// victim choice inside one step stays order-independent.
+    pub fn advance_clock(&mut self) {
+        self.clock = self.clock.saturating_add(1);
+    }
+
+    /// Refresh `seq`'s last-use tick to now (a resident-hit decode
+    /// admission re-used its KV).  No-op when `seq` is not resident.
+    pub fn touch_resident(&mut self, seq: SeqId) {
+        if let Some(e) = self.resident.get_mut(&seq) {
+            e.2 = self.clock;
+        }
     }
 
     /// Current token capacity (0 = unlimited).
@@ -140,9 +165,11 @@ impl KvBudget {
     /// resident ledger always reflects what the store actually holds.
     pub fn commit_resident(&mut self, seq: SeqId, tokens: usize, prio: u64) {
         self.release(tokens);
-        let e = self.resident.entry(seq).or_insert((0, prio));
+        let clock = self.clock;
+        let e = self.resident.entry(seq).or_insert((0, prio, clock));
         e.0 = e.0.saturating_add(tokens);
         e.1 = prio;
+        e.2 = clock;
         self.resident_total = self.resident_total.saturating_add(tokens);
     }
 
@@ -150,7 +177,7 @@ impl KvBudget {
     /// Returns the tokens freed (0 when `seq` was not resident).
     pub fn free_seq(&mut self, seq: SeqId) -> usize {
         match self.resident.remove(&seq) {
-            Some((tokens, _)) => {
+            Some((tokens, _, _)) => {
                 self.resident_total = self.resident_total.saturating_sub(tokens);
                 tokens
             }
@@ -174,25 +201,27 @@ impl KvBudget {
         freed
     }
 
-    /// Preemption victim: the lowest-WCP-priority (least urgent, smallest
-    /// `wcp_us` stamp) resident sequence not in `active`, with a
+    /// Preemption victim: the *stalest* resident sequence not in
+    /// `active` — smallest last-use tick first (LRU: a sequence nothing
+    /// has touched for many steps is the least likely to be re-used),
+    /// then the lowest WCP priority stamp among equals, then a
     /// deterministic `SeqId` tie-break so victim choice is reproducible
     /// across runs.  Returns the victim and its resident token count.
     pub fn evict_victim(&self, active: &[SeqId]) -> Option<(SeqId, usize)> {
-        let mut best: Option<(SeqId, usize, u64)> = None;
-        for (&seq, &(tokens, prio)) in &self.resident {
+        let mut best: Option<(SeqId, usize, u64, u64)> = None;
+        for (&seq, &(tokens, prio, tick)) in &self.resident {
             if active.contains(&seq) {
                 continue;
             }
             let better = match best {
                 None => true,
-                Some((bseq, _, bprio)) => (prio, seq) < (bprio, bseq),
+                Some((bseq, _, bprio, btick)) => (tick, prio, seq) < (btick, bprio, bseq),
             };
             if better {
-                best = Some((seq, tokens, prio));
+                best = Some((seq, tokens, prio, tick));
             }
         }
-        best.map(|(seq, tokens, _)| (seq, tokens))
+        best.map(|(seq, tokens, _, _)| (seq, tokens))
     }
 
     /// Drop every reservation and all residency (instance death: nothing
@@ -204,6 +233,7 @@ impl KvBudget {
         self.reserved = 0;
         self.resident.clear();
         self.resident_total = 0;
+        self.clock = 0;
         held
     }
 
@@ -326,6 +356,8 @@ mod tests {
 
     #[test]
     fn evict_victim_picks_lowest_priority_inactive() {
+        // All three commits land on the same clock tick, so the WCP
+        // priority stamp is what decides among them.
         let mut b = KvBudget::new(100);
         b.reserve(24);
         b.commit_resident((1, 0), 8, 50);
@@ -339,6 +371,28 @@ mod tests {
         assert_eq!(b.occupied(), 16);
         // Everything active: no victim, caller must live with the overshoot.
         assert_eq!(b.evict_victim(&[(1, 0), (3, 0)]), None);
+    }
+
+    #[test]
+    fn evict_victim_prefers_stalest_tick_over_priority() {
+        let mut b = KvBudget::new(100);
+        b.reserve(24);
+        b.commit_resident((1, 0), 8, 90); // tick 0, urgent
+        b.advance_clock();
+        b.commit_resident((2, 0), 8, 10); // tick 1, lazy
+        // Staleness is the primary key: the urgent-but-stale (1,0) goes
+        // before the recently committed (2,0) despite its higher stamp.
+        assert_eq!(b.evict_victim(&[]), Some(((1, 0), 8)));
+        // A resident-hit touch refreshes the tick and flips the order.
+        b.advance_clock();
+        b.touch_resident((1, 0));
+        assert_eq!(b.evict_victim(&[]), Some(((2, 0), 8)));
+        // Equal ticks fall back to the WCP stamp (then SeqId).
+        b.touch_resident((2, 0));
+        assert_eq!(b.evict_victim(&[]), Some(((2, 0), 8)));
+        // Touching a non-resident sequence is a harmless no-op.
+        b.touch_resident((9, 9));
+        assert_eq!(b.resident_count(), 2);
     }
 
     #[test]

@@ -434,6 +434,29 @@ impl LlmExecutor {
                     // drains in lockstep.  No-op outside residency mode.
                     out.resident_freed += self.kv.free_query(query);
                 }
+                EngineJob::CancelSeq { seq } => {
+                    // A speculative template prefill whose guard resolved
+                    // false: purge any still-queued prefill rows (and
+                    // chunk pieces) for the sequence — their reservations
+                    // go back to the ledger and the rows retire WITHOUT a
+                    // completion; the runner dropped its interest and a
+                    // Failed here would poison a healthy query.  Then
+                    // drop the host-side KV entry and any residency the
+                    // sequence already committed.
+                    let mut kept = VecDeque::with_capacity(self.prefills.len());
+                    for r in self.prefills.drain(..) {
+                        if r.seq == seq {
+                            self.kv.release(r.kv_res);
+                            out.retired_rows += 1;
+                            out.retired.push((r.ctx.query, r.ctx.node));
+                        } else {
+                            kept.push_back(r);
+                        }
+                    }
+                    self.prefills = kept;
+                    self.store.lock().unwrap().remove(&seq);
+                    out.resident_freed += self.kv.free_seq(seq);
+                }
                 _ => unreachable!("only bookkeeping jobs are queued as instant"),
             }
             emit(Completion {
@@ -886,12 +909,13 @@ impl StepExecutor for LlmExecutor {
                     });
                 }
                 EngineJob::Decode { seq, first_token, segments } => {
+                    let resident_hit = self.residency_on() && self.kv.is_resident(seq);
                     let kv_res = if self.residency_on() {
                         // Per-iteration growth: reserve the first token
                         // only, plus a swap-in charge when the
                         // sequence's KV is not in the resident ledger
                         // (cold after an eviction).
-                        let swap_in = if self.kv.is_resident(seq) {
+                        let swap_in = if resident_hit {
                             0
                         } else {
                             self.store
@@ -909,6 +933,12 @@ impl StepExecutor for LlmExecutor {
                         bounced.push((ctx, EngineJob::Decode { seq, first_token, segments }));
                         continue;
                     }
+                    if resident_hit {
+                        // Refresh the sequence's last-use tick only after
+                        // admission is certain — a bounced job must leave
+                        // eviction order untouched.
+                        self.kv.touch_resident(seq);
+                    }
                     self.kv.reserve(kv_res);
                     self.pending_decodes.push_back(PendingDecode {
                         ctx,
@@ -918,7 +948,9 @@ impl StepExecutor for LlmExecutor {
                         kv_res,
                     });
                 }
-                other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
+                other @ (EngineJob::ClonePrefix { .. }
+                | EngineJob::FreeQuery { .. }
+                | EngineJob::CancelSeq { .. }) => {
                     self.instant.push((ctx, other));
                 }
                 other => {
@@ -937,6 +969,10 @@ impl StepExecutor for LlmExecutor {
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
         self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
+        // One eviction-clock tick per executor step: resident sequences
+        // touched this step all share the tick, so recency (not WCP
+        // priority) is the primary eviction key across steps.
+        self.kv.advance_clock();
         for (ctx, rows) in self.rejected.drain(..) {
             out.retired_rows += rows;
             out.retired.push((ctx.query, ctx.node));

@@ -98,6 +98,13 @@ pub enum EngineJob {
     ClonePrefix { src: SeqId, dst: SeqId, len: usize },
     /// Release every sequence belonging to a query (end-of-query cleanup).
     FreeQuery { query: QueryId },
+    /// Cancel one sequence's in-flight and resident state (speculative
+    /// template prefill invalidated by a guard/rerank outcome): drop any
+    /// queued prefill rows for `seq`, release their reservations, free
+    /// the sequence's store entry and residency.  Never emits a
+    /// completion toward the speculating node — cancellation must not
+    /// surface as a `Failed` query.
+    CancelSeq { seq: SeqId },
     /// Embed a batch of token chunks.
     Embed { chunks: Vec<Vec<i32>> },
     /// Score pre-packed (query ++ SEP ++ candidate) pair sequences.
@@ -159,7 +166,12 @@ impl EngineJob {
     /// blocked on lack of memory) and the engine scheduler fast-paths
     /// them to instances the moment they arrive.
     pub fn is_bookkeeping(&self) -> bool {
-        matches!(self, EngineJob::FreeQuery { .. } | EngineJob::ClonePrefix { .. })
+        matches!(
+            self,
+            EngineJob::FreeQuery { .. }
+                | EngineJob::ClonePrefix { .. }
+                | EngineJob::CancelSeq { .. }
+        )
     }
 
     /// Number of model "rows" this job contributes to a batch (for slot
@@ -174,6 +186,7 @@ impl EngineJob {
             EngineJob::WebSearch { queries, .. } => queries.len(),
             EngineJob::ClonePrefix { .. }
             | EngineJob::FreeQuery { .. }
+            | EngineJob::CancelSeq { .. }
             | EngineJob::ToolCall { .. } => 1,
         }
     }
@@ -243,6 +256,12 @@ pub struct RequestCtx {
     pub wcp_discounted: bool,
     /// Completion channel of the owning query's graph scheduler.
     pub reply: Sender<Completion>,
+    /// Direct cross-engine handoff plans riding with the job (pipelining
+    /// gate on): when the triggering completion is emitted, the instance
+    /// thread materializes the successor straight into the target
+    /// engine's admission queue — no graph-scheduler re-entry.  Empty
+    /// with the gate off, preserving the queue re-entry path exactly.
+    pub successors: Vec<crate::scheduler::batching::SuccessorPlan>,
 }
 
 /// A batch the engine scheduler hands to one engine instance.

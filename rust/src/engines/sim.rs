@@ -331,6 +331,29 @@ impl SimLlmExecutor {
                     // drains in lockstep.  No-op outside residency mode.
                     out.resident_freed += self.kv.free_query(query);
                 }
+                EngineJob::CancelSeq { seq } => {
+                    // A speculative template prefill whose guard resolved
+                    // false: purge any still-queued prefill rows for the
+                    // sequence (their reservations go back to the ledger
+                    // and the rows retire WITHOUT a completion — the
+                    // runner has dropped its interest, and a Failed here
+                    // would poison an otherwise healthy query), drop the
+                    // host-side KV entry, and free any residency the
+                    // sequence already committed.
+                    let mut kept = VecDeque::with_capacity(self.prefills.len());
+                    for r in self.prefills.drain(..) {
+                        if r.seq == seq {
+                            self.kv.release(r.kv_res);
+                            out.retired_rows += 1;
+                            out.retired.push((r.ctx.query, r.ctx.node));
+                        } else {
+                            kept.push_back(r);
+                        }
+                    }
+                    self.prefills = kept;
+                    self.store.lock().unwrap().remove(&seq);
+                    out.resident_freed += self.kv.free_seq(seq);
+                }
                 _ => unreachable!("only bookkeeping jobs are queued as instant"),
             }
             emit(Completion {
@@ -563,14 +586,14 @@ impl StepExecutor for SimLlmExecutor {
                         .get(&seq)
                         .map(|s| s.len)
                         .unwrap_or(0);
+                    let resident_hit = self.residency_on() && self.kv.is_resident(seq);
                     let kv_res = if self.residency_on() {
                         // Per-iteration growth: reserve the first token
                         // only, plus a swap-in charge when the sequence's
                         // KV is not in the resident ledger (cold after an
                         // eviction, or produced before residency mode
                         // switched on).
-                        let swap_in =
-                            if self.kv.is_resident(seq) { 0 } else { base_len };
+                        let swap_in = if resident_hit { 0 } else { base_len };
                         swap_in.saturating_add(1)
                     } else {
                         planned.max(1)
@@ -578,6 +601,12 @@ impl StepExecutor for SimLlmExecutor {
                     if !self.kv.admits(kv_res) {
                         bounced.push((ctx, EngineJob::Decode { seq, segments, first_token }));
                         continue;
+                    }
+                    if resident_hit {
+                        // Refresh the sequence's last-use tick only after
+                        // admission is certain — a bounced job must leave
+                        // eviction order untouched.
+                        self.kv.touch_resident(seq);
                     }
                     self.kv.reserve(kv_res);
                     self.decodes.push(SimDecodeRow {
@@ -593,7 +622,9 @@ impl StepExecutor for SimLlmExecutor {
                         kv_res,
                     });
                 }
-                other @ (EngineJob::ClonePrefix { .. } | EngineJob::FreeQuery { .. }) => {
+                other @ (EngineJob::ClonePrefix { .. }
+                | EngineJob::FreeQuery { .. }
+                | EngineJob::CancelSeq { .. }) => {
                     // Host-side bookkeeping: no KV growth, always admitted.
                     self.instant.push((ctx, other));
                 }
@@ -613,6 +644,10 @@ impl StepExecutor for SimLlmExecutor {
     fn step(&mut self, emit: &mut dyn FnMut(Completion)) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
         self.kv.set_capacity(self.kv_capacity.load(Ordering::Relaxed));
+        // One eviction-clock tick per executor step: resident sequences
+        // touched this step all share the tick, so recency (not WCP
+        // priority) is the primary eviction key across steps.
+        self.kv.advance_clock();
         for (ctx, rows) in self.rejected.drain(..) {
             out.retired_rows += rows;
             out.retired.push((ctx.query, ctx.node));
@@ -792,6 +827,7 @@ mod tests {
             kv_tokens: 0,
             wcp_discounted: false,
             reply,
+            successors: Vec::new(),
         }
     }
 

@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--pipeline on|off] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola pipeline-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -161,6 +161,15 @@ fn main() {
                 }
                 None => {}
             }
+            match parse_flag(&args, "--pipeline").as_deref() {
+                Some("on") | Some("1") | Some("true") => cfg.pipeline = true,
+                Some("off") | Some("0") | Some("false") => cfg.pipeline = false,
+                Some(other) => {
+                    eprintln!("unknown --pipeline value {other:?} (want on|off)");
+                    std::process::exit(2);
+                }
+                None => {}
+            }
             let platform = Platform::start(&cfg).expect("platform");
             let run = TraceRun {
                 app,
@@ -266,6 +275,67 @@ fn main() {
                     ("residency_peak_rows_on", num(res.peak_rows_on as f64)),
                     ("residency_peak_rows_off", num(res.peak_rows_off as f64)),
                     ("residency_evictions_on", num(res.evictions_on as f64)),
+                ]);
+                std::fs::write(&path, doc.to_string()).expect("write json report");
+                println!("wrote {path}");
+            }
+        }
+        Some("pipeline-bench") => {
+            // The PR7 cross-engine-pipelining smoke: one seeded Poisson
+            // trace per paper app (doc-qa-advanced and search-gen, both
+            // multi-engine chains), replayed with the dispatch loop
+            // bouncing every hop through the graph scheduler (off) and
+            // with direct successor handoff + speculative template
+            // prefill (on).  Outputs must match bit-for-bit; the win
+            // shows up in tail latency and in mean_dispatch_hops
+            // (BENCH_PR7.json in CI).
+            let n: usize = parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let rate: f64 =
+                parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(120.0);
+            let seed: u64 =
+                parse_flag(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(0x9C7);
+            // search-gen routes its aux Expand/Summary calls at
+            // llm-small, so the platform carries both LLM engines.
+            let mut cfg = PlatformConfig::sim("llm-lite").with_llm("llm-small", 2, 8);
+            cfg.warm = false;
+            let platform = Platform::start(&cfg).expect("platform");
+            let (doc_off, doc_on) = teola::serving::run_pipeline_comparison(
+                &platform,
+                AppKind::DocQaAdvanced,
+                n,
+                rate,
+                seed,
+            )
+            .expect("trace");
+            let (sg_off, sg_on) = teola::serving::run_pipeline_comparison(
+                &platform,
+                AppKind::SearchGen,
+                n,
+                rate,
+                seed,
+            )
+            .expect("trace");
+            platform.shutdown();
+            println!(
+                "doc-qa-advanced off: p50 {:.1} ms, p95 {:.1}, p99 {:.1}, hops {:.2} | on: p50 {:.1} ms, p95 {:.1}, p99 {:.1}, hops {:.2}",
+                doc_off.e2e_ms.p50, doc_off.e2e_ms.p95, doc_off.e2e_ms.p99,
+                doc_off.mean_dispatch_hops(),
+                doc_on.e2e_ms.p50, doc_on.e2e_ms.p95, doc_on.e2e_ms.p99,
+                doc_on.mean_dispatch_hops()
+            );
+            println!(
+                "search-gen      off: p50 {:.1} ms, p95 {:.1}, p99 {:.1}, hops {:.2} | on: p50 {:.1} ms, p95 {:.1}, p99 {:.1}, hops {:.2}",
+                sg_off.e2e_ms.p50, sg_off.e2e_ms.p95, sg_off.e2e_ms.p99,
+                sg_off.mean_dispatch_hops(),
+                sg_on.e2e_ms.p50, sg_on.e2e_ms.p95, sg_on.e2e_ms.p99,
+                sg_on.mean_dispatch_hops()
+            );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                let doc = teola::json::obj(vec![
+                    ("doc_qa_off", doc_off.to_json()),
+                    ("doc_qa_on", doc_on.to_json()),
+                    ("search_gen_off", sg_off.to_json()),
+                    ("search_gen_on", sg_on.to_json()),
                 ]);
                 std::fs::write(&path, doc.to_string()).expect("write json report");
                 println!("wrote {path}");

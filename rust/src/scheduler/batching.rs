@@ -30,7 +30,7 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
-use crate::engines::{Completion, EngineJob, PrefixFp, QueryId};
+use crate::engines::{Completion, EngineJob, JobOutput, PrefixFp, QueryId, SegmentSpec, SeqId};
 
 /// Invocation-bundle identity: `(query, node)`.  Kept as a structured key
 /// — the packed `(query << 20) | node` form collided when a node id
@@ -102,6 +102,105 @@ impl SlotUnit {
     }
 }
 
+/// Successor job shape a [`SuccessorPlan`] can materialize from a
+/// predecessor's completion output alone.  Only shapes whose *entire*
+/// remaining input is the predecessor output qualify — anything needing
+/// graph-scheduler state (rerank post-selection, prefill offset
+/// bookkeeping) re-enters the dispatch loop as before.
+#[derive(Debug, Clone)]
+pub enum SuccessorTemplate {
+    /// Decode continuing the predecessor prefill's sequence: the prefill
+    /// completion's next-token seeds the decode, everything else is
+    /// static at lowering time.
+    Decode { seq: SeqId, segments: Vec<SegmentSpec> },
+    /// Embed the predecessor completion's token rows (streamed partial
+    /// results: one decode segment's tokens feed embedding the moment
+    /// the segment completes).
+    Embed,
+}
+
+/// Direct cross-engine handoff plan (the pipelining tentpole): attached
+/// by the graph scheduler to a [`QueueItem`] whose downstream node has a
+/// single unresolved input, and materialized at the *instance* thread
+/// the moment the triggering completion is emitted — the successor job
+/// enters the target engine's admission queue without bouncing through
+/// the graph scheduler's dispatch loop (Parrot-style producer-side
+/// pre-registration).  The WCP stamp rides across the handoff; the KV
+/// token estimate is recomputed from the materialized job (identical to
+/// what the graph scheduler would have stamped, since the template
+/// fixes the job shape).
+#[derive(Debug, Clone)]
+pub struct SuccessorPlan {
+    /// Completion node id that triggers this plan: the emitting node
+    /// itself, or one decode segment's partial-output marker.
+    pub on_node: usize,
+    /// The downstream node being handed off.
+    pub node: usize,
+    /// Reverse-topological depth of the successor node.
+    pub depth: u32,
+    /// The target engine's admission queue.
+    pub engine: Sender<QueueItem>,
+    pub template: SuccessorTemplate,
+    /// Remaining critical-path stamp carried across the handoff.
+    pub wcp_us: u64,
+    /// Fired-once latch, set by the instance thread when the trigger
+    /// completion materializes this plan: duplicate stream deliveries
+    /// must not inject the successor twice (a double decode admission
+    /// would corrupt the sequence state).
+    pub fired: std::cell::Cell<bool>,
+}
+
+/// Build the successor's queue item from the triggering completion's
+/// output.  Returns `None` when the output shape cannot feed the
+/// template (the instance thread then fails the successor loudly rather
+/// than letting the query hang — the graph scheduler has already ceded
+/// the node).  Pure so the handoff path is unit-testable without an
+/// engine.
+pub fn materialize_successor(
+    plan: &SuccessorPlan,
+    query: QueryId,
+    output: &JobOutput,
+    reply: &Sender<Completion>,
+) -> Option<QueueItem> {
+    let job = match (&plan.template, output) {
+        (SuccessorTemplate::Decode { seq, segments }, JobOutput::Tokens(toks)) => {
+            EngineJob::Decode {
+                seq: *seq,
+                first_token: *toks.first()?,
+                segments: segments.clone(),
+            }
+        }
+        (SuccessorTemplate::Embed, JobOutput::Tokens(toks)) => {
+            if toks.is_empty() {
+                return None;
+            }
+            EngineJob::Embed { chunks: vec![toks.clone()] }
+        }
+        (SuccessorTemplate::Embed, JobOutput::TokenBatch(rows)) => {
+            if rows.is_empty() {
+                return None;
+            }
+            EngineJob::Embed { chunks: rows.clone() }
+        }
+        _ => return None,
+    };
+    Some(QueueItem {
+        query,
+        node: plan.node,
+        depth: plan.depth,
+        bundle: (query, plan.node as u64),
+        arrival: Instant::now(),
+        rows: job.rows(),
+        tokens: job.kv_tokens(),
+        wcp_discounted: false,
+        prefix: None,
+        wcp_us: plan.wcp_us,
+        job,
+        reply: reply.clone(),
+        successors: Vec::new(),
+    })
+}
+
 /// One queued primitive-node request.
 #[derive(Debug)]
 pub struct QueueItem {
@@ -132,6 +231,9 @@ pub struct QueueItem {
     pub wcp_us: u64,
     pub job: EngineJob,
     pub reply: Sender<Completion>,
+    /// Direct-handoff plans for ready successors (pipelining; empty when
+    /// the gate is off — the off path is bit-for-bit the PR6 behavior).
+    pub successors: Vec<SuccessorPlan>,
 }
 
 /// Aging weight of weighted-critical-path ordering: every microsecond a
@@ -377,6 +479,7 @@ mod tests {
             wcp_us: 0,
             job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
             reply: tx,
+            successors: Vec::new(),
         }
     }
 
@@ -384,6 +487,55 @@ mod tests {
         let mut it = item(query, node, 2, 1, t0, ms);
         it.tokens = tokens;
         it
+    }
+
+    #[test]
+    fn materialize_successor_builds_exact_jobs_and_fails_closed() {
+        let (tx, rx) = channel();
+        std::mem::forget(rx);
+        let (etx, erx) = channel();
+        std::mem::forget(erx);
+        let plan = SuccessorPlan {
+            on_node: 4,
+            node: 5,
+            depth: 2,
+            engine: etx,
+            template: SuccessorTemplate::Decode {
+                seq: (9, 0),
+                segments: vec![SegmentSpec { node: 5, len: 8 }],
+            },
+            wcp_us: 1234,
+            fired: std::cell::Cell::new(false),
+        };
+        let it = materialize_successor(&plan, 9, &JobOutput::Tokens(vec![42]), &tx).unwrap();
+        assert_eq!((it.query, it.node, it.wcp_us), (9, 5, 1234));
+        assert_eq!(it.tokens, 8, "decode estimate is the planned segment sum");
+        match &it.job {
+            EngineJob::Decode { seq, first_token, segments } => {
+                assert_eq!((*seq, *first_token, segments.len()), ((9, 0), 42, 1));
+            }
+            other => panic!("wrong job {other:?}"),
+        }
+        // Shape mismatch fails closed (instance fails the node loudly).
+        assert!(materialize_successor(&plan, 9, &JobOutput::Embeddings(Vec::new()), &tx).is_none());
+        assert!(materialize_successor(&plan, 9, &JobOutput::Tokens(Vec::new()), &tx).is_none());
+        let embed = SuccessorPlan { template: SuccessorTemplate::Embed, ..plan };
+        let it = materialize_successor(
+            &embed,
+            9,
+            &JobOutput::TokenBatch(vec![vec![1, 2], vec![3]]),
+            &tx,
+        )
+        .unwrap();
+        match &it.job {
+            EngineJob::Embed { chunks } => assert_eq!(chunks.len(), 2),
+            other => panic!("wrong job {other:?}"),
+        }
+        let it = materialize_successor(&embed, 9, &JobOutput::Tokens(vec![7, 8]), &tx).unwrap();
+        match &it.job {
+            EngineJob::Embed { chunks } => assert_eq!(chunks, &vec![vec![7, 8]]),
+            other => panic!("wrong job {other:?}"),
+        }
     }
 
     #[test]

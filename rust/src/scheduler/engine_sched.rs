@@ -232,13 +232,17 @@ impl EngineScheduler {
     /// bypassing the queue, batch packing and budget admission entirely:
     /// the op that *releases* memory (`FreeQuery`) must never be blocked
     /// on lack of memory, and `ClonePrefix` is a host-side cache copy
-    /// with no model rows.  `FreeQuery` broadcasts to every live
-    /// instance — residency ledgers are per-executor, so each instance
-    /// must drain its own; `ClonePrefix` goes to one least-loaded live
-    /// instance.  Each target is charged one row (stepped executors
-    /// retire instant ops as a single row) and zero KV tokens.
+    /// with no model rows.  `FreeQuery` and `CancelSeq` broadcast to
+    /// every live instance — residency ledgers and pending queues are
+    /// per-executor, so each instance must drain its own; `ClonePrefix`
+    /// goes to one least-loaded live instance.  Each target is charged
+    /// one row (stepped executors retire instant ops as a single row)
+    /// and zero KV tokens.
     fn dispatch_bookkeeping(&mut self, item: QueueItem) {
-        let broadcast = matches!(item.job, EngineJob::FreeQuery { .. });
+        let broadcast = matches!(
+            item.job,
+            EngineJob::FreeQuery { .. } | EngineJob::CancelSeq { .. }
+        );
         let live = |me: &EngineScheduler| -> Vec<usize> {
             (0..me.instances.len()).filter(|&i| !me.dead[i]).collect()
         };
@@ -268,6 +272,7 @@ impl EngineScheduler {
                     kv_tokens: 0,
                     wcp_discounted: item.wcp_discounted,
                     reply: item.reply.clone(),
+                    successors: Vec::new(),
                 };
                 let batch = Batch { jobs: vec![(ctx, item.job.clone())] };
                 if self.instances[inst].sender.send(batch).is_err() {
@@ -489,6 +494,7 @@ impl EngineScheduler {
                             kv_tokens: charge,
                             wcp_discounted: i.wcp_discounted,
                             reply: i.reply,
+                            successors: i.successors,
                         },
                         i.job,
                     )
@@ -540,6 +546,7 @@ impl EngineScheduler {
                         wcp_us: ctx.wcp_us,
                         job,
                         reply: ctx.reply,
+                        successors: ctx.successors,
                     });
                 }
                 continue;
@@ -670,6 +677,7 @@ mod tests {
             wcp_us: 0,
             job,
             reply: tx,
+            successors: Vec::new(),
         }
     }
 

@@ -15,7 +15,7 @@ use crate::error::{Result, TeolaError};
 use crate::graph::egraph::EGraph;
 use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
 use crate::graph::value::Value;
-use crate::scheduler::batching::QueueItem;
+use crate::scheduler::batching::{QueueItem, SuccessorPlan, SuccessorTemplate};
 use crate::scheduler::object_store::ObjectStore;
 use crate::scheduler::wcp::{self, WcpTracker};
 
@@ -34,6 +34,12 @@ pub struct QueryMetrics {
     pub host_us: u64,
     pub n_engine_ops: usize,
     pub n_host_ops: usize,
+    /// Graph-scheduler dispatch round-trips: every job that entered an
+    /// engine queue via the runner's own dispatch loop.  Direct
+    /// engine-to-engine successor handoffs do NOT count — the gap between
+    /// pipeline on/off is exactly the orchestration overhead Fig. 12
+    /// measures.
+    pub dispatch_hops: u64,
     /// exec_us per (component, class) where class is "prefill", "decode"
     /// or "other" — the Fig. 1 module breakdown.
     pub per_component_us: HashMap<(usize, &'static str), u64>,
@@ -51,6 +57,10 @@ pub struct QueryRunner {
     pub sep: i32,
     /// Clamp for prompt length (leave decode headroom in the KV cache).
     pub max_prompt: usize,
+    /// Cross-engine pipelining: attach successor plans to dispatched
+    /// items (direct engine-to-engine handoff) and speculate template
+    /// prefills.  Off = today's queue re-entry behavior, bit-for-bit.
+    pub pipeline: bool,
 }
 
 enum NodeState {
@@ -59,10 +69,40 @@ enum NodeState {
     Done,
 }
 
+/// In-flight speculative template prefill (pipeline mode): the constant
+/// instruction prefix of a not-yet-ready prefill node, sent ahead under a
+/// sentinel node id (>= egraph length, so it can never be mistaken for a
+/// real node's completion).
+struct SpecPrefill {
+    /// The real prefill node this speculation runs ahead of.
+    for_node: NodeId,
+    /// Template seq (this query's namespace).
+    seq: u32,
+    /// Tokens prefilled speculatively (= the instruction length).
+    len: usize,
+    done: bool,
+    /// The speculative prefill's completion output (seed-token surface).
+    output: Vec<i32>,
+    /// Real node became ready while the speculation was still in flight;
+    /// dispatch its suffix as soon as the speculation completes.
+    waiting: bool,
+    /// Guard resolved false: the seq was cancelled engine-side; ignore
+    /// any late completion.
+    cancelled: bool,
+}
+
 impl QueryRunner {
-    /// Build a runner.
+    /// Build a runner.  Pipelining starts off so direct `QueryRunner`
+    /// users keep the classic dispatch loop; `Platform` opts in via
+    /// [`QueryRunner::with_pipeline`].
     pub fn new(query: QueryId, egraph: EGraph, routers: EngineRouter, sep: i32) -> QueryRunner {
-        QueryRunner { query, egraph, routers, sep, max_prompt: 224 }
+        QueryRunner { query, egraph, routers, sep, max_prompt: 224, pipeline: false }
+    }
+
+    /// Enable/disable cross-engine pipelining for this query.
+    pub fn with_pipeline(mut self, on: bool) -> QueryRunner {
+        self.pipeline = on;
+        self
     }
 
     /// Run the e-graph; returns the output value and metrics.
@@ -83,6 +123,26 @@ impl QueryRunner {
         // Local completion worklist (host ops complete synchronously).
         let mut ready: Vec<NodeId> = self.egraph.sources();
         let mut local_done: Vec<(NodeId, Value)> = Vec::new();
+        // Successor nodes handed off engine-side: trigger node -> the
+        // downstream nodes the engines will materialize themselves.  When
+        // the trigger's completion arrives, those nodes are marked
+        // Dispatched so the classic dispatch loop skips them.
+        let mut handed_off: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+        // Speculative template prefills, keyed by sentinel node id.
+        let mut specs: HashMap<usize, SpecPrefill> = HashMap::new();
+        let mut spec_of: HashMap<NodeId, usize> = HashMap::new();
+
+        if self.pipeline {
+            self.launch_speculative_prefills(
+                &indeg,
+                &mut seq_len,
+                &tx,
+                &mut metrics,
+                &mut specs,
+                &mut spec_of,
+                wcp.remaining_us(),
+            );
+        }
 
         while done < n {
             // Dispatch every ready node.
@@ -98,6 +158,9 @@ impl QueryRunner {
                         &mut state,
                         &mut local_done,
                         wcp.remaining_us(),
+                        &mut handed_off,
+                        &mut specs,
+                        &spec_of,
                     )?;
                 }
             }
@@ -125,6 +188,49 @@ impl QueryRunner {
             if let JobOutput::Failed(msg) = &c.output {
                 self.cleanup();
                 return Err(TeolaError::Engine(format!("node {node}: {msg}")));
+            }
+            // Sentinel ids live above the e-graph: speculative prefill
+            // completions are absorbed here, before any node indexing.
+            if node >= n {
+                let Some(sp) = specs.get_mut(&node) else { continue };
+                sp.done = true;
+                if let JobOutput::Tokens(t) = &c.output {
+                    sp.output = t.clone();
+                }
+                metrics.n_engine_ops += 1;
+                if sp.waiting && !sp.cancelled {
+                    // The real node was ready before the speculation
+                    // finished: dispatch its deferred suffix now.
+                    let (v, slen, sout) = (sp.for_node, sp.len, sp.output.clone());
+                    if let PayloadSpec::Prefill { seq, parts } =
+                        &self.egraph.graph.nodes[v].payload
+                    {
+                        self.dispatch_prefill_suffix(
+                            v,
+                            *seq,
+                            parts,
+                            slen,
+                            &sout,
+                            &store,
+                            &mut seq_len,
+                            &tx,
+                            &mut metrics,
+                            &mut local_done,
+                            wcp.remaining_us(),
+                            &mut handed_off,
+                        )?;
+                    }
+                }
+                continue;
+            }
+            // Successors this completion's engine materialized itself:
+            // mark them dispatched so the ready loop never re-sends them.
+            if let Some(succs) = handed_off.remove(&node) {
+                for s in succs {
+                    if matches!(state[s], NodeState::Pending) {
+                        state[s] = NodeState::Dispatched;
+                    }
+                }
             }
             if store.has(node) {
                 continue; // duplicate stream delivery (benign)
@@ -186,6 +292,7 @@ impl QueryRunner {
                     wcp_us: u64::MAX,
                     job: EngineJob::FreeQuery { query: self.query },
                     reply: tx,
+                    successors: Vec::new(),
                 });
             }
         }
@@ -261,6 +368,9 @@ impl QueryRunner {
         state: &mut [NodeState],
         local_done: &mut Vec<(NodeId, Value)>,
         wcp_us: u64,
+        handed_off: &mut HashMap<NodeId, Vec<NodeId>>,
+        specs: &mut HashMap<usize, SpecPrefill>,
+        spec_of: &HashMap<NodeId, usize>,
     ) -> Result<()> {
         let node = &self.egraph.graph.nodes[v];
         state[v] = NodeState::Dispatched;
@@ -269,6 +379,17 @@ impl QueryRunner {
         if let Some((g, want)) = node.guard {
             let pass = matches!(store.get(g), Some(Value::Bool(b)) if *b == want);
             if !pass {
+                // Invalidate any speculative template prefill that ran
+                // ahead of this node: cancel the seq engine-side so its
+                // KV reservation and residency are released.
+                if let Some(s) = spec_of.get(&v) {
+                    if let Some(sp) = specs.get_mut(s) {
+                        if !sp.cancelled {
+                            sp.cancelled = true;
+                            self.cancel_spec_seq(v, sp.seq);
+                        }
+                    }
+                }
                 local_done.push((v, Value::Skipped));
                 return Ok(());
             }
@@ -308,7 +429,7 @@ impl QueryRunner {
                 for s in sources {
                     chunks.extend(self.rows_of(store, s)?);
                 }
-                self.send_job(v, EngineJob::Embed { chunks }, tx, wcp_us)?;
+                self.send_job(v, EngineJob::Embed { chunks }, tx, wcp_us, metrics, Vec::new())?;
             }
             PayloadSpec::Ingest { chunks, embeddings } => {
                 let mut rows = Vec::new();
@@ -321,6 +442,8 @@ impl QueryRunner {
                     EngineJob::Ingest { namespace: self.query, chunks: rows, embeddings: embs },
                     tx,
                     wcp_us,
+                    metrics,
+                    Vec::new(),
                 )?;
             }
             PayloadSpec::VectorSearch { embeddings, top_k } => {
@@ -334,6 +457,8 @@ impl QueryRunner {
                     },
                     tx,
                     wcp_us,
+                    metrics,
+                    Vec::new(),
                 )?;
             }
             PayloadSpec::Rerank { query, candidates, top_k } => {
@@ -353,9 +478,28 @@ impl QueryRunner {
                     })
                     .collect();
                 pending_rerank.insert(v, (cands, *top_k));
-                self.send_job(v, EngineJob::Rerank { pairs }, tx, wcp_us)?;
+                self.send_job(v, EngineJob::Rerank { pairs }, tx, wcp_us, metrics, Vec::new())?;
             }
             PayloadSpec::Prefill { seq, parts } => {
+                // A speculative template prefill may already hold this
+                // seq's prefix engine-side: serialize behind it and send
+                // only the suffix (out-of-order prefills would corrupt
+                // the sequence length).
+                if let Some(s) = spec_of.get(&v) {
+                    if let Some(sp) = specs.get_mut(s) {
+                        if !sp.cancelled {
+                            if !sp.done {
+                                sp.waiting = true;
+                                return Ok(());
+                            }
+                            let (slen, sout) = (sp.len, sp.output.clone());
+                            return self.dispatch_prefill_suffix(
+                                v, *seq, parts, slen, &sout, store, seq_len, tx, metrics,
+                                local_done, wcp_us, handed_off,
+                            );
+                        }
+                    }
+                }
                 let mut tokens = Vec::new();
                 for p in parts {
                     for row in self.rows_of(store, p)? {
@@ -386,11 +530,14 @@ impl QueryRunner {
                     None
                 };
                 seq_len.insert(*seq, offset + tokens.len());
+                let plans = self.prefill_successor_plans(v, *seq, wcp_us, handed_off);
                 self.send_job(
                     v,
                     EngineJob::Prefill { seq: (self.query, *seq), tokens, offset, prefix },
                     tx,
                     wcp_us,
+                    metrics,
+                    plans,
                 )?;
             }
             PayloadSpec::Decode { seq, first_from, segments } => {
@@ -402,6 +549,7 @@ impl QueryRunner {
                     .iter()
                     .map(|(n, l)| SegmentSpec { node: *n, len: *l })
                     .collect();
+                let plans = self.decode_successor_plans(v, &segs, wcp_us, handed_off);
                 self.send_job(
                     v,
                     EngineJob::Decode {
@@ -411,6 +559,8 @@ impl QueryRunner {
                     },
                     tx,
                     wcp_us,
+                    metrics,
+                    plans,
                 )?;
             }
             PayloadSpec::WebSearch { queries, top_k } => {
@@ -418,7 +568,14 @@ impl QueryRunner {
                 for q in queries {
                     rows.extend(self.rows_of(store, q)?);
                 }
-                self.send_job(v, EngineJob::WebSearch { queries: rows, top_k: *top_k }, tx, wcp_us)?;
+                self.send_job(
+                    v,
+                    EngineJob::WebSearch { queries: rows, top_k: *top_k },
+                    tx,
+                    wcp_us,
+                    metrics,
+                    Vec::new(),
+                )?;
             }
             PayloadSpec::ClonePrefix { src_seq, dst_seq, len, .. } => {
                 seq_len.insert(*dst_seq, *len);
@@ -431,6 +588,8 @@ impl QueryRunner {
                     },
                     tx,
                     wcp_us,
+                    metrics,
+                    Vec::new(),
                 )?;
             }
             PayloadSpec::Tool { name, cost_us } => {
@@ -439,6 +598,8 @@ impl QueryRunner {
                     EngineJob::ToolCall { name: name.clone(), cost_us: *cost_us },
                     tx,
                     wcp_us,
+                    metrics,
+                    Vec::new(),
                 )?;
             }
         }
@@ -525,12 +686,274 @@ impl QueryRunner {
         }
     }
 
+    /// Successor plans for a prefill: a decode fed solely by this node
+    /// (its seed token is this prefill's completion output) is chained
+    /// directly on the engine side, skipping one dispatch round-trip.
+    fn prefill_successor_plans(
+        &self,
+        v: NodeId,
+        seq: u32,
+        wcp_us: u64,
+        handed_off: &mut HashMap<NodeId, Vec<NodeId>>,
+    ) -> Vec<SuccessorPlan> {
+        if !self.pipeline {
+            return Vec::new();
+        }
+        let mut plans = Vec::new();
+        for &d in &self.egraph.children[v] {
+            let dn = &self.egraph.graph.nodes[d];
+            if dn.guard.is_some() || self.egraph.parents[d] != [v] {
+                continue;
+            }
+            let PayloadSpec::Decode { seq: dseq, first_from, segments } = &dn.payload else {
+                continue;
+            };
+            if *first_from != v || *dseq != seq {
+                continue;
+            }
+            let Some(sender) = self.routers.get(&dn.engine) else { continue };
+            let segs: Vec<SegmentSpec> =
+                segments.iter().map(|(n, l)| SegmentSpec { node: *n, len: *l }).collect();
+            plans.push(SuccessorPlan {
+                on_node: v,
+                node: d,
+                depth: self.egraph.depths[d],
+                engine: sender.clone(),
+                template: SuccessorTemplate::Decode { seq: (self.query, seq), segments: segs },
+                wcp_us,
+                fired: std::cell::Cell::new(false),
+            });
+            handed_off.entry(v).or_default().push(d);
+        }
+        plans
+    }
+
+    /// Successor plans for a decode: each streamed segment marker whose
+    /// sole consumer is an embedding of exactly that marker's output is
+    /// chained engine-side, so partial results feed the embedder as each
+    /// segment completes — without a graph-scheduler round-trip.
+    fn decode_successor_plans(
+        &self,
+        v: NodeId,
+        segs: &[SegmentSpec],
+        wcp_us: u64,
+        handed_off: &mut HashMap<NodeId, Vec<NodeId>>,
+    ) -> Vec<SuccessorPlan> {
+        if !self.pipeline {
+            return Vec::new();
+        }
+        let mut plans = Vec::new();
+        for s in segs {
+            let m = s.node;
+            if m == v || m >= self.egraph.len() {
+                continue; // self-segment (unsplit decode)
+            }
+            for &e in &self.egraph.children[m] {
+                let en = &self.egraph.graph.nodes[e];
+                if en.guard.is_some() || self.egraph.parents[e] != [m] {
+                    continue;
+                }
+                let PayloadSpec::Embed { sources } = &en.payload else { continue };
+                if *sources != [DataRef::Node(m)] {
+                    continue;
+                }
+                let Some(sender) = self.routers.get(&en.engine) else { continue };
+                plans.push(SuccessorPlan {
+                    on_node: m,
+                    node: e,
+                    depth: self.egraph.depths[e],
+                    engine: sender.clone(),
+                    template: SuccessorTemplate::Embed,
+                    wcp_us,
+                    fired: std::cell::Cell::new(false),
+                });
+                handed_off.entry(m).or_default().push(e);
+            }
+        }
+        plans
+    }
+
+    /// Dispatch the non-template suffix of a prefill whose constant
+    /// instruction prefix was already prefilled speculatively.  The final
+    /// sequence length — and therefore the completion token — matches the
+    /// unspeculated path exactly.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_prefill_suffix(
+        &self,
+        v: NodeId,
+        seq: u32,
+        parts: &[DataRef],
+        spec_len: usize,
+        spec_out: &[i32],
+        store: &ObjectStore,
+        seq_len: &mut HashMap<u32, usize>,
+        tx: &Sender<Completion>,
+        metrics: &mut QueryMetrics,
+        local_done: &mut Vec<(NodeId, Value)>,
+        wcp_us: u64,
+        handed_off: &mut HashMap<NodeId, Vec<NodeId>>,
+    ) -> Result<()> {
+        let mut tokens = Vec::new();
+        for p in parts {
+            for row in self.rows_of(store, p)? {
+                tokens.extend(row);
+            }
+        }
+        tokens.truncate(self.max_prompt);
+        if tokens.len() <= spec_len {
+            // The template covered the whole prompt: the speculative
+            // completion IS this node's completion (same seq length).
+            local_done.push((v, Value::Tokens(spec_out.to_vec())));
+            return Ok(());
+        }
+        let suffix = tokens.split_off(spec_len);
+        seq_len.insert(seq, spec_len + suffix.len());
+        let plans = self.prefill_successor_plans(v, seq, wcp_us, handed_off);
+        self.send_job(
+            v,
+            EngineJob::Prefill {
+                seq: (self.query, seq),
+                tokens: suffix,
+                offset: spec_len,
+                prefix: None,
+            },
+            tx,
+            wcp_us,
+            metrics,
+            plans,
+        )
+    }
+
+    /// Launch speculative template prefills: a monolithic prefill that is
+    /// not ready yet (guarded or waiting on upstream data) but whose first
+    /// prompt part is a constant instruction template can prefill that
+    /// template ahead of time under a sentinel node id.  Exactly one
+    /// prefill must own the seq (splittable prefills are already split by
+    /// Pass 3 and never qualify).
+    #[allow(clippy::too_many_arguments)]
+    fn launch_speculative_prefills(
+        &self,
+        indeg: &[usize],
+        seq_len: &mut HashMap<u32, usize>,
+        tx: &Sender<Completion>,
+        metrics: &mut QueryMetrics,
+        specs: &mut HashMap<usize, SpecPrefill>,
+        spec_of: &mut HashMap<NodeId, usize>,
+        wcp_us: u64,
+    ) {
+        let n = self.egraph.len();
+        // Count writers per seq: speculation is only safe when this node
+        // is the seq's sole prefill and nothing clones into it.
+        let mut writers: HashMap<u32, usize> = HashMap::new();
+        for nd in &self.egraph.graph.nodes {
+            match &nd.payload {
+                PayloadSpec::Prefill { seq, .. } => *writers.entry(*seq).or_default() += 1,
+                PayloadSpec::ClonePrefix { dst_seq, .. } => {
+                    *writers.entry(*dst_seq).or_default() += 2
+                }
+                _ => {}
+            }
+        }
+        for v in 0..n {
+            let nd = &self.egraph.graph.nodes[v];
+            if nd.kind != PrimKind::Prefilling {
+                continue;
+            }
+            if nd.guard.is_none() && indeg[v] == 0 {
+                continue; // ready right now: nothing to win
+            }
+            let PayloadSpec::Prefill { seq, parts } = &nd.payload else { continue };
+            if writers.get(seq).copied().unwrap_or(0) != 1 {
+                continue;
+            }
+            let Some(DataRef::Const(rows)) = parts.first() else { continue };
+            if rows.len() != 1 {
+                continue;
+            }
+            let instr = rows[0].clone();
+            if instr.len() < MIN_PREFIX_LEN || instr.len() >= self.max_prompt {
+                continue;
+            }
+            let Some(sender) = self.routers.get(&nd.engine) else { continue };
+            let sentinel = n + specs.len();
+            let job = EngineJob::Prefill {
+                seq: (self.query, *seq),
+                tokens: instr.clone(),
+                offset: 0,
+                prefix: None,
+            };
+            metrics.dispatch_hops += 1;
+            let ok = sender
+                .send(QueueItem {
+                    query: self.query,
+                    node: sentinel,
+                    depth: self.egraph.depths[v],
+                    bundle: (self.query, sentinel as u64),
+                    arrival: Instant::now(),
+                    rows: job.rows(),
+                    tokens: job.kv_tokens(),
+                    wcp_discounted: false,
+                    prefix: None,
+                    wcp_us,
+                    job,
+                    reply: tx.clone(),
+                    successors: Vec::new(),
+                })
+                .is_ok();
+            if ok {
+                seq_len.insert(*seq, instr.len());
+                specs.insert(
+                    sentinel,
+                    SpecPrefill {
+                        for_node: v,
+                        seq: *seq,
+                        len: instr.len(),
+                        done: false,
+                        output: Vec::new(),
+                        waiting: false,
+                        cancelled: false,
+                    },
+                );
+                spec_of.insert(v, sentinel);
+            }
+        }
+    }
+
+    /// Cancel a speculated seq engine-side: purge any queued prefill,
+    /// drop the sequence state and release residency.  Bookkeeping-only
+    /// (the engine never emits a completion toward the speculating node),
+    /// so an invalidated speculation can never fail the query.
+    fn cancel_spec_seq(&self, v: NodeId, seq: u32) {
+        let engine = &self.egraph.graph.nodes[v].engine;
+        if let Some(sender) = self.routers.get(engine) {
+            let (dead_tx, dead_rx) = channel();
+            drop(dead_rx);
+            let _ = sender.send(QueueItem {
+                query: self.query,
+                node: usize::MAX,
+                depth: 0,
+                bundle: (self.query, u64::MAX),
+                arrival: Instant::now(),
+                rows: 0,
+                tokens: 0,
+                wcp_discounted: false,
+                prefix: None,
+                wcp_us: u64::MAX,
+                job: EngineJob::CancelSeq { seq: (self.query, seq) },
+                reply: dead_tx,
+                successors: Vec::new(),
+            });
+        }
+    }
+
     fn send_job(
         &self,
         v: NodeId,
         job: EngineJob,
         tx: &Sender<Completion>,
         wcp_us: u64,
+        metrics: &mut QueryMetrics,
+        successors: Vec<SuccessorPlan>,
     ) -> Result<()> {
         let node = &self.egraph.graph.nodes[v];
         let sender = self.routers.get(&node.engine).ok_or_else(|| {
@@ -543,6 +966,9 @@ impl QueryRunner {
         // tokens for decodes.  The engine scheduler reserves by it under
         // token-denominated accounting.
         let tokens = job.kv_tokens();
+        // Every send through this path is one graph-scheduler round-trip;
+        // engine-side successor handoffs bypass it by construction.
+        metrics.dispatch_hops += 1;
         sender
             .send(QueueItem {
                 query: self.query,
@@ -557,6 +983,7 @@ impl QueryRunner {
                 wcp_us,
                 job,
                 reply: tx.clone(),
+                successors,
             })
             .map_err(|_| TeolaError::Scheduler(format!("engine '{}' is down", node.engine)))
     }

@@ -15,7 +15,8 @@ pub mod wcp;
 
 pub use batching::{
     form_batch, form_continuous_admission, head_index, head_needs_drained_instance,
-    wcp_priority_us, BatchPolicy, BundleId, QueueItem, SlotUnit, WCP_AGING_WEIGHT,
+    materialize_successor, wcp_priority_us, BatchPolicy, BundleId, QueueItem, SlotUnit,
+    SuccessorPlan, SuccessorTemplate, WCP_AGING_WEIGHT,
 };
 pub use engine_sched::{rediscount_resident_prefixes, EngineScheduler};
 pub use graph_sched::{QueryMetrics, QueryRunner};

@@ -94,6 +94,24 @@ pub struct PlatformConfig {
     /// `capacity * watermark / 100`.  Switchable at runtime via
     /// [`Platform::set_kv_watermark`].
     pub kv_watermark: usize,
+    /// Per-engine-kind overrides of the residency watermark (percent):
+    /// the last entry matching an engine's kind wins over the global
+    /// `kv_watermark` at provisioning time.  Only LLM engines act on a
+    /// watermark today, so only `EngineKind::Llm` entries are effective;
+    /// other kinds are accepted for forward compatibility.  Set via
+    /// `TEOLA_KV_WATERMARK_<KIND>` in the bench harness, or retuned per
+    /// engine at runtime via [`Platform::set_kv_watermark_of`].
+    pub kv_watermark_overrides: Vec<(crate::engines::EngineKind, u8)>,
+    /// Cross-engine pipelining (PR7): query runners attach successor
+    /// plans to dispatched jobs so the serving instance injects the
+    /// downstream job (prefill -> decode, decode segment -> embed)
+    /// directly into the target engine's queue, skipping the
+    /// graph-scheduler round-trip; not-yet-ready monolithic LLM prefills
+    /// may speculatively prefill their constant template prefix.  Only
+    /// active under `TopoAware` (the baselines keep the classic loop);
+    /// switchable at runtime via [`Platform::set_pipeline`].  Off, the
+    /// dispatch path is bit-for-bit the pre-PR7 loop.
+    pub pipeline: bool,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -122,6 +140,8 @@ impl PlatformConfig {
             wcp: true,
             kv_tokens_per_instance: None,
             kv_watermark: 0,
+            kv_watermark_overrides: Vec::new(),
+            pipeline: true,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -167,10 +187,19 @@ pub struct Platform {
     /// The derived per-engine defaults (`max_slots x profile max_seq`),
     /// restored by `set_kv_tokens(None)`.
     kv_defaults: HashMap<String, usize>,
-    /// Shared persistent-residency watermark handle (percent of KV
-    /// capacity; 0 = off), read by the LLM engine schedulers and their
-    /// executors.
-    kv_watermark: Arc<AtomicUsize>,
+    /// Per-LLM-engine persistent-residency watermark handles (percent of
+    /// KV capacity; 0 = off), each shared by that engine's scheduler and
+    /// executors so a per-engine retune applies to dispatch charging,
+    /// admission and eviction at once.
+    kv_watermarks: HashMap<String, Arc<AtomicUsize>>,
+    /// The global watermark value (what [`Platform::kv_watermark`]
+    /// reports); non-LLM engine schedulers share this handle, and
+    /// [`Platform::set_kv_watermark`] writes it through to every
+    /// per-engine handle.
+    kv_watermark_base: Arc<AtomicUsize>,
+    /// Cross-engine pipelining switch read by `run_query`/`spawn_query`
+    /// when constructing runners (see `PlatformConfig::pipeline`).
+    pipeline: Arc<AtomicBool>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -203,7 +232,19 @@ impl Platform {
         let batch_window_us = Arc::new(AtomicU64::new(cfg.batch_window_us));
         let prefix_slots = Arc::new(AtomicUsize::new(cfg.prefix_slots));
         let wcp = Arc::new(AtomicBool::new(cfg.wcp));
-        let kv_watermark = Arc::new(AtomicUsize::new(cfg.kv_watermark));
+        let pipeline = Arc::new(AtomicBool::new(cfg.pipeline));
+        // Residency watermark: the global value, with the last matching
+        // per-kind override winning for engines of that kind.
+        let kv_watermark_base = Arc::new(AtomicUsize::new(cfg.kv_watermark));
+        let wm_for_kind = |kind: crate::engines::EngineKind| -> usize {
+            cfg.kv_watermark_overrides
+                .iter()
+                .rev()
+                .find(|(k, _)| *k == kind)
+                .map(|(_, pct)| *pct as usize)
+                .unwrap_or(cfg.kv_watermark)
+        };
+        let mut kv_watermarks: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
         // Instances ack on this channel once their executor (including any
         // warm-up compilation) is constructed; start() blocks on all acks
         // so serving never races against compilation.
@@ -217,6 +258,7 @@ impl Platform {
                                event_rx,
                                max_slots: usize,
                                kv: Arc<AtomicUsize>,
+                               wm: Arc<AtomicUsize>,
                                mode: ExecMode| {
             let (job_tx, job_rx) = channel::<QueueItem>();
             let slot_handle = Arc::new(AtomicUsize::new(max_slots));
@@ -232,7 +274,7 @@ impl Platform {
                 prefix_slots.clone(),
                 wcp.clone(),
                 kv,
-                kv_watermark.clone(),
+                wm,
                 mode,
             );
             let h = std::thread::Builder::new()
@@ -258,6 +300,8 @@ impl Platform {
             let kv = Arc::new(AtomicUsize::new(budget));
             kv_tokens.insert(spec.name.clone(), kv.clone());
             kv_defaults.insert(spec.name.clone(), derived);
+            let wm = Arc::new(AtomicUsize::new(wm_for_kind(crate::engines::EngineKind::Llm)));
+            kv_watermarks.insert(spec.name.clone(), wm.clone());
             let (free_tx, free_rx) = channel();
             let (instances, _store) = llm::spawn_llm_engine(
                 manifest.clone(),
@@ -269,7 +313,7 @@ impl Platform {
                 ready_tx.clone(),
                 prefix_slots.clone(),
                 kv.clone(),
-                kv_watermark.clone(),
+                wm.clone(),
             );
             expected_ready += instances.len();
             spawn_sched(
@@ -278,6 +322,7 @@ impl Platform {
                 free_rx,
                 spec.max_slots,
                 kv,
+                wm,
                 ExecMode::Stepped,
             );
         }
@@ -299,6 +344,7 @@ impl Platform {
                 free_rx,
                 cfg.embedder.max_slots,
                 row_mode.clone(),
+                kv_watermark_base.clone(),
                 ExecMode::FullBatch,
             );
         }
@@ -320,6 +366,7 @@ impl Platform {
                 free_rx,
                 cfg.reranker.max_slots,
                 row_mode.clone(),
+                kv_watermark_base.clone(),
                 ExecMode::FullBatch,
             );
         }
@@ -328,7 +375,15 @@ impl Platform {
             let (instances, _store) =
                 vector_db::spawn_vector_db(cfg.vdb_instances, free_tx, ready_tx.clone());
             expected_ready += instances.len();
-            spawn_sched("vdb".into(), instances, free_rx, 64, row_mode.clone(), ExecMode::FullBatch);
+            spawn_sched(
+                "vdb".into(),
+                instances,
+                free_rx,
+                64,
+                row_mode.clone(),
+                kv_watermark_base.clone(),
+                ExecMode::FullBatch,
+            );
         }
         let corpus = Arc::new(Corpus::synthetic(cfg.corpus_docs, 48, manifest.vocab.max(64), 11));
         {
@@ -341,7 +396,15 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("web".into(), instances, free_rx, 16, row_mode.clone(), ExecMode::FullBatch);
+            spawn_sched(
+                "web".into(),
+                instances,
+                free_rx,
+                16,
+                row_mode.clone(),
+                kv_watermark_base.clone(),
+                ExecMode::FullBatch,
+            );
         }
         {
             let (free_tx, free_rx) = channel();
@@ -353,7 +416,15 @@ impl Platform {
                 ready_tx.clone(),
             );
             expected_ready += instances.len();
-            spawn_sched("tool".into(), instances, free_rx, 16, row_mode.clone(), ExecMode::FullBatch);
+            spawn_sched(
+                "tool".into(),
+                instances,
+                free_rx,
+                16,
+                row_mode.clone(),
+                kv_watermark_base.clone(),
+                ExecMode::FullBatch,
+            );
         }
 
         // Block until every instance finished executor construction
@@ -375,7 +446,9 @@ impl Platform {
             wcp,
             kv_tokens,
             kv_defaults,
-            kv_watermark,
+            kv_watermarks,
+            kv_watermark_base,
+            pipeline,
             profiles,
             manifest,
             sep,
@@ -429,16 +502,78 @@ impl Platform {
 
     /// Retune the persistent-residency watermark at runtime (percent of
     /// each LLM instance's KV token budget; 0 switches residency off and
-    /// restores PR5 release-at-retirement semantics).  The handle is
-    /// shared by the LLM engine schedulers and their executors, so the
-    /// flip applies to dispatch charging, admission and eviction at once.
+    /// restores PR5 release-at-retirement semantics).  Writes through to
+    /// every per-engine handle (clearing any per-engine override); the
+    /// handles are shared by the LLM engine schedulers and their
+    /// executors, so the flip applies to dispatch charging, admission
+    /// and eviction at once.
     pub fn set_kv_watermark(&self, pct: usize) {
-        self.kv_watermark.store(pct, Ordering::Relaxed);
+        self.kv_watermark_base.store(pct, Ordering::Relaxed);
+        for h in self.kv_watermarks.values() {
+            h.store(pct, Ordering::Relaxed);
+        }
     }
 
-    /// Current persistent-residency watermark (percent; 0 = off).
+    /// Current global persistent-residency watermark (percent; 0 = off).
+    /// Per-engine overrides may diverge — see
+    /// [`Platform::kv_watermark_of`].
     pub fn kv_watermark(&self) -> usize {
-        self.kv_watermark.load(Ordering::Relaxed)
+        self.kv_watermark_base.load(Ordering::Relaxed)
+    }
+
+    /// Retune one LLM engine's residency watermark at runtime without
+    /// touching the others; no-op (returns false) for engines without a
+    /// watermark handle (the encoders etc.).
+    pub fn set_kv_watermark_of(&self, engine: &str, pct: usize) -> bool {
+        match self.kv_watermarks.get(engine) {
+            Some(h) => {
+                h.store(pct, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Current residency watermark of one LLM engine.
+    pub fn kv_watermark_of(&self, engine: &str) -> Option<usize> {
+        self.kv_watermarks.get(engine).map(|h| h.load(Ordering::Relaxed))
+    }
+
+    /// Snapshot the global watermark plus every per-engine value, so a
+    /// comparison harness that pins the knob can restore the caller's
+    /// exact configuration — including per-engine overrides — afterward.
+    pub fn kv_watermark_snapshot(&self) -> (usize, Vec<(String, usize)>) {
+        (
+            self.kv_watermark_base.load(Ordering::Relaxed),
+            self.kv_watermarks
+                .iter()
+                .map(|(name, h)| (name.clone(), h.load(Ordering::Relaxed)))
+                .collect(),
+        )
+    }
+
+    /// Restore watermarks captured by [`Platform::kv_watermark_snapshot`].
+    pub fn restore_kv_watermarks(&self, snapshot: &(usize, Vec<(String, usize)>)) {
+        self.kv_watermark_base.store(snapshot.0, Ordering::Relaxed);
+        for (name, v) in &snapshot.1 {
+            if let Some(h) = self.kv_watermarks.get(name) {
+                h.store(*v, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Toggle cross-engine pipelining at runtime (direct successor
+    /// handoff + speculative template prefill; only effective under
+    /// `TopoAware`).  Runners snapshot the flag at construction, so the
+    /// flip applies to queries started after the call.
+    pub fn set_pipeline(&self, on: bool) {
+        self.pipeline.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether cross-engine pipelining is currently requested (the
+    /// effective state also requires the `TopoAware` policy).
+    pub fn pipeline(&self) -> bool {
+        self.pipeline.load(Ordering::Relaxed)
     }
 
     /// Current KV token budget of one LLM engine (None for engines
@@ -478,9 +613,19 @@ impl Platform {
         self.routers.clone()
     }
 
+    /// Effective pipelining state for runners constructed now: the flag
+    /// is on AND the batching policy is `TopoAware` (the baselines keep
+    /// the classic dispatch loop, mirroring the other PR knobs).
+    fn pipeline_effective(&self) -> bool {
+        self.pipeline.load(Ordering::Relaxed)
+            && BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed))
+                == BatchPolicy::TopoAware
+    }
+
     /// Execute one query's e-graph synchronously on the calling thread.
     pub fn run_query(&self, query: QueryId, egraph: EGraph) -> Result<(Value, QueryMetrics)> {
-        let runner = QueryRunner::new(query, egraph, self.routers(), self.sep);
+        let runner = QueryRunner::new(query, egraph, self.routers(), self.sep)
+            .with_pipeline(self.pipeline_effective());
         let t0 = Instant::now();
         let (v, mut m) = runner.run()?;
         m.e2e_us = t0.elapsed().as_micros() as u64;
@@ -496,10 +641,12 @@ impl Platform {
     ) -> JoinHandle<Result<(Value, QueryMetrics)>> {
         let routers = self.routers();
         let sep = self.sep;
+        let pipeline = self.pipeline_effective();
         std::thread::Builder::new()
             .name(format!("query-{query}"))
             .spawn(move || {
-                let runner = QueryRunner::new(query, egraph, routers, sep);
+                let runner =
+                    QueryRunner::new(query, egraph, routers, sep).with_pipeline(pipeline);
                 let t0 = Instant::now();
                 let (v, mut m) = runner.run()?;
                 m.e2e_us = t0.elapsed().as_micros() as u64;

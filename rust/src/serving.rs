@@ -76,6 +76,13 @@ impl LoadReport {
         mean(self.metrics.iter().map(|m| m.exec_us))
     }
 
+    /// Mean graph-scheduler dispatches per query (jobs that bounced
+    /// through the runner's dispatch loop; direct cross-engine handoffs
+    /// do not count, so pipelining on must push this strictly down).
+    pub fn mean_dispatch_hops(&self) -> f64 {
+        mean(self.metrics.iter().map(|m| m.dispatch_hops))
+    }
+
     /// Latency percentiles as a JSON value (CI perf-trajectory smoke
     /// artifacts, e.g. `BENCH_PR2.json` / the merged `BENCH_PR4.json`).
     pub fn to_json(&self) -> crate::json::Json {
@@ -86,6 +93,7 @@ impl LoadReport {
             ("p95_ms", num(self.e2e_ms.p95)),
             ("p99_ms", num(self.e2e_ms.p99)),
             ("mean_ms", num(self.e2e_ms.mean)),
+            ("mean_dispatch_hops", num(self.mean_dispatch_hops())),
             ("qps", num(self.qps)),
             ("wall_s", num(self.wall_s)),
         ])
@@ -297,7 +305,7 @@ pub fn run_residency_comparison(
     }
     let drain = || std::thread::sleep(Duration::from_millis(50));
     let kv_snapshot = platform.kv_tokens_snapshot();
-    let wm_snapshot = platform.kv_watermark();
+    let wm_snapshot = platform.kv_watermark_snapshot();
     // Inner closure so the caller's knobs are restored even when a half
     // errors out.
     let result = (|| {
@@ -318,8 +326,68 @@ pub fn run_residency_comparison(
         let (peak_rows_on, evictions_on) = crate::engines::sim::residency_stats();
         Ok(ResidencyComparison { off, on, peak_rows_off, peak_rows_on, evictions_on })
     })();
-    platform.set_kv_watermark(wm_snapshot);
+    platform.restore_kv_watermarks(&wm_snapshot);
     platform.restore_kv_tokens(&kv_snapshot);
+    result
+}
+
+/// The PR7 cross-engine-pipelining comparison: replay one seeded Poisson
+/// trace of a full paper application twice — pipelining off (classic
+/// dispatch loop), then on (direct successor handoff + speculative
+/// template prefill) — with fixed query ids so the two reports' outputs
+/// are comparable bit-for-bit.  The handoff changes *where* successor
+/// jobs are injected, never their content, so any output divergence is a
+/// correctness bug, not noise.  Returns `(off, on)` and restores the
+/// caller's pipeline setting.
+pub fn run_pipeline_comparison(
+    platform: &Platform,
+    app: crate::apps::AppKind,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<(LoadReport, LoadReport)> {
+    use crate::apps::AppKind;
+    use crate::bench::app_prepared;
+    let trace = PoissonTrace::generate(rate, n, seed);
+    let (id_base, core_llm) = match app {
+        AppKind::SearchGen => (0x9C8_0000u64, "llm-lite"),
+        _ => (0x9C7_0000u64, "llm-lite"),
+    };
+    let id_of = |i: usize| id_base + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half (see run_wcp_comparison — the cold prefix prefill must not
+    // bias whichever half runs first).
+    if let Some((e, _)) = app_prepared(app, core_llm, 1, seed).pop() {
+        let _ = platform.run_query(id_base + 0xFFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    let pipe_snapshot = platform.pipeline();
+    // Inner closure so the caller's pipeline setting is restored even
+    // when a half errors out.
+    let result = (|| {
+        platform.set_pipeline(false);
+        // Identity latency corrections for both halves (the comparison
+        // varies the pipelining knob alone).
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain(); // let queued FreeQuery cleanup land before reusing ids
+        let off = run_load_prepared_ids(
+            platform,
+            app_prepared(app, core_llm, n, seed),
+            &trace.arrivals,
+            id_of,
+        )?;
+        platform.set_pipeline(true);
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain();
+        let on = run_load_prepared_ids(
+            platform,
+            app_prepared(app, core_llm, n, seed),
+            &trace.arrivals,
+            id_of,
+        )?;
+        Ok((off, on))
+    })();
+    platform.set_pipeline(pipe_snapshot);
     result
 }
 

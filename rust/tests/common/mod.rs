@@ -72,6 +72,7 @@ pub fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) 
         kv_tokens: 0,
         wcp_discounted: false,
         reply,
+        successors: Vec::new(),
     }
 }
 

@@ -1,0 +1,92 @@
+//! PR7 cross-engine pipelining: direct successor handoff must change
+//! *where* downstream jobs are injected (instance thread → target engine
+//! queue, skipping the graph-scheduler bounce), never *what* they
+//! compute.  The determinism bar is bit-identical outputs between
+//! pipeline off and on over the same seeded trace; the mechanism bar is
+//! a strictly lower mean dispatch-hop count when handoff is on.
+//!
+//! Everything runs on the sim backend (deterministic, no artifacts).
+
+use teola::apps::AppKind;
+use teola::scheduler::{Platform, PlatformConfig};
+use teola::serving::run_pipeline_comparison;
+
+mod common;
+
+/// One platform for both paper apps: search-gen routes its aux
+/// Expand/Summary calls at llm-small, so the pool carries both engines —
+/// the same topology `teola pipeline-bench` uses.
+fn pipeline_platform() -> Platform {
+    let mut cfg = PlatformConfig::sim("llm-lite").with_llm("llm-small", 2, 8);
+    cfg.warm = false;
+    Platform::start(&cfg).expect("platform")
+}
+
+/// Tentpole determinism + mechanism bar on the seeded doc-QA trace:
+/// outputs bit-identical off vs on, mean dispatch hops strictly lower
+/// with handoff on (every eligible single-input successor is injected
+/// engine-side instead of re-entering the graph scheduler).
+#[test]
+fn doc_qa_outputs_identical_and_hops_strictly_lower() {
+    let _guard = common::serial();
+    let platform = pipeline_platform();
+    let (off, on) =
+        run_pipeline_comparison(&platform, AppKind::DocQaAdvanced, 24, 150.0, 0x9C7)
+            .expect("trace");
+    platform.shutdown();
+
+    assert_eq!(off.outputs.len(), 24);
+    assert_eq!(
+        on.outputs, off.outputs,
+        "pipelining must be invisible in outputs (doc-qa-advanced)"
+    );
+    assert!(
+        on.mean_dispatch_hops() < off.mean_dispatch_hops(),
+        "direct handoff must strictly cut dispatch hops: on {:.2} vs off {:.2}",
+        on.mean_dispatch_hops(),
+        off.mean_dispatch_hops()
+    );
+}
+
+/// Same bars on search-gen, whose chain crosses three engine kinds
+/// (web-search → llm aux calls → rerank → llm synthesis) and exercises
+/// the llm→embed and llm→llm handoff templates.
+#[test]
+fn search_gen_outputs_identical_and_hops_strictly_lower() {
+    let _guard = common::serial();
+    let platform = pipeline_platform();
+    let (off, on) =
+        run_pipeline_comparison(&platform, AppKind::SearchGen, 24, 150.0, 0x9C8)
+            .expect("trace");
+    platform.shutdown();
+
+    assert_eq!(off.outputs.len(), 24);
+    assert_eq!(
+        on.outputs, off.outputs,
+        "pipelining must be invisible in outputs (search-gen)"
+    );
+    assert!(
+        on.mean_dispatch_hops() < off.mean_dispatch_hops(),
+        "direct handoff must strictly cut dispatch hops: on {:.2} vs off {:.2}",
+        on.mean_dispatch_hops(),
+        off.mean_dispatch_hops()
+    );
+}
+
+/// Pipelining-on is itself reproducible: two on-runs over the same seed
+/// and fixed query ids emit identical outputs — handoff injection points
+/// and speculative prefill must not introduce run-to-run nondeterminism
+/// in results (latency may vary; values may not).
+#[test]
+fn pipeline_on_runs_are_reproducible() {
+    let _guard = common::serial();
+    let platform = pipeline_platform();
+    let (_, first) =
+        run_pipeline_comparison(&platform, AppKind::DocQaAdvanced, 12, 150.0, 0x7A11)
+            .expect("trace");
+    let (_, second) =
+        run_pipeline_comparison(&platform, AppKind::DocQaAdvanced, 12, 150.0, 0x7A11)
+            .expect("trace");
+    platform.shutdown();
+    assert_eq!(first.outputs, second.outputs, "on-path outputs must be reproducible");
+}

@@ -429,6 +429,7 @@ fn mk_item(rng: &mut Rng, t0: Instant) -> QueueItem {
         wcp_us: rng.range(0, 500_000),
         job: EngineJob::ToolCall { name: "x".into(), cost_us: 0 },
         reply: tx,
+        successors: Vec::new(),
     }
 }
 
@@ -853,5 +854,96 @@ fn kv_pack_unpack_roundtrip_random_geometry() {
             }
         }
         Ok(())
+    });
+}
+
+/// PR7 invariant (speculative template prefill): cancelling a sequence
+/// via `CancelSeq` releases its *entire* KV charge — whether the cancel
+/// lands while the prefill is still queued, mid-chunk, or after the
+/// charge has already been committed resident — and never surfaces a
+/// `Failed` completion toward the speculating query.  A leak here would
+/// let every invalidated speculation permanently shrink the instance's
+/// KV budget.
+#[test]
+fn cancelled_speculative_prefill_releases_all_kv() {
+    check(60, |rng| {
+        use std::collections::HashMap;
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::{Arc, Mutex};
+        use teola::engines::instance::StepExecutor;
+        use teola::engines::llm::SeqStore;
+        use teola::engines::sim::SimLlmExecutor;
+        use teola::engines::{JobOutput, RequestCtx};
+
+        let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+        let mut exec = SimLlmExecutor::new(
+            "llm-lite",
+            store.clone(),
+            3,
+            2,
+            4096,
+            Arc::new(AtomicUsize::new(0)),
+        )
+        .with_kv_budget(Arc::new(AtomicUsize::new(4096)));
+        // Cover both ledgers: reserve-at-admit (PR5) and persistent
+        // residency (PR6), where a retired prefill's charge survives as
+        // a resident entry that only `CancelSeq`/`FreeQuery` can drop.
+        if rng.chance(0.5) {
+            exec = exec.with_kv_watermark(Arc::new(AtomicUsize::new(70)));
+        }
+
+        let (tx, rx) = channel();
+        let ctx = |node: usize| RequestCtx {
+            query: 0xC0FFEE,
+            node,
+            depth: 0,
+            arrival: Instant::now(),
+            wcp_us: 0,
+            kv_tokens: 0,
+            wcp_discounted: false,
+            reply: tx.clone(),
+            successors: Vec::new(),
+        };
+
+        let seq: SeqId = (0xC0FFEE, 7);
+        let len = rng.range_usize(8, 200);
+        let bounced = exec.admit(vec![(
+            ctx(1),
+            EngineJob::Prefill { seq, tokens: vec![9; len], offset: 0, prefix: None },
+        )]);
+        prop_assert(bounced.is_empty(), "prefill admits under a roomy budget")?;
+
+        // Let the prefill make 0..6 chunk steps of progress before the
+        // cancel arrives — sometimes it has already fully retired.
+        let mut emitted = Vec::new();
+        for _ in 0..rng.range_usize(0, 7) {
+            exec.step(&mut |c| emitted.push(c)).map_err(|e| e.to_string())?;
+        }
+
+        let bounced = exec.admit(vec![(ctx(2), EngineJob::CancelSeq { seq })]);
+        prop_assert(bounced.is_empty(), "bookkeeping jobs are never bounced")?;
+        while exec.resident() > 0 {
+            exec.step(&mut |c| emitted.push(c)).map_err(|e| e.to_string())?;
+        }
+
+        prop_assert(
+            exec.kv_occupied() == 0,
+            format!("kv charge leaked after cancel: {}", exec.kv_occupied()),
+        )?;
+        prop_assert(
+            !store.lock().unwrap().contains_key(&seq),
+            "host-side sequence state must be purged",
+        )?;
+        drop(tx);
+        emitted.extend(rx.try_iter());
+        for c in &emitted {
+            prop_assert(
+                !matches!(c.output, JobOutput::Failed(_)),
+                "a cancelled speculation must never surface Failed",
+            )?;
+        }
+        // A post-cancel abort has nothing left to report for this seq.
+        let _ = exec.abort();
+        prop_assert(exec.kv_occupied() == 0, "abort keeps the ledger empty")
     });
 }

@@ -113,6 +113,7 @@ fn prefill_item(q: u64, n_tokens: usize, reply: Sender<Completion>) -> QueueItem
             prefix: None,
         },
         reply,
+        successors: Vec::new(),
     }
 }
 

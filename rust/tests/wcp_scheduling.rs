@@ -37,6 +37,7 @@ fn item(query: u64, node: usize, wcp_us: u64, now: Instant, age_ms: u64) -> Queu
         wcp_us,
         job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
         reply: tx,
+        successors: Vec::new(),
     }
 }
 
