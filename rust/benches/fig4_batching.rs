@@ -38,8 +38,10 @@ fn embed_total_time(platform: &Platform, n: usize, policy: BatchPolicy) -> f64 {
                 wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
+                tenant: teola::engines::UNTENANTED,
                 job: EngineJob::Embed { chunks: vec![chunk] },
                 reply: tx.clone(),
+                successors: Vec::new(),
             })
             .unwrap();
     }
@@ -129,6 +131,7 @@ fn main() {
                     wcp_discounted: false,
                     prefix: None,
                     wcp_us: 0,
+                    tenant: teola::engines::UNTENANTED,
                     job: EngineJob::Prefill {
                         seq: (query, seq),
                         tokens: (0..64).map(|i| 5 + i % 900).collect(),
@@ -136,6 +139,7 @@ fn main() {
                         prefix: None,
                     },
                     reply: tx.clone(),
+                    successors: Vec::new(),
                 })
                 .unwrap();
             }
@@ -162,12 +166,14 @@ fn main() {
                 wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
+                tenant: teola::engines::UNTENANTED,
                 job: EngineJob::Decode {
                     seq: (query, seq),
                     first_token: tok,
                     segments: vec![teola::engines::SegmentSpec { node, len: 20 }],
                 },
                 reply: tx.clone(),
+                successors: Vec::new(),
             };
             // Occupy the instance so A, B and H queue together (the
             // paper's Fig. 7 snapshot has all three pending at once).
@@ -183,6 +189,7 @@ fn main() {
                 wcp_discounted: false,
                 prefix: None,
                 wcp_us: 0,
+                tenant: teola::engines::UNTENANTED,
                 job: EngineJob::Prefill {
                     seq: (dummy_q, 0),
                     tokens: (0..32).map(|i| 5 + i % 900).collect(),
@@ -190,6 +197,7 @@ fn main() {
                     prefix: None,
                 },
                 reply: tx.clone(),
+                successors: Vec::new(),
             })
             .unwrap();
             std::thread::sleep(std::time::Duration::from_millis(2));

@@ -187,6 +187,27 @@ pub fn kv_hetero_prepared(n: usize, seed: u64) -> Vec<(EGraph, u64)> {
     })
 }
 
+/// The PR8 multi-tenant trace behind `BENCH_PR8.json` and
+/// `tests/tenancy.rs`: one e-graph per arrival of a
+/// `workload::MultiTenantTrace`, keyed by the arrival's tenant — the
+/// light tenant ([`crate::serving::TENANT_LIGHT`]) issues short
+/// interactive queries (8-16 token decodes), every other tenant issues
+/// long 64-token batch decodes.  All queries share one instruction
+/// prefix so prefix warming stays tenant-neutral.
+pub fn tenant_mix_prepared(
+    tenants: &[crate::engines::TenantId],
+    seed: u64,
+) -> Vec<(EGraph, u64)> {
+    prepared_graphs(tenants.len(), seed, |i| {
+        let out_tokens = if tenants[i] == crate::serving::TENANT_LIGHT {
+            8 + i % 9
+        } else {
+            64
+        };
+        one_shot_template("llm-lite", "hetero", 24, out_tokens)
+    })
+}
+
 /// Build `n` fully optimized e-graphs of one paper application from the
 /// seeded dataset (Teola scheme, default profiles) — the trace behind
 /// the PR7 pipeline comparison.  No platform needed: graph construction
@@ -231,6 +252,16 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             cfg = cfg.with_llm(aux, 2, 8);
         }
     }
+    apply_env_knobs(&mut cfg);
+    cfg
+}
+
+/// Apply every `TEOLA_*` environment knob onto a platform config — the
+/// single parsing surface shared by the bench harnesses, the CLI, and
+/// the knob round-trip test (`tests/tenancy.rs`), so a knob added here is
+/// automatically honored everywhere.  Unset variables leave the config
+/// untouched; unparseable values warn and are ignored.
+pub fn apply_env_knobs(cfg: &mut PlatformConfig) {
     if let Some(backend) = ExecBackend::from_env() {
         cfg.backend = backend;
     }
@@ -339,7 +370,16 @@ pub fn platform_for_all(apps: &[AppKind], core_llm: &str) -> PlatformConfig {
             }
         }
     }
-    cfg
+    if let Ok(v) = std::env::var("TEOLA_TENANCY") {
+        // Multi-tenant QoS registry; same spec grammar as the CLI's
+        // --tenants flag ("off", "on", or "<id>:w=..,class=..;..").
+        match crate::scheduler::tenancy::TenancyConfig::parse(&v) {
+            Ok(t) => cfg.tenancy = t,
+            Err(e) => {
+                eprintln!("warning: bad TEOLA_TENANCY={v:?}: {e}; ignoring")
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

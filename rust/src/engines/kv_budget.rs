@@ -39,11 +39,12 @@
 
 use std::collections::HashMap;
 
-use crate::engines::{QueryId, SeqId};
+use crate::engines::{QueryId, SeqId, TenantId, UNTENANTED};
 
 /// Per-instance KV token budget: capacity plus the reservation ledger
 /// (in-flight jobs) and the resident ledger (per-sequence KV kept
-/// between jobs; token count, latest WCP priority stamp, last-use tick).
+/// between jobs; token count, latest WCP priority stamp, last-use tick,
+/// owning tenant).
 ///
 /// A capacity of 0 means "unlimited" (the legacy row-slot mode is in
 /// force and the token ledger is maintained only for observability).
@@ -51,12 +52,17 @@ use crate::engines::{QueryId, SeqId};
 pub struct KvBudget {
     capacity: usize,
     reserved: usize,
-    resident: HashMap<SeqId, (usize, u64, u64)>,
+    resident: HashMap<SeqId, (usize, u64, u64, TenantId)>,
     resident_total: usize,
     /// Eviction clock: advanced once per executor step, stamped onto a
     /// sequence's resident entry whenever it is committed or touched, so
     /// [`KvBudget::evict_victim`] can prefer the *stalest* sequence.
     clock: u64,
+    /// Accounting drift: tokens a [`KvBudget::release`] call asked for
+    /// beyond what was reserved (a reserve/release mispairing upstream).
+    /// The old behavior silently saturated; now every clamp is recorded
+    /// so `residency_stats` can surface it and tests can assert it is 0.
+    drift: usize,
 }
 
 impl KvBudget {
@@ -68,6 +74,7 @@ impl KvBudget {
             resident: HashMap::new(),
             resident_total: 0,
             clock: 0,
+            drift: 0,
         }
     }
 
@@ -150,11 +157,26 @@ impl KvBudget {
     /// Release up to `tokens` (retirement); returns the amount actually
     /// released.  Saturating: the ledger never goes negative — a return
     /// value smaller than `tokens` means a reserve/release mispairing
-    /// upstream (asserted against in the invariant tests).
+    /// upstream, recorded in [`KvBudget::accounting_drift`] (and asserted
+    /// against in the invariant tests).
     pub fn release(&mut self, tokens: usize) -> usize {
         let freed = tokens.min(self.reserved);
         self.reserved -= freed;
+        self.drift = self.drift.saturating_add(tokens - freed);
         freed
+    }
+
+    /// Cumulative over-release tokens (reserve/release mispairings) since
+    /// construction or the last [`KvBudget::take_drift`]/reset.  0 means
+    /// every release paired exactly with a reservation.
+    pub fn accounting_drift(&self) -> usize {
+        self.drift
+    }
+
+    /// Read-and-clear the drift counter (harvested into the executors'
+    /// residency stats once per step).
+    pub fn take_drift(&mut self) -> usize {
+        std::mem::take(&mut self.drift)
     }
 
     /// Move `tokens` of `seq`'s in-flight reservation into the resident
@@ -164,20 +186,37 @@ impl KvBudget {
     /// saturating, the resident side is credited the full charge, so the
     /// resident ledger always reflects what the store actually holds.
     pub fn commit_resident(&mut self, seq: SeqId, tokens: usize, prio: u64) {
+        self.commit_resident_as(seq, tokens, prio, UNTENANTED);
+    }
+
+    /// [`KvBudget::commit_resident`] attributing the residency to a
+    /// tenant (multi-tenant KV quotas): quota checks and the quota-aware
+    /// eviction policy sum residency per tenant through this stamp.
+    pub fn commit_resident_as(&mut self, seq: SeqId, tokens: usize, prio: u64, tenant: TenantId) {
         self.release(tokens);
         let clock = self.clock;
-        let e = self.resident.entry(seq).or_insert((0, prio, clock));
+        let e = self.resident.entry(seq).or_insert((0, prio, clock, tenant));
         e.0 = e.0.saturating_add(tokens);
         e.1 = prio;
         e.2 = clock;
+        e.3 = tenant;
         self.resident_total = self.resident_total.saturating_add(tokens);
+    }
+
+    /// Resident tokens summed per tenant (quota enforcement input).
+    pub fn resident_by_tenant(&self) -> HashMap<TenantId, usize> {
+        let mut out: HashMap<TenantId, usize> = HashMap::new();
+        for &(tokens, _, _, tenant) in self.resident.values() {
+            *out.entry(tenant).or_default() += tokens;
+        }
+        out
     }
 
     /// Free one sequence's residency (watermark eviction / swap-out).
     /// Returns the tokens freed (0 when `seq` was not resident).
     pub fn free_seq(&mut self, seq: SeqId) -> usize {
         match self.resident.remove(&seq) {
-            Some((tokens, _, _)) => {
+            Some((tokens, _, _, _)) => {
                 self.resident_total = self.resident_total.saturating_sub(tokens);
                 tokens
             }
@@ -208,20 +247,36 @@ impl KvBudget {
     /// deterministic `SeqId` tie-break so victim choice is reproducible
     /// across runs.  Returns the victim and its resident token count.
     pub fn evict_victim(&self, active: &[SeqId]) -> Option<(SeqId, usize)> {
-        let mut best: Option<(SeqId, usize, u64, u64)> = None;
-        for (&seq, &(tokens, prio, tick)) in &self.resident {
+        self.evict_victim_quota(active, &|_| false)
+    }
+
+    /// [`KvBudget::evict_victim`] with per-tenant quota awareness: a
+    /// sequence whose owning tenant `over_quota` reports as over its
+    /// resident-token soft cap is *always* preferred over any
+    /// within-quota sequence; staleness/priority/SeqId order applies
+    /// within each group.  `|_| false` degenerates to the tenant-blind
+    /// policy exactly.
+    pub fn evict_victim_quota(
+        &self,
+        active: &[SeqId],
+        over_quota: &dyn Fn(TenantId) -> bool,
+    ) -> Option<(SeqId, usize)> {
+        let mut best: Option<(SeqId, usize, (bool, u64, u64))> = None;
+        for (&seq, &(tokens, prio, tick, tenant)) in &self.resident {
             if active.contains(&seq) {
                 continue;
             }
-            let better = match best {
+            // `false < true`, so over-quota tenants sort first.
+            let key = (!over_quota(tenant), tick, prio);
+            let better = match &best {
                 None => true,
-                Some((bseq, _, bprio, btick)) => (tick, prio, seq) < (btick, bprio, bseq),
+                Some((bseq, _, bkey)) => (key, seq) < (*bkey, *bseq),
             };
             if better {
-                best = Some((seq, tokens, prio, tick));
+                best = Some((seq, tokens, key));
             }
         }
-        best.map(|(seq, tokens, _, _)| (seq, tokens))
+        best.map(|(seq, tokens, _)| (seq, tokens))
     }
 
     /// Drop every reservation and all residency (instance death: nothing
@@ -234,6 +289,7 @@ impl KvBudget {
         self.resident.clear();
         self.resident_total = 0;
         self.clock = 0;
+        self.drift = 0;
         held
     }
 
@@ -283,6 +339,25 @@ mod tests {
         assert_eq!(b.reserved(), 0);
         assert_eq!(b.release(1), 0);
         assert_eq!(b.reserved(), 0);
+        // The mispair is no longer invisible: both clamps are recorded.
+        assert_eq!(b.accounting_drift(), 5 + 1);
+    }
+
+    #[test]
+    fn accounting_drift_records_mispairs_and_clears() {
+        let mut b = KvBudget::new(10);
+        b.reserve(6);
+        assert_eq!(b.release(6), 6);
+        assert_eq!(b.accounting_drift(), 0, "exact pairing leaves no drift");
+        b.reserve(2);
+        b.release(5);
+        assert_eq!(b.accounting_drift(), 3);
+        assert_eq!(b.take_drift(), 3, "take reads and clears");
+        assert_eq!(b.accounting_drift(), 0);
+        b.release(1);
+        assert_eq!(b.accounting_drift(), 1);
+        b.reset();
+        assert_eq!(b.accounting_drift(), 0, "instance reset forgives drift");
     }
 
     #[test]
@@ -393,6 +468,41 @@ mod tests {
         // Touching a non-resident sequence is a harmless no-op.
         b.touch_resident((9, 9));
         assert_eq!(b.resident_count(), 2);
+    }
+
+    #[test]
+    fn quota_eviction_prefers_over_quota_tenant() {
+        let mut b = KvBudget::new(100);
+        b.reserve(24);
+        // Tenant 1's sequence is the stalest (tick 0); tenant 2 commits
+        // later ticks.
+        b.commit_resident_as((1, 0), 8, 10, 1);
+        b.advance_clock();
+        b.commit_resident_as((2, 0), 8, 10, 2);
+        b.advance_clock();
+        b.commit_resident_as((2, 1), 8, 10, 2);
+        // Tenant-blind: staleness wins — tenant 1's sequence goes first.
+        assert_eq!(b.evict_victim(&[]), Some(((1, 0), 8)));
+        // Tenant 2 over quota: its stalest sequence is preferred despite
+        // tenant 1 being staler overall.
+        assert_eq!(b.evict_victim_quota(&[], &|t| t == 2), Some(((2, 0), 8)));
+        // Active over-quota sequences are still protected.
+        assert_eq!(
+            b.evict_victim_quota(&[(2, 0), (2, 1)], &|t| t == 2),
+            Some(((1, 0), 8))
+        );
+        // Per-tenant residency sums feed the quota predicate.
+        let by_tenant = b.resident_by_tenant();
+        assert_eq!(by_tenant.get(&1), Some(&8));
+        assert_eq!(by_tenant.get(&2), Some(&16));
+    }
+
+    #[test]
+    fn untenanted_commit_defaults_to_tenant_zero() {
+        let mut b = KvBudget::new(100);
+        b.reserve(8);
+        b.commit_resident((5, 0), 8, 1);
+        assert_eq!(b.resident_by_tenant().get(&UNTENANTED), Some(&8));
     }
 
     #[test]

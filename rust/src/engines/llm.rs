@@ -274,6 +274,9 @@ pub struct LlmExecutor {
     /// `SimLlmExecutor`): admit bounces over-budget jobs back to the
     /// instance backlog.
     kv: KvBudget,
+    /// Shared tenancy handle: when multi-tenant QoS is on, eviction
+    /// prefers victims from tenants over their KV quota.
+    tenancy: Option<Arc<crate::scheduler::tenancy::SharedTenancy>>,
 }
 
 impl LlmExecutor {
@@ -324,6 +327,7 @@ impl LlmExecutor {
             kv_capacity: Arc::new(AtomicUsize::new(0)),
             kv_watermark: Arc::new(AtomicUsize::new(0)),
             kv: KvBudget::new(0),
+            tenancy: None,
         })
     }
 
@@ -339,6 +343,16 @@ impl LlmExecutor {
     /// of KV capacity; 0 keeps PR5 reserve-at-admit semantics).
     pub fn with_kv_watermark(mut self, watermark: Arc<AtomicUsize>) -> LlmExecutor {
         self.kv_watermark = watermark;
+        self
+    }
+
+    /// Bind the executor to the shared tenancy handle so watermark
+    /// preemption can prefer over-quota tenants as eviction victims.
+    pub fn with_tenancy(
+        mut self,
+        tenancy: Arc<crate::scheduler::tenancy::SharedTenancy>,
+    ) -> LlmExecutor {
+        self.tenancy = Some(tenancy);
         self
     }
 
@@ -369,7 +383,17 @@ impl LlmExecutor {
             if let Some(rb) = self.decode_batch.as_ref() {
                 active.extend(rb.rows.iter().flatten().map(|r| r.seq));
             }
-            let Some((victim, _tokens)) = self.kv.evict_victim(&active) else {
+            let victim = match &self.tenancy {
+                Some(tn) if tn.enabled() => {
+                    let by_tenant = self.kv.resident_by_tenant();
+                    self.kv.evict_victim_quota(&active, &|t| {
+                        tn.kv_quota_tokens(t, cap)
+                            .map_or(false, |q| by_tenant.get(&t).copied().unwrap_or(0) > q)
+                    })
+                }
+                _ => self.kv.evict_victim(&active),
+            };
+            let Some((victim, _tokens)) = victim else {
                 break;
             };
             out.resident_freed += self.kv.free_seq(victim);
@@ -704,7 +728,7 @@ impl LlmExecutor {
                     // The prefilled KV stays resident for the sequence's
                     // decode: move the charge to the resident ledger
                     // instead of releasing it.
-                    self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                    self.kv.commit_resident_as(r.seq, r.kv_res, r.ctx.wcp_us, r.ctx.tenant);
                     out.resident_added += r.kv_res;
                 } else {
                     self.kv.release(r.kv_res);
@@ -744,7 +768,7 @@ impl LlmExecutor {
         // per surviving row) and retirement commits, both applied after
         // the resident-batch borrow ends.
         let mut grown_kv = 0usize;
-        let mut commits: Vec<(SeqId, usize, u64)> = Vec::new();
+        let mut commits: Vec<(SeqId, usize, u64, crate::engines::TenantId)> = Vec::new();
         {
             let rb = self.decode_batch.as_mut().unwrap();
             let bb = rb.bb;
@@ -828,7 +852,7 @@ impl LlmExecutor {
                     let len = (rb.positions[b] as usize + 1).min(s_cap);
                     self.store.lock().unwrap().insert(row.seq, SeqState { kv: kv_seq, len });
                     if residency {
-                        commits.push((row.seq, row.kv_res, row.ctx.wcp_us));
+                        commits.push((row.seq, row.kv_res, row.ctx.wcp_us, row.ctx.tenant));
                     } else {
                         released_kv += row.kv_res;
                     }
@@ -846,10 +870,10 @@ impl LlmExecutor {
         }
         self.kv.reserve(grown_kv);
         self.kv.release(released_kv);
-        for (seq, tokens, prio) in commits {
+        for (seq, tokens, prio, tenant) in commits {
             // The grown KV stays resident for the query's next hop; only
             // FreeQuery or eviction returns it.
-            self.kv.commit_resident(seq, tokens, prio);
+            self.kv.commit_resident_as(seq, tokens, prio, tenant);
             out.resident_added += tokens;
         }
         if drained && self.pending_decodes.is_empty() {
@@ -1067,6 +1091,7 @@ pub fn spawn_llm_engine(
     prefix_slots: Arc<AtomicUsize>,
     kv_tokens: Arc<AtomicUsize>,
     kv_watermark: Arc<AtomicUsize>,
+    tenancy: Arc<crate::scheduler::tenancy::SharedTenancy>,
 ) -> (Vec<Instance>, SeqStore) {
     use crate::engines::sim::{ExecBackend, SimLlmExecutor};
 
@@ -1083,6 +1108,7 @@ pub fn spawn_llm_engine(
                 let slots_c = prefix_slots.clone();
                 let kv_c = kv_tokens.clone();
                 let wm_c = kv_watermark.clone();
+                let tn_c = tenancy.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
@@ -1090,7 +1116,8 @@ pub fn spawn_llm_engine(
                         let m = Rc::new(Manifest::load(dir_c)?);
                         Ok(LlmExecutor::new(m, &variant_c, store_c, warm, slots_c)?
                             .with_kv_budget(kv_c)
-                            .with_kv_watermark(wm_c))
+                            .with_kv_watermark(wm_c)
+                            .with_tenancy(tn_c))
                     },
                     event_tx.clone(),
                     ready_tx.clone(),
@@ -1109,6 +1136,7 @@ pub fn spawn_llm_engine(
                 let slots_c = prefix_slots.clone();
                 let kv_c = kv_tokens.clone();
                 let wm_c = kv_watermark.clone();
+                let tn_c = tenancy.clone();
                 let inst = spawn_stepped_instance(
                     i,
                     format!("llm-{variant}-{i}"),
@@ -1118,7 +1146,8 @@ pub fn spawn_llm_engine(
                                 &variant_c, store_c, sep, eos, max_seq, slots_c,
                             )
                             .with_kv_budget(kv_c)
-                            .with_kv_watermark(wm_c),
+                            .with_kv_watermark(wm_c)
+                            .with_tenancy(tn_c),
                         )
                     },
                     event_tx.clone(),

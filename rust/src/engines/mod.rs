@@ -42,6 +42,14 @@ pub type QueryId = u64;
 pub type NodeId = usize;
 /// LLM sequence identifier: (query, call index within the query).
 pub type SeqId = (QueryId, u32);
+/// Tenant identifier (multi-tenant QoS, PR8): stamped onto every query
+/// at submission and carried through queue -> batch -> instance so fair
+/// queueing, KV quotas and admission control can attribute work.
+pub type TenantId = u32;
+/// The default tenant: single-tenant traffic and bookkeeping jobs.  With
+/// tenancy disabled every request carries this and nothing downstream
+/// looks at it.
+pub const UNTENANTED: TenantId = 0;
 
 /// The engine types of the paper's applications.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -254,6 +262,10 @@ pub struct RequestCtx {
     /// to `wcp_us` (applied at most once per item — see
     /// `engine_sched::rediscount_resident_prefixes`).
     pub wcp_discounted: bool,
+    /// Owning tenant of the request (multi-tenant QoS): survives
+    /// requeue-on-instance-death and rides successor handoff plans so
+    /// pipelined work is accounted to the same tenant as its parent.
+    pub tenant: TenantId,
     /// Completion channel of the owning query's graph scheduler.
     pub reply: Sender<Completion>,
     /// Direct cross-engine handoff plans riding with the job (pipelining

@@ -71,19 +71,24 @@ impl ExecBackend {
 /// signatures.
 static SIM_PEAK_RESIDENT_ROWS: AtomicUsize = AtomicUsize::new(0);
 static SIM_EVICTIONS: AtomicUsize = AtomicUsize::new(0);
+static SIM_ACCOUNTING_DRIFT: AtomicUsize = AtomicUsize::new(0);
 
 /// Reset the sim residency counters (start of a measurement leg).
 pub fn reset_residency_stats() {
     SIM_PEAK_RESIDENT_ROWS.store(0, Ordering::Relaxed);
     SIM_EVICTIONS.store(0, Ordering::Relaxed);
+    SIM_ACCOUNTING_DRIFT.store(0, Ordering::Relaxed);
 }
 
 /// `(peak concurrent prefill+decode rows on any sim LLM executor step,
-/// watermark evictions)` since the last [`reset_residency_stats`].
-pub fn residency_stats() -> (usize, usize) {
+/// watermark evictions, executor-ledger accounting drift)` since the last
+/// [`reset_residency_stats`].  Drift is reserve/release mispairing tokens
+/// ([`KvBudget::accounting_drift`]) — always 0 on a healthy run.
+pub fn residency_stats() -> (usize, usize, usize) {
     (
         SIM_PEAK_RESIDENT_ROWS.load(Ordering::Relaxed),
         SIM_EVICTIONS.load(Ordering::Relaxed),
+        SIM_ACCOUNTING_DRIFT.load(Ordering::Relaxed),
     )
 }
 
@@ -206,6 +211,10 @@ pub struct SimLlmExecutor {
     /// overflow it are bounced back to the instance backlog (vLLM-style
     /// admission control); an empty ledger accepts anything (liveness).
     kv: KvBudget,
+    /// Shared tenancy handle (multi-tenant QoS): when set and enabled,
+    /// residency commits are attributed to the owning tenant and
+    /// watermark preemption prefers over-quota tenants' sequences.
+    tenancy: Option<Arc<crate::scheduler::tenancy::SharedTenancy>>,
 }
 
 impl SimLlmExecutor {
@@ -236,6 +245,7 @@ impl SimLlmExecutor {
             kv_capacity: Arc::new(AtomicUsize::new(0)),
             kv_watermark: Arc::new(AtomicUsize::new(0)),
             kv: KvBudget::new(0),
+            tenancy: None,
         }
     }
 
@@ -251,6 +261,16 @@ impl SimLlmExecutor {
     /// of KV capacity; 0 keeps PR5 reserve-at-admit semantics).
     pub fn with_kv_watermark(mut self, watermark: Arc<AtomicUsize>) -> SimLlmExecutor {
         self.kv_watermark = watermark;
+        self
+    }
+
+    /// Bind the executor to the shared tenancy handle (multi-tenant QoS:
+    /// per-tenant residency attribution and quota-aware eviction).
+    pub fn with_tenancy(
+        mut self,
+        tenancy: Arc<crate::scheduler::tenancy::SharedTenancy>,
+    ) -> SimLlmExecutor {
+        self.tenancy = Some(tenancy);
         self
     }
 
@@ -289,7 +309,23 @@ impl SimLlmExecutor {
                 .map(|r| r.seq)
                 .chain(self.decodes.iter().map(|r| r.seq))
                 .collect();
-            let Some((victim, _tokens)) = self.kv.evict_victim(&active) else {
+            // Quota-aware victim choice (multi-tenant QoS): an over-quota
+            // tenant's sequences are shed first, so one tenant's KV
+            // appetite evicts its own residency before anyone else's.
+            // The per-tenant sums are recomputed per eviction — each
+            // freed sequence may bring its tenant back under quota.
+            let victim = match &self.tenancy {
+                Some(tn) if tn.enabled() => {
+                    let by_tenant = self.kv.resident_by_tenant();
+                    self.kv.evict_victim_quota(&active, &|t| {
+                        tn.kv_quota_tokens(t, cap).map_or(false, |q| {
+                            by_tenant.get(&t).copied().unwrap_or(0) > q
+                        })
+                    })
+                }
+                _ => self.kv.evict_victim(&active),
+            };
+            let Some((victim, _tokens)) = victim else {
                 break;
             };
             let freed = self.kv.free_seq(victim);
@@ -430,8 +466,9 @@ impl SimLlmExecutor {
             if residency {
                 // The prefilled KV stays on the instance between jobs:
                 // move the charge from reserved to resident against the
-                // sequence instead of releasing it.
-                self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                // sequence instead of releasing it, attributed to the
+                // owning tenant for quota enforcement.
+                self.kv.commit_resident_as(r.seq, r.kv_res, r.ctx.wcp_us, r.ctx.tenant);
                 out.resident_added += r.kv_res;
             } else {
                 self.kv.release(r.kv_res);
@@ -515,7 +552,7 @@ impl SimLlmExecutor {
                 if residency {
                     // The grown KV stays resident for the query's next
                     // hop; only FreeQuery or eviction returns it.
-                    self.kv.commit_resident(r.seq, r.kv_res, r.ctx.wcp_us);
+                    self.kv.commit_resident_as(r.seq, r.kv_res, r.ctx.wcp_us, r.ctx.tenant);
                     out.resident_added += r.kv_res;
                 } else {
                     self.kv.release(r.kv_res);
@@ -666,6 +703,16 @@ impl StepExecutor for SimLlmExecutor {
             self.step_prefill(emit, &mut out);
         } else if !self.decodes.is_empty() {
             self.step_decode(emit, &mut out);
+        }
+        // Harvest accounting drift (reserve/release mispairings) into the
+        // process-wide counter.  The executor's own ledger must always
+        // pair exactly — every release is the echo of a reservation this
+        // executor made — so any drift here is a bug, asserted loudly in
+        // debug builds and surfaced via `residency_stats` in release.
+        let drift = self.kv.take_drift();
+        if drift > 0 {
+            SIM_ACCOUNTING_DRIFT.fetch_add(drift, Ordering::Relaxed);
+            debug_assert_eq!(drift, 0, "KV reserve/release mispairing: {drift} tokens over-released");
         }
         out.resident = self.resident();
         Ok(out)
@@ -826,6 +873,7 @@ mod tests {
             wcp_us: 0,
             kv_tokens: 0,
             wcp_discounted: false,
+            tenant: crate::engines::UNTENANTED,
             reply,
             successors: Vec::new(),
         }

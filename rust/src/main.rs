@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--pipeline on|off] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola pipeline-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--pipeline on|off] [--tenants <spec>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola pipeline-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola tenant-bench [--n <light-queries>] [--rate <light-rps>] [--seed <s>] [--json-out <path>]"
     );
     std::process::exit(2);
 }
@@ -169,6 +169,18 @@ fn main() {
                     std::process::exit(2);
                 }
                 None => {}
+            }
+            if let Some(v) = parse_flag(&args, "--tenants") {
+                // Multi-tenant QoS registry: "off", "on", or a
+                // ";"-separated "<id>:w=N,class=interactive|batch,
+                // deadline_ms=N,kv_pct=N" list.
+                match teola::scheduler::tenancy::TenancyConfig::parse(&v) {
+                    Ok(t) => cfg.tenancy = t,
+                    Err(e) => {
+                        eprintln!("bad --tenants value {v:?}: {e}");
+                        std::process::exit(2);
+                    }
+                }
             }
             let platform = Platform::start(&cfg).expect("platform");
             let run = TraceRun {
@@ -336,6 +348,56 @@ fn main() {
                     ("doc_qa_on", doc_on.to_json()),
                     ("search_gen_off", sg_off.to_json()),
                     ("search_gen_on", sg_on.to_json()),
+                ]);
+                std::fs::write(&path, doc.to_string()).expect("write json report");
+                println!("wrote {path}");
+            }
+        }
+        Some("tenant-bench") => {
+            // The PR8 multi-tenant fairness smoke: a seeded
+            // aggressive-vs-interactive trace — the heavy Batch tenant at
+            // 10x the light Interactive tenant's load — replayed with
+            // tenancy off and on (sim backend, single LLM instance so the
+            // heavy backlog is what the light tenant queues behind).
+            // Fairness on must hold the light tenant's p95; per-tenant
+            // percentiles + goodput land in BENCH_PR8.json in CI.
+            let n: usize = parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let rate: f64 =
+                parse_flag(&args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(6.0);
+            let seed: u64 =
+                parse_flag(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(0x9C9);
+            let mut cfg = PlatformConfig::sim("llm-lite");
+            cfg.llms[0].instances = 1;
+            cfg.warm = false;
+            let platform = Platform::start(&cfg).expect("platform");
+            let (off, on) =
+                teola::serving::run_tenancy_comparison(&platform, n, rate, seed).expect("trace");
+            platform.shutdown();
+            for (label, r) in [("fairness off", &off), ("fairness on ", &on)] {
+                for t in &r.tenants {
+                    println!(
+                        "{label} tenant {}: issued {}, shed {}, goodput {:.2}, p50 {:.1} ms, p95 {:.1}, p99 {:.1}",
+                        t.tenant, t.issued, t.shed, t.goodput,
+                        t.e2e_ms.p50, t.e2e_ms.p95, t.e2e_ms.p99
+                    );
+                }
+            }
+            let light = |r: &teola::serving::LoadReport| {
+                r.tenants
+                    .iter()
+                    .find(|t| t.tenant == teola::serving::TENANT_LIGHT)
+                    .map(|t| (t.e2e_ms.p95, t.goodput))
+                    .unwrap_or((0.0, 0.0))
+            };
+            let (p95_off, good_off) = light(&off);
+            let (p95_on, good_on) = light(&on);
+            println!(
+                "light tenant p95: {p95_off:.1} ms off -> {p95_on:.1} ms on; goodput {good_off:.2} -> {good_on:.2}"
+            );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                let doc = teola::json::obj(vec![
+                    ("fairness_off", off.to_json()),
+                    ("fairness_on", on.to_json()),
                 ]);
                 std::fs::write(&path, doc.to_string()).expect("write json report");
                 println!("wrote {path}");

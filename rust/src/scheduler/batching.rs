@@ -30,7 +30,10 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
-use crate::engines::{Completion, EngineJob, JobOutput, PrefixFp, QueryId, SegmentSpec, SeqId};
+use crate::engines::{
+    Completion, EngineJob, JobOutput, PrefixFp, QueryId, SegmentSpec, SeqId, TenantId,
+};
+use crate::scheduler::tenancy::{TenantRank, TenantRanks};
 
 /// Invocation-bundle identity: `(query, node)`.  Kept as a structured key
 /// — the packed `(query << 20) | node` form collided when a node id
@@ -143,6 +146,10 @@ pub struct SuccessorPlan {
     pub template: SuccessorTemplate,
     /// Remaining critical-path stamp carried across the handoff.
     pub wcp_us: u64,
+    /// Owning tenant of the parent request: the materialized successor is
+    /// accounted to the same tenant's fair-queueing ledger, KV quota and
+    /// admission class as its parent (multi-tenant QoS).
+    pub tenant: TenantId,
     /// Fired-once latch, set by the instance thread when the trigger
     /// completion materializes this plan: duplicate stream deliveries
     /// must not inject the successor twice (a double decode admission
@@ -195,6 +202,7 @@ pub fn materialize_successor(
         wcp_discounted: false,
         prefix: None,
         wcp_us: plan.wcp_us,
+        tenant: plan.tenant,
         job,
         reply: reply.clone(),
         successors: Vec::new(),
@@ -229,6 +237,11 @@ pub struct QueueItem {
     /// Drives weighted-critical-path bucket ordering; the engine scheduler
     /// may discount it when the item's prefix is already resident.
     pub wcp_us: u64,
+    /// Owning tenant of the request (multi-tenant QoS): consulted by the
+    /// ranked batch-formation variants to order query buckets *between*
+    /// tenants (start-time fair queueing + deadline boost) while WCP /
+    /// arrival order is preserved *within* each tenant.
+    pub tenant: TenantId,
     pub job: EngineJob,
     pub reply: Sender<Completion>,
     /// Direct-handoff plans for ready successors (pipelining; empty when
@@ -268,6 +281,23 @@ pub fn form_batch(
     wcp: bool,
     unit: SlotUnit,
 ) -> Vec<QueueItem> {
+    form_batch_ranked(queue, policy, budget, wcp, unit, None)
+}
+
+/// [`form_batch`] with an optional per-tenant rank map (multi-tenant
+/// QoS).  With `Some(ranks)` under `TopoAware`, query buckets are ordered
+/// by their tenant's `(deadline-boost, SFQ virtual start)` rank *first*
+/// and WCP/arrival order second — fair queueing between tenants, WCP
+/// within each.  `None` is bit-for-bit the tenant-blind path; the FIFO
+/// baselines ignore ranks entirely.
+pub fn form_batch_ranked(
+    queue: &mut Vec<QueueItem>,
+    policy: BatchPolicy,
+    budget: usize,
+    wcp: bool,
+    unit: SlotUnit,
+    ranks: Option<&TenantRanks>,
+) -> Vec<QueueItem> {
     if queue.is_empty() {
         return Vec::new();
     }
@@ -295,7 +325,7 @@ pub fn form_batch(
         BatchPolicy::TopoAware => {
             // Algorithm 2 Event 2, restricted to the highest-priority
             // item's class.
-            let mut order = topo_order(queue, wcp);
+            let mut order = topo_order(queue, wcp, ranks);
             if let Some(&first) = order.first() {
                 let class = job_class(&queue[first].job);
                 order.retain(|&i| job_class(&queue[i].job) == class);
@@ -319,10 +349,22 @@ pub fn form_continuous_admission(
     wcp: bool,
     unit: SlotUnit,
 ) -> Vec<QueueItem> {
+    form_continuous_admission_ranked(queue, spare, wcp, unit, None)
+}
+
+/// [`form_continuous_admission`] with the optional per-tenant rank map
+/// (see [`form_batch_ranked`]); `None` is the tenant-blind path.
+pub fn form_continuous_admission_ranked(
+    queue: &mut Vec<QueueItem>,
+    spare: usize,
+    wcp: bool,
+    unit: SlotUnit,
+    ranks: Option<&TenantRanks>,
+) -> Vec<QueueItem> {
     if queue.is_empty() || spare == 0 {
         return Vec::new();
     }
-    let order = topo_order(queue, wcp);
+    let order = topo_order(queue, wcp, ranks);
     take_budget(queue, order, spare, true, false, unit)
 }
 
@@ -341,7 +383,21 @@ pub fn head_needs_drained_instance(
     budget: usize,
     unit: SlotUnit,
 ) -> bool {
-    head_index(queue, policy, wcp).map_or(false, |h| unit.cost(&queue[h]) > budget)
+    head_needs_drained_instance_ranked(queue, policy, wcp, budget, unit, None)
+}
+
+/// [`head_needs_drained_instance`] consulting the ranked head (see
+/// [`form_batch_ranked`]); `None` is the tenant-blind path.
+pub fn head_needs_drained_instance_ranked(
+    queue: &[QueueItem],
+    policy: BatchPolicy,
+    wcp: bool,
+    budget: usize,
+    unit: SlotUnit,
+    ranks: Option<&TenantRanks>,
+) -> bool {
+    head_index_ranked(queue, policy, wcp, ranks)
+        .map_or(false, |h| unit.cost(&queue[h]) > budget)
 }
 
 /// Index of the item `form_batch` would dispatch first under `policy` —
@@ -349,11 +405,22 @@ pub fn head_needs_drained_instance(
 /// prefix fingerprint *before* forming a batch so instance choice (prefix
 /// affinity) can precede batch formation.
 pub fn head_index(queue: &[QueueItem], policy: BatchPolicy, wcp: bool) -> Option<usize> {
+    head_index_ranked(queue, policy, wcp, None)
+}
+
+/// [`head_index`] with the optional per-tenant rank map (see
+/// [`form_batch_ranked`]); `None` is the tenant-blind path.
+pub fn head_index_ranked(
+    queue: &[QueueItem],
+    policy: BatchPolicy,
+    wcp: bool,
+    ranks: Option<&TenantRanks>,
+) -> Option<usize> {
     if queue.is_empty() {
         return None;
     }
     match policy {
-        BatchPolicy::TopoAware => topo_order(queue, wcp).first().copied(),
+        BatchPolicy::TopoAware => topo_order(queue, wcp, ranks).first().copied(),
         BatchPolicy::BlindTO | BatchPolicy::PerInvocation => (0..queue.len())
             .min_by_key(|&i| queue[i].arrival),
     }
@@ -366,7 +433,13 @@ pub fn head_index(queue: &[QueueItem], policy: BatchPolicy, wcp: bool) -> Option
 /// other queries' contributive primitives come before a query's
 /// lower-depth siblings (Fig. 7); the sweep continues level by level —
 /// idle slots help nobody.
-fn topo_order(queue: &[QueueItem], wcp: bool) -> Vec<usize> {
+///
+/// With `ranks` set (multi-tenant QoS), the bucket's tenant rank —
+/// `(deadline-boost, SFQ virtual start, tenant)`, ascending — dominates
+/// the ordering; WCP/arrival order is preserved *within* each tenant.  A
+/// tenant missing from the map sorts last (it has no fair-queueing claim
+/// this pass).  `None` keeps the tenant-blind order bit-for-bit.
+fn topo_order(queue: &[QueueItem], wcp: bool, ranks: Option<&TenantRanks>) -> Vec<usize> {
     let mut buckets: BTreeMap<QueryId, Vec<usize>> = BTreeMap::new();
     for (i, it) in queue.iter().enumerate() {
         buckets.entry(it.query).or_default().push(i);
@@ -374,7 +447,7 @@ fn topo_order(queue: &[QueueItem], wcp: bool) -> Vec<usize> {
     let now = Instant::now();
     // BTreeMap iteration is query-ascending, and both sorts below are
     // stable, so full ties break deterministically by query id.
-    let mut bucket_list: Vec<(Instant, u64, Vec<usize>)> = buckets
+    let mut bucket_list: Vec<(TenantRank, Instant, u64, Vec<usize>)> = buckets
         .into_values()
         .map(|idxs| {
             let earliest = idxs.iter().map(|&i| queue[i].arrival).min().unwrap();
@@ -386,17 +459,25 @@ fn topo_order(queue: &[QueueItem], wcp: bool) -> Vec<usize> {
             } else {
                 0
             };
-            (earliest, effective, idxs)
+            // All items of one query share a tenant (stamped at spawn).
+            let rank = match ranks {
+                Some(r) => {
+                    let t = queue[idxs[0]].tenant;
+                    r.get(&t).copied().unwrap_or((u64::MAX, u64::MAX, t))
+                }
+                None => (0, 0, 0),
+            };
+            (rank, earliest, effective, idxs)
         })
         .collect();
     if wcp {
-        bucket_list.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        bucket_list.sort_by(|a, b| a.0.cmp(&b.0).then(b.2.cmp(&a.2)).then(a.1.cmp(&b.1)));
     } else {
-        bucket_list.sort_by_key(|(t, _, _)| *t);
+        bucket_list.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
     }
     let mut order = Vec::new();
     let mut remaining: Vec<Vec<usize>> =
-        bucket_list.into_iter().map(|(_, _, idxs)| idxs).collect();
+        bucket_list.into_iter().map(|(_, _, _, idxs)| idxs).collect();
     while remaining.iter().any(|b| !b.is_empty()) {
         for bucket in remaining.iter_mut() {
             if bucket.is_empty() {
@@ -477,6 +558,7 @@ mod tests {
             wcp_discounted: false,
             prefix: None,
             wcp_us: 0,
+            tenant: crate::engines::UNTENANTED,
             job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
             reply: tx,
             successors: Vec::new(),
@@ -505,10 +587,12 @@ mod tests {
                 segments: vec![SegmentSpec { node: 5, len: 8 }],
             },
             wcp_us: 1234,
+            tenant: 7,
             fired: std::cell::Cell::new(false),
         };
         let it = materialize_successor(&plan, 9, &JobOutput::Tokens(vec![42]), &tx).unwrap();
         assert_eq!((it.query, it.node, it.wcp_us), (9, 5, 1234));
+        assert_eq!(it.tenant, 7, "handoff successor accounted to the parent's tenant");
         assert_eq!(it.tokens, 8, "decode estimate is the planned segment sum");
         match &it.job {
             EngineJob::Decode { seq, first_token, segments } => {
@@ -709,5 +793,54 @@ mod tests {
         let batch = form_batch(&mut q, BatchPolicy::TopoAware, 16, false, SlotUnit::Rows);
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].rows, 100);
+    }
+
+    fn tenant_item(tenant: TenantId, query: u64, node: usize, t0: Instant, ms: u64) -> QueueItem {
+        let mut it = item(query, node, 2, 1, t0, ms);
+        it.tenant = tenant;
+        it
+    }
+
+    #[test]
+    fn tenant_ranks_dominate_bucket_order_but_preserve_order_within_tenant() {
+        let t0 = Instant::now();
+        // Tenant 2's query arrived *later* but holds the lower SFQ virtual
+        // start (it is behind on served work), so its bucket goes first;
+        // tenant 1's two queries keep their arrival order between them.
+        let q = vec![
+            tenant_item(1, 10, 1, t0, 0),
+            tenant_item(1, 11, 2, t0, 1),
+            tenant_item(2, 20, 3, t0, 2),
+        ];
+        let mut ranks = TenantRanks::new();
+        ranks.insert(1, (1, 500, 1));
+        ranks.insert(2, (1, 100, 2));
+        let order = topo_order(&q, false, Some(&ranks));
+        let picked: Vec<u64> = order.iter().map(|&i| q[i].query).collect();
+        assert_eq!(picked, vec![20, 10, 11]);
+        // A deadline-boosted tenant (boost 0) overtakes any unboosted one
+        // regardless of virtual start.
+        ranks.insert(1, (0, 500, 1));
+        let order = topo_order(&q, false, Some(&ranks));
+        let picked: Vec<u64> = order.iter().map(|&i| q[i].query).collect();
+        assert_eq!(picked, vec![10, 11, 20]);
+        // No ranks = bit-identical to the tenant-blind arrival order.
+        let order = topo_order(&q, false, None);
+        let picked: Vec<u64> = order.iter().map(|&i| q[i].query).collect();
+        assert_eq!(picked, vec![10, 11, 20]);
+    }
+
+    #[test]
+    fn unranked_tenant_sorts_last_and_ranked_head_tracks_ranks() {
+        let t0 = Instant::now();
+        let q = vec![
+            tenant_item(9, 90, 1, t0, 0), // not in the rank map
+            tenant_item(2, 20, 2, t0, 1),
+        ];
+        let mut ranks = TenantRanks::new();
+        ranks.insert(2, (1, 100, 2));
+        assert_eq!(head_index_ranked(&q, BatchPolicy::TopoAware, false, Some(&ranks)), Some(1));
+        // Tenant-blind head is the earliest arrival.
+        assert_eq!(head_index(&q, BatchPolicy::TopoAware, false), Some(0));
     }
 }

@@ -45,10 +45,11 @@
 //! A dying instance's reserved rows/tokens are released before its batch
 //! is requeued, so the revived queue never double-counts capacity.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::engines::instance::Instance;
 use crate::engines::kv_budget::{self, KvBudget};
@@ -56,7 +57,11 @@ use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::DeviceModel;
 use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
 use crate::scheduler::batching::{
-    form_batch, form_continuous_admission, head_index, BatchPolicy, QueueItem, SlotUnit,
+    form_batch_ranked, form_continuous_admission_ranked, head_index_ranked, BatchPolicy,
+    QueueItem, SlotUnit,
+};
+use crate::scheduler::tenancy::{
+    boost_class, FairQueue, QosClass, SharedTenancy, TenantId, TenantRanks, TenantSpec,
 };
 
 /// One engine's scheduler state (runs on its own thread).
@@ -121,6 +126,16 @@ pub struct EngineScheduler {
     /// updated on dispatch with the same (fingerprint order, budget) the
     /// executor applies, so affinity predictions track actual residency.
     prefix_homes: Vec<PrefixRegistry<()>>,
+    /// Shared tenancy handle (multi-tenant QoS): per-tenant weights, SLO
+    /// classes and the runtime-switchable enable flag.  Only consulted
+    /// under `TopoAware` with tenancy enabled — otherwise the dispatch
+    /// path is bit-for-bit the tenant-blind behavior.
+    tenancy: Arc<SharedTenancy>,
+    /// Start-time fair-queueing ledger over served cost-weighted work,
+    /// one per engine scheduler: charged at dispatch in the active slot
+    /// denomination, read as each tenant's virtual start for bucket
+    /// ordering between tenants.
+    fair: FairQueue,
     queue: Vec<QueueItem>,
 }
 
@@ -141,6 +156,7 @@ impl EngineScheduler {
         kv_tokens: Arc<AtomicUsize>,
         kv_watermark: Arc<AtomicUsize>,
         mode: ExecMode,
+        tenancy: Arc<SharedTenancy>,
     ) -> EngineScheduler {
         let n = instances.len();
         let prefix_homes =
@@ -166,6 +182,8 @@ impl EngineScheduler {
             resident_mirror: vec![0; n],
             dead: vec![false; n],
             prefix_homes,
+            tenancy,
+            fair: FairQueue::new(),
             queue: Vec::new(),
         }
     }
@@ -271,6 +289,7 @@ impl EngineScheduler {
                     wcp_us: item.wcp_us,
                     kv_tokens: 0,
                     wcp_discounted: item.wcp_discounted,
+                    tenant: item.tenant,
                     reply: item.reply.clone(),
                     successors: Vec::new(),
                 };
@@ -355,6 +374,18 @@ impl EngineScheduler {
         let residency = token_mode && self.kv_watermark.load(Ordering::Relaxed) > 0;
         let unit = if token_mode { SlotUnit::Tokens } else { SlotUnit::Rows };
         let budget = if token_mode { kv_budget } else { slots };
+        // Multi-tenant QoS: Teola-side (TopoAware) gating like the other
+        // scheduler features; with the knob off every call below takes
+        // the `None`-ranked path, bit-for-bit the tenant-blind behavior.
+        let tenancy_on = policy == BatchPolicy::TopoAware && self.tenancy.enabled();
+        let specs = if tenancy_on { Some(self.tenancy.specs()) } else { None };
+        // Admission control: when an Interactive tenant's measured queue
+        // delay has breached its deadline, shed queued Batch-class work
+        // (failed loudly, never silently dropped) so Interactive goodput
+        // is protected instead of letting p99 explode.
+        if let Some(specs) = &specs {
+            self.shed_batch_on_slo_breach(specs);
+        }
         let window =
             Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
         // A mid-run `prefix_slots` retune must reach the routing mirrors
@@ -387,7 +418,13 @@ impl EngineScheduler {
                 self.fail_queue();
                 break;
             }
-            let head = head_index(&self.queue, policy, wcp);
+            // Tenant ranks are recomputed every iteration: each dispatched
+            // batch advances the charged tenant's virtual start, so the
+            // next batch may belong to a different tenant (that is the
+            // fair-queueing interleave).
+            let ranks: Option<TenantRanks> =
+                specs.as_ref().map(|s| self.tenant_ranks(s));
+            let head = head_index_ranked(&self.queue, policy, wcp, ranks.as_ref());
             let want_prefix = if prefix_routing {
                 head.and_then(|i| self.queue[i].prefix)
             } else {
@@ -412,14 +449,15 @@ impl EngineScheduler {
                 break;
             }
             let items = if mid_flight {
-                form_continuous_admission(
+                form_continuous_admission_ranked(
                     &mut self.queue,
                     budget.saturating_sub(in_flight),
                     wcp,
                     unit,
+                    ranks.as_ref(),
                 )
             } else {
-                form_batch(&mut self.queue, policy, budget, wcp, unit)
+                form_batch_ranked(&mut self.queue, policy, budget, wcp, unit, ranks.as_ref())
             };
             if items.is_empty() {
                 break;
@@ -451,6 +489,9 @@ impl EngineScheduler {
             }
             let mut rows = 0usize;
             let mut reserved = 0usize;
+            // Fair-queueing charges for this batch, applied only after a
+            // successful send (a dead-instance requeue served nothing).
+            let mut fair_charges: Vec<(TenantId, usize)> = Vec::new();
             let jobs: Vec<(RequestCtx, EngineJob)> = items
                 .into_iter()
                 .map(|i| {
@@ -484,6 +525,13 @@ impl EngineScheduler {
                     };
                     rows += i.rows.max(1);
                     reserved += charge;
+                    if tenancy_on {
+                        // Served work in the active denomination: the SFQ
+                        // ledger advances this tenant's virtual start so
+                        // under contention other tenants' buckets take the
+                        // next batches (weighted interleave).
+                        fair_charges.push((i.tenant, unit.cost(&i)));
+                    }
                     (
                         RequestCtx {
                             query: i.query,
@@ -493,6 +541,7 @@ impl EngineScheduler {
                             wcp_us: i.wcp_us,
                             kv_tokens: charge,
                             wcp_discounted: i.wcp_discounted,
+                            tenant: i.tenant,
                             reply: i.reply,
                             successors: i.successors,
                         },
@@ -544,6 +593,7 @@ impl EngineScheduler {
                         wcp_discounted: ctx.wcp_discounted,
                         prefix,
                         wcp_us: ctx.wcp_us,
+                        tenant: ctx.tenant,
                         job,
                         reply: ctx.reply,
                         successors: ctx.successors,
@@ -553,7 +603,76 @@ impl EngineScheduler {
             }
             self.loads[inst] += rows;
             self.kv[inst].reserve(reserved);
+            if let Some(specs) = &specs {
+                for (t, cost) in fair_charges {
+                    let w = specs.get(&t).map_or(1, |s| s.weight);
+                    self.fair.charge(t, cost, w);
+                }
+            }
         }
+    }
+
+    /// Per-tenant rank map for one dispatch iteration: for every tenant
+    /// with queued work, `(deadline boost, SFQ virtual start, tenant)` —
+    /// ascending, so a boosted tenant beats any unboosted one and ties go
+    /// to the tenant furthest behind on served work.  Boost is driven by
+    /// the tenant's *longest-waiting* queued item against its deadline.
+    fn tenant_ranks(&self, specs: &HashMap<TenantId, TenantSpec>) -> TenantRanks {
+        let now = Instant::now();
+        let mut waited: HashMap<TenantId, u64> = HashMap::new();
+        for it in &self.queue {
+            let w = now.saturating_duration_since(it.arrival).as_micros() as u64;
+            let e = waited.entry(it.tenant).or_insert(0);
+            *e = (*e).max(w);
+        }
+        waited
+            .into_iter()
+            .map(|(t, w)| {
+                let spec =
+                    specs.get(&t).cloned().unwrap_or_else(|| TenantSpec::default_for(t));
+                (t, (boost_class(&spec, w), self.fair.vstart(t), t))
+            })
+            .collect()
+    }
+
+    /// Admission control (multi-tenant QoS): when any queued Interactive
+    /// item has already waited past its tenant's deadline — the measured
+    /// signal that queue delay exceeds the SLO budget — every queued
+    /// Batch-class item is shed with a loud `Failed` completion, freeing
+    /// the whole budget for the Interactive backlog.  Tenants without a
+    /// spec (including `UNTENANTED`) default to Interactive with no
+    /// deadline: never shed, never a breach trigger.
+    fn shed_batch_on_slo_breach(&mut self, specs: &HashMap<TenantId, TenantSpec>) {
+        let now = Instant::now();
+        let class_of = |t: TenantId| specs.get(&t).map_or(QosClass::Interactive, |s| s.class);
+        let breached = self.queue.iter().any(|it| {
+            let Some(spec) = specs.get(&it.tenant) else { return false };
+            spec.class == QosClass::Interactive
+                && spec.deadline_ms.map_or(false, |d| {
+                    now.saturating_duration_since(it.arrival).as_millis() as u64 > d
+                })
+        });
+        if !breached || !self.queue.iter().any(|it| class_of(it.tenant) == QosClass::Batch) {
+            return;
+        }
+        let mut kept = Vec::with_capacity(self.queue.len());
+        for it in self.queue.drain(..) {
+            if class_of(it.tenant) == QosClass::Batch {
+                let _ = it.reply.send(Completion {
+                    query: it.query,
+                    node: it.node,
+                    output: JobOutput::Failed(format!(
+                        "shed by admission control on '{}': Interactive SLO breached, \
+                         Batch work bounced to protect goodput",
+                        self.name
+                    )),
+                    timing: ExecTiming::default(),
+                });
+            } else {
+                kept.push(it);
+            }
+        }
+        self.queue = kept;
     }
 
     /// In-flight load of an instance in the active denomination: KV
@@ -657,8 +776,8 @@ fn batch_window_expired(items: &[QueueItem], window: Duration) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::batching::form_batch;
     use std::sync::mpsc::channel;
-    use std::time::Instant;
 
     fn item_at(query: u64, node: usize, arrival: Instant, job: EngineJob) -> QueueItem {
         let (tx, rx) = channel();
@@ -675,6 +794,7 @@ mod tests {
             wcp_discounted: false,
             prefix: None,
             wcp_us: 0,
+            tenant: crate::engines::UNTENANTED,
             job,
             reply: tx,
             successors: Vec::new(),

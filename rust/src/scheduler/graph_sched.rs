@@ -10,7 +10,10 @@ use std::sync::mpsc::{channel, Sender};
 use std::time::Instant;
 
 use crate::engines::prefix::{prefix_fingerprint, MIN_PREFIX_LEN};
-use crate::engines::{Completion, EngineJob, JobOutput, NodeId, PrefixFp, QueryId, SegmentSpec};
+use crate::engines::{
+    Completion, EngineJob, JobOutput, NodeId, PrefixFp, QueryId, SegmentSpec, TenantId,
+    UNTENANTED,
+};
 use crate::error::{Result, TeolaError};
 use crate::graph::egraph::EGraph;
 use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
@@ -61,6 +64,11 @@ pub struct QueryRunner {
     /// items (direct engine-to-engine handoff) and speculate template
     /// prefills.  Off = today's queue re-entry behavior, bit-for-bit.
     pub pipeline: bool,
+    /// Owning tenant (multi-tenant QoS): stamped onto every queue item
+    /// and successor plan this runner emits, so fair queueing, KV quotas
+    /// and admission control attribute all of the query's work — including
+    /// engine-side handoffs — to the right tenant.
+    pub tenant: TenantId,
 }
 
 enum NodeState {
@@ -96,12 +104,27 @@ impl QueryRunner {
     /// users keep the classic dispatch loop; `Platform` opts in via
     /// [`QueryRunner::with_pipeline`].
     pub fn new(query: QueryId, egraph: EGraph, routers: EngineRouter, sep: i32) -> QueryRunner {
-        QueryRunner { query, egraph, routers, sep, max_prompt: 224, pipeline: false }
+        QueryRunner {
+            query,
+            egraph,
+            routers,
+            sep,
+            max_prompt: 224,
+            pipeline: false,
+            tenant: UNTENANTED,
+        }
     }
 
     /// Enable/disable cross-engine pipelining for this query.
     pub fn with_pipeline(mut self, on: bool) -> QueryRunner {
         self.pipeline = on;
+        self
+    }
+
+    /// Stamp the owning tenant (multi-tenant QoS).  Direct `QueryRunner`
+    /// users stay untenanted; `Platform::spawn_query_as` opts in.
+    pub fn with_tenant(mut self, tenant: TenantId) -> QueryRunner {
+        self.tenant = tenant;
         self
     }
 
@@ -290,6 +313,7 @@ impl QueryRunner {
                     // (`wcp_priority_us` uses saturating arithmetic, so
                     // MAX cannot overflow the aging term.)
                     wcp_us: u64::MAX,
+                    tenant: self.tenant,
                     job: EngineJob::FreeQuery { query: self.query },
                     reply: tx,
                     successors: Vec::new(),
@@ -721,6 +745,7 @@ impl QueryRunner {
                 engine: sender.clone(),
                 template: SuccessorTemplate::Decode { seq: (self.query, seq), segments: segs },
                 wcp_us,
+                tenant: self.tenant,
                 fired: std::cell::Cell::new(false),
             });
             handed_off.entry(v).or_default().push(d);
@@ -765,6 +790,7 @@ impl QueryRunner {
                     engine: sender.clone(),
                     template: SuccessorTemplate::Embed,
                     wcp_us,
+                    tenant: self.tenant,
                     fired: std::cell::Cell::new(false),
                 });
                 handed_off.entry(m).or_default().push(e);
@@ -895,6 +921,7 @@ impl QueryRunner {
                     wcp_discounted: false,
                     prefix: None,
                     wcp_us,
+                    tenant: self.tenant,
                     job,
                     reply: tx.clone(),
                     successors: Vec::new(),
@@ -939,6 +966,7 @@ impl QueryRunner {
                 wcp_discounted: false,
                 prefix: None,
                 wcp_us: u64::MAX,
+                tenant: self.tenant,
                 job: EngineJob::CancelSeq { seq: (self.query, seq) },
                 reply: dead_tx,
                 successors: Vec::new(),
@@ -981,6 +1009,7 @@ impl QueryRunner {
                 wcp_discounted: false,
                 prefix,
                 wcp_us,
+                tenant: self.tenant,
                 job,
                 reply: tx.clone(),
                 successors,

@@ -11,6 +11,7 @@ pub mod engine_sched;
 pub mod graph_sched;
 pub mod object_store;
 pub mod platform;
+pub mod tenancy;
 pub mod wcp;
 
 pub use batching::{
@@ -22,6 +23,10 @@ pub use engine_sched::{rediscount_resident_prefixes, EngineScheduler};
 pub use graph_sched::{QueryMetrics, QueryRunner};
 pub use object_store::ObjectStore;
 pub use platform::{EngineSpec, Platform, PlatformConfig};
+pub use tenancy::{
+    boost_class, FairQueue, QosClass, SharedTenancy, TenancyConfig, TenantId, TenantRank,
+    TenantRanks, TenantSpec, UNTENANTED,
+};
 pub use wcp::{
     latency_correction, node_cost_us, observe_latency, reset_latency_feedback,
     static_node_cost_us, WcpTracker,

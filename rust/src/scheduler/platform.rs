@@ -26,6 +26,7 @@ use crate::runtime::Manifest;
 use crate::scheduler::batching::{BatchPolicy, QueueItem};
 use crate::scheduler::engine_sched::EngineScheduler;
 use crate::scheduler::graph_sched::{QueryMetrics, QueryRunner};
+use crate::scheduler::tenancy::{SharedTenancy, TenancyConfig, TenantId, UNTENANTED};
 
 /// One engine pool to provision.
 #[derive(Debug, Clone)]
@@ -112,6 +113,16 @@ pub struct PlatformConfig {
     /// switchable at runtime via [`Platform::set_pipeline`].  Off, the
     /// dispatch path is bit-for-bit the pre-PR7 loop.
     pub pipeline: bool,
+    /// Multi-tenant QoS (PR8): tenant registry with per-tenant fair-queue
+    /// weights, SLO classes (`Interactive`/`Batch` with optional deadline)
+    /// and soft KV quotas.  Disabled (the default) the dispatch stack is
+    /// bit-for-bit identical to single-tenant operation; enabled, the LLM
+    /// engine schedulers layer start-time fair queueing across tenants on
+    /// top of WCP ordering within each tenant, shed `Batch` work when an
+    /// `Interactive` deadline is breached, and watermark eviction prefers
+    /// over-quota tenants.  Set via `TEOLA_TENANCY` / `run --tenants`;
+    /// switchable at runtime via [`Platform::set_tenancy`].
+    pub tenancy: TenancyConfig,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -142,6 +153,7 @@ impl PlatformConfig {
             kv_watermark: 0,
             kv_watermark_overrides: Vec::new(),
             pipeline: true,
+            tenancy: TenancyConfig::default(),
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -200,6 +212,9 @@ pub struct Platform {
     /// Cross-engine pipelining switch read by `run_query`/`spawn_query`
     /// when constructing runners (see `PlatformConfig::pipeline`).
     pipeline: Arc<AtomicBool>,
+    /// Shared multi-tenant QoS registry (see `PlatformConfig::tenancy`),
+    /// consulted by every engine scheduler and LLM executor.
+    tenancy: Arc<SharedTenancy>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -233,6 +248,7 @@ impl Platform {
         let prefix_slots = Arc::new(AtomicUsize::new(cfg.prefix_slots));
         let wcp = Arc::new(AtomicBool::new(cfg.wcp));
         let pipeline = Arc::new(AtomicBool::new(cfg.pipeline));
+        let tenancy = Arc::new(SharedTenancy::new(&cfg.tenancy));
         // Residency watermark: the global value, with the last matching
         // per-kind override winning for engines of that kind.
         let kv_watermark_base = Arc::new(AtomicUsize::new(cfg.kv_watermark));
@@ -253,6 +269,7 @@ impl Platform {
 
         let mut kv_tokens: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
         let mut kv_defaults: HashMap<String, usize> = HashMap::new();
+        let sched_tenancy = tenancy.clone();
         let mut spawn_sched = |name: String,
                                instances: Vec<crate::engines::instance::Instance>,
                                event_rx,
@@ -276,6 +293,7 @@ impl Platform {
                 kv,
                 wm,
                 mode,
+                sched_tenancy.clone(),
             );
             let h = std::thread::Builder::new()
                 .name(format!("sched-{name}"))
@@ -314,6 +332,7 @@ impl Platform {
                 prefix_slots.clone(),
                 kv.clone(),
                 wm.clone(),
+                tenancy.clone(),
             );
             expected_ready += instances.len();
             spawn_sched(
@@ -449,6 +468,7 @@ impl Platform {
             kv_watermarks,
             kv_watermark_base,
             pipeline,
+            tenancy,
             profiles,
             manifest,
             sep,
@@ -576,6 +596,33 @@ impl Platform {
         self.pipeline.load(Ordering::Relaxed)
     }
 
+    /// Reconfigure multi-tenant QoS at runtime: replaces the tenant
+    /// registry (weights, SLO classes, KV quotas) and flips fair queueing
+    /// + admission control on or off.  The handle is shared by every
+    /// engine scheduler and LLM executor, so the change applies to
+    /// dispatch ordering, shedding and eviction at once.  Like the other
+    /// PR knobs it is only effective under `TopoAware`; disabled, the
+    /// dispatch path is bit-for-bit the single-tenant one.
+    pub fn set_tenancy(&self, cfg: &TenancyConfig) {
+        self.tenancy.configure(cfg);
+    }
+
+    /// Whether multi-tenant QoS is currently enabled.
+    pub fn tenancy_enabled(&self) -> bool {
+        self.tenancy.enabled()
+    }
+
+    /// Snapshot the current tenancy configuration so a comparison harness
+    /// that pins the knob can restore the caller's exact registry.
+    pub fn tenancy_snapshot(&self) -> TenancyConfig {
+        self.tenancy.snapshot()
+    }
+
+    /// Restore a configuration captured by [`Platform::tenancy_snapshot`].
+    pub fn restore_tenancy(&self, snapshot: &TenancyConfig) {
+        self.tenancy.configure(snapshot);
+    }
+
     /// Current KV token budget of one LLM engine (None for engines
     /// without token accounting, e.g. the encoders).
     pub fn kv_tokens_of(&self, engine: &str) -> Option<usize> {
@@ -639,14 +686,29 @@ impl Platform {
         query: QueryId,
         egraph: EGraph,
     ) -> JoinHandle<Result<(Value, QueryMetrics)>> {
+        self.spawn_query_as(query, egraph, UNTENANTED)
+    }
+
+    /// Spawn a query stamped with a tenant identity: every job the runner
+    /// dispatches (including requeues and pipelined successor handoffs)
+    /// carries the tenant through the engine schedulers' fair-queueing,
+    /// admission-control and KV-quota paths.  With tenancy disabled the
+    /// stamp is inert.
+    pub fn spawn_query_as(
+        &self,
+        query: QueryId,
+        egraph: EGraph,
+        tenant: TenantId,
+    ) -> JoinHandle<Result<(Value, QueryMetrics)>> {
         let routers = self.routers();
         let sep = self.sep;
         let pipeline = self.pipeline_effective();
         std::thread::Builder::new()
             .name(format!("query-{query}"))
             .spawn(move || {
-                let runner =
-                    QueryRunner::new(query, egraph, routers, sep).with_pipeline(pipeline);
+                let runner = QueryRunner::new(query, egraph, routers, sep)
+                    .with_pipeline(pipeline)
+                    .with_tenant(tenant);
                 let t0 = Instant::now();
                 let (v, mut m) = runner.run()?;
                 m.e2e_us = t0.elapsed().as_micros() as u64;

@@ -1,0 +1,470 @@
+//! Multi-tenant QoS (PR8): tenant specs, SLO classes, start-time fair
+//! queueing, and the shared runtime handle the platform threads through
+//! every engine scheduler and stepped executor.
+//!
+//! Millions of users sharing one engine pool means WCP ordering alone is
+//! not enough: a single aggressive tenant floods every queue and the
+//! scheduler, blind to tenant identity, serves its work FIFO-within-WCP.
+//! This module supplies the missing inputs:
+//!
+//! * [`TenantSpec`] — per-tenant weight, [`QosClass`]
+//!   (`Interactive`/`Batch`), optional latency deadline, and an optional
+//!   soft KV-residency quota (percent of instance KV capacity);
+//! * [`FairQueue`] — a start-time-fair-queueing (SFQ) ledger over served
+//!   cost-weighted work: each dispatch charges `cost / weight` of virtual
+//!   time to the tenant, and batch formation orders tenants by their
+//!   virtual *start* tag, so long-run served work converges to the weight
+//!   ratio while an idle tenant re-enters at the current virtual time
+//!   (no stored-up credit, no starvation);
+//! * [`boost_class`] — the deadline-aware boost: an `Interactive` tenant
+//!   whose queued work has burned more than half its deadline jumps ahead
+//!   of every unboosted tenant regardless of SFQ tags;
+//! * [`SharedTenancy`] — the runtime handle (`Arc`-shared by the
+//!   platform, every engine scheduler, and both stepped executors) whose
+//!   enabled flag and spec table are retunable mid-run, mirroring the
+//!   other PR knobs.
+//!
+//! Everything is inert unless the platform enables tenancy
+//! (`PlatformConfig::tenancy` / `TEOLA_TENANCY` / `run --tenants`): with
+//! the gate off the schedulers never consult this module and the dispatch
+//! order is bit-for-bit the pre-PR8 one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+pub use crate::engines::{TenantId, UNTENANTED};
+
+/// Service-level class of a tenant's traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosClass {
+    /// Latency-sensitive traffic: eligible for the deadline boost and
+    /// protected by admission control — never shed.
+    Interactive,
+    /// Throughput traffic: no deadline boost, and the class admission
+    /// control sheds first when `Interactive` SLOs are blowing.
+    Batch,
+}
+
+impl QosClass {
+    /// Stable lowercase name (spec strings, JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+/// One tenant's QoS contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub id: TenantId,
+    /// Fair-queueing weight (served-work share; >= 1).
+    pub weight: u32,
+    pub class: QosClass,
+    /// End-to-end latency SLO in milliseconds (`Interactive` tenants):
+    /// drives the deadline boost, admission control, and the goodput
+    /// (SLO-attainment) metric.  `None` = best-effort.
+    pub deadline_ms: Option<u64>,
+    /// Soft cap on this tenant's resident KV, as a percent of each
+    /// instance's KV token capacity: an over-quota tenant becomes the
+    /// preferred eviction victim at watermark preemption (the quota never
+    /// blocks admission — it only orders evictions).
+    pub kv_quota_pct: Option<u8>,
+}
+
+impl TenantSpec {
+    /// The contract of a tenant nobody configured (and of
+    /// [`UNTENANTED`] traffic): weight 1, `Interactive` with no
+    /// deadline — never boosted, never shed.
+    pub fn default_for(id: TenantId) -> TenantSpec {
+        TenantSpec {
+            id,
+            weight: 1,
+            class: QosClass::Interactive,
+            deadline_ms: None,
+            kv_quota_pct: None,
+        }
+    }
+}
+
+/// Platform-level tenancy configuration (the `PlatformConfig::tenancy`
+/// knob).  Disabled + empty by default: the off-path is bit-for-bit the
+/// tenant-blind scheduler.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenancyConfig {
+    pub enabled: bool,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenancyConfig {
+    /// Parse the knob's spec string (`TEOLA_TENANCY` / `run --tenants`).
+    ///
+    /// Grammar: `""`, `"off"` or `"0"` disable tenancy; `"on"` enables it
+    /// with every tenant on defaults; otherwise a `;`-separated list of
+    /// `<id>:key=value,...` entries with keys `w` (weight, >= 1), `class`
+    /// (`interactive`|`batch`), `deadline_ms`, and `kv_pct` (0-100).
+    /// Example: `1:w=4,class=interactive,deadline_ms=250;2:w=1,class=batch`.
+    pub fn parse(spec: &str) -> Result<TenancyConfig, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("off") || spec == "0" {
+            return Ok(TenancyConfig::default());
+        }
+        if spec.eq_ignore_ascii_case("on") {
+            return Ok(TenancyConfig { enabled: true, tenants: Vec::new() });
+        }
+        let mut tenants = Vec::new();
+        for entry in spec.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (id_s, rest) = match entry.split_once(':') {
+                Some((i, r)) => (i.trim(), r),
+                None => (entry, ""),
+            };
+            let id: TenantId = id_s
+                .parse()
+                .map_err(|_| format!("bad tenant id {id_s:?} in {entry:?}"))?;
+            let mut t = TenantSpec::default_for(id);
+            for kv in rest.split(',').filter(|s| !s.trim().is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected key=value, got {kv:?}"))?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "w" | "weight" => {
+                        let w: u32 =
+                            v.parse().map_err(|_| format!("bad weight {v:?}"))?;
+                        t.weight = w.max(1);
+                    }
+                    "class" => {
+                        t.class = match v.to_ascii_lowercase().as_str() {
+                            "interactive" => QosClass::Interactive,
+                            "batch" => QosClass::Batch,
+                            other => return Err(format!("unknown class {other:?}")),
+                        };
+                    }
+                    "deadline_ms" => {
+                        t.deadline_ms =
+                            Some(v.parse().map_err(|_| format!("bad deadline {v:?}"))?);
+                    }
+                    "kv_pct" => {
+                        let pct: u8 =
+                            v.parse().map_err(|_| format!("bad kv_pct {v:?}"))?;
+                        if pct > 100 {
+                            return Err(format!("kv_pct {pct} > 100"));
+                        }
+                        t.kv_quota_pct = Some(pct);
+                    }
+                    other => return Err(format!("unknown tenant key {other:?}")),
+                }
+            }
+            if tenants.iter().any(|e: &TenantSpec| e.id == id) {
+                return Err(format!("duplicate tenant id {id}"));
+            }
+            tenants.push(t);
+        }
+        Ok(TenancyConfig { enabled: true, tenants })
+    }
+
+    /// Render back to the spec-string grammar `parse` accepts (knob
+    /// round-trips and snapshot dumps).
+    pub fn to_spec(&self) -> String {
+        if !self.enabled {
+            return "off".into();
+        }
+        if self.tenants.is_empty() {
+            return "on".into();
+        }
+        let mut parts = Vec::new();
+        for t in &self.tenants {
+            let mut s = format!("{}:w={},class={}", t.id, t.weight, t.class.name());
+            if let Some(d) = t.deadline_ms {
+                s.push_str(&format!(",deadline_ms={d}"));
+            }
+            if let Some(p) = t.kv_quota_pct {
+                s.push_str(&format!(",kv_pct={p}"));
+            }
+            parts.push(s);
+        }
+        parts.join(";")
+    }
+}
+
+/// Fixed-point scale of the SFQ virtual clock: one unit of served work at
+/// weight 1 advances a tenant's finish tag by this many virtual ticks, so
+/// integer division by the weight keeps sub-unit resolution.
+pub const SFQ_SCALE: u64 = 1024;
+
+/// Start-time fair queueing over served cost-weighted work.
+///
+/// One ledger per engine scheduler.  `vstart(t)` is where tenant `t`'s
+/// next work would begin on the virtual clock: the maximum of the global
+/// virtual time and the tenant's own finish tag.  Ordering backlogged
+/// tenants by ascending `vstart` and charging each dispatch
+/// `cost * SFQ_SCALE / weight` yields the classic SFQ guarantees —
+/// long-run served work proportional to weights, bounded unfairness per
+/// busy period, and no starvation (an idle tenant resumes at the current
+/// virtual time instead of replaying its idle credit).
+#[derive(Debug, Clone, Default)]
+pub struct FairQueue {
+    vtime: u64,
+    vfinish: HashMap<TenantId, u64>,
+}
+
+impl FairQueue {
+    /// Empty ledger at virtual time zero.
+    pub fn new() -> FairQueue {
+        FairQueue::default()
+    }
+
+    /// Virtual start tag of tenant `t`'s next dispatch.
+    pub fn vstart(&self, t: TenantId) -> u64 {
+        self.vfinish.get(&t).copied().unwrap_or(0).max(self.vtime)
+    }
+
+    /// Account `cost` units of served work (rows or KV tokens — the
+    /// engine's batching denomination) to tenant `t` at `weight`.
+    pub fn charge(&mut self, t: TenantId, cost: usize, weight: u32) {
+        let start = self.vstart(t);
+        let w = u64::from(weight.max(1));
+        let finish =
+            start.saturating_add((cost.max(1) as u64).saturating_mul(SFQ_SCALE) / w);
+        self.vfinish.insert(t, finish);
+        self.vtime = start;
+    }
+
+    /// Forget everything (comparison-harness hygiene between halves).
+    pub fn reset(&mut self) {
+        self.vtime = 0;
+        self.vfinish.clear();
+    }
+}
+
+/// Deadline-aware boost class of a queued item whose tenant is `spec`
+/// and whose oldest queued work has waited `waited_us`: `0` (dispatch
+/// ahead of every unboosted tenant) once an `Interactive` tenant has
+/// burned more than half its deadline in queue, else `1`.  `Batch` and
+/// deadline-free tenants are never boosted.
+pub fn boost_class(spec: &TenantSpec, waited_us: u64) -> u64 {
+    match (spec.class, spec.deadline_ms) {
+        (QosClass::Interactive, Some(deadline_ms)) => {
+            if waited_us.saturating_mul(2) >= deadline_ms.saturating_mul(1000) {
+                0
+            } else {
+                1
+            }
+        }
+        _ => 1,
+    }
+}
+
+/// Per-tenant ordering key for one batch-formation pass, ascending:
+/// boost class first (deadline-pressed `Interactive` tenants beat
+/// everything), then the SFQ virtual start tag (weighted fair share),
+/// then the tenant id as a deterministic tie-break.
+pub type TenantRank = (u64, u64, TenantId);
+
+/// Ranks for every tenant present in a queue, prepared by the engine
+/// scheduler once per formation pass and consulted by
+/// `batching::topo_order` to sort query buckets *between* tenants while
+/// WCP/arrival ordering is preserved *within* each tenant.
+pub type TenantRanks = HashMap<TenantId, TenantRank>;
+
+/// The shared runtime handle: enabled flag plus the spec table, both
+/// retunable mid-run.  One `Arc<SharedTenancy>` is held by the platform,
+/// every engine scheduler, and both stepped executors, so a retune
+/// applies to ordering, shedding, and KV-quota eviction at once.
+#[derive(Debug, Default)]
+pub struct SharedTenancy {
+    enabled: AtomicBool,
+    specs: Mutex<HashMap<TenantId, TenantSpec>>,
+}
+
+impl SharedTenancy {
+    /// Handle initialized from a platform config.
+    pub fn new(cfg: &TenancyConfig) -> SharedTenancy {
+        let t = SharedTenancy::default();
+        t.configure(cfg);
+        t
+    }
+
+    /// Replace the whole configuration (runtime retune / restore).
+    pub fn configure(&self, cfg: &TenancyConfig) {
+        let mut specs = self.specs.lock().unwrap();
+        specs.clear();
+        for t in &cfg.tenants {
+            specs.insert(t.id, t.clone());
+        }
+        drop(specs);
+        self.enabled.store(cfg.enabled, Ordering::Relaxed);
+    }
+
+    /// Whether tenancy is currently requested (the effective state in a
+    /// scheduler also requires the `TopoAware` policy, like every other
+    /// PR knob).
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the full configuration (tenants sorted by id, so
+    /// comparison harnesses can snapshot/restore deterministically).
+    pub fn snapshot(&self) -> TenancyConfig {
+        let specs = self.specs.lock().unwrap();
+        let mut tenants: Vec<TenantSpec> = specs.values().cloned().collect();
+        tenants.sort_by_key(|t| t.id);
+        TenancyConfig { enabled: self.enabled(), tenants }
+    }
+
+    /// The contract of tenant `t`: its configured spec, or the default
+    /// (weight 1, `Interactive`, no deadline) when nobody configured it.
+    pub fn spec_of(&self, t: TenantId) -> TenantSpec {
+        self.specs
+            .lock()
+            .unwrap()
+            .get(&t)
+            .cloned()
+            .unwrap_or_else(|| TenantSpec::default_for(t))
+    }
+
+    /// Clone of the spec table (one lock per formation pass, not one per
+    /// item).
+    pub fn specs(&self) -> HashMap<TenantId, TenantSpec> {
+        self.specs.lock().unwrap().clone()
+    }
+
+    /// Tenant `t`'s soft resident-KV quota in tokens against an instance
+    /// of `capacity`, if one is configured.
+    pub fn kv_quota_tokens(&self, t: TenantId, capacity: usize) -> Option<usize> {
+        let pct = self.specs.lock().unwrap().get(&t)?.kv_quota_pct?;
+        Some(capacity.saturating_mul(pct as usize) / 100)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for s in ["", "off", "0", "OFF"] {
+            let c = TenancyConfig::parse(s).unwrap();
+            assert!(!c.enabled, "{s:?} must disable tenancy");
+            assert!(c.tenants.is_empty());
+        }
+        let c = TenancyConfig::parse("on").unwrap();
+        assert!(c.enabled && c.tenants.is_empty());
+
+        let spec = "1:w=4,class=interactive,deadline_ms=250;2:w=1,class=batch,kv_pct=30";
+        let c = TenancyConfig::parse(spec).unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.tenants.len(), 2);
+        assert_eq!(c.tenants[0].id, 1);
+        assert_eq!(c.tenants[0].weight, 4);
+        assert_eq!(c.tenants[0].class, QosClass::Interactive);
+        assert_eq!(c.tenants[0].deadline_ms, Some(250));
+        assert_eq!(c.tenants[1].class, QosClass::Batch);
+        assert_eq!(c.tenants[1].kv_quota_pct, Some(30));
+        // to_spec -> parse is the identity.
+        assert_eq!(TenancyConfig::parse(&c.to_spec()).unwrap(), c);
+        assert_eq!(TenancyConfig::parse(&TenancyConfig::default().to_spec()).unwrap(),
+            TenancyConfig::default());
+
+        assert!(TenancyConfig::parse("x:w=1").is_err(), "non-numeric id");
+        assert!(TenancyConfig::parse("1:w=zero").is_err(), "bad weight");
+        assert!(TenancyConfig::parse("1:class=gold").is_err(), "unknown class");
+        assert!(TenancyConfig::parse("1:kv_pct=130").is_err(), "pct > 100");
+        assert!(TenancyConfig::parse("1:w=1;1:w=2").is_err(), "duplicate id");
+        assert!(TenancyConfig::parse("1:w").is_err(), "missing value");
+    }
+
+    #[test]
+    fn weight_zero_clamps_to_one() {
+        let c = TenancyConfig::parse("1:w=0").unwrap();
+        assert_eq!(c.tenants[0].weight, 1);
+    }
+
+    #[test]
+    fn sfq_shares_track_weights() {
+        // Two always-backlogged tenants at weights 3:1 — picking the
+        // lower vstart each round must serve them 3:1.
+        let mut fq = FairQueue::new();
+        let mut served = [0usize; 2];
+        for _ in 0..400 {
+            let pick = if fq.vstart(1) <= fq.vstart(2) { 0 } else { 1 };
+            let (t, w) = [(1, 3u32), (2, 1u32)][pick];
+            fq.charge(t, 1, w);
+            served[pick] += 1;
+        }
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!(
+            (ratio - 3.0).abs() < 0.1,
+            "3:1 weights must serve ~3:1, got {served:?}"
+        );
+    }
+
+    #[test]
+    fn sfq_idle_tenant_resumes_without_stored_credit() {
+        let mut fq = FairQueue::new();
+        // Tenant 1 runs alone for a long while.
+        for _ in 0..100 {
+            fq.charge(1, 10, 1);
+        }
+        // Tenant 2 wakes up: its vstart is the *current* virtual time,
+        // not zero — it does not get to replay its idle period and lock
+        // out tenant 1.
+        let v2 = fq.vstart(2);
+        assert!(v2 > 0, "idle tenant must resume at the live virtual time");
+        // It still goes first (its finish tag is behind tenant 1's), but
+        // only by the backlog bound, not by its whole idle period: after
+        // a couple of its own charges it is back behind tenant 1.
+        fq.charge(2, 10, 1);
+        fq.charge(2, 10, 1);
+        assert!(
+            fq.vstart(2) >= fq.vstart(1),
+            "no stored-up credit: {} vs {}",
+            fq.vstart(2),
+            fq.vstart(1)
+        );
+    }
+
+    #[test]
+    fn deadline_boost_ordering_is_pinned() {
+        let mut interactive = TenantSpec::default_for(1);
+        interactive.deadline_ms = Some(100);
+        let mut batch = TenantSpec::default_for(2);
+        batch.class = QosClass::Batch;
+        batch.deadline_ms = Some(100); // deadline on Batch never boosts
+        let free = TenantSpec::default_for(3); // Interactive, no deadline
+
+        // Under half the deadline: nobody is boosted.
+        assert_eq!(boost_class(&interactive, 49_000), 1);
+        // At/over half the deadline: only the Interactive+deadline
+        // tenant is boosted — the boost class sorts strictly first.
+        assert_eq!(boost_class(&interactive, 50_000), 0);
+        assert_eq!(boost_class(&interactive, 10_000_000), 0);
+        assert_eq!(boost_class(&batch, 10_000_000), 1);
+        assert_eq!(boost_class(&free, 10_000_000), 1);
+        // Rank tuples order boosted-first, then SFQ start, then id.
+        let boosted: TenantRank = (0, 999_999, 1);
+        let fair_low: TenantRank = (1, 10, 2);
+        let fair_high: TenantRank = (1, 20, 3);
+        let mut ranks = [fair_high, boosted, fair_low];
+        ranks.sort();
+        assert_eq!(ranks, [boosted, fair_low, fair_high]);
+    }
+
+    #[test]
+    fn shared_handle_round_trips_and_defaults() {
+        let cfg = TenancyConfig::parse("7:w=2,class=batch,deadline_ms=9,kv_pct=40").unwrap();
+        let h = SharedTenancy::new(&cfg);
+        assert!(h.enabled());
+        assert_eq!(h.snapshot(), cfg);
+        assert_eq!(h.spec_of(7).weight, 2);
+        assert_eq!(h.spec_of(42), TenantSpec::default_for(42), "unknown -> defaults");
+        assert_eq!(h.kv_quota_tokens(7, 1000), Some(400));
+        assert_eq!(h.kv_quota_tokens(42, 1000), None);
+        h.configure(&TenancyConfig::default());
+        assert!(!h.enabled());
+        assert_eq!(h.snapshot(), TenancyConfig::default());
+    }
+}

@@ -8,17 +8,22 @@
 //! simulated backend a 64-query run finishes in well under a second, so
 //! every scheduling/batching change is benchmarkable from `cargo test`.
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::bench::{build_egraph, hetero_prepared, kv_hetero_prepared, next_query_id, TraceRun};
-use crate::engines::QueryId;
+use crate::bench::{
+    build_egraph, hetero_prepared, kv_hetero_prepared, next_query_id, tenant_mix_prepared,
+    TraceRun,
+};
+use crate::engines::{QueryId, TenantId, UNTENANTED};
 use crate::error::Result;
 use crate::graph::egraph::EGraph;
 use crate::graph::value::Value;
 use crate::scheduler::graph_sched::QueryMetrics;
+use crate::scheduler::tenancy::TenancyConfig;
 use crate::scheduler::Platform;
 use crate::util::stats::Summary;
-use crate::workload::{Dataset, PoissonTrace};
+use crate::workload::{Dataset, MultiTenantTrace, PoissonTrace, TenantLoad};
 
 /// Aggregated result of one load run.
 #[derive(Debug, Clone)]
@@ -40,6 +45,50 @@ pub struct LoadReport {
     pub wall_s: f64,
     /// Completed queries per second of wall time.
     pub qps: f64,
+    /// Per-tenant latency/goodput breakdown (empty for single-tenant
+    /// runs; filled by [`run_load_tenants`]).
+    pub tenants: Vec<TenantReport>,
+}
+
+/// Per-tenant slice of a multi-tenant [`LoadReport`].
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: TenantId,
+    /// End-to-end latency percentiles (ms) over this tenant's *completed*
+    /// queries.
+    pub e2e_ms: Summary,
+    /// Queries this tenant submitted.
+    pub issued: usize,
+    /// Queries that completed (issued minus shed).
+    pub completed: usize,
+    /// Queries shed by admission control (Batch class bounced to protect
+    /// Interactive goodput).
+    pub shed: usize,
+    /// Completed queries that also met the tenant's deadline (every
+    /// completion counts when the tenant has no deadline).
+    pub slo_met: usize,
+    /// SLO attainment: `slo_met / issued` — a shed query counts against
+    /// goodput exactly like a deadline miss.
+    pub goodput: f64,
+}
+
+impl TenantReport {
+    /// JSON object for the bench artifacts (`BENCH_PR8.json`).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::{num, obj};
+        obj(vec![
+            ("tenant", num(self.tenant as f64)),
+            ("issued", num(self.issued as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("slo_met", num(self.slo_met as f64)),
+            ("goodput", num(self.goodput)),
+            ("p50_ms", num(self.e2e_ms.p50)),
+            ("p95_ms", num(self.e2e_ms.p95)),
+            ("p99_ms", num(self.e2e_ms.p99)),
+            ("mean_ms", num(self.e2e_ms.mean)),
+        ])
+    }
 }
 
 impl LoadReport {
@@ -58,6 +107,7 @@ impl LoadReport {
             outputs,
             wall_s,
             qps,
+            tenants: Vec::new(),
         }
     }
 
@@ -86,8 +136,8 @@ impl LoadReport {
     /// Latency percentiles as a JSON value (CI perf-trajectory smoke
     /// artifacts, e.g. `BENCH_PR2.json` / the merged `BENCH_PR4.json`).
     pub fn to_json(&self) -> crate::json::Json {
-        use crate::json::{num, obj};
-        obj(vec![
+        use crate::json::{num, obj, Json};
+        let mut fields = vec![
             ("n", num(self.latencies_ms.len() as f64)),
             ("p50_ms", num(self.e2e_ms.p50)),
             ("p95_ms", num(self.e2e_ms.p95)),
@@ -96,7 +146,14 @@ impl LoadReport {
             ("mean_dispatch_hops", num(self.mean_dispatch_hops())),
             ("qps", num(self.qps)),
             ("wall_s", num(self.wall_s)),
-        ])
+        ];
+        if !self.tenants.is_empty() {
+            fields.push((
+                "tenants",
+                Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()),
+            ));
+        }
+        obj(fields)
     }
 
     /// Dump the latency percentiles to a JSON file.
@@ -316,14 +373,14 @@ pub fn run_residency_comparison(
         drain(); // let queued FreeQuery cleanup land before reusing ids
         let off =
             run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
-        let (peak_rows_off, _) = crate::engines::sim::residency_stats();
+        let (peak_rows_off, _, _) = crate::engines::sim::residency_stats();
         platform.set_kv_watermark(RESIDENCY_BENCH_WATERMARK);
         crate::scheduler::wcp::reset_latency_feedback();
         crate::engines::sim::reset_residency_stats();
         drain();
         let on =
             run_load_prepared_ids(platform, kv_hetero_prepared(n, seed), &trace.arrivals, id_of)?;
-        let (peak_rows_on, evictions_on) = crate::engines::sim::residency_stats();
+        let (peak_rows_on, evictions_on, _) = crate::engines::sim::residency_stats();
         Ok(ResidencyComparison { off, on, peak_rows_off, peak_rows_on, evictions_on })
     })();
     platform.restore_kv_watermarks(&wm_snapshot);
@@ -388,6 +445,153 @@ pub fn run_pipeline_comparison(
         Ok((off, on))
     })();
     platform.set_pipeline(pipe_snapshot);
+    result
+}
+
+/// Run pre-built e-graphs at a multi-tenant arrival schedule, stamping
+/// each query with its tenant.  Unlike [`run_load_prepared_ids`], a
+/// per-query error is data here, not a run failure: with admission
+/// control on, the scheduler sheds whole `Batch`-class queries to protect
+/// `Interactive` goodput, and a shed query must count against its
+/// tenant's goodput instead of aborting the bench.  `cfg` supplies the
+/// per-tenant deadlines the goodput metric is scored against (for both
+/// the enforcing and the non-enforcing half of a comparison).
+pub fn run_load_tenants(
+    platform: &Platform,
+    prepared: Vec<(EGraph, u64)>,
+    arrivals: &[(Duration, TenantId)],
+    cfg: &TenancyConfig,
+    id_of: impl Fn(usize) -> QueryId,
+) -> Result<LoadReport> {
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(prepared.len());
+    for (i, (e, opt_us)) in prepared.into_iter().enumerate() {
+        let (due, tenant) =
+            arrivals.get(i).copied().unwrap_or((Duration::default(), UNTENANTED));
+        if let Some(wait) = due.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        handles.push((tenant, opt_us, platform.spawn_query_as(id_of(i), e, tenant)));
+    }
+    #[derive(Default)]
+    struct Acc {
+        lat_ms: Vec<f64>,
+        issued: usize,
+        completed: usize,
+        slo_met: usize,
+    }
+    let deadline_of = |tenant: TenantId| -> Option<u64> {
+        cfg.tenants.iter().find(|t| t.id == tenant).and_then(|t| t.deadline_ms)
+    };
+    let mut per: HashMap<TenantId, Acc> = HashMap::new();
+    let mut metrics = Vec::new();
+    let mut outputs = Vec::new();
+    for (tenant, opt_us, h) in handles {
+        let acc = per.entry(tenant).or_default();
+        acc.issued += 1;
+        match h.join().expect("query thread") {
+            Ok((out, mut m)) => {
+                m.opt_us = opt_us;
+                let lat_ms = m.e2e_us as f64 / 1000.0;
+                acc.completed += 1;
+                if deadline_of(tenant).map_or(true, |d| lat_ms <= d as f64) {
+                    acc.slo_met += 1;
+                }
+                acc.lat_ms.push(lat_ms);
+                metrics.push(m);
+                outputs.push(out);
+            }
+            Err(_) => {} // shed by admission control
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut report = LoadReport::from_metrics(metrics, outputs, wall_s);
+    let mut tenants: Vec<TenantReport> = per
+        .into_iter()
+        .map(|(tenant, a)| TenantReport {
+            tenant,
+            e2e_ms: Summary::of(&a.lat_ms),
+            issued: a.issued,
+            completed: a.completed,
+            shed: a.issued - a.completed,
+            slo_met: a.slo_met,
+            goodput: a.slo_met as f64 / a.issued.max(1) as f64,
+        })
+        .collect();
+    tenants.sort_by_key(|t| t.tenant);
+    report.tenants = tenants;
+    Ok(report)
+}
+
+/// The light (latency-sensitive) tenant of the PR8 bench trace.
+pub const TENANT_LIGHT: TenantId = 1;
+
+/// The heavy (aggressive, 10x-load) tenant of the PR8 bench trace.
+pub const TENANT_HEAVY: TenantId = 2;
+
+/// Tenancy contract of the PR8 bench: the light tenant is `Interactive`
+/// at weight 4 with a 250 ms deadline; the heavy tenant is `Batch` at
+/// weight 1 with a 60% soft KV quota.
+pub const TENANCY_BENCH_SPEC: &str =
+    "1:w=4,class=interactive,deadline_ms=250;2:w=1,class=batch,kv_pct=60";
+
+/// The PR8 multi-tenant fairness comparison: replay one seeded
+/// aggressive-vs-interactive trace — the heavy `Batch` tenant at 10x the
+/// light `Interactive` tenant's rate and query count — twice, with
+/// tenancy (weighted fair queueing + deadline boost + admission control)
+/// off and then on, fixed query ids both times.  Both halves are scored
+/// against the same [`TENANCY_BENCH_SPEC`] deadlines, so the off half
+/// measures what the light tenant suffers when the scheduler is blind to
+/// tenants and the on half what fairness buys back.  Returns `(off, on)`
+/// and restores the caller's tenancy configuration.
+pub fn run_tenancy_comparison(
+    platform: &Platform,
+    n_light: usize,
+    rate_light: f64,
+    seed: u64,
+) -> Result<(LoadReport, LoadReport)> {
+    let cfg_on = TenancyConfig::parse(TENANCY_BENCH_SPEC).expect("bench tenancy spec");
+    let loads = [
+        TenantLoad { tenant: TENANT_LIGHT, rate: rate_light, n: n_light },
+        TenantLoad { tenant: TENANT_HEAVY, rate: rate_light * 10.0, n: n_light * 10 },
+    ];
+    let trace = MultiTenantTrace::generate(&loads, seed);
+    let tenant_seq: Vec<TenantId> = trace.arrivals.iter().map(|(_, t)| *t).collect();
+    let id_of = |i: usize| 0x9C9_0000 + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half (see run_wcp_comparison); the mix shares one instruction
+    // prefix across tenants, so one warm query covers both.
+    if let Some((e, _)) = tenant_mix_prepared(&[TENANT_LIGHT], seed).pop() {
+        let _ = platform.run_query(0x9C9_FFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    let ten_snapshot = platform.tenancy_snapshot();
+    // Inner closure so the caller's tenancy registry is restored even
+    // when a half errors out.
+    let result = (|| {
+        platform.set_tenancy(&TenancyConfig::default()); // fairness off
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain(); // let queued FreeQuery cleanup land before reusing ids
+        let off = run_load_tenants(
+            platform,
+            tenant_mix_prepared(&tenant_seq, seed),
+            &trace.arrivals,
+            &cfg_on,
+            id_of,
+        )?;
+        platform.set_tenancy(&cfg_on); // fair queueing + admission on
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain();
+        let on = run_load_tenants(
+            platform,
+            tenant_mix_prepared(&tenant_seq, seed),
+            &trace.arrivals,
+            &cfg_on,
+            id_of,
+        )?;
+        Ok((off, on))
+    })();
+    platform.restore_tenancy(&ten_snapshot);
     result
 }
 

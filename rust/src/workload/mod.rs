@@ -5,5 +5,5 @@ pub mod poisson;
 pub mod tokenizer;
 
 pub use dataset::{Dataset, DatasetKind};
-pub use poisson::PoissonTrace;
+pub use poisson::{MultiTenantTrace, PoissonTrace, TenantLoad};
 pub use tokenizer::Tokenizer;

@@ -71,6 +71,7 @@ pub fn ctx(query: u64, node: usize, reply: std::sync::mpsc::Sender<Completion>) 
         wcp_us: 0,
         kv_tokens: 0,
         wcp_discounted: false,
+        tenant: teola::engines::UNTENANTED,
         reply,
         successors: Vec::new(),
     }

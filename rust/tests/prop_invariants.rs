@@ -427,6 +427,7 @@ fn mk_item(rng: &mut Rng, t0: Instant) -> QueueItem {
         wcp_discounted: false,
         prefix: None,
         wcp_us: rng.range(0, 500_000),
+        tenant: teola::engines::UNTENANTED,
         job: EngineJob::ToolCall { name: "x".into(), cost_us: 0 },
         reply: tx,
         successors: Vec::new(),
@@ -901,6 +902,7 @@ fn cancelled_speculative_prefill_releases_all_kv() {
             wcp_us: 0,
             kv_tokens: 0,
             wcp_discounted: false,
+            tenant: teola::engines::UNTENANTED,
             reply: tx.clone(),
             successors: Vec::new(),
         };
@@ -945,5 +947,74 @@ fn cancelled_speculative_prefill_releases_all_kv() {
         // A post-cancel abort has nothing left to report for this seq.
         let _ = exec.abort();
         prop_assert(exec.kv_occupied() == 0, "abort keeps the ledger empty")
+    });
+}
+
+/// PR8 invariant (start-time fair queueing): under random weights,
+/// random per-dispatch costs, and a random warm-up arrival order, an
+/// always-backlogged tenant set served by ascending virtual-start tag
+/// (the scheduler's `TenantRank` order) (a) never starves anyone — the
+/// gap between two consecutive picks of any tenant stays under the
+/// analytic SFQ bound — and (b) converges to served work proportional to
+/// the weights.
+#[test]
+fn sfq_fair_share_converges_and_never_starves() {
+    use teola::scheduler::FairQueue;
+    const MAX_COST: usize = 5;
+    const MAX_W: u32 = 6;
+    check(40, |rng| {
+        let n = rng.range_usize(2, 6);
+        let tenants: Vec<(u32, u32)> =
+            (0..n).map(|i| (i as u32 + 1, rng.range(1, u64::from(MAX_W) + 1) as u32)).collect();
+        let mut fq = FairQueue::new();
+        // Random warm-up: some tenants arrive mid-run with history, so
+        // convergence must not depend on a synchronized start.
+        for _ in 0..rng.range_usize(0, 11) {
+            let (t, w) = tenants[rng.range_usize(0, n)];
+            fq.charge(t, rng.range_usize(1, MAX_COST + 1), w);
+        }
+        let rounds = 8000usize;
+        let mut served = vec![0u64; n];
+        let mut last_pick = vec![0usize; n];
+        let mut max_gap = 0usize;
+        for round in 0..rounds {
+            // Everyone is backlogged: serve the minimum (vstart, id) —
+            // exactly the unboosted TenantRank order.
+            let pick = (0..n)
+                .min_by_key(|&i| (fq.vstart(tenants[i].0), tenants[i].0))
+                .unwrap();
+            let (t, w) = tenants[pick];
+            let cost = rng.range_usize(1, MAX_COST + 1);
+            fq.charge(t, cost, w);
+            served[pick] += cost as u64;
+            max_gap = max_gap.max(round - last_pick[pick]);
+            last_pick[pick] = round;
+        }
+        // (a) Starvation bound: between two picks of tenant i, every
+        // other tenant can be served at most ~max_cost*max_w times (its
+        // finish tag advances >= SCALE/max_w per pick while tenant i's
+        // tag sits <= max_cost*SCALE ahead of virtual time).  Factor 2
+        // of slack on the analytic bound.
+        let bound = 2 * ((n - 1) * MAX_COST * MAX_W as usize + n);
+        prop_assert(
+            max_gap <= bound,
+            format!("pick gap {max_gap} exceeds SFQ starvation bound {bound}"),
+        )?;
+        // (b) Weighted shares: served work within 15% of the weight
+        // ratio (warm-up history + one in-flight charge of slack).
+        let total: u64 = served.iter().sum();
+        let sum_w: u64 = tenants.iter().map(|(_, w)| u64::from(*w)).sum();
+        for (i, &(t, w)) in tenants.iter().enumerate() {
+            let expected = total as f64 * f64::from(w) / sum_w as f64;
+            let got = served[i] as f64;
+            prop_assert(
+                (got - expected).abs() <= 0.15 * expected,
+                format!(
+                    "tenant {t} (w={w}) served {got} vs expected {expected:.0} \
+                     (weights {tenants:?}, served {served:?})"
+                ),
+            )?;
+        }
+        Ok(())
     });
 }

@@ -55,6 +55,7 @@ fn engine_with(
         Arc::new(AtomicUsize::new(kv_tokens)),
         Arc::new(AtomicUsize::new(0)),
         ExecMode::Stepped,
+        Arc::new(teola::scheduler::tenancy::SharedTenancy::default()),
     );
     let h = std::thread::spawn(move || sched.run());
     (job_tx, h)
@@ -106,6 +107,7 @@ fn prefill_item(q: u64, n_tokens: usize, reply: Sender<Completion>) -> QueueItem
         wcp_discounted: false,
         prefix: None,
         wcp_us: 0,
+        tenant: teola::engines::UNTENANTED,
         job: EngineJob::Prefill {
             seq: (q, 0),
             tokens: vec![7; n_tokens],

@@ -1,0 +1,247 @@
+//! PR8 multi-tenant QoS: the tenant stamp threads through every layer
+//! (workload → graph scheduler → engine scheduler → KV ledger), the
+//! `TEOLA_*` knob surface round-trips through `PlatformConfig`, and —
+//! the determinism bar — a *disabled* tenancy registry makes the stamp
+//! completely inert: outputs are bit-identical whether queries carry
+//! real tenant ids or run untenanted.
+//!
+//! Everything runs on the sim backend (deterministic, no artifacts).
+
+use std::time::Duration;
+
+use teola::bench::{apply_env_knobs, tenant_mix_prepared};
+use teola::engines::sim::ExecBackend;
+use teola::engines::{EngineKind, QueryId, TenantId, UNTENANTED};
+use teola::scheduler::tenancy::TenancyConfig;
+use teola::scheduler::{Platform, PlatformConfig};
+use teola::serving::{run_load_tenants, TENANT_HEAVY, TENANT_LIGHT};
+use teola::workload::{MultiTenantTrace, TenantLoad};
+
+mod common;
+
+/// Restores the captured `TEOLA_*` variables on drop, so a panicking
+/// assertion can't leak knob settings into the other tests of this
+/// binary (they all run under `common::serial()`).
+struct EnvGuard {
+    saved: Vec<(&'static str, Option<String>)>,
+}
+
+impl EnvGuard {
+    fn capture(keys: &'static [&'static str]) -> EnvGuard {
+        EnvGuard { saved: keys.iter().map(|k| (*k, std::env::var(k).ok())).collect() }
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        for (k, v) in &self.saved {
+            match v {
+                Some(v) => std::env::set_var(k, v),
+                None => std::env::remove_var(k),
+            }
+        }
+    }
+}
+
+/// Satellite: every `TEOLA_*` environment knob — including the new
+/// `TEOLA_TENANCY` — parses onto `PlatformConfig` through the single
+/// shared surface (`bench::apply_env_knobs`), and unset knobs leave the
+/// config untouched.  The tenancy spec string additionally round-trips
+/// `parse → to_spec → parse` unchanged.
+#[test]
+fn env_knobs_round_trip_through_config() {
+    let _guard = common::serial();
+    const KEYS: &[&str] = &[
+        "TEOLA_BACKEND",
+        "TEOLA_BATCH_WINDOW_US",
+        "TEOLA_PREFIX_SLOTS",
+        "TEOLA_CONTINUOUS",
+        "TEOLA_KV_TOKENS",
+        "TEOLA_KV_WATERMARK",
+        "TEOLA_KV_WATERMARK_LLM",
+        "TEOLA_WCP",
+        "TEOLA_PIPELINE",
+        "TEOLA_TENANCY",
+    ];
+    let _env = EnvGuard::capture(KEYS);
+
+    let spec = "1:w=4,class=interactive,deadline_ms=250;2:w=1,class=batch,kv_pct=60";
+    std::env::set_var("TEOLA_BACKEND", "sim");
+    std::env::set_var("TEOLA_BATCH_WINDOW_US", "1234");
+    std::env::set_var("TEOLA_PREFIX_SLOTS", "5");
+    std::env::set_var("TEOLA_CONTINUOUS", "off");
+    std::env::set_var("TEOLA_KV_TOKENS", "4096");
+    std::env::set_var("TEOLA_KV_WATERMARK", "70");
+    std::env::set_var("TEOLA_KV_WATERMARK_LLM", "55");
+    std::env::set_var("TEOLA_WCP", "off");
+    std::env::set_var("TEOLA_PIPELINE", "off");
+    std::env::set_var("TEOLA_TENANCY", spec);
+
+    let mut cfg = PlatformConfig::default_with("artifacts", "llm-lite");
+    apply_env_knobs(&mut cfg);
+    assert_eq!(cfg.backend, ExecBackend::Sim);
+    assert_eq!(cfg.batch_window_us, 1234);
+    assert_eq!(cfg.prefix_slots, 5);
+    assert!(!cfg.continuous);
+    assert_eq!(cfg.kv_tokens_per_instance, Some(4096));
+    assert_eq!(cfg.kv_watermark, 70);
+    assert!(
+        cfg.kv_watermark_overrides.contains(&(EngineKind::Llm, 55)),
+        "per-kind watermark override must land: {:?}",
+        cfg.kv_watermark_overrides
+    );
+    assert!(!cfg.wcp);
+    assert!(!cfg.pipeline);
+    assert_eq!(cfg.tenancy, TenancyConfig::parse(spec).unwrap());
+    // The spec grammar is its own snapshot format: to_spec -> parse is
+    // the identity, and this spec renders back verbatim.
+    assert_eq!(cfg.tenancy.to_spec(), spec);
+    assert_eq!(TenancyConfig::parse(&cfg.tenancy.to_spec()).unwrap(), cfg.tenancy);
+
+    // With every knob unset, apply_env_knobs must be a no-op.
+    for k in KEYS {
+        std::env::remove_var(k);
+    }
+    let dfl = PlatformConfig::default_with("artifacts", "llm-lite");
+    let mut fresh = PlatformConfig::default_with("artifacts", "llm-lite");
+    apply_env_knobs(&mut fresh);
+    assert_eq!(fresh.backend, dfl.backend);
+    assert_eq!(fresh.batch_window_us, dfl.batch_window_us);
+    assert_eq!(fresh.prefix_slots, dfl.prefix_slots);
+    assert_eq!(fresh.continuous, dfl.continuous);
+    assert_eq!(fresh.kv_tokens_per_instance, dfl.kv_tokens_per_instance);
+    assert_eq!(fresh.kv_watermark, dfl.kv_watermark);
+    assert_eq!(fresh.kv_watermark_overrides, dfl.kv_watermark_overrides);
+    assert_eq!(fresh.wcp, dfl.wcp);
+    assert_eq!(fresh.pipeline, dfl.pipeline);
+    assert_eq!(fresh.tenancy, dfl.tenancy);
+}
+
+/// The runtime registry round-trips: a config set at startup is what
+/// `tenancy_snapshot` reports, `set_tenancy`/`restore_tenancy` flip the
+/// live state, and the snapshot re-renders to a parseable spec string.
+#[test]
+fn tenancy_config_round_trips_through_platform() {
+    let _guard = common::serial();
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.warm = false;
+    cfg.tenancy = TenancyConfig::parse("3:w=2,class=batch,kv_pct=25").unwrap();
+    let platform = Platform::start(&cfg).expect("platform");
+
+    assert!(platform.tenancy_enabled());
+    let snap = platform.tenancy_snapshot();
+    assert_eq!(snap, cfg.tenancy);
+    assert_eq!(TenancyConfig::parse(&snap.to_spec()).unwrap(), snap);
+
+    platform.set_tenancy(&TenancyConfig::default());
+    assert!(!platform.tenancy_enabled());
+    platform.restore_tenancy(&snap);
+    assert!(platform.tenancy_enabled());
+    assert_eq!(platform.tenancy_snapshot(), snap);
+    platform.shutdown();
+}
+
+/// Satellite (PR7 handoff x PR8): with tenancy *and* pipelining on (the
+/// default config pipelines), a mixed two-tenant trace completes end to
+/// end and every query — including the successor jobs the serving
+/// instance hands off engine-side — stays accounted to its tenant: the
+/// per-tenant report recovers exactly the issued counts of the trace.
+/// No deadlines are configured, so admission control never sheds and
+/// completion must be total.
+#[test]
+fn tenancy_on_accounts_every_query_to_its_tenant() {
+    let _guard = common::serial();
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.warm = false;
+    let platform = Platform::start(&cfg).expect("platform");
+    let ten = TenancyConfig::parse("1:w=4,class=interactive;2:w=1,class=batch").unwrap();
+    platform.set_tenancy(&ten);
+
+    let loads = [
+        TenantLoad { tenant: TENANT_LIGHT, rate: 200.0, n: 5 },
+        TenantLoad { tenant: TENANT_HEAVY, rate: 200.0, n: 10 },
+    ];
+    let trace = MultiTenantTrace::generate(&loads, 0x8E8);
+    let tenant_seq: Vec<TenantId> = trace.arrivals.iter().map(|(_, t)| *t).collect();
+    let report = run_load_tenants(
+        &platform,
+        tenant_mix_prepared(&tenant_seq, 0x8E8),
+        &trace.arrivals,
+        &ten,
+        |i| 0x8E8_0000 + i as QueryId,
+    )
+    .expect("trace");
+    platform.shutdown();
+
+    assert_eq!(report.outputs.len(), 15, "no deadline -> nothing shed");
+    assert_eq!(report.tenants.len(), 2, "one report per tenant");
+    let light = &report.tenants[0];
+    let heavy = &report.tenants[1];
+    assert_eq!(
+        (light.tenant, light.issued, light.completed, light.shed),
+        (TENANT_LIGHT, 5, 5, 0)
+    );
+    assert_eq!(
+        (heavy.tenant, heavy.issued, heavy.completed, heavy.shed),
+        (TENANT_HEAVY, 10, 10, 0)
+    );
+    // No deadline means every completion meets its (vacuous) SLO.
+    assert!((light.goodput - 1.0).abs() < 1e-9);
+    assert!((heavy.goodput - 1.0).abs() < 1e-9);
+}
+
+/// Tentpole determinism bar: with the registry *disabled* (the default),
+/// the tenant stamp is invisible — the same seeded trace produces
+/// bit-identical outputs whether queries carry their real tenant ids or
+/// all run [`UNTENANTED`].  This pins the off-path of every PR8 touch
+/// point (queue ranks, fair charging, shedding, quota eviction) to the
+/// tenant-blind behavior.
+#[test]
+fn disabled_tenancy_makes_the_tenant_stamp_inert() {
+    let _guard = common::serial();
+    let mut cfg = PlatformConfig::sim("llm-lite");
+    cfg.warm = false;
+    let platform = Platform::start(&cfg).expect("platform");
+    assert!(!platform.tenancy_enabled(), "tenancy must default off");
+
+    let loads = [
+        TenantLoad { tenant: TENANT_LIGHT, rate: 150.0, n: 6 },
+        TenantLoad { tenant: TENANT_HEAVY, rate: 150.0, n: 6 },
+    ];
+    let trace = MultiTenantTrace::generate(&loads, 0x8E9);
+    let tenant_seq: Vec<TenantId> = trace.arrivals.iter().map(|(_, t)| *t).collect();
+    let ten = TenancyConfig::default();
+
+    // Half 1: queries stamped with their real tenants, registry off.
+    teola::scheduler::wcp::reset_latency_feedback();
+    let stamped = run_load_tenants(
+        &platform,
+        tenant_mix_prepared(&tenant_seq, 0x8E9),
+        &trace.arrivals,
+        &ten,
+        |i| 0x8E9_0000 + i as QueryId,
+    )
+    .expect("stamped half");
+
+    // Half 2: identical graphs and arrival offsets, every query
+    // untenanted (fresh query ids; let queued FreeQuery cleanup land).
+    let blank: Vec<(Duration, TenantId)> =
+        trace.arrivals.iter().map(|(d, _)| (*d, UNTENANTED)).collect();
+    teola::scheduler::wcp::reset_latency_feedback();
+    std::thread::sleep(Duration::from_millis(50));
+    let untenanted = run_load_tenants(
+        &platform,
+        tenant_mix_prepared(&tenant_seq, 0x8E9),
+        &blank,
+        &ten,
+        |i| 0x8E9_4000 + i as QueryId,
+    )
+    .expect("untenanted half");
+    platform.shutdown();
+
+    assert_eq!(stamped.outputs.len(), 12);
+    assert_eq!(
+        stamped.outputs, untenanted.outputs,
+        "disabled tenancy must make the tenant stamp invisible in outputs"
+    );
+}

@@ -35,6 +35,7 @@ fn item(query: u64, node: usize, wcp_us: u64, now: Instant, age_ms: u64) -> Queu
         wcp_discounted: false,
         prefix: None,
         wcp_us,
+        tenant: teola::engines::UNTENANTED,
         job: EngineJob::ToolCall { name: "t".into(), cost_us: 0 },
         reply: tx,
         successors: Vec::new(),
