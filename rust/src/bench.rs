@@ -359,6 +359,18 @@ pub fn apply_env_knobs(cfg: &mut PlatformConfig) {
             }
         }
     }
+    if let Ok(v) = std::env::var("TEOLA_SCHED_INCREMENTAL") {
+        // Same token set as the CLI's --sched-incremental flag: toggles the
+        // bucket-heap hot path versus the exact sort-rebuild fallback.
+        match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "on" | "true" => cfg.sched_incremental = true,
+            "0" | "off" | "false" => cfg.sched_incremental = false,
+            "" => {}
+            other => eprintln!(
+                "warning: unknown TEOLA_SCHED_INCREMENTAL={other:?} (want on|off); ignoring"
+            ),
+        }
+    }
     if let Ok(v) = std::env::var("TEOLA_PIPELINE") {
         // Same token set as the CLI's --pipeline flag.
         match v.trim().to_ascii_lowercase().as_str() {

@@ -31,7 +31,7 @@ fn scheme_by_name(s: &str) -> Option<Scheme> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--pipeline on|off] [--tenants <spec>] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola pipeline-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola tenant-bench [--n <light-queries>] [--rate <light-rps>] [--seed <s>] [--json-out <path>]"
+        "usage:\n  teola apps | schemes\n  teola inspect --app <name> [--core <llm>] [--scheme <name>]\n  teola run --app <name> [--scheme <name>] [--core <llm>] [--n <queries>] [--rate <rps>] [--backend sim|xla]\n            [--batch-window-us <us>] [--continuous on|off] [--prefix-slots <n>] [--wcp on|off]\n            [--kv-tokens <n>] [--kv-watermark <pct>] [--pipeline on|off] [--tenants <spec>]\n            [--sched-incremental on|off] [--json-out <path>]\n  teola wcp-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola kv-bench  [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola pipeline-bench [--n <queries>] [--rate <rps>] [--seed <s>] [--json-out <path>]\n  teola tenant-bench [--n <light-queries>] [--rate <light-rps>] [--seed <s>] [--json-out <path>]\n  teola sched-bench [--n <jobs>] [--seed <s>] [--json-out <path>] [--baseline <path>] [--max-regress <frac>]"
     );
     std::process::exit(2);
 }
@@ -157,6 +157,15 @@ fn main() {
                 Some("off") | Some("0") | Some("false") => cfg.wcp = false,
                 Some(other) => {
                     eprintln!("unknown --wcp value {other:?} (want on|off)");
+                    std::process::exit(2);
+                }
+                None => {}
+            }
+            match parse_flag(&args, "--sched-incremental").as_deref() {
+                Some("on") | Some("1") | Some("true") => cfg.sched_incremental = true,
+                Some("off") | Some("0") | Some("false") => cfg.sched_incremental = false,
+                Some(other) => {
+                    eprintln!("unknown --sched-incremental value {other:?} (want on|off)");
                     std::process::exit(2);
                 }
                 None => {}
@@ -401,6 +410,80 @@ fn main() {
                 ]);
                 std::fs::write(&path, doc.to_string()).expect("write json report");
                 println!("wrote {path}");
+            }
+        }
+        Some("sched-bench") => {
+            // The PR9 scheduler-overhead smoke: the same seeded zero-cost
+            // burst driven through one engine scheduler twice — exact
+            // rebuild-and-sort ordering, then the incremental bucket-heap
+            // path — against a loopback instance that executes nothing,
+            // so dispatch wall time is pure orchestration.  The two halves
+            // must choose bit-identical dispatch orders; the win lands in
+            // overhead_us_per_query and the order-build/bucket-rebuild
+            // counters (BENCH_PR9.json in CI, regression-guarded against
+            // the checked-in baseline via --baseline/--max-regress).
+            let n: usize =
+                parse_flag(&args, "--n").and_then(|v| v.parse().ok()).unwrap_or(2000);
+            let seed: u64 =
+                parse_flag(&args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(0x9CA);
+            let max_regress: f64 = parse_flag(&args, "--max-regress")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.25);
+            // Read the baseline BEFORE the run writes --json-out: CI
+            // points both flags at the same checked-in file.
+            let baseline_us: Option<f64> = parse_flag(&args, "--baseline")
+                .and_then(|p| std::fs::read_to_string(p).ok())
+                .and_then(|text| teola::json::Json::parse(&text).ok())
+                .and_then(|doc| {
+                    doc.get("incremental")
+                        .and_then(|h| h.get("overhead_us_per_query"))
+                        .and_then(|v| v.as_f64())
+                });
+            let (exact, incr) =
+                teola::serving::run_sched_comparison(n, seed).expect("sched-bench");
+            let speedup = if incr.overhead_us_per_query > 0.0 {
+                exact.overhead_us_per_query / incr.overhead_us_per_query
+            } else {
+                0.0
+            };
+            println!(
+                "exact: {:.2} us/query ({} order builds, {} bucket rebuilds) | \
+                 incremental: {:.2} us/query ({} order builds, {} bucket rebuilds) | \
+                 speedup {speedup:.2}x over {} dispatch loops, {} lock acqs",
+                exact.overhead_us_per_query,
+                exact.stats.order_builds,
+                exact.stats.bucket_rebuilds,
+                incr.overhead_us_per_query,
+                incr.stats.order_builds,
+                incr.stats.bucket_rebuilds,
+                incr.stats.dispatch_loops,
+                incr.stats.lock_acqs,
+            );
+            if let Some(path) = parse_flag(&args, "--json-out") {
+                let doc = teola::json::obj(vec![
+                    ("incremental", incr.to_json()),
+                    ("exact", exact.to_json()),
+                    ("speedup", teola::json::num(speedup)),
+                ]);
+                std::fs::write(&path, doc.to_string()).expect("write json report");
+                println!("wrote {path}");
+            }
+            if let Some(base) = baseline_us {
+                let limit = base * (1.0 + max_regress);
+                if incr.overhead_us_per_query > limit {
+                    eprintln!(
+                        "sched-bench regression: {:.2} us/query exceeds baseline {base:.2} \
+                         by more than {:.0}% (limit {limit:.2})",
+                        incr.overhead_us_per_query,
+                        max_regress * 100.0
+                    );
+                    std::process::exit(1);
+                }
+                println!(
+                    "within baseline: {:.2} us/query vs {base:.2} (+{:.0}% allowed)",
+                    incr.overhead_us_per_query,
+                    max_regress * 100.0
+                );
             }
         }
         _ => usage(),

@@ -537,6 +537,423 @@ fn take_budget(
     chosen.into_iter().map(|i| queue.swap_remove(i)).collect()
 }
 
+/// Per-query bucket of the incremental priority structure: the member
+/// slot ids, their depth-grouped dispatch levels (depth descending, each
+/// level `(arrival, seq)`-sorted — exactly one round of the Algorithm 2
+/// sweep), and the cached cross-bucket ordering aggregates.  `dirty`
+/// marks the lazy-invalidation state: levels and aggregates are rebuilt
+/// on the next ordering call, not at mutation time.
+#[derive(Debug)]
+struct Bucket {
+    ids: Vec<usize>,
+    levels: Vec<(u32, Vec<usize>)>,
+    earliest: Instant,
+    max_wcp: u64,
+    tenant: TenantId,
+    dirty: bool,
+}
+
+impl Bucket {
+    fn rebuild(&mut self, slots: &[Option<QueueItem>], seqs: &[u64]) {
+        let item = |id: usize| slots[id].as_ref().expect("bucket id must be live");
+        self.ids.sort_by(|&a, &b| {
+            let (ia, ib) = (item(a), item(b));
+            ib.depth
+                .cmp(&ia.depth)
+                .then(ia.arrival.cmp(&ib.arrival))
+                .then(seqs[a].cmp(&seqs[b]))
+        });
+        self.levels.clear();
+        for &id in &self.ids {
+            let d = item(id).depth;
+            match self.levels.last_mut() {
+                Some((ld, lvl)) if *ld == d => lvl.push(id),
+                _ => self.levels.push((d, vec![id])),
+            }
+        }
+        self.earliest = self.ids.iter().map(|&id| item(id).arrival).min().expect("non-empty");
+        self.max_wcp = self.ids.iter().map(|&id| item(id).wcp_us).max().unwrap_or(0);
+        self.tenant = item(self.ids[0]).tenant;
+        self.dirty = false;
+        crate::scheduler::stats::count_bucket_rebuild();
+    }
+
+    /// Cross-bucket ordering key at a shared `now` — the exact
+    /// per-bucket tuple [`topo_order`] computes: `(tenant rank,
+    /// effective WCP priority, earliest arrival)`.  The aging term is
+    /// recomputed *every call* (never cached): buckets compared at the
+    /// same `now` see the same formula as the sort-based path, so the
+    /// order is bit-identical by construction.
+    fn key(&self, now: Instant, wcp: bool, ranks: Option<&TenantRanks>) -> (TenantRank, u64, Instant) {
+        let effective = if wcp {
+            wcp_priority_us(self.max_wcp, now.saturating_duration_since(self.earliest))
+        } else {
+            0
+        };
+        let rank = match ranks {
+            Some(r) => r.get(&self.tenant).copied().unwrap_or((u64::MAX, u64::MAX, self.tenant)),
+            None => (0, 0, 0),
+        };
+        (rank, effective, self.earliest)
+    }
+}
+
+/// Ascending bucket-key comparator shared by the sorted and scanning
+/// paths: tenant rank first, then *descending* effective WCP priority,
+/// then earliest arrival — the exact [`topo_order`] comparator (with
+/// `wcp` off every effective priority is 0 and the middle term is a
+/// no-op, collapsing to the arrival comparator).
+fn cmp_bucket_keys(
+    a: &(TenantRank, u64, Instant),
+    b: &(TenantRank, u64, Instant),
+) -> std::cmp::Ordering {
+    a.0.cmp(&b.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2))
+}
+
+/// Incremental priority structure for the engine scheduler's hot
+/// dispatch path (PR9): a slot arena of queued items plus per-query
+/// buckets whose dispatch levels are cached across calls and rebuilt
+/// lazily — only buckets touched by an enqueue / requeue since the last
+/// ordering pass re-sort their members, and the `TopoAware` head is
+/// found by an `O(queries)` scan instead of a full `O(n log n)` sort.
+///
+/// **Equivalence contract** (property-tested in
+/// `tests/prop_invariants.rs`): every ordering decision is identical to
+/// running the sort-based [`head_index_ranked`] / [`form_batch_ranked`]
+/// / [`form_continuous_admission_ranked`] over a plain
+/// `Vec<QueueItem>`, whenever arrivals are distinct (always true in
+/// real runs — items are stamped with distinct `Instant::now()`
+/// arrivals).  Full ties are broken by the insertion sequence number,
+/// where the `Vec` path's tie-break is an unobservable artifact of its
+/// `swap_remove` permutation history.  Passing `incremental = false` to
+/// the ordering calls forces the exact fallback: every bucket is
+/// rebuilt from scratch and the full sorted order is materialized, so
+/// the two modes differ only in work done, never in output.
+#[derive(Debug, Default)]
+pub struct SchedQueue {
+    slots: Vec<Option<QueueItem>>,
+    seqs: Vec<u64>,
+    free: Vec<usize>,
+    len: usize,
+    next_seq: u64,
+    buckets: BTreeMap<QueryId, Bucket>,
+}
+
+impl SchedQueue {
+    pub fn new() -> SchedQueue {
+        SchedQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue an item.  `O(1)` plus a lazy dirty mark on its query's
+    /// bucket — no sorting happens until the next ordering call.
+    pub fn push(&mut self, it: QueueItem) {
+        let (query, arrival, tenant) = (it.query, it.arrival, it.tenant);
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.slots[id] = Some(it);
+                self.seqs[id] = self.next_seq;
+                id
+            }
+            None => {
+                self.slots.push(Some(it));
+                self.seqs.push(self.next_seq);
+                self.slots.len() - 1
+            }
+        };
+        self.next_seq += 1;
+        self.len += 1;
+        let b = self.buckets.entry(query).or_insert_with(|| Bucket {
+            ids: Vec::new(),
+            levels: Vec::new(),
+            earliest: arrival,
+            max_wcp: 0,
+            tenant,
+            dirty: true,
+        });
+        b.ids.push(id);
+        b.dirty = true;
+    }
+
+    /// Iterate every queued item (arena order; use for aggregation, not
+    /// for dispatch order).
+    pub fn iter(&self) -> impl Iterator<Item = &QueueItem> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Iterate `(slot id, item)` pairs — ids are stable handles for
+    /// [`SchedQueue::remove`].
+    pub fn iter_ids(&self) -> impl Iterator<Item = (usize, &QueueItem)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|it| (i, it)))
+    }
+
+    /// Drain every item in insertion order (deterministic; used by the
+    /// engine-dead fail path).
+    pub fn drain_all(&mut self) -> Vec<QueueItem> {
+        let mut ids: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        ids.sort_by_key(|&i| self.seqs[i]);
+        ids.into_iter().map(|i| self.remove(i)).collect()
+    }
+
+    /// Remove one item by slot id.  Keeps the owning bucket's cached
+    /// levels valid in place (removal preserves relative order) and
+    /// refreshes its aggregates only when the removed item defined them.
+    pub fn remove(&mut self, id: usize) -> QueueItem {
+        let it = self.slots[id].take().expect("remove of a live slot id");
+        self.free.push(id);
+        self.len -= 1;
+        let slots = &self.slots;
+        if let Some(b) = self.buckets.get_mut(&it.query) {
+            b.ids.retain(|&x| x != id);
+            if b.ids.is_empty() {
+                self.buckets.remove(&it.query);
+            } else if !b.dirty {
+                for (_, lvl) in b.levels.iter_mut() {
+                    lvl.retain(|&x| x != id);
+                }
+                b.levels.retain(|(_, lvl)| !lvl.is_empty());
+                if it.arrival <= b.earliest || it.wcp_us >= b.max_wcp {
+                    let item = |x: usize| slots[x].as_ref().expect("bucket id must be live");
+                    b.earliest =
+                        b.ids.iter().map(|&x| item(x).arrival).min().expect("non-empty");
+                    b.max_wcp = b.ids.iter().map(|&x| item(x).wcp_us).max().unwrap_or(0);
+                }
+            }
+        }
+        it
+    }
+
+    /// Apply a WCP restamp to every item; `f` returns whether it changed
+    /// the item's stamp.  Only the touched buckets' ordering aggregates
+    /// are refreshed — cached levels stay valid (they order by depth and
+    /// arrival, never by WCP).  Returns the number of changed items.
+    pub fn restamp_wcp(&mut self, mut f: impl FnMut(&mut QueueItem) -> bool) -> usize {
+        let mut touched: Vec<QueryId> = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Some(it) = slot {
+                if f(it) {
+                    touched.push(it.query);
+                }
+            }
+        }
+        let slots = &self.slots;
+        for q in &touched {
+            if let Some(b) = self.buckets.get_mut(q) {
+                if !b.dirty {
+                    let item = |x: usize| slots[x].as_ref().expect("bucket id must be live");
+                    b.max_wcp = b.ids.iter().map(|&x| item(x).wcp_us).max().unwrap_or(0);
+                }
+            }
+        }
+        touched.len()
+    }
+
+    /// Rebuild dirty buckets (all buckets when `force` — the exact
+    /// fallback path).
+    fn ensure_built(&mut self, force: bool) {
+        let (slots, seqs) = (&self.slots, &self.seqs);
+        for b in self.buckets.values_mut() {
+            if b.dirty || force {
+                b.rebuild(slots, seqs);
+            }
+        }
+    }
+
+    /// The full Algorithm 2 priority order over every queued item, as
+    /// slot ids.  With `incremental` only dirty buckets re-sort; the
+    /// cross-bucket key sort runs every call so the WCP aging term is
+    /// always computed fresh at one shared `now`.
+    fn full_order(&mut self, wcp: bool, ranks: Option<&TenantRanks>, incremental: bool) -> Vec<usize> {
+        self.ensure_built(!incremental);
+        crate::scheduler::stats::count_order_build();
+        let now = Instant::now();
+        let mut keys: Vec<(QueryId, (TenantRank, u64, Instant))> =
+            self.buckets.iter().map(|(&q, b)| (q, b.key(now, wcp, ranks))).collect();
+        // BTreeMap iteration is query-ascending and the sort is stable,
+        // so full ties break by query id — as in `topo_order`.
+        keys.sort_by(|a, b| cmp_bucket_keys(&a.1, &b.1));
+        let mut order = Vec::with_capacity(self.len);
+        let mut round = 0;
+        loop {
+            let mut any = false;
+            for (q, _) in &keys {
+                if let Some((_, lvl)) = self.buckets[q].levels.get(round) {
+                    order.extend_from_slice(lvl);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            round += 1;
+        }
+        order
+    }
+
+    /// Live slot ids in `(arrival, seq)` order — the FIFO baselines'
+    /// dispatch order.
+    fn fifo_order(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.iter_ids().map(|(i, _)| i).collect();
+        ids.sort_by(|&a, &b| {
+            let (ia, ib) = (self.slots[a].as_ref().unwrap(), self.slots[b].as_ref().unwrap());
+            ia.arrival.cmp(&ib.arrival).then(self.seqs[a].cmp(&self.seqs[b]))
+        });
+        ids
+    }
+
+    /// The item `form_batch` would dispatch first — the priority head.
+    /// Under `TopoAware` with `incremental`, this is an `O(queries)`
+    /// strict-first-min scan over cached bucket keys (no sort, no order
+    /// materialization); the exact fallback materializes the full sorted
+    /// order and takes its first element.  Both agree by construction:
+    /// a strict-min scan over ascending query ids returns the first
+    /// element of the stable sort.
+    pub fn head(
+        &mut self,
+        policy: BatchPolicy,
+        wcp: bool,
+        ranks: Option<&TenantRanks>,
+        incremental: bool,
+    ) -> Option<&QueueItem> {
+        if self.is_empty() {
+            return None;
+        }
+        let id = match policy {
+            BatchPolicy::TopoAware => {
+                if incremental {
+                    self.ensure_built(false);
+                    let now = Instant::now();
+                    let mut best: Option<(&Bucket, (TenantRank, u64, Instant))> = None;
+                    for b in self.buckets.values() {
+                        let k = b.key(now, wcp, ranks);
+                        match &best {
+                            Some((_, bk)) if cmp_bucket_keys(&k, bk).is_lt() => {
+                                best = Some((b, k))
+                            }
+                            None => best = Some((b, k)),
+                            _ => {}
+                        }
+                    }
+                    best.and_then(|(b, _)| b.levels.first().and_then(|(_, lvl)| lvl.first()))
+                        .copied()
+                } else {
+                    self.full_order(wcp, ranks, false).first().copied()
+                }
+            }
+            BatchPolicy::BlindTO | BatchPolicy::PerInvocation => self
+                .iter_ids()
+                .fold(None::<(usize, &QueueItem)>, |best, (i, it)| match best {
+                    Some((bi, bit))
+                        if (bit.arrival, self.seqs[bi]) <= (it.arrival, self.seqs[i]) =>
+                    {
+                        Some((bi, bit))
+                    }
+                    _ => Some((i, it)),
+                })
+                .map(|(i, _)| i),
+        };
+        id.map(|i| self.slots[i].as_ref().expect("head id must be live"))
+    }
+
+    /// [`form_batch_ranked`] over the incremental structure: same
+    /// policies, same class restriction, same first-fit budget walk —
+    /// the chosen items are removed and returned in priority order.
+    pub fn form_batch(
+        &mut self,
+        policy: BatchPolicy,
+        budget: usize,
+        wcp: bool,
+        unit: SlotUnit,
+        ranks: Option<&TenantRanks>,
+        incremental: bool,
+    ) -> Vec<QueueItem> {
+        if self.is_empty() {
+            return Vec::new();
+        }
+        let order = match policy {
+            BatchPolicy::BlindTO => {
+                let mut order = self.fifo_order();
+                let class = job_class(&self.slots[order[0]].as_ref().unwrap().job);
+                order.retain(|&i| job_class(&self.slots[i].as_ref().unwrap().job) == class);
+                return self.take_ids(order, budget, false, true, unit);
+            }
+            BatchPolicy::PerInvocation => {
+                let order = self.fifo_order();
+                let first = self.slots[order[0]].as_ref().unwrap().bundle;
+                let order: Vec<usize> = order
+                    .into_iter()
+                    .filter(|&i| self.slots[i].as_ref().unwrap().bundle == first)
+                    .collect();
+                return self.take_ids(order, usize::MAX, false, true, unit);
+            }
+            BatchPolicy::TopoAware => {
+                let mut order = self.full_order(wcp, ranks, incremental);
+                if let Some(&first) = order.first() {
+                    let class = job_class(&self.slots[first].as_ref().unwrap().job);
+                    order.retain(|&i| job_class(&self.slots[i].as_ref().unwrap().job) == class);
+                }
+                order
+            }
+        };
+        self.take_ids(order, budget, true, true, unit)
+    }
+
+    /// [`form_continuous_admission_ranked`] over the incremental
+    /// structure: spare-capacity packing with skip-over and no oversized
+    /// admission.
+    pub fn form_continuous(
+        &mut self,
+        spare: usize,
+        wcp: bool,
+        unit: SlotUnit,
+        ranks: Option<&TenantRanks>,
+        incremental: bool,
+    ) -> Vec<QueueItem> {
+        if self.is_empty() || spare == 0 {
+            return Vec::new();
+        }
+        let order = self.full_order(wcp, ranks, incremental);
+        self.take_ids(order, spare, true, false, unit)
+    }
+
+    /// The [`take_budget`] first-fit walk over slot ids.
+    fn take_ids(
+        &mut self,
+        order: Vec<usize>,
+        budget: usize,
+        skip_over: bool,
+        admit_oversized: bool,
+        unit: SlotUnit,
+    ) -> Vec<QueueItem> {
+        let mut left = budget;
+        let mut chosen: Vec<usize> = Vec::new();
+        for id in order {
+            let cost = unit.cost(self.slots[id].as_ref().expect("ordered id must be live"));
+            if cost <= left {
+                left -= cost;
+                chosen.push(id);
+            } else if chosen.is_empty() && admit_oversized {
+                chosen.push(id);
+                left = 0;
+            } else if !skip_over {
+                break;
+            }
+            if left == 0 {
+                break;
+            }
+        }
+        chosen.into_iter().map(|id| self.remove(id)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -842,5 +1259,106 @@ mod tests {
         assert_eq!(head_index_ranked(&q, BatchPolicy::TopoAware, false, Some(&ranks)), Some(1));
         // Tenant-blind head is the earliest arrival.
         assert_eq!(head_index(&q, BatchPolicy::TopoAware, false), Some(0));
+    }
+
+    /// Construct the same logical item twice (ordering-relevant fields
+    /// are deterministic given `t0`; the reply channels differ but never
+    /// participate in ordering).
+    fn twin_items(t0: Instant) -> (Vec<QueueItem>, Vec<QueueItem>) {
+        let mk = || {
+            vec![
+                item(3, 30, 2, 2, t0, 0),
+                item(1, 10, 3, 1, t0, 1),
+                item(1, 11, 1, 1, t0, 2),
+                item(2, 20, 3, 4, t0, 3),
+                item(2, 21, 3, 1, t0, 4),
+                item(1, 12, 3, 1, t0, 5),
+            ]
+        };
+        (mk(), mk())
+    }
+
+    #[test]
+    fn sched_queue_matches_vec_path_across_policies_and_modes() {
+        let t0 = Instant::now();
+        for policy in [BatchPolicy::TopoAware, BatchPolicy::BlindTO, BatchPolicy::PerInvocation] {
+            for wcp in [false, true] {
+                for incremental in [false, true] {
+                    let (vec_items, sq_items) = twin_items(t0);
+                    let mut vq: Vec<QueueItem> = vec_items;
+                    let mut sq = SchedQueue::new();
+                    for it in sq_items {
+                        sq.push(it);
+                    }
+                    assert_eq!(
+                        head_index(&vq, policy, wcp).map(|i| (vq[i].query, vq[i].node)),
+                        sq.head(policy, wcp, None, incremental).map(|it| (it.query, it.node)),
+                        "head mismatch: {policy:?} wcp={wcp} incr={incremental}"
+                    );
+                    // Drain both to empty via repeated batch formation:
+                    // every batch must pick the same item set.
+                    while !vq.is_empty() {
+                        let vb: Vec<(u64, usize)> =
+                            form_batch(&mut vq, policy, 4, wcp, SlotUnit::Rows)
+                                .iter()
+                                .map(|i| (i.query, i.node))
+                                .collect();
+                        let mut sb: Vec<(u64, usize)> = sq
+                            .form_batch(policy, 4, wcp, SlotUnit::Rows, None, incremental)
+                            .iter()
+                            .map(|i| (i.query, i.node))
+                            .collect();
+                        let mut vb_sorted = vb.clone();
+                        vb_sorted.sort_unstable();
+                        sb.sort_unstable();
+                        assert_eq!(
+                            vb_sorted, sb,
+                            "batch mismatch: {policy:?} wcp={wcp} incr={incremental}"
+                        );
+                    }
+                    assert!(sq.is_empty(), "queues drain in lockstep");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sched_queue_removal_and_restamp_keep_cached_aggregates_fresh() {
+        let t0 = Instant::now();
+        let mut sq = SchedQueue::new();
+        sq.push(item(1, 10, 2, 1, t0, 0));
+        sq.push(item(2, 20, 2, 1, t0, 1));
+        sq.push(item(2, 21, 3, 1, t0, 2));
+        assert_eq!(sq.len(), 3);
+        // Build the cache, then remove query 2's deep head: the cached
+        // level must shrink in place and the next head come from the
+        // surviving items.
+        let head = sq.head(BatchPolicy::TopoAware, false, None, true).unwrap();
+        assert_eq!((head.query, head.node), (1, 10), "earliest bucket leads");
+        let id = sq.iter_ids().find(|(_, it)| it.node == 21).map(|(i, _)| i).unwrap();
+        let removed = sq.remove(id);
+        assert_eq!(removed.node, 21);
+        assert_eq!(sq.len(), 2);
+        // WCP restamp through the incremental path: boost query 2 far
+        // above query 1 — the cached max_wcp aggregate must refresh and
+        // flip the head without any enqueue having dirtied the bucket.
+        let n = sq.restamp_wcp(|it| {
+            if it.query == 2 {
+                it.wcp_us = 1_000_000_000;
+                true
+            } else {
+                false
+            }
+        });
+        assert_eq!(n, 1);
+        let head = sq.head(BatchPolicy::TopoAware, true, None, true).unwrap();
+        assert_eq!((head.query, head.node), (2, 20), "restamped bucket overtakes");
+        // Slot reuse after removal keeps iteration consistent.
+        sq.push(item(3, 30, 1, 1, t0, 3));
+        assert_eq!(sq.len(), 3);
+        assert_eq!(sq.iter().count(), 3);
+        let drained = sq.drain_all();
+        assert_eq!(drained.len(), 3);
+        assert!(sq.is_empty());
     }
 }

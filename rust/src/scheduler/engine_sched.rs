@@ -56,10 +56,8 @@ use crate::engines::kv_budget::{self, KvBudget};
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::DeviceModel;
 use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
-use crate::scheduler::batching::{
-    form_batch_ranked, form_continuous_admission_ranked, head_index_ranked, BatchPolicy,
-    QueueItem, SlotUnit,
-};
+use crate::scheduler::batching::{BatchPolicy, QueueItem, SchedQueue, SlotUnit};
+use crate::scheduler::stats;
 use crate::scheduler::tenancy::{
     boost_class, FairQueue, QosClass, SharedTenancy, TenantId, TenantRanks, TenantSpec,
 };
@@ -136,7 +134,23 @@ pub struct EngineScheduler {
     /// denomination, read as each tenant's virtual start for bucket
     /// ordering between tenants.
     fair: FairQueue,
-    queue: Vec<QueueItem>,
+    /// Shared, runtime-switchable incremental-priority toggle (PR9):
+    /// `true` (the default) lets [`SchedQueue`] reuse its cached bucket
+    /// levels across dispatch passes; `false` forces the exact
+    /// rebuild-and-sort fallback on every ordering call.  The two modes
+    /// are output-identical by construction — the flag trades work, not
+    /// behavior.
+    pub incremental: Arc<AtomicBool>,
+    /// Tenancy-config generation backing `specs_cache`: when the shared
+    /// handle's epoch moves, the cached spec table is dropped *and* the
+    /// fair-queueing ledger is reset, so a runtime retune never carries
+    /// stale virtual-time tags into the new registry.
+    specs_epoch: u64,
+    /// Epoch-cached clone of the tenancy spec table: refreshed only when
+    /// the epoch changes, so the dispatch hot path stops taking the
+    /// spec-table mutex once per pass.
+    specs_cache: Option<HashMap<TenantId, TenantSpec>>,
+    queue: SchedQueue,
 }
 
 impl EngineScheduler {
@@ -157,11 +171,15 @@ impl EngineScheduler {
         kv_watermark: Arc<AtomicUsize>,
         mode: ExecMode,
         tenancy: Arc<SharedTenancy>,
+        incremental: Arc<AtomicBool>,
     ) -> EngineScheduler {
         let n = instances.len();
         let prefix_homes =
             (0..n).map(|_| PrefixRegistry::new(prefix_slots.clone())).collect();
         let device = DeviceModel::for_engine(&name);
+        // The cache generation starts in sync with the handle: only a
+        // retune *after* construction triggers the fair-ledger reset.
+        let specs_epoch = tenancy.epoch();
         EngineScheduler {
             name,
             instances,
@@ -184,7 +202,10 @@ impl EngineScheduler {
             prefix_homes,
             tenancy,
             fair: FairQueue::new(),
-            queue: Vec::new(),
+            incremental,
+            specs_epoch,
+            specs_cache: None,
+            queue: SchedQueue::new(),
         }
     }
 
@@ -328,7 +349,7 @@ impl EngineScheduler {
     /// has no live instance left, so queries waiting on these replies
     /// would otherwise hang forever.
     fn fail_queue(&mut self) {
-        for it in self.queue.drain(..) {
+        for it in self.queue.drain_all() {
             let _ = it.reply.send(Completion {
                 query: it.query,
                 node: it.node,
@@ -343,6 +364,23 @@ impl EngineScheduler {
 
     /// Dispatch while an eligible instance and queued work exist.
     fn dispatch(&mut self) {
+        // A tenancy retune must reach the ledger even while idle-waking:
+        // check the epoch before the empty-queue early-out so the reset
+        // is not deferred behind an arbitrarily long idle stretch.
+        let epoch = self.tenancy.epoch();
+        if epoch != self.specs_epoch {
+            self.specs_epoch = epoch;
+            self.specs_cache = None;
+            // PR8 residual fix: a new tenant registry starts with a
+            // fresh fair-queueing ledger — stale virtual-time tags from
+            // the previous registry would mis-rank its tenants.
+            self.fair.reset();
+        }
+        if self.queue.is_empty() {
+            return;
+        }
+        let t_dispatch = Instant::now();
+        stats::count_dispatch_pass();
         let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
         let slots = self.max_slots.load(Ordering::Relaxed).max(1);
         // Iteration-level admission applies to stepped engines under the
@@ -378,13 +416,29 @@ impl EngineScheduler {
         // scheduler features; with the knob off every call below takes
         // the `None`-ranked path, bit-for-bit the tenant-blind behavior.
         let tenancy_on = policy == BatchPolicy::TopoAware && self.tenancy.enabled();
-        let specs = if tenancy_on { Some(self.tenancy.specs()) } else { None };
+        // Epoch-cached spec table: the mutex is taken only when the
+        // shared config actually changed (or on the first tenancy-on
+        // pass), not once per dispatch — enqueue from the graph side
+        // never contends with batch formation here.
+        let specs = if tenancy_on {
+            if self.specs_cache.is_none() {
+                stats::count_lock_acq();
+                self.specs_cache = Some(self.tenancy.specs());
+            }
+            self.specs_cache.clone()
+        } else {
+            None
+        };
+        // Runtime-switchable incremental ordering (PR9); `false` is the
+        // exact rebuild-and-sort fallback.
+        let incremental = self.incremental.load(Ordering::Relaxed);
         // Admission control: when an Interactive tenant's measured queue
         // delay has breached its deadline, shed queued Batch-class work
-        // (failed loudly, never silently dropped) so Interactive goodput
-        // is protected instead of letting p99 explode.
+        // — newest-first, bounded by the breached item's estimated cost
+        // — (failed loudly, never silently dropped) so Interactive
+        // goodput is protected instead of letting p99 explode.
         if let Some(specs) = &specs {
-            self.shed_batch_on_slo_breach(specs);
+            self.shed_batch_on_slo_breach(specs, unit);
         }
         let window =
             Duration::from_micros(self.batch_window_us.load(Ordering::Relaxed));
@@ -402,11 +456,10 @@ impl EngineScheduler {
             let homes = &self.prefix_homes;
             let dead = &self.dead;
             let n = self.instances.len();
-            rediscount_resident_prefixes(
-                &mut self.queue,
-                |fp| (0..n).any(|i| !dead[i] && homes[i].contains(fp)),
-                self.device.prefill_us_per_token,
-            );
+            let ppt = self.device.prefill_us_per_token;
+            self.queue.restamp_wcp(|it| {
+                rediscount_item(it, |fp| (0..n).any(|i| !dead[i] && homes[i].contains(fp)), ppt)
+            });
         }
         loop {
             if self.queue.is_empty() {
@@ -418,18 +471,23 @@ impl EngineScheduler {
                 self.fail_queue();
                 break;
             }
+            stats::count_dispatch_loop();
             // Tenant ranks are recomputed every iteration: each dispatched
             // batch advances the charged tenant's virtual start, so the
             // next batch may belong to a different tenant (that is the
             // fair-queueing interleave).
             let ranks: Option<TenantRanks> =
                 specs.as_ref().map(|s| self.tenant_ranks(s));
-            let head = head_index_ranked(&self.queue, policy, wcp, ranks.as_ref());
-            let want_prefix = if prefix_routing {
-                head.and_then(|i| self.queue[i].prefix)
-            } else {
-                None
-            };
+            // Priority head (incremental: an O(queries) scan over cached
+            // bucket keys): its cost gates the oversized-drain path and
+            // its prefix fingerprint steers instance choice.
+            let (head_cost, want_prefix) =
+                match self.queue.head(policy, wcp, ranks.as_ref(), incremental) {
+                    Some(h) => {
+                        (unit.cost(h), if prefix_routing { h.prefix } else { None })
+                    }
+                    None => (0, None),
+                };
             let Some(inst) =
                 self.pick_instance(continuous, token_mode, budget, want_prefix)
             else {
@@ -443,21 +501,19 @@ impl EngineScheduler {
             // shorter items around it forever) and let the instance
             // drain.  `pick_instance` prefers drained instances, so the
             // gate only fires when every eligible instance is mid-flight.
-            if mid_flight
-                && head.map_or(false, |h| unit.cost(&self.queue[h]) > budget)
-            {
+            if mid_flight && head_cost > budget {
                 break;
             }
             let items = if mid_flight {
-                form_continuous_admission_ranked(
-                    &mut self.queue,
+                self.queue.form_continuous(
                     budget.saturating_sub(in_flight),
                     wcp,
                     unit,
                     ranks.as_ref(),
+                    incremental,
                 )
             } else {
-                form_batch_ranked(&mut self.queue, policy, budget, wcp, unit, ranks.as_ref())
+                self.queue.form_batch(policy, budget, wcp, unit, ranks.as_ref(), incremental)
             };
             if items.is_empty() {
                 break;
@@ -484,7 +540,9 @@ impl EngineScheduler {
                 && !batch_full
                 && !batch_window_expired(&items, window)
             {
-                self.queue.extend(items);
+                for it in items {
+                    self.queue.push(it);
+                }
                 break;
             }
             let mut rows = 0usize;
@@ -549,6 +607,7 @@ impl EngineScheduler {
                     )
                 })
                 .collect();
+            let n_jobs = jobs.len();
             if let Err(unsent) = self.instances[inst].sender.send(Batch { jobs }) {
                 // Instance thread died: recover the unsent batch from the
                 // send error and requeue it so its queries don't hang,
@@ -603,6 +662,7 @@ impl EngineScheduler {
             }
             self.loads[inst] += rows;
             self.kv[inst].reserve(reserved);
+            stats::count_batch(n_jobs);
             if let Some(specs) = &specs {
                 for (t, cost) in fair_charges {
                     let w = specs.get(&t).map_or(1, |s| s.weight);
@@ -610,6 +670,7 @@ impl EngineScheduler {
                 }
             }
         }
+        stats::add_dispatch_ns(t_dispatch.elapsed().as_nanos().min(u64::MAX as u128) as u64);
     }
 
     /// Per-tenant rank map for one dispatch iteration: for every tenant
@@ -620,7 +681,7 @@ impl EngineScheduler {
     fn tenant_ranks(&self, specs: &HashMap<TenantId, TenantSpec>) -> TenantRanks {
         let now = Instant::now();
         let mut waited: HashMap<TenantId, u64> = HashMap::new();
-        for it in &self.queue {
+        for it in self.queue.iter() {
             let w = now.saturating_duration_since(it.arrival).as_micros() as u64;
             let e = waited.entry(it.tenant).or_insert(0);
             *e = (*e).max(w);
@@ -637,42 +698,61 @@ impl EngineScheduler {
 
     /// Admission control (multi-tenant QoS): when any queued Interactive
     /// item has already waited past its tenant's deadline — the measured
-    /// signal that queue delay exceeds the SLO budget — every queued
-    /// Batch-class item is shed with a loud `Failed` completion, freeing
-    /// the whole budget for the Interactive backlog.  Tenants without a
-    /// spec (including `UNTENANTED`) default to Interactive with no
-    /// deadline: never shed, never a breach trigger.
-    fn shed_batch_on_slo_breach(&mut self, specs: &HashMap<TenantId, TenantSpec>) {
+    /// signal that queue delay exceeds the SLO budget — queued
+    /// Batch-class items are shed with a loud `Failed` completion,
+    /// freeing budget for the Interactive backlog.  The shed is
+    /// **bounded and newest-first** (PR8 shed the entire Batch backlog):
+    /// victims are taken in descending arrival order until the freed
+    /// cost (in the active slot denomination) covers the largest
+    /// breached Interactive item's estimated cost, so older,
+    /// nearly-dispatched Batch work survives a single breach.  Tenants
+    /// without a spec (including `UNTENANTED`) default to Interactive
+    /// with no deadline: never shed, never a breach trigger.
+    fn shed_batch_on_slo_breach(&mut self, specs: &HashMap<TenantId, TenantSpec>, unit: SlotUnit) {
         let now = Instant::now();
         let class_of = |t: TenantId| specs.get(&t).map_or(QosClass::Interactive, |s| s.class);
-        let breached = self.queue.iter().any(|it| {
-            let Some(spec) = specs.get(&it.tenant) else { return false };
-            spec.class == QosClass::Interactive
-                && spec.deadline_ms.map_or(false, |d| {
-                    now.saturating_duration_since(it.arrival).as_millis() as u64 > d
-                })
-        });
-        if !breached || !self.queue.iter().any(|it| class_of(it.tenant) == QosClass::Batch) {
-            return;
-        }
-        let mut kept = Vec::with_capacity(self.queue.len());
-        for it in self.queue.drain(..) {
-            if class_of(it.tenant) == QosClass::Batch {
-                let _ = it.reply.send(Completion {
-                    query: it.query,
-                    node: it.node,
-                    output: JobOutput::Failed(format!(
-                        "shed by admission control on '{}': Interactive SLO breached, \
-                         Batch work bounced to protect goodput",
-                        self.name
-                    )),
-                    timing: ExecTiming::default(),
-                });
-            } else {
-                kept.push(it);
+        // Estimated cost to free: the largest breached Interactive item
+        // (its admission is what the shed must make room for).
+        let need = self
+            .queue
+            .iter()
+            .filter(|it| {
+                let Some(spec) = specs.get(&it.tenant) else { return false };
+                spec.class == QosClass::Interactive
+                    && spec.deadline_ms.map_or(false, |d| {
+                        now.saturating_duration_since(it.arrival).as_millis() as u64 > d
+                    })
+            })
+            .map(|it| unit.cost(it))
+            .max();
+        let Some(need) = need else { return };
+        // Newest-first victim order: the most recently enqueued Batch
+        // work has the least sunk queueing investment.
+        let mut victims: Vec<(usize, Instant, usize)> = self
+            .queue
+            .iter_ids()
+            .filter(|(_, it)| class_of(it.tenant) == QosClass::Batch)
+            .map(|(id, it)| (id, it.arrival, unit.cost(it)))
+            .collect();
+        victims.sort_by(|a, b| b.1.cmp(&a.1).then(b.0.cmp(&a.0)));
+        let mut freed = 0usize;
+        for (id, _, cost) in victims {
+            if freed >= need {
+                break;
             }
+            let it = self.queue.remove(id);
+            freed += cost;
+            let _ = it.reply.send(Completion {
+                query: it.query,
+                node: it.node,
+                output: JobOutput::Failed(format!(
+                    "shed by admission control on '{}': Interactive SLO breached, \
+                     Batch work bounced to protect goodput",
+                    self.name
+                )),
+                timing: ExecTiming::default(),
+            });
         }
-        self.queue = kept;
     }
 
     /// In-flight load of an instance in the active denomination: KV
@@ -748,18 +828,33 @@ pub fn rediscount_resident_prefixes(
 ) -> usize {
     let mut discounted = 0;
     for it in queue.iter_mut() {
-        if it.wcp_discounted {
-            continue;
-        }
-        let Some(fp) = it.prefix else { continue };
-        if resident(fp) {
-            let discount = (prefill_us_per_token * fp.len as f64) as u64;
-            it.wcp_us = it.wcp_us.saturating_sub(discount);
-            it.wcp_discounted = true;
+        if rediscount_item(it, &resident, prefill_us_per_token) {
             discounted += 1;
         }
     }
     discounted
+}
+
+/// One item's share of [`rediscount_resident_prefixes`]: apply the
+/// prefix-residency discount if due; returns whether the stamp changed
+/// (the [`SchedQueue`] restamp path uses this to refresh only the
+/// touched buckets' ordering aggregates).
+fn rediscount_item(
+    it: &mut QueueItem,
+    resident: impl Fn(PrefixFp) -> bool,
+    prefill_us_per_token: f64,
+) -> bool {
+    if it.wcp_discounted {
+        return false;
+    }
+    let Some(fp) = it.prefix else { return false };
+    if !resident(fp) {
+        return false;
+    }
+    let discount = (prefill_us_per_token * fp.len as f64) as u64;
+    it.wcp_us = it.wcp_us.saturating_sub(discount);
+    it.wcp_discounted = true;
+    true
 }
 
 /// True when the batch's own accumulation window has elapsed: the oldest

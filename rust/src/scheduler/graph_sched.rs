@@ -5,7 +5,7 @@
 //! evaluates host-side control-flow primitives inline, and handles
 //! streaming partial-decode completions arriving out of graph order.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Sender};
 use std::time::Instant;
 
@@ -146,6 +146,10 @@ impl QueryRunner {
         // Local completion worklist (host ops complete synchronously).
         let mut ready: Vec<NodeId> = self.egraph.sources();
         let mut local_done: Vec<(NodeId, Value)> = Vec::new();
+        // Batched completion draining (PR9): one blocking `recv` per
+        // wakeup absorbs *every* completion already waiting on the
+        // channel, instead of a lock round-trip per completion.
+        let mut pending: VecDeque<Completion> = VecDeque::new();
         // Successor nodes handed off engine-side: trigger node -> the
         // downstream nodes the engines will materialize themselves.  When
         // the trigger's completion arrives, those nodes are marked
@@ -196,10 +200,27 @@ impl QueryRunner {
             if done >= n {
                 break;
             }
-            // Wait for an engine completion.
-            let c = rx
-                .recv()
-                .map_err(|_| TeolaError::Scheduler("completion channel closed".into()))?;
+            // Wait for an engine completion: consume the batched backlog
+            // first, and when it is empty block once then drain every
+            // completion already queued behind the first — later loop
+            // iterations pop from the local `pending` buffer without
+            // touching the channel again.
+            let c = match pending.pop_front() {
+                Some(c) => c,
+                None => {
+                    let first = rx
+                        .recv()
+                        .map_err(|_| TeolaError::Scheduler("completion channel closed".into()))?;
+                    crate::scheduler::stats::count_graph_wakeup();
+                    let mut drained = 1u64;
+                    while let Ok(more) = rx.try_recv() {
+                        pending.push_back(more);
+                        drained += 1;
+                    }
+                    crate::scheduler::stats::count_graph_completions(drained);
+                    first
+                }
+            };
             metrics.queue_us += c.timing.queued_us;
             metrics.exec_us += c.timing.exec_us;
             let node = c.node;

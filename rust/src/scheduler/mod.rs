@@ -11,13 +11,14 @@ pub mod engine_sched;
 pub mod graph_sched;
 pub mod object_store;
 pub mod platform;
+pub mod stats;
 pub mod tenancy;
 pub mod wcp;
 
 pub use batching::{
     form_batch, form_continuous_admission, head_index, head_needs_drained_instance,
-    materialize_successor, wcp_priority_us, BatchPolicy, BundleId, QueueItem, SlotUnit,
-    SuccessorPlan, SuccessorTemplate, WCP_AGING_WEIGHT,
+    materialize_successor, wcp_priority_us, BatchPolicy, BundleId, QueueItem, SchedQueue,
+    SlotUnit, SuccessorPlan, SuccessorTemplate, WCP_AGING_WEIGHT,
 };
 pub use engine_sched::{rediscount_resident_prefixes, EngineScheduler};
 pub use graph_sched::{QueryMetrics, QueryRunner};

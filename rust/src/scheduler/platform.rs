@@ -123,6 +123,16 @@ pub struct PlatformConfig {
     /// over-quota tenants.  Set via `TEOLA_TENANCY` / `run --tenants`;
     /// switchable at runtime via [`Platform::set_tenancy`].
     pub tenancy: TenancyConfig,
+    /// Incremental scheduler priority maintenance (PR9): engine
+    /// schedulers keep per-query dispatch levels cached across passes
+    /// and rebuild only buckets touched since the last ordering call,
+    /// with the `TopoAware` head found by an O(queries) scan.  `false`
+    /// forces the exact rebuild-and-sort fallback on every call — the
+    /// two modes are output-identical by construction (property-tested),
+    /// differing only in orchestration overhead.  Set via
+    /// `TEOLA_SCHED_INCREMENTAL` / `run --sched-incremental`; switchable
+    /// at runtime via [`Platform::set_sched_incremental`].
+    pub sched_incremental: bool,
     /// Pre-compile all artifact buckets at startup (XLA backend only; the
     /// sim backend has nothing to compile and ignores this).
     pub warm: bool,
@@ -154,6 +164,7 @@ impl PlatformConfig {
             kv_watermark_overrides: Vec::new(),
             pipeline: true,
             tenancy: TenancyConfig::default(),
+            sched_incremental: true,
             warm: true,
             corpus_docs: 400,
             net: NetModel::default(),
@@ -215,6 +226,9 @@ pub struct Platform {
     /// Shared multi-tenant QoS registry (see `PlatformConfig::tenancy`),
     /// consulted by every engine scheduler and LLM executor.
     tenancy: Arc<SharedTenancy>,
+    /// Incremental-priority switch shared by every engine scheduler (see
+    /// `PlatformConfig::sched_incremental`).
+    sched_incremental: Arc<AtomicBool>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -249,6 +263,7 @@ impl Platform {
         let wcp = Arc::new(AtomicBool::new(cfg.wcp));
         let pipeline = Arc::new(AtomicBool::new(cfg.pipeline));
         let tenancy = Arc::new(SharedTenancy::new(&cfg.tenancy));
+        let sched_incremental = Arc::new(AtomicBool::new(cfg.sched_incremental));
         // Residency watermark: the global value, with the last matching
         // per-kind override winning for engines of that kind.
         let kv_watermark_base = Arc::new(AtomicUsize::new(cfg.kv_watermark));
@@ -270,6 +285,7 @@ impl Platform {
         let mut kv_tokens: HashMap<String, Arc<AtomicUsize>> = HashMap::new();
         let mut kv_defaults: HashMap<String, usize> = HashMap::new();
         let sched_tenancy = tenancy.clone();
+        let sched_incremental_h = sched_incremental.clone();
         let mut spawn_sched = |name: String,
                                instances: Vec<crate::engines::instance::Instance>,
                                event_rx,
@@ -294,6 +310,7 @@ impl Platform {
                 wm,
                 mode,
                 sched_tenancy.clone(),
+                sched_incremental_h.clone(),
             );
             let h = std::thread::Builder::new()
                 .name(format!("sched-{name}"))
@@ -469,6 +486,7 @@ impl Platform {
             kv_watermark_base,
             pipeline,
             tenancy,
+            sched_incremental,
             profiles,
             manifest,
             sep,
@@ -505,6 +523,13 @@ impl Platform {
     /// to every engine scheduler; only effective under `TopoAware`).
     pub fn set_wcp(&self, on: bool) {
         self.wcp.store(on, Ordering::Relaxed);
+    }
+
+    /// Toggle incremental scheduler priority maintenance at runtime
+    /// (applies to every engine scheduler; `false` forces the exact
+    /// rebuild-and-sort fallback — output-identical, more work).
+    pub fn set_sched_incremental(&self, on: bool) {
+        self.sched_incremental.store(on, Ordering::Relaxed);
     }
 
     /// Retune the per-instance KV token budget on every LLM engine at

@@ -1,0 +1,164 @@
+//! Process-global scheduler hot-path counters (PR9).
+//!
+//! The `sched-bench` harness isolates orchestration overhead per query
+//! (the paper's fig. 12 differentiator) by deltaing these counters
+//! around a run: dispatch passes and loop iterations say how often the
+//! engine scheduler woke and formed batches, order builds / bucket
+//! rebuilds expose the incremental priority structure's work avoidance,
+//! lock acquisitions count the remaining mutex traffic on the dispatch
+//! path (the tenancy spec table), and `DISPATCH_NS` integrates wall
+//! time spent inside `EngineScheduler::dispatch` — the numerator of
+//! µs-of-orchestration-per-query.
+//!
+//! All counters are relaxed atomics: they are monotone event counts
+//! with no cross-counter ordering requirement, so the hot path pays one
+//! uncontended `fetch_add` per event.  Being process-global they sum
+//! over every engine scheduler thread; benches that need isolation
+//! snapshot before and delta after (`SchedStats::delta_since`) while
+//! holding the process's scheduler population fixed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `EngineScheduler::dispatch` entries (one per wakeup with work).
+pub static DISPATCH_PASSES: AtomicU64 = AtomicU64::new(0);
+/// Inner dispatch-loop iterations (batch-formation attempts).
+pub static DISPATCH_LOOPS: AtomicU64 = AtomicU64::new(0);
+/// Full priority-order materializations (cross-bucket key sort + sweep).
+pub static ORDER_BUILDS: AtomicU64 = AtomicU64::new(0);
+/// Per-query bucket rebuilds (lazy invalidation hits).
+pub static BUCKET_REBUILDS: AtomicU64 = AtomicU64::new(0);
+/// Mutex acquisitions on the dispatch path (tenancy spec-table clones).
+pub static LOCK_ACQS: AtomicU64 = AtomicU64::new(0);
+/// Batches handed to an instance.
+pub static BATCHES_FORMED: AtomicU64 = AtomicU64::new(0);
+/// Jobs dispatched inside those batches.
+pub static JOBS_DISPATCHED: AtomicU64 = AtomicU64::new(0);
+/// Nanoseconds spent inside `EngineScheduler::dispatch`.
+pub static DISPATCH_NS: AtomicU64 = AtomicU64::new(0);
+/// Graph-scheduler blocking wakeups (completion `recv` calls).
+pub static GRAPH_WAKEUPS: AtomicU64 = AtomicU64::new(0);
+/// Completions absorbed per those wakeups (batched draining: this
+/// exceeds `GRAPH_WAKEUPS` whenever a wakeup drains more than one).
+pub static GRAPH_COMPLETIONS: AtomicU64 = AtomicU64::new(0);
+
+pub fn count_dispatch_pass() {
+    DISPATCH_PASSES.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_dispatch_loop() {
+    DISPATCH_LOOPS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_order_build() {
+    ORDER_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_bucket_rebuild() {
+    BUCKET_REBUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_lock_acq() {
+    LOCK_ACQS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_batch(jobs: usize) {
+    BATCHES_FORMED.fetch_add(1, Ordering::Relaxed);
+    JOBS_DISPATCHED.fetch_add(jobs as u64, Ordering::Relaxed);
+}
+
+pub fn add_dispatch_ns(ns: u64) {
+    DISPATCH_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+pub fn count_graph_wakeup() {
+    GRAPH_WAKEUPS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count_graph_completions(n: u64) {
+    GRAPH_COMPLETIONS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Point-in-time snapshot of every counter; delta two snapshots to
+/// attribute work to a bounded run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    pub dispatch_passes: u64,
+    pub dispatch_loops: u64,
+    pub order_builds: u64,
+    pub bucket_rebuilds: u64,
+    pub lock_acqs: u64,
+    pub batches_formed: u64,
+    pub jobs_dispatched: u64,
+    pub dispatch_ns: u64,
+    pub graph_wakeups: u64,
+    pub graph_completions: u64,
+}
+
+pub fn snapshot() -> SchedStats {
+    SchedStats {
+        dispatch_passes: DISPATCH_PASSES.load(Ordering::Relaxed),
+        dispatch_loops: DISPATCH_LOOPS.load(Ordering::Relaxed),
+        order_builds: ORDER_BUILDS.load(Ordering::Relaxed),
+        bucket_rebuilds: BUCKET_REBUILDS.load(Ordering::Relaxed),
+        lock_acqs: LOCK_ACQS.load(Ordering::Relaxed),
+        batches_formed: BATCHES_FORMED.load(Ordering::Relaxed),
+        jobs_dispatched: JOBS_DISPATCHED.load(Ordering::Relaxed),
+        dispatch_ns: DISPATCH_NS.load(Ordering::Relaxed),
+        graph_wakeups: GRAPH_WAKEUPS.load(Ordering::Relaxed),
+        graph_completions: GRAPH_COMPLETIONS.load(Ordering::Relaxed),
+    }
+}
+
+impl SchedStats {
+    /// Counter deltas accumulated since `earlier` (saturating, so a
+    /// misordered pair degrades to zeros instead of garbage).
+    pub fn delta_since(&self, earlier: &SchedStats) -> SchedStats {
+        SchedStats {
+            dispatch_passes: self.dispatch_passes.saturating_sub(earlier.dispatch_passes),
+            dispatch_loops: self.dispatch_loops.saturating_sub(earlier.dispatch_loops),
+            order_builds: self.order_builds.saturating_sub(earlier.order_builds),
+            bucket_rebuilds: self.bucket_rebuilds.saturating_sub(earlier.bucket_rebuilds),
+            lock_acqs: self.lock_acqs.saturating_sub(earlier.lock_acqs),
+            batches_formed: self.batches_formed.saturating_sub(earlier.batches_formed),
+            jobs_dispatched: self.jobs_dispatched.saturating_sub(earlier.jobs_dispatched),
+            dispatch_ns: self.dispatch_ns.saturating_sub(earlier.dispatch_ns),
+            graph_wakeups: self.graph_wakeups.saturating_sub(earlier.graph_wakeups),
+            graph_completions: self.graph_completions.saturating_sub(earlier.graph_completions),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_delta_is_monotone_and_saturating() {
+        let before = snapshot();
+        count_dispatch_pass();
+        count_dispatch_loop();
+        count_order_build();
+        count_bucket_rebuild();
+        count_lock_acq();
+        count_batch(3);
+        add_dispatch_ns(1000);
+        count_graph_wakeup();
+        count_graph_completions(2);
+        let after = snapshot();
+        let d = after.delta_since(&before);
+        // Other test threads may also bump counters; the delta is at
+        // least what this thread added.
+        assert!(d.dispatch_passes >= 1);
+        assert!(d.dispatch_loops >= 1);
+        assert!(d.order_builds >= 1);
+        assert!(d.bucket_rebuilds >= 1);
+        assert!(d.lock_acqs >= 1);
+        assert!(d.batches_formed >= 1);
+        assert!(d.jobs_dispatched >= 3);
+        assert!(d.dispatch_ns >= 1000);
+        assert!(d.graph_wakeups >= 1);
+        assert!(d.graph_completions >= 2);
+        // Saturating: a misordered pair yields zeros, not wraparound.
+        assert_eq!(before.delta_since(&after).dispatch_passes, 0);
+    }
+}

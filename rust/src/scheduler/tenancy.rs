@@ -30,7 +30,7 @@
 //! order is bit-for-bit the pre-PR8 one.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 pub use crate::engines::{TenantId, UNTENANTED};
@@ -278,6 +278,13 @@ pub type TenantRanks = HashMap<TenantId, TenantRank>;
 pub struct SharedTenancy {
     enabled: AtomicBool,
     specs: Mutex<HashMap<TenantId, TenantSpec>>,
+    /// Bumped on every [`SharedTenancy::configure`] — engine schedulers
+    /// compare it against their cached copy to (a) refresh the spec
+    /// table without taking the mutex on every dispatch pass and (b)
+    /// reset their fair-queueing ledgers on a runtime retune, so a
+    /// long-lived pool never carries stale virtual-time tags into a new
+    /// tenant registry.
+    epoch: AtomicU64,
 }
 
 impl SharedTenancy {
@@ -297,6 +304,15 @@ impl SharedTenancy {
         }
         drop(specs);
         self.enabled.store(cfg.enabled, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Configuration generation: changes iff [`SharedTenancy::configure`]
+    /// ran.  Starts at 1 for a configured handle (and 0 for a bare
+    /// `default()`), so schedulers initializing their cache generation
+    /// to 0 observe the first configuration as a change.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     /// Whether tenancy is currently requested (the effective state in a

@@ -595,6 +595,233 @@ pub fn run_tenancy_comparison(
     result
 }
 
+/// Row-slot budget of the sched-bench scheduler: small relative to the
+/// burst so draining it takes many batch formations — the per-formation
+/// ordering cost is exactly what the bench isolates.
+pub const SCHED_BENCH_SLOTS: usize = 32;
+
+/// Result of one [`run_sched_bench`] half: scheduler hot-path counters
+/// (deltaed around the run) over a seeded zero-cost burst, normalized
+/// per query.  `completion_order` is the exact dispatch order the
+/// scheduler chose — the bit-identical-outputs surface the PR9
+/// incremental/exact comparison is checked against.
+#[derive(Debug, Clone)]
+pub struct SchedBenchReport {
+    /// Jobs in the burst.
+    pub n: usize,
+    /// Whether the incremental bucket-heap path was active (false = the
+    /// exact rebuild-and-sort fallback).
+    pub incremental: bool,
+    /// Microseconds of `EngineScheduler::dispatch` wall time per job —
+    /// pure orchestration overhead (the loopback instance costs nothing).
+    pub overhead_us_per_query: f64,
+    /// Raw counter deltas for the run (passes, loop iterations, order
+    /// builds, bucket rebuilds, lock acquisitions, ...).
+    pub stats: crate::scheduler::stats::SchedStats,
+    /// `(query, node)` in completion order == dispatch priority order
+    /// (single loopback instance, full-drain dispatch).
+    pub completion_order: Vec<(QueryId, usize)>,
+    /// Wall time of the whole run, seconds.
+    pub wall_s: f64,
+}
+
+impl SchedBenchReport {
+    /// JSON object for the bench artifacts (`BENCH_PR9.json` halves).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::{num, obj};
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("incremental", num(if self.incremental { 1.0 } else { 0.0 })),
+            ("overhead_us_per_query", num(self.overhead_us_per_query)),
+            ("dispatch_passes", num(self.stats.dispatch_passes as f64)),
+            ("dispatch_loops", num(self.stats.dispatch_loops as f64)),
+            ("order_builds", num(self.stats.order_builds as f64)),
+            ("bucket_rebuilds", num(self.stats.bucket_rebuilds as f64)),
+            ("lock_acqs", num(self.stats.lock_acqs as f64)),
+            ("batches_formed", num(self.stats.batches_formed as f64)),
+            ("jobs_dispatched", num(self.stats.jobs_dispatched as f64)),
+            ("wall_s", num(self.wall_s)),
+        ])
+    }
+}
+
+/// A loopback engine instance: completes every job instantly with
+/// `JobOutput::Unit` and echoes the scheduler's own charges back through
+/// the event channel (retired rows = slot rows, retired tokens = the
+/// dispatch-time reservation), exactly like a run-to-completion executor
+/// whose execution costs nothing.  With engine time at zero, everything
+/// the bench measures is scheduler orchestration.
+fn loopback_instance(
+    index: usize,
+    ev_tx: std::sync::mpsc::Sender<crate::engines::InstanceEvent>,
+) -> crate::engines::instance::Instance {
+    use crate::engines::{Batch, Completion, ExecTiming, InstanceEvent, JobOutput};
+    let (batch_tx, batch_rx) = std::sync::mpsc::channel::<Batch>();
+    let handle = std::thread::spawn(move || {
+        for batch in batch_rx {
+            let mut retired = 0usize;
+            let mut retired_tokens = 0usize;
+            for (ctx, job) in batch.jobs {
+                retired += job.slot_rows();
+                retired_tokens += ctx.kv_tokens;
+                let _ = ctx.reply.send(Completion {
+                    query: ctx.query,
+                    node: ctx.node,
+                    output: JobOutput::Unit,
+                    timing: ExecTiming::default(),
+                });
+            }
+            let _ = ev_tx.send(InstanceEvent {
+                instance: index,
+                resident: 0,
+                retired,
+                retired_tokens,
+                resident_added: 0,
+                resident_freed: 0,
+            });
+        }
+    });
+    crate::engines::instance::Instance { sender: batch_tx, handle }
+}
+
+/// The PR9 scheduler-overhead microbench: drive one `EngineScheduler`
+/// (TopoAware + WCP, row-slot accounting, no accumulation window) over a
+/// pre-enqueued burst of `n` zero-cost `ToolCall` jobs served by a single
+/// [`loopback_instance`], and isolate pure orchestration cost from the
+/// process-global hot-path counters.  The whole burst is enqueued — and
+/// the job channel closed — *before* the scheduler thread starts, so
+/// batch formation always sees the same queue state and the run is fully
+/// deterministic: same `(n, seed, incremental)` in, same
+/// `completion_order` and counter profile out.
+pub fn run_sched_bench(n: usize, seed: u64, incremental: bool) -> Result<SchedBenchReport> {
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    use crate::engines::{EngineJob, ExecMode, InstanceEvent, JobOutput};
+    use crate::error::TeolaError;
+    use crate::scheduler::stats;
+    use crate::scheduler::tenancy::SharedTenancy;
+    use crate::scheduler::{BatchPolicy, EngineScheduler, QueueItem};
+    use crate::util::rng::Rng;
+
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let (job_tx, job_rx) = channel::<QueueItem>();
+    let (done_tx, done_rx) = channel::<crate::engines::Completion>();
+    let sched = EngineScheduler::new(
+        "sched-bench".to_string(),
+        vec![loopback_instance(0, ev_tx)],
+        ev_rx,
+        job_rx,
+        Arc::new(AtomicU8::new(BatchPolicy::TopoAware.to_u8())),
+        Arc::new(AtomicUsize::new(SCHED_BENCH_SLOTS)),
+        Arc::new(AtomicBool::new(false)), // full-drain dispatch (no continuous)
+        Arc::new(AtomicU64::new(0)),      // no accumulation window
+        Arc::new(AtomicUsize::new(0)),    // prefix routing off
+        Arc::new(AtomicBool::new(true)),  // WCP bucket ordering on
+        Arc::new(AtomicUsize::new(0)),    // legacy row-slot accounting
+        Arc::new(AtomicUsize::new(0)),    // residency off
+        ExecMode::FullBatch,
+        Arc::new(SharedTenancy::default()),
+        Arc::new(AtomicBool::new(incremental)),
+    );
+
+    // Distinct, well-separated critical-path stamps in seeded random
+    // order: every query bucket gets a unique priority, so both ordering
+    // modes must agree on one total order (no ties for truncation jitter
+    // to flip).  All items share one arrival stamp — WCP aging then adds
+    // the same term to every bucket and cancels out of comparisons.
+    let mut stamps: Vec<u64> = (1..=n as u64).map(|i| i * 1000).collect();
+    Rng::new(seed).shuffle(&mut stamps);
+    let base = Instant::now();
+    const NODES_PER_QUERY: usize = 4;
+    for (i, &wcp_us) in stamps.iter().enumerate() {
+        let query = 0x9CA_0000 + (i / NODES_PER_QUERY) as QueryId;
+        let node = 1 + i % NODES_PER_QUERY;
+        job_tx
+            .send(QueueItem {
+                query,
+                node,
+                depth: (NODES_PER_QUERY - 1 - i % NODES_PER_QUERY) as u32,
+                bundle: (query, node as u64),
+                arrival: base,
+                rows: 1,
+                tokens: 1,
+                wcp_discounted: false,
+                prefix: None,
+                wcp_us,
+                tenant: UNTENANTED,
+                job: EngineJob::ToolCall { name: "sched-bench-noop".into(), cost_us: 0 },
+                reply: done_tx.clone(),
+                successors: Vec::new(),
+            })
+            .map_err(|_| TeolaError::Scheduler("sched-bench job channel closed".into()))?;
+    }
+    drop(job_tx); // burst fully enqueued; the scheduler drains and exits
+    drop(done_tx); // completions only flow through queue items now
+
+    let before = stats::snapshot();
+    let start = Instant::now();
+    let h = std::thread::spawn(move || sched.run());
+    let mut completion_order = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = done_rx.recv_timeout(Duration::from_secs(30)).map_err(|_| {
+            TeolaError::Scheduler(format!(
+                "sched-bench lost dispatches: {} of {n} completions arrived",
+                completion_order.len()
+            ))
+        })?;
+        if let JobOutput::Failed(m) = &c.output {
+            return Err(TeolaError::Scheduler(format!("sched-bench job failed: {m}")));
+        }
+        completion_order.push((c.query, c.node));
+    }
+    h.join().expect("sched-bench scheduler thread");
+    let wall_s = start.elapsed().as_secs_f64();
+    let delta = stats::snapshot().delta_since(&before);
+    // Scheduler and loopback have exited and every reply sender is gone:
+    // anything still readable is a duplicated dispatch.
+    if done_rx.try_recv().is_ok() {
+        return Err(TeolaError::Scheduler("sched-bench duplicated a dispatch".into()));
+    }
+    Ok(SchedBenchReport {
+        n,
+        incremental,
+        overhead_us_per_query: delta.dispatch_ns as f64 / 1000.0 / n.max(1) as f64,
+        stats: delta,
+        completion_order,
+        wall_s,
+    })
+}
+
+/// The PR9 overhead comparison: run the same seeded burst through the
+/// exact rebuild-and-sort fallback and then the incremental bucket-heap
+/// path, and verify the two chose **bit-identical dispatch orders** —
+/// the flag must trade work, never behavior.  Returns `(exact,
+/// incremental)`.
+pub fn run_sched_comparison(
+    n: usize,
+    seed: u64,
+) -> Result<(SchedBenchReport, SchedBenchReport)> {
+    let off = run_sched_bench(n, seed, false)?;
+    let on = run_sched_bench(n, seed, true)?;
+    if off.completion_order != on.completion_order {
+        let at = off
+            .completion_order
+            .iter()
+            .zip(on.completion_order.iter())
+            .position(|(a, b)| a != b)
+            .unwrap_or(0);
+        return Err(crate::error::TeolaError::Scheduler(format!(
+            "incremental ordering diverged from the exact path at dispatch {at}: \
+             exact {:?} vs incremental {:?}",
+            off.completion_order.get(at),
+            on.completion_order.get(at)
+        )));
+    }
+    Ok((off, on))
+}
+
 /// Open-loop Poisson load for one (app, scheme, dataset) configuration:
 /// sample `n_queries` from the seeded dataset, build their e-graphs under
 /// the scheme (build time recorded as opt time, not serving time), then

@@ -1018,3 +1018,240 @@ fn sfq_fair_share_converges_and_never_starves() {
         Ok(())
     });
 }
+
+/// Queue-item factory for the PR9 equivalence test: the spec tuple is
+/// `(query, node, depth, rows, tokens, arrival_ms, wcp_us)` and can be
+/// materialized once per structure under test (QueueItem is not `Clone`
+/// — each copy gets its own forgotten reply channel).  Arrivals are
+/// whole milliseconds past `t0` (globally distinct, monotone) and WCP
+/// stamps are whole seconds, so the `wcp_priority_us` aging term — read
+/// at a slightly different `Instant::now()` by each of the three
+/// ordering paths — can never flip an ordering decision between calls:
+/// stamp differences (multiples of 1e6 us) dwarf any aging drift, and
+/// equal-stamp ties resolve to the earlier arrival under both the aging
+/// term and the arrival tie-break.  The tenant is a pure function of
+/// the query id, preserving the scheduler's one-tenant-per-query
+/// invariant across independently generated items.
+type EquivSpec = (u64, usize, u32, usize, usize, u64, u64);
+
+fn equiv_item(t0: Instant, s: &EquivSpec) -> QueueItem {
+    let (query, node, depth, rows, tokens, ms, wcp_us) = *s;
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    QueueItem {
+        query,
+        node,
+        depth,
+        bundle: (query, node as u64),
+        arrival: t0 + Duration::from_millis(ms),
+        rows,
+        tokens,
+        wcp_discounted: false,
+        prefix: None,
+        wcp_us,
+        tenant: (query % 3) as teola::engines::TenantId,
+        job: EngineJob::ToolCall { name: "equiv".into(), cost_us: 0 },
+        reply: tx,
+        successors: Vec::new(),
+    }
+}
+
+/// PR9 tentpole equivalence: under random interleavings of the five
+/// queue mutations the engine scheduler performs — enqueue, WCP
+/// restamp, prefix rediscount, requeue-on-death, tenant boost — the
+/// incremental `SchedQueue` (lazy bucket invalidation), its exact
+/// rebuild-all fallback (`incremental = false`), and the original
+/// sort-based `Vec` path agree on every ordering decision: the same
+/// priority head, the same batch membership under every policy and
+/// budget denomination, and — between the two `SchedQueue` modes —
+/// the exact same batch order.  (The `Vec` path's *returned* order is
+/// a `swap_remove` artifact, so its batches compare as sorted sets.)
+#[test]
+fn sched_queue_matches_sorted_path_under_interleavings() {
+    use teola::scheduler::batching::{
+        form_batch_ranked, form_continuous_admission_ranked, head_index_ranked,
+    };
+    use teola::scheduler::{SchedQueue, TenantRanks};
+
+    fn mk_ranks(rng: &mut Rng) -> Option<TenantRanks> {
+        if rng.chance(0.3) {
+            return None;
+        }
+        // Distinct SFQ virtual-start tags per tenant keep the rank order
+        // total even when the random deadline boosts collide.
+        let mut m = TenantRanks::new();
+        for t in 0u32..3 {
+            m.insert(t, (rng.range(0, 2), (u64::from(t) + 1) * 100, t));
+        }
+        Some(m)
+    }
+
+    check(60, |rng| {
+        let t0 = Instant::now();
+        let mut vecq: Vec<QueueItem> = Vec::new();
+        let mut incr = SchedQueue::new();
+        let mut exact = SchedQueue::new();
+        let mut next_ms: u64 = 0;
+        let mut next_node: usize = 0;
+        let mut ranks = mk_ranks(rng);
+        let policy = *teola::util::proptest::pick(
+            rng,
+            &[BatchPolicy::TopoAware, BatchPolicy::BlindTO, BatchPolicy::PerInvocation],
+        );
+        let wcp_on = rng.chance(0.7);
+        let key = |it: &QueueItem| (it.query, it.node);
+
+        let mut push_burst =
+            |rng: &mut Rng,
+             vecq: &mut Vec<QueueItem>,
+             incr: &mut SchedQueue,
+             exact: &mut SchedQueue,
+             next_ms: &mut u64,
+             next_node: &mut usize,
+             n: usize| {
+                for _ in 0..n {
+                    *next_ms += rng.range(1, 4);
+                    *next_node += 1;
+                    let spec: EquivSpec = (
+                        rng.range(1, 7),
+                        *next_node,
+                        rng.range(0, 5) as u32,
+                        rng.range_usize(1, 5),
+                        rng.range_usize(1, 600),
+                        *next_ms,
+                        rng.range(0, 40) * 1_000_000,
+                    );
+                    vecq.push(equiv_item(t0, &spec));
+                    incr.push(equiv_item(t0, &spec));
+                    exact.push(equiv_item(t0, &spec));
+                }
+            };
+
+        let seed = rng.range_usize(2, 11);
+        push_burst(rng, &mut vecq, &mut incr, &mut exact, &mut next_ms, &mut next_node, seed);
+
+        for _ in 0..rng.range_usize(3, 11) {
+            match rng.range(0, 4) {
+                0 => {
+                    let n = rng.range_usize(1, 5);
+                    push_burst(
+                        rng, &mut vecq, &mut incr, &mut exact, &mut next_ms, &mut next_node, n,
+                    );
+                }
+                1 => {
+                    // WCP restamp: one query's remaining-path estimate
+                    // grows (fresh profile feedback).  The closure is a
+                    // pure function of the item, so the three structures
+                    // see identical mutations in any iteration order.
+                    let q = rng.range(1, 7);
+                    let delta = rng.range(1, 5) * 1_000_000;
+                    let mut f = |it: &mut QueueItem| {
+                        if it.query == q {
+                            it.wcp_us = it.wcp_us.saturating_add(delta);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    incr.restamp_wcp(&mut f);
+                    exact.restamp_wcp(&mut f);
+                    for it in vecq.iter_mut() {
+                        f(it);
+                    }
+                }
+                2 => {
+                    // Prefix rediscount: a query's queued items get the
+                    // resident-prefix discount exactly once.
+                    let q = rng.range(1, 7);
+                    let cut = rng.range(1, 3) * 1_000_000;
+                    let mut f = |it: &mut QueueItem| {
+                        if it.query == q && !it.wcp_discounted {
+                            it.wcp_discounted = true;
+                            it.wcp_us = it.wcp_us.saturating_sub(cut);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    incr.restamp_wcp(&mut f);
+                    exact.restamp_wcp(&mut f);
+                    for it in vecq.iter_mut() {
+                        f(it);
+                    }
+                }
+                _ => {
+                    // Tenant boost / retune: the rank map the ordering
+                    // calls consult changes out from under the queue.
+                    ranks = mk_ranks(rng);
+                }
+            }
+
+            // Head agreement after every mutation.
+            let vh = head_index_ranked(&vecq, policy, wcp_on, ranks.as_ref())
+                .map(|i| key(&vecq[i]));
+            let ih = incr.head(policy, wcp_on, ranks.as_ref(), true).map(key);
+            let eh = exact.head(policy, wcp_on, ranks.as_ref(), false).map(key);
+            prop_assert(
+                vh == ih && ih == eh,
+                format!("head diverged: vec {vh:?}, incremental {ih:?}, exact {eh:?}"),
+            )?;
+
+            // Batch agreement: random denomination and budget, and for
+            // TopoAware sometimes the continuous-admission path.
+            let unit = if rng.chance(0.5) { SlotUnit::Rows } else { SlotUnit::Tokens };
+            let budget = match unit {
+                SlotUnit::Rows => rng.range_usize(1, 17),
+                SlotUnit::Tokens => rng.range_usize(1, 1201),
+            };
+            let (vb, ib, eb) = if policy == BatchPolicy::TopoAware && rng.chance(0.4) {
+                (
+                    form_continuous_admission_ranked(
+                        &mut vecq, budget, wcp_on, unit, ranks.as_ref(),
+                    ),
+                    incr.form_continuous(budget, wcp_on, unit, ranks.as_ref(), true),
+                    exact.form_continuous(budget, wcp_on, unit, ranks.as_ref(), false),
+                )
+            } else {
+                (
+                    form_batch_ranked(&mut vecq, policy, budget, wcp_on, unit, ranks.as_ref()),
+                    incr.form_batch(policy, budget, wcp_on, unit, ranks.as_ref(), true),
+                    exact.form_batch(policy, budget, wcp_on, unit, ranks.as_ref(), false),
+                )
+            };
+            let ik: Vec<_> = ib.iter().map(key).collect();
+            let ek: Vec<_> = eb.iter().map(key).collect();
+            prop_assert(
+                ik == ek,
+                format!("incremental batch order {ik:?} != exact fallback order {ek:?}"),
+            )?;
+            let mut vs: Vec<_> = vb.iter().map(key).collect();
+            let mut is_ = ik.clone();
+            vs.sort_unstable();
+            is_.sort_unstable();
+            prop_assert(
+                vs == is_,
+                format!("batch membership diverged: vec {vs:?} vs sched-queue {is_:?}"),
+            )?;
+
+            // Requeue-on-death: every dispatched item comes straight
+            // back (instance died before the batch ran).
+            vecq.extend(vb);
+            for it in ib {
+                incr.push(it);
+            }
+            for it in eb {
+                exact.push(it);
+            }
+            prop_assert(
+                vecq.len() == incr.len() && incr.len() == exact.len(),
+                format!(
+                    "queue lengths diverged: vec {}, incremental {}, exact {}",
+                    vecq.len(),
+                    incr.len(),
+                    exact.len()
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}

@@ -56,6 +56,7 @@ fn engine_with(
         Arc::new(AtomicUsize::new(0)),
         ExecMode::Stepped,
         Arc::new(teola::scheduler::tenancy::SharedTenancy::default()),
+        Arc::new(AtomicBool::new(true)),
     );
     let h = std::thread::spawn(move || sched.run());
     (job_tx, h)

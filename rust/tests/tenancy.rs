@@ -7,13 +7,23 @@
 //!
 //! Everything runs on the sim backend (deterministic, no artifacts).
 
-use std::time::Duration;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use teola::bench::{apply_env_knobs, tenant_mix_prepared};
+use teola::engines::instance::Instance;
 use teola::engines::sim::ExecBackend;
-use teola::engines::{EngineKind, QueryId, TenantId, UNTENANTED};
-use teola::scheduler::tenancy::TenancyConfig;
-use teola::scheduler::{Platform, PlatformConfig};
+use teola::engines::{
+    Batch, Completion, EngineJob, EngineKind, ExecMode, ExecTiming, InstanceEvent,
+    JobOutput, QueryId, TenantId, UNTENANTED,
+};
+use teola::scheduler::tenancy::{SharedTenancy, TenancyConfig};
+use teola::scheduler::{
+    BatchPolicy, EngineScheduler, Platform, PlatformConfig, QueueItem,
+};
 use teola::serving::{run_load_tenants, TENANT_HEAVY, TENANT_LIGHT};
 use teola::workload::{MultiTenantTrace, TenantLoad};
 
@@ -62,6 +72,7 @@ fn env_knobs_round_trip_through_config() {
         "TEOLA_WCP",
         "TEOLA_PIPELINE",
         "TEOLA_TENANCY",
+        "TEOLA_SCHED_INCREMENTAL",
     ];
     let _env = EnvGuard::capture(KEYS);
 
@@ -76,6 +87,7 @@ fn env_knobs_round_trip_through_config() {
     std::env::set_var("TEOLA_WCP", "off");
     std::env::set_var("TEOLA_PIPELINE", "off");
     std::env::set_var("TEOLA_TENANCY", spec);
+    std::env::set_var("TEOLA_SCHED_INCREMENTAL", "off");
 
     let mut cfg = PlatformConfig::default_with("artifacts", "llm-lite");
     apply_env_knobs(&mut cfg);
@@ -92,6 +104,7 @@ fn env_knobs_round_trip_through_config() {
     );
     assert!(!cfg.wcp);
     assert!(!cfg.pipeline);
+    assert!(!cfg.sched_incremental);
     assert_eq!(cfg.tenancy, TenancyConfig::parse(spec).unwrap());
     // The spec grammar is its own snapshot format: to_spec -> parse is
     // the identity, and this spec renders back verbatim.
@@ -115,6 +128,7 @@ fn env_knobs_round_trip_through_config() {
     assert_eq!(fresh.wcp, dfl.wcp);
     assert_eq!(fresh.pipeline, dfl.pipeline);
     assert_eq!(fresh.tenancy, dfl.tenancy);
+    assert_eq!(fresh.sched_incremental, dfl.sched_incremental);
 }
 
 /// The runtime registry round-trips: a config set at startup is what
@@ -244,4 +258,201 @@ fn disabled_tenancy_makes_the_tenant_stamp_inert() {
         stamped.outputs, untenanted.outputs,
         "disabled tenancy must make the tenant stamp invisible in outputs"
     );
+}
+
+/// Loopback executor for the QoS regression tests below: every job
+/// completes instantly with `Unit` and the whole batch retires in one
+/// instance event, so — with a single instance and full-batch dispatch
+/// — the order completions arrive on a shared reply channel *is* the
+/// scheduler's dispatch priority order.
+fn loopback_instance(index: usize, ev_tx: Sender<InstanceEvent>) -> Instance {
+    let (tx, rx) = channel::<Batch>();
+    let handle = std::thread::spawn(move || {
+        while let Ok(batch) = rx.recv() {
+            let mut retired = 0usize;
+            let mut retired_tokens = 0usize;
+            for (ctx, job) in batch.jobs {
+                retired += job.slot_rows();
+                retired_tokens += ctx.kv_tokens;
+                let _ = ctx.reply.send(Completion {
+                    query: ctx.query,
+                    node: ctx.node,
+                    output: JobOutput::Unit,
+                    timing: ExecTiming::default(),
+                });
+            }
+            let _ = ev_tx.send(InstanceEvent {
+                instance: index,
+                resident: 0,
+                retired,
+                retired_tokens,
+                resident_added: 0,
+                resident_freed: 0,
+            });
+        }
+    });
+    Instance { sender: tx, handle }
+}
+
+/// Engine scheduler wired for the QoS regression tests: one loopback
+/// instance, `TopoAware` full-batch dispatch over `slots` row slots, the
+/// given batching window, WCP ordering *off* (tenant rank must be the
+/// only cross-bucket discriminator), and the shared tenancy handle under
+/// test.  Returned unspawned so a test can pre-seed the job channel and
+/// have the first dispatch pass see the whole queue at once.
+fn qos_sched(
+    name: &str,
+    tenancy: Arc<SharedTenancy>,
+    slots: usize,
+    window_us: u64,
+) -> (Sender<QueueItem>, EngineScheduler) {
+    let (ev_tx, ev_rx) = channel::<InstanceEvent>();
+    let (job_tx, job_rx) = channel::<QueueItem>();
+    let sched = EngineScheduler::new(
+        name.to_string(),
+        vec![loopback_instance(0, ev_tx)],
+        ev_rx,
+        job_rx,
+        Arc::new(AtomicU8::new(BatchPolicy::TopoAware.to_u8())),
+        Arc::new(AtomicUsize::new(slots)),
+        Arc::new(AtomicBool::new(false)),
+        Arc::new(AtomicU64::new(window_us)),
+        Arc::new(AtomicUsize::new(0)),
+        Arc::new(AtomicBool::new(false)),
+        Arc::new(AtomicUsize::new(0)),
+        Arc::new(AtomicUsize::new(0)),
+        ExecMode::FullBatch,
+        tenancy,
+        Arc::new(AtomicBool::new(true)),
+    );
+    (job_tx, sched)
+}
+
+/// Single-row tool-call item stamped with a tenant and an explicit
+/// arrival (the QoS tests backdate arrivals to force deadline breaches).
+fn qos_item(query: u64, tenant: TenantId, arrival: Instant, reply: Sender<Completion>) -> QueueItem {
+    QueueItem {
+        query,
+        node: 1,
+        depth: 0,
+        bundle: (query, 1),
+        arrival,
+        rows: 1,
+        tokens: 1,
+        wcp_discounted: false,
+        prefix: None,
+        wcp_us: 0,
+        tenant,
+        job: EngineJob::ToolCall { name: "qos".into(), cost_us: 0 },
+        reply,
+        successors: Vec::new(),
+    }
+}
+
+/// PR9 satellite regression: a runtime tenancy retune must reset the
+/// fair-queueing ledger.  Phase 1 serves four tenant-1 batches, driving
+/// its SFQ virtual-start tag well past tenant 2's.  After `configure`
+/// bumps the registry epoch, a contended two-tenant batch must order by
+/// the *fresh* ledger — the virtual-start tags tie at zero and the rank
+/// tie-break picks tenant 1 — even though tenant 2's item arrived first
+/// and the stale ledger would have ranked tenant 2 strictly ahead.
+#[test]
+fn tenancy_retune_resets_fair_queue_ledger() {
+    let _guard = common::serial();
+    let ten = Arc::new(SharedTenancy::default());
+    ten.configure(
+        &TenancyConfig::parse("1:w=1,class=interactive;2:w=1,class=interactive").unwrap(),
+    );
+    let (job_tx, sched) = qos_sched("qos-retune", ten.clone(), 2, 200_000);
+    let sched_h = std::thread::spawn(move || sched.run());
+
+    // Phase 1: four tenant-1 jobs -> two full batches, four SFQ charges.
+    let (tx1, rx1) = channel();
+    let now = Instant::now();
+    for i in 0..4u64 {
+        job_tx.send(qos_item(100 + i, 1, now, tx1.clone())).unwrap();
+    }
+    for _ in 0..4 {
+        let c = rx1.recv_timeout(Duration::from_secs(5)).expect("phase-1 job completes");
+        assert!(!matches!(c.output, JobOutput::Failed(_)), "phase 1 failed: {:?}", c.output);
+    }
+
+    // Retune mid-run: new registry generation, fresh ledger.
+    ten.configure(
+        &TenancyConfig::parse("1:w=2,class=interactive;2:w=2,class=interactive").unwrap(),
+    );
+
+    // Phase 2: tenant 2 first into the queue, tenant 1 right behind; the
+    // 200ms batching window holds the single-item batch until both are
+    // queued, so one contended batch carries both and its internal order
+    // is the rank order.
+    let (tx2, rx2) = channel();
+    let base = Instant::now();
+    job_tx.send(qos_item(201, 2, base, tx2.clone())).unwrap();
+    job_tx.send(qos_item(202, 1, base + Duration::from_micros(500), tx2.clone())).unwrap();
+    let first = rx2.recv_timeout(Duration::from_secs(5)).expect("phase-2 first completion");
+    assert_eq!(
+        first.query, 202,
+        "retune must reset the SFQ ledger: tenant 1 ranks first on a fresh ledger, \
+         so its item dispatches ahead of tenant 2's despite the later arrival"
+    );
+    let second = rx2.recv_timeout(Duration::from_secs(5)).expect("phase-2 second completion");
+    assert_eq!(second.query, 201);
+
+    drop(job_tx);
+    sched_h.join().expect("scheduler thread exits");
+}
+
+/// PR9 satellite regression: admission-control shedding is bounded and
+/// newest-first.  With a breached Interactive item needing one row of
+/// budget, exactly one Batch-class victim — the *newest* — is shed; the
+/// two older Batch items (the most sunk queueing investment) survive the
+/// breach and complete normally alongside the Interactive item.  (PR8
+/// shed the entire Batch backlog here.)
+#[test]
+fn admission_shed_is_bounded_and_newest_first() {
+    let _guard = common::serial();
+    let ten = Arc::new(SharedTenancy::default());
+    ten.configure(
+        &TenancyConfig::parse("1:w=1,class=interactive,deadline_ms=10;2:w=1,class=batch")
+            .unwrap(),
+    );
+    let (job_tx, sched) = qos_sched("qos-shed", ten, 8, 0);
+
+    // Seed the whole scenario before the scheduler thread starts, so the
+    // first dispatch pass sees the full queue: three Batch-class items
+    // (oldest to newest) and an Interactive item 50ms past its 10ms
+    // deadline — already breached on arrival.
+    let now = Instant::now();
+    let (tx, rx) = channel();
+    job_tx.send(qos_item(301, 2, now - Duration::from_millis(100), tx.clone())).unwrap();
+    job_tx.send(qos_item(302, 2, now - Duration::from_millis(80), tx.clone())).unwrap();
+    job_tx.send(qos_item(303, 2, now - Duration::from_millis(60), tx.clone())).unwrap();
+    job_tx.send(qos_item(401, 1, now - Duration::from_millis(50), tx.clone())).unwrap();
+    drop(tx);
+    let sched_h = std::thread::spawn(move || sched.run());
+
+    let mut outcomes: HashMap<u64, JobOutput> = HashMap::new();
+    for _ in 0..4 {
+        let c = rx.recv_timeout(Duration::from_secs(5)).expect("every item gets a completion");
+        outcomes.insert(c.query, c.output);
+    }
+    match outcomes.get(&303) {
+        Some(JobOutput::Failed(msg)) => assert!(
+            msg.contains("shed by admission control"),
+            "newest Batch item must be shed by admission control, got: {msg}"
+        ),
+        other => panic!("newest Batch item must be shed, got {other:?}"),
+    }
+    for q in [301, 302, 401] {
+        assert!(
+            !matches!(outcomes.get(&q), Some(JobOutput::Failed(_)) | None),
+            "older Batch work and the Interactive item must survive a bounded shed; \
+             query {q} got {:?}",
+            outcomes.get(&q)
+        );
+    }
+
+    drop(job_tx);
+    sched_h.join().expect("scheduler thread exits");
 }
