@@ -18,17 +18,22 @@ pub enum AppKind {
     DocQaAdvanced,
     ContextualRetrieval,
     Agent,
+    /// Agentic function calling with runtime tool fan-out (PR10): the
+    /// plan LLM's output decides how many parallel tool calls to spawn,
+    /// so the e-graph *grows* at runtime instead of being fixed at bind.
+    AgenticTools,
 }
 
 impl AppKind {
-    /// All apps, Fig. 8 row order.
-    pub fn all() -> [AppKind; 5] {
+    /// All apps, Fig. 8 row order (+ the runtime-growth agentic app).
+    pub fn all() -> [AppKind; 6] {
         [
             AppKind::SearchGen,
             AppKind::DocQaNaive,
             AppKind::DocQaAdvanced,
             AppKind::ContextualRetrieval,
             AppKind::Agent,
+            AppKind::AgenticTools,
         ]
     }
 
@@ -40,6 +45,7 @@ impl AppKind {
             AppKind::DocQaAdvanced => "doc-qa-advanced",
             AppKind::ContextualRetrieval => "contextual-retrieval",
             AppKind::Agent => "llm-agent",
+            AppKind::AgenticTools => "agentic-tools",
         }
     }
 
@@ -51,6 +57,7 @@ impl AppKind {
             AppKind::DocQaAdvanced => doc_qa_advanced(core_llm),
             AppKind::ContextualRetrieval => contextual_retrieval(core_llm),
             AppKind::Agent => llm_agent(core_llm),
+            AppKind::AgenticTools => agentic_tools(core_llm),
         }
     }
 
@@ -310,6 +317,53 @@ pub fn llm_agent(core_llm: &str) -> WorkflowTemplate {
         core_llm,
     ));
     t.chain(&[plan, draft, send, confirm]);
+    t
+}
+
+/// Agentic function calling with runtime tool fan-out (PR10): the core
+/// LLM plans, then a `ToolFanout` component spawns 1..=max_fan parallel
+/// `call_api` invocations *at runtime* — the count is a function of the
+/// plan output, unknown when the graph is lowered — and the core LLM
+/// confirms over the joined results.
+pub fn agentic_tools(core_llm: &str) -> WorkflowTemplate {
+    let mut t = WorkflowTemplate::new("agentic-tools");
+    let plan = t.add(comp(
+        "plan",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("agentic-plan-tools", 20)),
+                PromptPart::Question,
+            ],
+            out_tokens: 24,
+            segments: 1,
+            fan: 1,
+        },
+        core_llm,
+    ));
+    let fanout = t.add(comp_b(
+        "tool-fanout",
+        ComponentKind::ToolFanout { name: "call_api".into(), cost_us: 20_000, max_fan: 4 },
+        "tool",
+    ));
+    let confirm = t.add(comp(
+        "confirm",
+        ComponentKind::LlmGenerate {
+            variant: core_llm.into(),
+            mode: SynthesisMode::OneShot,
+            prompt: vec![
+                PromptPart::Instruction(instr_tokens("agentic-confirm", 14)),
+                PromptPart::Question,
+                PromptPart::Upstream { component: plan, slice: None },
+            ],
+            out_tokens: 0,
+            segments: 1,
+            fan: 1,
+        },
+        core_llm,
+    ));
+    t.chain(&[plan, fanout, confirm]);
     t
 }
 

@@ -227,6 +227,30 @@ pub fn app_prepared(app: AppKind, core_llm: &str, n: usize, seed: u64) -> Vec<(E
         .collect()
 }
 
+/// The PR10 speculation trace behind `BENCH_PR10.json` and
+/// `tests/speculation.rs`: a seeded mix of guard-heavy `search-gen`
+/// queries (proxy -> judge -> Condition -> guarded web-search ->
+/// synthesize, ~70% guard-pass) with every third query an
+/// `agentic-tools` workflow (plan LLM -> runtime tool fan-out ->
+/// confirm LLM).  The guard-heavy majority gives branch speculation
+/// its p95 win (the 35 ms search RTT overlaps the judge decode); the
+/// agentic minority exercises runtime graph growth under load.
+pub fn spec_mix_prepared(core_llm: &str, n: usize, seed: u64) -> Vec<(EGraph, u64)> {
+    let profiles = ProfileRegistry::with_defaults();
+    let mut ds = Dataset::new(DatasetKind::WebQuestions, seed);
+    (0..n)
+        .map(|i| {
+            let q = ds.sample();
+            let app =
+                if i % 3 == 2 { AppKind::AgenticTools } else { AppKind::SearchGen };
+            let mut t = app.template(core_llm);
+            bind_answer_tokens(&mut t, q.answer_tokens);
+            let e = Scheme::Teola.build(&t, &q, &profiles).unwrap();
+            (e, 0u64)
+        })
+        .collect()
+}
+
 /// True when a Platform can start: either the simulated backend was
 /// selected via `TEOLA_BACKEND=sim`, or the XLA backend is fully usable
 /// (real crate linked *and* artifacts present).  The figure benches gate
@@ -380,6 +404,32 @@ pub fn apply_env_knobs(cfg: &mut PlatformConfig) {
             other => {
                 eprintln!("warning: unknown TEOLA_PIPELINE={other:?} (want on|off); ignoring")
             }
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_SPECULATION") {
+        // Same token set as the CLI's --speculate flag: speculative
+        // branch dispatch + discounted-rank scheduling for guarded
+        // subgraphs.  Off keeps the dispatch path bit-identical.
+        match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "on" | "true" => cfg.speculation = true,
+            "0" | "off" | "false" => cfg.speculation = false,
+            "" => {}
+            other => eprintln!(
+                "warning: unknown TEOLA_SPECULATION={other:?} (want on|off); ignoring"
+            ),
+        }
+    }
+    if let Ok(v) = std::env::var("TEOLA_SPEC_THRESHOLD") {
+        // Minimum guard-pass probability before a branch is worth
+        // speculating on; empty keeps the config default.
+        match v.trim() {
+            "" => {}
+            t => match t.parse::<f64>() {
+                Ok(p) if (0.0..=1.0).contains(&p) => cfg.spec_threshold = p,
+                _ => eprintln!(
+                    "warning: unparseable TEOLA_SPEC_THRESHOLD={v:?} (want 0..=1); ignoring"
+                ),
+            },
         }
     }
     if let Ok(v) = std::env::var("TEOLA_TENANCY") {

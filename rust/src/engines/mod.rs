@@ -133,6 +133,18 @@ pub enum EngineJob {
     WebSearch { queries: Vec<Vec<i32>>, top_k: usize },
     /// Simulated external tool API call with a fixed latency envelope.
     ToolCall { name: String, cost_us: u64 },
+    /// Cancel one query node's queued work (speculative branch refuted by
+    /// its guard): the engine *scheduler* intercepts this at enqueue,
+    /// purges every matching queued item (dropping their replies — a
+    /// cancelled speculation must never surface `Failed`), and refunds
+    /// the tenant's fair-queueing charge if the node was already
+    /// dispatched.  Never reaches an instance.
+    CancelNode { query: QueryId, node: NodeId },
+    /// Restamp every queued item of `query` with a fresh remaining
+    /// critical-path estimate (guard resolution re-weighted the query's
+    /// WCP).  Intercepted at enqueue like `CancelNode`; never reaches an
+    /// instance.
+    RestampWcp { query: QueryId, wcp_us: u64 },
 }
 
 impl EngineJob {
@@ -195,6 +207,8 @@ impl EngineJob {
             EngineJob::ClonePrefix { .. }
             | EngineJob::FreeQuery { .. }
             | EngineJob::CancelSeq { .. }
+            | EngineJob::CancelNode { .. }
+            | EngineJob::RestampWcp { .. }
             | EngineJob::ToolCall { .. } => 1,
         }
     }

@@ -108,6 +108,11 @@ pub struct SearchExecutor {
 
 impl BatchExecutor for SearchExecutor {
     fn execute(&mut self, batch: Batch, emit: &mut dyn FnMut(Completion)) -> Result<()> {
+        // Tool calls batched together model concurrent API requests: they
+        // share one wall-clock window of the *longest* call (like batched
+        // web search shares one RTT) instead of sleeping serially.  This
+        // is what runtime tool fan-out (PR10) buys latency from.
+        let mut tools: Vec<(crate::engines::RequestCtx, u64)> = Vec::new();
         for (ctx, job) in batch.jobs {
             let started = Instant::now();
             match job {
@@ -138,20 +143,27 @@ impl BatchExecutor for SearchExecutor {
                     });
                 }
                 EngineJob::ToolCall { cost_us, .. } => {
-                    std::thread::sleep(Duration::from_micros(cost_us));
-                    emit(Completion {
-                        query: ctx.query,
-                        node: ctx.node,
-                        output: JobOutput::Unit,
-                        timing: ExecTiming {
-                            queued_us: 0,
-                            exec_us: started.elapsed().as_micros() as u64,
-                        },
-                    });
+                    tools.push((ctx, cost_us));
                 }
                 other => {
                     return Err(TeolaError::Engine(format!("search engine got {other:?}")))
                 }
+            }
+        }
+        if !tools.is_empty() {
+            let started = Instant::now();
+            let window = tools.iter().map(|(_, c)| *c).max().unwrap_or(0);
+            std::thread::sleep(Duration::from_micros(window));
+            for (ctx, _) in tools {
+                emit(Completion {
+                    query: ctx.query,
+                    node: ctx.node,
+                    output: JobOutput::Unit,
+                    timing: ExecTiming {
+                        queued_us: 0,
+                        exec_us: started.elapsed().as_micros() as u64,
+                    },
+                });
             }
         }
         Ok(())

@@ -4,6 +4,7 @@
 use crate::engines::NodeId;
 use crate::error::Result;
 use crate::graph::pgraph::PGraph;
+use crate::graph::primitive::Primitive;
 
 /// The execution graph the runtime scheduler consumes.
 #[derive(Debug, Clone)]
@@ -50,6 +51,32 @@ impl EGraph {
             .filter(|(_, d)| **d == 0)
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// Runtime graph growth (PR10): append primitives — ids are assigned
+    /// here, so payload/hard-dep references in `prims` may point at any
+    /// existing node or at earlier entries of this batch via
+    /// `base + offset` (`base` = the pre-append [`EGraph::len`]) — and
+    /// rebuild the adjacency and depth indexes over the grown graph.
+    /// Acyclicity is re-validated; on error the graph is unchanged.
+    /// Returns the new node ids.
+    pub fn append(&mut self, prims: Vec<Primitive>) -> Result<Vec<NodeId>> {
+        let base = self.graph.nodes.len();
+        let mut ids = Vec::with_capacity(prims.len());
+        for mut p in prims {
+            let id = self.graph.nodes.len();
+            p.id = id;
+            self.graph.nodes.push(p);
+            ids.push(id);
+        }
+        if let Err(e) = self.graph.topo_order() {
+            self.graph.nodes.truncate(base);
+            return Err(e);
+        }
+        self.depths = self.graph.depths();
+        self.parents = self.graph.parents();
+        self.children = self.graph.children();
+        Ok(ids)
     }
 
     /// Length (node count) of the longest path ending at the output — the

@@ -324,6 +324,7 @@ fn replace_dep(p: &mut PayloadSpec, from: NodeId, to: NodeId) {
         PayloadSpec::Aggregate { parts, .. } => parts.iter_mut().for_each(fix),
         PayloadSpec::WebSearch { queries, .. } => queries.iter_mut().for_each(fix),
         PayloadSpec::Tool { .. } => {}
+        PayloadSpec::Expand { input, .. } => fix(input),
     }
 }
 

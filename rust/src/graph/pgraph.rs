@@ -488,6 +488,30 @@ fn decompose(
             });
             Ok(CompOut { out: n, heads: vec![n], tails: vec![n] })
         }
+        ComponentKind::ToolFanout { name, cost_us, max_fan } => {
+            // The fan-out count is decided at runtime from the upstream
+            // LLM output, so lowering emits a single host-side Expansion
+            // node; the graph scheduler grows the e-graph with the tool
+            // subgraphs (and their join) when the input arrives.
+            let input = preds
+                .iter()
+                .rev()
+                .filter_map(|p| outs.get(p).map(|o| DataRef::Node(o.out)))
+                .next()
+                .unwrap_or(DataRef::Const(vec![q.question.clone()]));
+            let n = g.push(Primitive {
+                kind: PrimKind::Expansion,
+                engine: comp.engine.clone(),
+                payload: PayloadSpec::Expand {
+                    input,
+                    tool: name.clone(),
+                    cost_us: *cost_us,
+                    max_fan: (*max_fan).max(1),
+                },
+                ..blank.clone()
+            });
+            Ok(CompOut { out: n, heads: vec![n], tails: vec![n] })
+        }
     }
 }
 

@@ -76,6 +76,11 @@ pub enum PrimKind {
     Aggregate,
     WebSearching,
     ToolCalling,
+    /// Runtime fan-out point: on completion of its input, the graph
+    /// scheduler *grows* the e-graph with N parallel tool-call subgraphs
+    /// plus a join collecting the fan-in (agentic function calling —
+    /// the tool list is an LLM-runtime decision, unknown at lowering).
+    Expansion,
 }
 
 impl PrimKind {
@@ -84,7 +89,10 @@ impl PrimKind {
     pub fn is_engine_op(&self) -> bool {
         !matches!(
             self,
-            PrimKind::Condition | PrimKind::Aggregate | PrimKind::PartialDecoding
+            PrimKind::Condition
+                | PrimKind::Aggregate
+                | PrimKind::PartialDecoding
+                | PrimKind::Expansion
         )
     }
 }
@@ -123,6 +131,13 @@ pub enum PayloadSpec {
     WebSearch { queries: Vec<DataRef>, top_k: usize },
     /// Simulated external tool API.
     Tool { name: String, cost_us: u64 },
+    /// Runtime fan-out (host-evaluated): when `input` completes, spawn
+    /// 1..=`max_fan` parallel `tool` calls of `cost_us` each (the count
+    /// is a deterministic function of the input tokens — standing in for
+    /// the LLM's emitted tool list) plus a join node, by growing the
+    /// e-graph in place.  The Expansion node itself completes when the
+    /// join does.
+    Expand { input: DataRef, tool: String, cost_us: u64, max_fan: usize },
 }
 
 impl PayloadSpec {
@@ -149,6 +164,7 @@ impl PayloadSpec {
             PayloadSpec::Aggregate { parts, .. } => parts.iter().for_each(&mut add),
             PayloadSpec::WebSearch { queries, .. } => queries.iter().for_each(&mut add),
             PayloadSpec::Tool { .. } => {}
+            PayloadSpec::Expand { input, .. } => add(input),
         }
         out.sort_unstable();
         out.dedup();

@@ -65,6 +65,11 @@ pub enum ComponentKind {
     Condition { prob_true: f64 },
     /// External tool call (agent workflows).
     Tool { name: String, cost_us: u64 },
+    /// Runtime tool fan-out (agentic function calling): when the
+    /// upstream LLM output arrives, spawn 1..=`max_fan` parallel `name`
+    /// calls of `cost_us` each by growing the e-graph at runtime — the
+    /// tool count is an LLM-runtime decision, unknown at lowering.
+    ToolFanout { name: String, cost_us: u64, max_fan: usize },
 }
 
 /// What an Embedding component embeds.

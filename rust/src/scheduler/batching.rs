@@ -28,11 +28,13 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engines::{
     Completion, EngineJob, JobOutput, PrefixFp, QueryId, SegmentSpec, SeqId, TenantId,
 };
+use crate::scheduler::stats::SchedCounters;
 use crate::scheduler::tenancy::{TenantRank, TenantRanks};
 
 /// Invocation-bundle identity: `(query, node)`.  Kept as a structured key
@@ -575,7 +577,6 @@ impl Bucket {
         self.max_wcp = self.ids.iter().map(|&id| item(id).wcp_us).max().unwrap_or(0);
         self.tenant = item(self.ids[0]).tenant;
         self.dirty = false;
-        crate::scheduler::stats::count_bucket_rebuild();
     }
 
     /// Cross-bucket ordering key at a shared `now` — the exact
@@ -637,11 +638,21 @@ pub struct SchedQueue {
     len: usize,
     next_seq: u64,
     buckets: BTreeMap<QueryId, Bucket>,
+    /// Hot-path counter sink (order builds, bucket rebuilds).  A
+    /// default queue gets its own private instance; the engine
+    /// scheduler swaps in its platform's shared handle so concurrent
+    /// harnesses never cross-talk (PR10).
+    counters: Arc<SchedCounters>,
 }
 
 impl SchedQueue {
     pub fn new() -> SchedQueue {
         SchedQueue::default()
+    }
+
+    /// Report hot-path counts into `c` instead of the private default.
+    pub fn set_counters(&mut self, c: Arc<SchedCounters>) {
+        self.counters = c;
     }
 
     pub fn len(&self) -> usize {
@@ -763,6 +774,7 @@ impl SchedQueue {
         for b in self.buckets.values_mut() {
             if b.dirty || force {
                 b.rebuild(slots, seqs);
+                self.counters.count_bucket_rebuild();
             }
         }
     }
@@ -773,7 +785,7 @@ impl SchedQueue {
     /// always computed fresh at one shared `now`.
     fn full_order(&mut self, wcp: bool, ranks: Option<&TenantRanks>, incremental: bool) -> Vec<usize> {
         self.ensure_built(!incremental);
-        crate::scheduler::stats::count_order_build();
+        self.counters.count_order_build();
         let now = Instant::now();
         let mut keys: Vec<(QueryId, (TenantRank, u64, Instant))> =
             self.buckets.iter().map(|(&q, b)| (q, b.key(now, wcp, ranks))).collect();

@@ -55,9 +55,12 @@ use crate::engines::instance::Instance;
 use crate::engines::kv_budget::{self, KvBudget};
 use crate::engines::prefix::{PrefixFp, PrefixRegistry};
 use crate::engines::profile::DeviceModel;
-use crate::engines::{Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, RequestCtx};
+use crate::engines::{
+    Batch, Completion, EngineJob, ExecMode, ExecTiming, InstanceEvent, JobOutput, QueryId,
+    RequestCtx,
+};
 use crate::scheduler::batching::{BatchPolicy, QueueItem, SchedQueue, SlotUnit};
-use crate::scheduler::stats;
+use crate::scheduler::stats::SchedCounters;
 use crate::scheduler::tenancy::{
     boost_class, FairQueue, QosClass, SharedTenancy, TenantId, TenantRanks, TenantSpec,
 };
@@ -151,6 +154,17 @@ pub struct EngineScheduler {
     /// spec-table mutex once per pass.
     specs_cache: Option<HashMap<TenantId, TenantSpec>>,
     queue: SchedQueue,
+    /// Hot-path counter sink shared with the owning platform (or a bench
+    /// harness): per-scheduler since PR10, so two harnesses in one
+    /// process never cross-talk through their counter deltas.
+    counters: Arc<SchedCounters>,
+    /// Fair-queueing charges still outstanding per dispatched node,
+    /// keyed `(query, node)`: populated at successful batch send when
+    /// tenancy is on, consumed by a `CancelNode` refund (work the device
+    /// never finished must not cost SFQ share) and swept per-query when
+    /// the query's `FreeQuery` broadcast passes through.  Empty whenever
+    /// tenancy is off.
+    charged: HashMap<(QueryId, usize), (TenantId, usize)>,
 }
 
 impl EngineScheduler {
@@ -172,6 +186,7 @@ impl EngineScheduler {
         mode: ExecMode,
         tenancy: Arc<SharedTenancy>,
         incremental: Arc<AtomicBool>,
+        counters: Arc<SchedCounters>,
     ) -> EngineScheduler {
         let n = instances.len();
         let prefix_homes =
@@ -180,6 +195,8 @@ impl EngineScheduler {
         // The cache generation starts in sync with the handle: only a
         // retune *after* construction triggers the fair-ledger reset.
         let specs_epoch = tenancy.epoch();
+        let mut queue = SchedQueue::new();
+        queue.set_counters(counters.clone());
         EngineScheduler {
             name,
             instances,
@@ -205,7 +222,9 @@ impl EngineScheduler {
             incremental,
             specs_epoch,
             specs_cache: None,
-            queue: SchedQueue::new(),
+            queue,
+            counters,
+            charged: HashMap::new(),
         }
     }
 
@@ -260,11 +279,68 @@ impl EngineScheduler {
     /// item was enqueued still discounts it before bucket ordering reads
     /// the stamp (closing the PR4 enqueue-only gap).
     fn enqueue(&mut self, item: QueueItem) {
+        // Scheduler-directed control jobs are intercepted here — they
+        // mutate queue state and never reach an instance.
+        match item.job {
+            EngineJob::CancelNode { query, node } => {
+                self.cancel_node(query, node);
+                return;
+            }
+            EngineJob::RestampWcp { query, wcp_us } => {
+                self.restamp_query(query, wcp_us);
+                return;
+            }
+            _ => {}
+        }
         if item.job.is_bookkeeping() {
             self.dispatch_bookkeeping(item);
             return;
         }
         self.queue.push(item);
+    }
+
+    /// Purge one node's queued work (a refuted speculative dispatch).
+    /// Queued items are removed with their replies *dropped* — a
+    /// cancelled speculation must never surface `Failed` to its runner —
+    /// and a node that already dispatched gets its tenant's
+    /// fair-queueing charge refunded: the device never finished the
+    /// work, so it must not cost SFQ share.  (The in-flight compute
+    /// itself is aborted by the separate `CancelSeq` bookkeeping path on
+    /// stepped engines; on instant engines it simply runs out and the
+    /// runner drops the late completion.)
+    fn cancel_node(&mut self, query: QueryId, node: usize) {
+        let ids: Vec<usize> = self
+            .queue
+            .iter_ids()
+            .filter(|(_, it)| it.query == query && it.node == node)
+            .map(|(id, _)| id)
+            .collect();
+        for id in ids {
+            drop(self.queue.remove(id));
+        }
+        if let Some((t, cost)) = self.charged.remove(&(query, node)) {
+            let w = self
+                .specs_cache
+                .as_ref()
+                .and_then(|s| s.get(&t).map(|spec| spec.weight))
+                .unwrap_or_else(|| self.tenancy.spec_of(t).weight);
+            self.fair.refund(t, cost, w);
+        }
+    }
+
+    /// Restamp every queued item of `query` with a fresh remaining
+    /// critical-path estimate (guard resolution re-weighted the query's
+    /// WCP; confirmation also *promotes* formerly speculative items,
+    /// whose discounted stamp kept them from displacing committed work).
+    fn restamp_query(&mut self, query: QueryId, wcp_us: u64) {
+        self.queue.restamp_wcp(|it| {
+            if it.query == query && it.wcp_us != wcp_us {
+                it.wcp_us = wcp_us;
+                true
+            } else {
+                false
+            }
+        });
     }
 
     /// Fast-path host-side bookkeeping jobs straight to instances,
@@ -278,6 +354,11 @@ impl EngineScheduler {
     /// one row (stepped executors retire instant ops as a single row)
     /// and zero KV tokens.
     fn dispatch_bookkeeping(&mut self, item: QueueItem) {
+        if let EngineJob::FreeQuery { query } = item.job {
+            // The query is over: no refund can still arrive, so sweep
+            // its outstanding fair-charge entries (bounds the map).
+            self.charged.retain(|(q, _), _| *q != query);
+        }
         let broadcast = matches!(
             item.job,
             EngineJob::FreeQuery { .. } | EngineJob::CancelSeq { .. }
@@ -380,7 +461,7 @@ impl EngineScheduler {
             return;
         }
         let t_dispatch = Instant::now();
-        stats::count_dispatch_pass();
+        self.counters.count_dispatch_pass();
         let policy = BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed));
         let slots = self.max_slots.load(Ordering::Relaxed).max(1);
         // Iteration-level admission applies to stepped engines under the
@@ -422,7 +503,7 @@ impl EngineScheduler {
         // never contends with batch formation here.
         let specs = if tenancy_on {
             if self.specs_cache.is_none() {
-                stats::count_lock_acq();
+                self.counters.count_lock_acq();
                 self.specs_cache = Some(self.tenancy.specs());
             }
             self.specs_cache.clone()
@@ -471,7 +552,7 @@ impl EngineScheduler {
                 self.fail_queue();
                 break;
             }
-            stats::count_dispatch_loop();
+            self.counters.count_dispatch_loop();
             // Tenant ranks are recomputed every iteration: each dispatched
             // batch advances the charged tenant's virtual start, so the
             // next batch may belong to a different tenant (that is the
@@ -549,7 +630,7 @@ impl EngineScheduler {
             let mut reserved = 0usize;
             // Fair-queueing charges for this batch, applied only after a
             // successful send (a dead-instance requeue served nothing).
-            let mut fair_charges: Vec<(TenantId, usize)> = Vec::new();
+            let mut fair_charges: Vec<(QueryId, usize, TenantId, usize)> = Vec::new();
             let jobs: Vec<(RequestCtx, EngineJob)> = items
                 .into_iter()
                 .map(|i| {
@@ -588,7 +669,7 @@ impl EngineScheduler {
                         // ledger advances this tenant's virtual start so
                         // under contention other tenants' buckets take the
                         // next batches (weighted interleave).
-                        fair_charges.push((i.tenant, unit.cost(&i)));
+                        fair_charges.push((i.query, i.node, i.tenant, unit.cost(&i)));
                     }
                     (
                         RequestCtx {
@@ -662,15 +743,19 @@ impl EngineScheduler {
             }
             self.loads[inst] += rows;
             self.kv[inst].reserve(reserved);
-            stats::count_batch(n_jobs);
+            self.counters.count_batch(n_jobs);
             if let Some(specs) = &specs {
-                for (t, cost) in fair_charges {
+                for (q, node, t, cost) in fair_charges {
                     let w = specs.get(&t).map_or(1, |s| s.weight);
                     self.fair.charge(t, cost, w);
+                    // Remember the charge so a later `CancelNode` can
+                    // refund work the device never finished.
+                    self.charged.insert((q, node), (t, cost));
                 }
             }
         }
-        stats::add_dispatch_ns(t_dispatch.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+        self.counters
+            .add_dispatch_ns(t_dispatch.elapsed().as_nanos().min(u64::MAX as u128) as u64);
     }
 
     /// Per-tenant rank map for one dispatch iteration: for every tenant

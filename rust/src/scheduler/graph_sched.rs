@@ -16,11 +16,18 @@ use crate::engines::{
 };
 use crate::error::{Result, TeolaError};
 use crate::graph::egraph::EGraph;
-use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind};
+use crate::graph::primitive::{AggregateMode, DataRef, PayloadSpec, PrimKind, Primitive};
 use crate::graph::value::Value;
 use crate::scheduler::batching::{QueueItem, SuccessorPlan, SuccessorTemplate};
 use crate::scheduler::object_store::ObjectStore;
 use crate::scheduler::wcp::{self, WcpTracker};
+
+/// First sentinel node id for speculative template prefills: far above
+/// any real node id, so completions carrying one are absorbed before
+/// node indexing.  Runtime graph growth (PR10) appends *real* nodes at
+/// `egraph.len()`, so sentinels can no longer start there — a grown
+/// node would collide with an in-flight sentinel's completion.
+const SPEC_SENTINEL_BASE: usize = 1 << 32;
 
 /// Per-query latency accounting (feeds Figs. 1, 12 and EXPERIMENTS.md).
 #[derive(Debug, Clone, Default)]
@@ -43,6 +50,10 @@ pub struct QueryMetrics {
     /// pipeline on/off is exactly the orchestration overhead Fig. 12
     /// measures.
     pub dispatch_hops: u64,
+    /// Speculatively dispatched branch nodes whose guard resolved against
+    /// them (wasted work, PR10).  Tracked separately from `dispatch_hops`
+    /// so the speculation win/waste ratio is directly observable.
+    pub speculative_cancelled: u64,
     /// exec_us per (component, class) where class is "prefill", "decode"
     /// or "other" — the Fig. 1 module breakdown.
     pub per_component_us: HashMap<(usize, &'static str), u64>,
@@ -69,6 +80,15 @@ pub struct QueryRunner {
     /// and admission control attribute all of the query's work — including
     /// engine-side handoffs — to the right tenant.
     pub tenant: TenantId,
+    /// Speculative branch dispatch (PR10): when a guard is unresolved,
+    /// dispatch ready nodes of the likely branch ahead of the condition,
+    /// stamped with a fully discounted WCP rank so they only consume
+    /// spare capacity.  Off = classic guard-blocking behavior, bit-for-bit.
+    pub speculate: bool,
+    /// Minimum branch probability for speculative dispatch.
+    pub spec_threshold: f64,
+    /// Hot-path counter sink; `None` = process-global counters.
+    pub counters: Option<std::sync::Arc<crate::scheduler::stats::SchedCounters>>,
 }
 
 enum NodeState {
@@ -99,6 +119,24 @@ struct SpecPrefill {
     cancelled: bool,
 }
 
+/// One speculatively dispatched branch node (PR10): sent to its engine
+/// while the guard condition was still unresolved.  On guard resolution
+/// it is either confirmed in place (zero re-dispatch) or cancelled
+/// (queued work purged, in-flight seqs aborted, fair-share refunded).
+struct SpecBranch {
+    /// The guarding condition node and the outcome that confirms us.
+    cond: NodeId,
+    want: bool,
+    /// Completion that arrived while the guard was still unresolved:
+    /// buffered here — releasing it early would unblock descendants the
+    /// unspeculated schedule would not have run yet.
+    buffered: Option<Completion>,
+    /// seq_len undo record for seq-writing payloads (prefill/decode):
+    /// `(seq, prior_len)` captured at dispatch time so cancellation
+    /// restores the runner's sequence-length view exactly.
+    seq_undo: Option<(u32, Option<usize>)>,
+}
+
 impl QueryRunner {
     /// Build a runner.  Pipelining starts off so direct `QueryRunner`
     /// users keep the classic dispatch loop; `Platform` opts in via
@@ -112,6 +150,9 @@ impl QueryRunner {
             max_prompt: 224,
             pipeline: false,
             tenant: UNTENANTED,
+            speculate: false,
+            spec_threshold: 0.5,
+            counters: None,
         }
     }
 
@@ -119,6 +160,30 @@ impl QueryRunner {
     pub fn with_pipeline(mut self, on: bool) -> QueryRunner {
         self.pipeline = on;
         self
+    }
+
+    /// Enable/disable speculative branch dispatch (PR10).  `threshold` is
+    /// the minimum branch probability a guarded node needs before the
+    /// runner speculates on it.
+    pub fn with_speculation(mut self, on: bool, threshold: f64) -> QueryRunner {
+        self.speculate = on;
+        self.spec_threshold = threshold;
+        self
+    }
+
+    /// Route hot-path counters to a per-platform sink instead of the
+    /// process-global one (lets concurrent benches not cross-talk).
+    pub fn with_counters(
+        mut self,
+        c: std::sync::Arc<crate::scheduler::stats::SchedCounters>,
+    ) -> QueryRunner {
+        self.counters = Some(c);
+        self
+    }
+
+    /// The counter sink in effect for this runner.
+    fn ctrs(&self) -> &crate::scheduler::stats::SchedCounters {
+        self.counters.as_deref().unwrap_or_else(crate::scheduler::stats::global)
     }
 
     /// Stamp the owning tenant (multi-tenant QoS).  Direct `QueryRunner`
@@ -129,9 +194,9 @@ impl QueryRunner {
     }
 
     /// Run the e-graph; returns the output value and metrics.
-    pub fn run(self) -> Result<(Value, QueryMetrics)> {
+    pub fn run(mut self) -> Result<(Value, QueryMetrics)> {
         let (tx, rx) = channel::<Completion>();
-        let n = self.egraph.len();
+        let mut n = self.egraph.len();
         let mut indeg = self.egraph.in_degrees();
         let mut state: Vec<NodeState> = (0..n).map(|_| NodeState::Pending).collect();
         let mut store = ObjectStore::new();
@@ -140,8 +205,16 @@ impl QueryRunner {
         let mut pending_rerank: HashMap<NodeId, (Vec<Vec<i32>>, usize)> = HashMap::new();
         let mut done = 0usize;
         // Remaining critical-path estimate (§8): stamped onto every
-        // dispatched queue item, tightened as nodes complete.
-        let mut wcp = WcpTracker::new(&self.egraph);
+        // dispatched queue item, tightened as nodes complete.  Under
+        // speculation the tracker weighs guarded subpaths by their branch
+        // probability (expected remaining cost) and prunes refuted
+        // branches on guard resolution; off keeps the classic full-cost
+        // numerics bit-for-bit.
+        let mut wcp = if self.speculate {
+            WcpTracker::new_weighted(&self.egraph)
+        } else {
+            WcpTracker::new(&self.egraph)
+        };
 
         // Local completion worklist (host ops complete synchronously).
         let mut ready: Vec<NodeId> = self.egraph.sources();
@@ -158,6 +231,14 @@ impl QueryRunner {
         // Speculative template prefills, keyed by sentinel node id.
         let mut specs: HashMap<usize, SpecPrefill> = HashMap::new();
         let mut spec_of: HashMap<NodeId, usize> = HashMap::new();
+        // Speculatively dispatched branch nodes (PR10), keyed by node id;
+        // an entry exists exactly while its guard is unresolved.
+        let mut spec_branch: HashMap<NodeId, SpecBranch> = HashMap::new();
+        // Expansion nodes whose input arrived: the graph grows for them
+        // outside the dispatch borrow (dispatch holds `&self`).
+        let mut pending_expand: Vec<NodeId> = Vec::new();
+        // Runtime-grown join node -> the expansion node it completes.
+        let mut expansion_join: HashMap<NodeId, NodeId> = HashMap::new();
 
         if self.pipeline {
             self.launch_speculative_prefills(
@@ -188,17 +269,108 @@ impl QueryRunner {
                         &mut handed_off,
                         &mut specs,
                         &spec_of,
+                        &spec_branch,
+                        &mut pending_expand,
                     )?;
                 }
+            }
+            // Runtime graph growth: expansions whose input arrived spawn
+            // their tool subgraphs now, then re-enter the dispatch loop
+            // for the freshly readied nodes.
+            if !pending_expand.is_empty() {
+                while let Some(x) = pending_expand.pop() {
+                    self.expand_node(
+                        x,
+                        &mut n,
+                        &store,
+                        &mut indeg,
+                        &mut state,
+                        &mut ready,
+                        &mut wcp,
+                        &mut metrics,
+                        &mut expansion_join,
+                    )?;
+                }
+                continue;
             }
             // Apply synchronous completions.
             if let Some((v, val)) = local_done.pop() {
                 wcp.complete(v);
+                // Guard resolution: prune/confirm speculated branch work
+                // and re-weight the query's remaining critical path.
+                if self.speculate {
+                    if let Value::Bool(outcome) = &val {
+                        self.resolve_speculation(
+                            v,
+                            *outcome,
+                            &mut wcp,
+                            &mut spec_branch,
+                            &mut pending,
+                            &mut local_done,
+                            &mut metrics,
+                            &mut seq_len,
+                            &mut specs,
+                            &spec_of,
+                        );
+                    }
+                }
                 self.complete(v, val, &mut store, &mut indeg, &mut ready, &mut state, &mut done)?;
+                // A runtime-grown join completing stands in for its
+                // expansion node: complete the expansion too, unblocking
+                // the components templated downstream of the fan-out.
+                if let Some(x) = expansion_join.remove(&v) {
+                    wcp.complete(x);
+                    self.complete(
+                        x,
+                        Value::Unit,
+                        &mut store,
+                        &mut indeg,
+                        &mut ready,
+                        &mut state,
+                        &mut done,
+                    )?;
+                }
                 continue;
             }
             if done >= n {
                 break;
+            }
+            // About to block on engine completions: spare capacity.  Fill
+            // it with likely-branch work whose guard is still unresolved
+            // (stamped fully discounted, so engines only run it when no
+            // committed work competes).
+            if self.speculate {
+                for (v, cond, want) in self.branch_speculation_candidates(&state, &store) {
+                    let seq_undo = match &self.egraph.graph.nodes[v].payload {
+                        PayloadSpec::Prefill { seq, .. } | PayloadSpec::Decode { seq, .. } => {
+                            Some((*seq, seq_len.get(seq).copied()))
+                        }
+                        _ => None,
+                    };
+                    spec_branch
+                        .insert(v, SpecBranch { cond, want, buffered: None, seq_undo });
+                    self.dispatch(
+                        v,
+                        &mut store,
+                        &mut seq_len,
+                        &mut pending_rerank,
+                        &tx,
+                        &mut metrics,
+                        &mut state,
+                        &mut local_done,
+                        0, // fully discounted WCP rank: never displaces committed work
+                        &mut handed_off,
+                        &mut specs,
+                        &spec_of,
+                        &spec_branch,
+                        &mut pending_expand,
+                    )?;
+                }
+                // A speculative host-op (none today) or expansion could
+                // have produced synchronous work; re-enter the loop.
+                if !local_done.is_empty() || !pending_expand.is_empty() {
+                    continue;
+                }
             }
             // Wait for an engine completion: consume the batched backlog
             // first, and when it is empty block once then drain every
@@ -211,31 +383,50 @@ impl QueryRunner {
                     let first = rx
                         .recv()
                         .map_err(|_| TeolaError::Scheduler("completion channel closed".into()))?;
-                    crate::scheduler::stats::count_graph_wakeup();
+                    self.ctrs().count_graph_wakeup();
                     let mut drained = 1u64;
                     while let Ok(more) = rx.try_recv() {
                         pending.push_back(more);
                         drained += 1;
                     }
-                    crate::scheduler::stats::count_graph_completions(drained);
+                    self.ctrs().count_graph_completions(drained);
                     first
                 }
             };
+            let node = c.node;
+            // A speculative branch node completing while its guard is
+            // still unresolved: buffer the completion (metrics included —
+            // they are accounted once, at replay).  Releasing it early
+            // would unblock descendants the unspeculated schedule would
+            // not have run yet; a failure is deferred the same way so a
+            // branch that ends up cancelled never surfaces `Failed`.
+            if let Some(sb) = spec_branch.get_mut(&node) {
+                sb.buffered = Some(c);
+                continue;
+            }
             metrics.queue_us += c.timing.queued_us;
             metrics.exec_us += c.timing.exec_us;
-            let node = c.node;
             // A failure completion means the engine can never serve this
             // node (e.g. every instance died): surface the error instead
             // of waiting forever for a real completion.  Still release
             // this query's KV sequences and vector-DB namespace on the
             // surviving engines before bailing.
             if let JobOutput::Failed(msg) = &c.output {
+                // A node that already completed can only see a late
+                // failure from a cancelled speculative dispatch (its seq
+                // was aborted mid-flight); the node's value exists, so
+                // the failure is moot.  Only reachable with speculation
+                // on — the off path keeps strict failure propagation.
+                if self.speculate && node < n && store.has(node) {
+                    continue;
+                }
                 self.cleanup();
                 return Err(TeolaError::Engine(format!("node {node}: {msg}")));
             }
-            // Sentinel ids live above the e-graph: speculative prefill
-            // completions are absorbed here, before any node indexing.
-            if node >= n {
+            // Sentinel ids live far above any real node id (the graph can
+            // grow at runtime): speculative prefill completions are
+            // absorbed here, before any node indexing.
+            if node >= SPEC_SENTINEL_BASE {
                 let Some(sp) = specs.get_mut(&node) else { continue };
                 sp.done = true;
                 if let JobOutput::Tokens(t) = &c.output {
@@ -416,14 +607,18 @@ impl QueryRunner {
         handed_off: &mut HashMap<NodeId, Vec<NodeId>>,
         specs: &mut HashMap<usize, SpecPrefill>,
         spec_of: &HashMap<NodeId, usize>,
+        spec_branch: &HashMap<NodeId, SpecBranch>,
+        expansions: &mut Vec<NodeId>,
     ) -> Result<()> {
         let node = &self.egraph.graph.nodes[v];
         state[v] = NodeState::Dispatched;
 
-        // Guard check.
+        // Guard check.  A node dispatched speculatively (PR10) bypasses
+        // it by construction: its guard is intentionally unresolved, and
+        // resolution later confirms or cancels the in-flight work.
         if let Some((g, want)) = node.guard {
             let pass = matches!(store.get(g), Some(Value::Bool(b)) if *b == want);
-            if !pass {
+            if !pass && !spec_branch.contains_key(&v) {
                 // Invalidate any speculative template prefill that ran
                 // ahead of this node: cancel the seq engine-side so its
                 // KV reservation and residency are released.
@@ -575,7 +770,14 @@ impl QueryRunner {
                     None
                 };
                 seq_len.insert(*seq, offset + tokens.len());
-                let plans = self.prefill_successor_plans(v, *seq, wcp_us, handed_off);
+                // A speculative dispatch never hands successors off
+                // engine-side: auto-triggered downstream work could not
+                // be cancelled when the guard refutes this branch.
+                let plans = if spec_branch.contains_key(&v) {
+                    Vec::new()
+                } else {
+                    self.prefill_successor_plans(v, *seq, wcp_us, handed_off)
+                };
                 self.send_job(
                     v,
                     EngineJob::Prefill { seq: (self.query, *seq), tokens, offset, prefix },
@@ -594,7 +796,11 @@ impl QueryRunner {
                     .iter()
                     .map(|(n, l)| SegmentSpec { node: *n, len: *l })
                     .collect();
-                let plans = self.decode_successor_plans(v, &segs, wcp_us, handed_off);
+                let plans = if spec_branch.contains_key(&v) {
+                    Vec::new()
+                } else {
+                    self.decode_successor_plans(v, &segs, wcp_us, handed_off)
+                };
                 self.send_job(
                     v,
                     EngineJob::Decode {
@@ -646,6 +852,13 @@ impl QueryRunner {
                     metrics,
                     Vec::new(),
                 )?;
+            }
+            PayloadSpec::Expand { .. } => {
+                // Runtime graph growth: the node's fan-out depends on its
+                // input value, and growing the e-graph needs `&mut self` —
+                // defer to `expand_node`, which the run loop calls as soon
+                // as this dispatch borrow ends.
+                expansions.push(v);
             }
         }
         Ok(())
@@ -922,7 +1135,7 @@ impl QueryRunner {
                 continue;
             }
             let Some(sender) = self.routers.get(&nd.engine) else { continue };
-            let sentinel = n + specs.len();
+            let sentinel = SPEC_SENTINEL_BASE + specs.len();
             let job = EngineJob::Prefill {
                 seq: (self.query, *seq),
                 tokens: instr.clone(),
@@ -993,6 +1206,253 @@ impl QueryRunner {
                 successors: Vec::new(),
             });
         }
+    }
+
+    /// Guarded nodes eligible for speculative dispatch right now (PR10):
+    /// still Pending, an engine op, guard unresolved, every non-guard
+    /// parent already Done (so inputs are materialized), and the guarded
+    /// branch's probability at or above the speculation threshold.
+    fn branch_speculation_candidates(
+        &self,
+        state: &[NodeState],
+        store: &ObjectStore,
+    ) -> Vec<(NodeId, NodeId, bool)> {
+        let mut out = Vec::new();
+        for v in 0..self.egraph.len() {
+            if !matches!(state[v], NodeState::Pending) {
+                continue;
+            }
+            let nd = &self.egraph.graph.nodes[v];
+            let Some((g, want)) = nd.guard else { continue };
+            if !nd.kind.is_engine_op() || store.has(g) {
+                continue;
+            }
+            if !self.egraph.parents[v]
+                .iter()
+                .all(|&p| p == g || matches!(state[p], NodeState::Done))
+            {
+                continue;
+            }
+            if wcp::guard_pass_prob(&self.egraph, Some((g, want))) < self.spec_threshold {
+                continue;
+            }
+            out.push((v, g, want));
+        }
+        out
+    }
+
+    /// Guard resolution (PR10): condition `cond` just completed with
+    /// `outcome`.  Prune the refuted branch from the WCP surface, restamp
+    /// queued work with the re-weighted remaining critical path, then
+    /// confirm (in place — zero re-dispatch) or cancel (purge + abort +
+    /// refund) every speculatively dispatched node this guard covers.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_speculation(
+        &self,
+        cond: NodeId,
+        outcome: bool,
+        wcp: &mut WcpTracker,
+        spec_branch: &mut HashMap<NodeId, SpecBranch>,
+        pending: &mut VecDeque<Completion>,
+        local_done: &mut Vec<(NodeId, Value)>,
+        metrics: &mut QueryMetrics,
+        seq_len: &mut HashMap<u32, usize>,
+        specs: &mut HashMap<usize, SpecPrefill>,
+        spec_of: &HashMap<NodeId, usize>,
+    ) {
+        let new_rem = wcp.resolve_guard(cond, outcome);
+        self.restamp_queues(new_rem);
+        let affected: Vec<NodeId> = spec_branch
+            .iter()
+            .filter(|(_, sb)| sb.cond == cond)
+            .map(|(&v, _)| v)
+            .collect();
+        for v in affected {
+            let sb = spec_branch.remove(&v).expect("collected above");
+            if outcome == sb.want {
+                // Confirmed: a buffered completion replays through the
+                // normal path; in-flight work just flows on arrival.
+                if let Some(c) = sb.buffered {
+                    pending.push_front(c);
+                }
+                continue;
+            }
+            // Refuted: purge queued work engine-side (replies dropped,
+            // fair-share charge refunded), abort any seq the node wrote,
+            // and surface the same `Skipped` the unspeculated path yields.
+            metrics.speculative_cancelled += 1;
+            self.cancel_branch_node(v);
+            let mut cancelled_seq = None;
+            if let Some((seq, prior)) = sb.seq_undo {
+                match prior {
+                    Some(l) => {
+                        seq_len.insert(seq, l);
+                    }
+                    None => {
+                        seq_len.remove(&seq);
+                    }
+                }
+                self.cancel_spec_seq(v, seq);
+                cancelled_seq = Some(seq);
+            }
+            // A template prefill speculated ahead of this node (PR7) is
+            // normally invalidated by the guard-fail dispatch path; branch
+            // speculation bypassed that path, so invalidate it here.
+            if let Some(s) = spec_of.get(&v) {
+                if let Some(sp) = specs.get_mut(s) {
+                    if !sp.cancelled {
+                        sp.cancelled = true;
+                        if cancelled_seq != Some(sp.seq) {
+                            self.cancel_spec_seq(v, sp.seq);
+                        }
+                    }
+                }
+            }
+            local_done.push((v, Value::Skipped));
+        }
+    }
+
+    /// Purge a refuted speculative node's queued work from its engine
+    /// scheduler: matching queue items are dropped (their replies with
+    /// them, so a cancelled speculation never surfaces `Failed`) and the
+    /// tenant's fair-queueing charge is refunded if already dispatched.
+    fn cancel_branch_node(&self, v: NodeId) {
+        let engine = &self.egraph.graph.nodes[v].engine;
+        if let Some(sender) = self.routers.get(engine) {
+            let (dead_tx, dead_rx) = channel();
+            drop(dead_rx);
+            let _ = sender.send(QueueItem {
+                query: self.query,
+                node: usize::MAX,
+                depth: 0,
+                bundle: (self.query, u64::MAX),
+                arrival: Instant::now(),
+                rows: 0,
+                tokens: 0,
+                wcp_discounted: false,
+                prefix: None,
+                wcp_us: u64::MAX,
+                tenant: self.tenant,
+                job: EngineJob::CancelNode { query: self.query, node: v },
+                reply: dead_tx,
+                successors: Vec::new(),
+            });
+        }
+    }
+
+    /// Broadcast a fresh remaining-WCP stamp for this query to every
+    /// engine scheduler (guard resolution or graph growth re-weighted the
+    /// critical path); queued items are restamped in place.
+    fn restamp_queues(&self, wcp_us: u64) {
+        for sender in self.routers.values() {
+            let (dead_tx, dead_rx) = channel();
+            drop(dead_rx);
+            let _ = sender.send(QueueItem {
+                query: self.query,
+                node: usize::MAX,
+                depth: 0,
+                bundle: (self.query, u64::MAX),
+                arrival: Instant::now(),
+                rows: 0,
+                tokens: 0,
+                wcp_discounted: false,
+                prefix: None,
+                wcp_us: u64::MAX,
+                tenant: self.tenant,
+                job: EngineJob::RestampWcp { query: self.query, wcp_us },
+                reply: dead_tx,
+                successors: Vec::new(),
+            });
+        }
+    }
+
+    /// Runtime graph growth (PR10): an Expansion node's input arrived —
+    /// decide the fan-out (an LLM-runtime decision, modeled here as a
+    /// deterministic function of the input token surface), append one
+    /// tool-call node per spawn plus a barrier join collecting the
+    /// fan-in, and extend the run-local bookkeeping over the grown graph.
+    /// With speculation on, the tool calls are independent (concurrent
+    /// fan-out); off chains them sequentially — outputs are identical
+    /// either way, only the schedule differs.
+    #[allow(clippy::too_many_arguments)]
+    fn expand_node(
+        &mut self,
+        x: NodeId,
+        n: &mut usize,
+        store: &ObjectStore,
+        indeg: &mut Vec<usize>,
+        state: &mut Vec<NodeState>,
+        ready: &mut Vec<NodeId>,
+        wcp: &mut WcpTracker,
+        metrics: &mut QueryMetrics,
+        expansion_join: &mut HashMap<NodeId, NodeId>,
+    ) -> Result<()> {
+        let host_start = Instant::now();
+        let PayloadSpec::Expand { input, tool, cost_us, max_fan } =
+            self.egraph.graph.nodes[x].payload.clone()
+        else {
+            return Err(TeolaError::Scheduler(format!("node {x} is not an expansion")));
+        };
+        let engine = self.egraph.graph.nodes[x].engine.clone();
+        let component = self.egraph.graph.nodes[x].component;
+        let rows = self.rows_of(store, &input)?;
+        let mut h: u64 = self.query ^ 0xD1B5_4A32_D192_ED03;
+        for t in rows.iter().flatten() {
+            h = h.wrapping_mul(31).wrapping_add(*t as u64);
+        }
+        let fan = 1 + (h % max_fan.max(1) as u64) as usize;
+        let base = self.egraph.len();
+        let mut prims = Vec::with_capacity(fan + 1);
+        for i in 0..fan {
+            prims.push(Primitive {
+                id: 0,
+                kind: PrimKind::ToolCalling,
+                engine: engine.clone(),
+                component,
+                batchable: true,
+                splittable: false,
+                payload: PayloadSpec::Tool { name: format!("{tool}#{i}"), cost_us },
+                hard_deps: if self.speculate || i == 0 {
+                    Vec::new()
+                } else {
+                    vec![base + i - 1]
+                },
+                guard: None,
+            });
+        }
+        prims.push(Primitive {
+            id: 0,
+            kind: PrimKind::Aggregate,
+            engine: String::new(),
+            component,
+            batchable: false,
+            splittable: false,
+            payload: PayloadSpec::Aggregate {
+                parts: (0..fan).map(|i| DataRef::Node(base + i)).collect(),
+                mode: AggregateMode::Barrier,
+            },
+            hard_deps: Vec::new(),
+            guard: None,
+        });
+        let ids = self.egraph.append(prims)?;
+        for &id in &ids {
+            indeg.push(self.egraph.parents[id].len());
+            state.push(NodeState::Pending);
+        }
+        *n = self.egraph.len();
+        for &id in &ids {
+            if indeg[id] == 0 {
+                ready.push(id);
+            }
+        }
+        expansion_join.insert(*ids.last().expect("fan >= 1"), x);
+        let new_rem = wcp.grow(&self.egraph);
+        if self.speculate {
+            self.restamp_queues(new_rem);
+        }
+        metrics.host_us += host_start.elapsed().as_micros() as u64;
+        metrics.n_host_ops += 1;
+        Ok(())
     }
 
     fn send_job(

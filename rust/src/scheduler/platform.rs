@@ -123,6 +123,20 @@ pub struct PlatformConfig {
     /// over-quota tenants.  Set via `TEOLA_TENANCY` / `run --tenants`;
     /// switchable at runtime via [`Platform::set_tenancy`].
     pub tenancy: TenancyConfig,
+    /// Speculative branch dispatch + dynamic fan-out (PR10): query
+    /// runners dispatch ready nodes of a guard's likely branch while the
+    /// guard is still unresolved (stamped fully discounted so they only
+    /// fill spare engine capacity), confirm them in place or cancel them
+    /// (queue purge + seq abort + fair-share refund) on resolution, weigh
+    /// unresolved guarded subpaths by branch probability in the WCP
+    /// estimate, and run runtime-grown tool fan-outs concurrently.  Only
+    /// active under `TopoAware`; off, dispatch is bit-for-bit the
+    /// pre-PR10 guard-blocking path.  Set via `TEOLA_SPECULATION` /
+    /// `run --speculate`; switchable at runtime via
+    /// [`Platform::set_speculation`].
+    pub speculation: bool,
+    /// Minimum branch probability for speculative dispatch (PR10).
+    pub spec_threshold: f64,
     /// Incremental scheduler priority maintenance (PR9): engine
     /// schedulers keep per-query dispatch levels cached across passes
     /// and rebuild only buckets touched since the last ordering call,
@@ -164,6 +178,8 @@ impl PlatformConfig {
             kv_watermark_overrides: Vec::new(),
             pipeline: true,
             tenancy: TenancyConfig::default(),
+            speculation: false,
+            spec_threshold: 0.5,
             sched_incremental: true,
             warm: true,
             corpus_docs: 400,
@@ -229,6 +245,16 @@ pub struct Platform {
     /// Incremental-priority switch shared by every engine scheduler (see
     /// `PlatformConfig::sched_incremental`).
     sched_incremental: Arc<AtomicBool>,
+    /// Speculative branch dispatch switch read at runner construction
+    /// (see `PlatformConfig::speculation`).
+    speculation: Arc<AtomicBool>,
+    /// Minimum branch probability for speculative dispatch.
+    spec_threshold: f64,
+    /// Per-platform hot-path counter sink, shared by every engine
+    /// scheduler and query runner this platform spawns — concurrent
+    /// platforms (or benches) in one process no longer cross-talk
+    /// through process-global counters.
+    counters: Arc<crate::scheduler::stats::SchedCounters>,
     pub profiles: ProfileRegistry,
     pub manifest: Rc<Manifest>,
     pub sep: i32,
@@ -264,6 +290,8 @@ impl Platform {
         let pipeline = Arc::new(AtomicBool::new(cfg.pipeline));
         let tenancy = Arc::new(SharedTenancy::new(&cfg.tenancy));
         let sched_incremental = Arc::new(AtomicBool::new(cfg.sched_incremental));
+        let speculation = Arc::new(AtomicBool::new(cfg.speculation));
+        let counters = Arc::new(crate::scheduler::stats::SchedCounters::new());
         // Residency watermark: the global value, with the last matching
         // per-kind override winning for engines of that kind.
         let kv_watermark_base = Arc::new(AtomicUsize::new(cfg.kv_watermark));
@@ -286,6 +314,7 @@ impl Platform {
         let mut kv_defaults: HashMap<String, usize> = HashMap::new();
         let sched_tenancy = tenancy.clone();
         let sched_incremental_h = sched_incremental.clone();
+        let sched_counters = counters.clone();
         let mut spawn_sched = |name: String,
                                instances: Vec<crate::engines::instance::Instance>,
                                event_rx,
@@ -311,6 +340,7 @@ impl Platform {
                 mode,
                 sched_tenancy.clone(),
                 sched_incremental_h.clone(),
+                sched_counters.clone(),
             );
             let h = std::thread::Builder::new()
                 .name(format!("sched-{name}"))
@@ -487,6 +517,9 @@ impl Platform {
             pipeline,
             tenancy,
             sched_incremental,
+            speculation,
+            spec_threshold: cfg.spec_threshold,
+            counters,
             profiles,
             manifest,
             sep,
@@ -621,6 +654,25 @@ impl Platform {
         self.pipeline.load(Ordering::Relaxed)
     }
 
+    /// Toggle speculative branch dispatch at runtime (only effective
+    /// under `TopoAware`).  Runners snapshot the flag at construction, so
+    /// the flip applies to queries started after the call.
+    pub fn set_speculation(&self, on: bool) {
+        self.speculation.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether speculative branch dispatch is currently requested (the
+    /// effective state also requires the `TopoAware` policy).
+    pub fn speculation(&self) -> bool {
+        self.speculation.load(Ordering::Relaxed)
+    }
+
+    /// This platform's hot-path counter sink (sched/graph counters for
+    /// its engine schedulers and query runners).
+    pub fn counters(&self) -> Arc<crate::scheduler::stats::SchedCounters> {
+        self.counters.clone()
+    }
+
     /// Reconfigure multi-tenant QoS at runtime: replaces the tenant
     /// registry (weights, SLO classes, KV quotas) and flips fair queueing
     /// + admission control on or off.  The handle is shared by every
@@ -694,10 +746,21 @@ impl Platform {
                 == BatchPolicy::TopoAware
     }
 
+    /// Effective speculation state for runners constructed now: the flag
+    /// is on AND the batching policy is `TopoAware` (baselines keep the
+    /// classic guard-blocking dispatch loop).
+    fn speculation_effective(&self) -> bool {
+        self.speculation.load(Ordering::Relaxed)
+            && BatchPolicy::from_u8(self.policy.load(Ordering::Relaxed))
+                == BatchPolicy::TopoAware
+    }
+
     /// Execute one query's e-graph synchronously on the calling thread.
     pub fn run_query(&self, query: QueryId, egraph: EGraph) -> Result<(Value, QueryMetrics)> {
         let runner = QueryRunner::new(query, egraph, self.routers(), self.sep)
-            .with_pipeline(self.pipeline_effective());
+            .with_pipeline(self.pipeline_effective())
+            .with_speculation(self.speculation_effective(), self.spec_threshold)
+            .with_counters(self.counters.clone());
         let t0 = Instant::now();
         let (v, mut m) = runner.run()?;
         m.e2e_us = t0.elapsed().as_micros() as u64;
@@ -728,11 +791,16 @@ impl Platform {
         let routers = self.routers();
         let sep = self.sep;
         let pipeline = self.pipeline_effective();
+        let speculate = self.speculation_effective();
+        let spec_threshold = self.spec_threshold;
+        let counters = self.counters.clone();
         std::thread::Builder::new()
             .name(format!("query-{query}"))
             .spawn(move || {
                 let runner = QueryRunner::new(query, egraph, routers, sep)
                     .with_pipeline(pipeline)
+                    .with_speculation(speculate, spec_threshold)
+                    .with_counters(counters)
                     .with_tenant(tenant);
                 let t0 = Instant::now();
                 let (v, mut m) = runner.run()?;

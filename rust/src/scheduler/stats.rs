@@ -1,4 +1,4 @@
-//! Process-global scheduler hot-path counters (PR9).
+//! Scheduler hot-path counters (PR9, per-scheduler since PR10).
 //!
 //! The `sched-bench` harness isolates orchestration overhead per query
 //! (the paper's fig. 12 differentiator) by deltaing these counters
@@ -6,76 +6,163 @@
 //! engine scheduler woke and formed batches, order builds / bucket
 //! rebuilds expose the incremental priority structure's work avoidance,
 //! lock acquisitions count the remaining mutex traffic on the dispatch
-//! path (the tenancy spec table), and `DISPATCH_NS` integrates wall
+//! path (the tenancy spec table), and `dispatch_ns` integrates wall
 //! time spent inside `EngineScheduler::dispatch` — the numerator of
 //! µs-of-orchestration-per-query.
 //!
 //! All counters are relaxed atomics: they are monotone event counts
 //! with no cross-counter ordering requirement, so the hot path pays one
-//! uncontended `fetch_add` per event.  Being process-global they sum
-//! over every engine scheduler thread; benches that need isolation
-//! snapshot before and delta after (`SchedStats::delta_since`) while
-//! holding the process's scheduler population fixed.
+//! uncontended `fetch_add` per event.  PR9 made them process-global
+//! statics, which meant two bench harnesses in one test binary
+//! cross-talked through each other's deltas; PR10 moves them into a
+//! shareable [`SchedCounters`] handle that each `Platform` (and each
+//! raw bench scheduler) owns privately, while the free functions keep
+//! feeding a process-global instance for call sites with no handle.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// `EngineScheduler::dispatch` entries (one per wakeup with work).
-pub static DISPATCH_PASSES: AtomicU64 = AtomicU64::new(0);
-/// Inner dispatch-loop iterations (batch-formation attempts).
-pub static DISPATCH_LOOPS: AtomicU64 = AtomicU64::new(0);
-/// Full priority-order materializations (cross-bucket key sort + sweep).
-pub static ORDER_BUILDS: AtomicU64 = AtomicU64::new(0);
-/// Per-query bucket rebuilds (lazy invalidation hits).
-pub static BUCKET_REBUILDS: AtomicU64 = AtomicU64::new(0);
-/// Mutex acquisitions on the dispatch path (tenancy spec-table clones).
-pub static LOCK_ACQS: AtomicU64 = AtomicU64::new(0);
-/// Batches handed to an instance.
-pub static BATCHES_FORMED: AtomicU64 = AtomicU64::new(0);
-/// Jobs dispatched inside those batches.
-pub static JOBS_DISPATCHED: AtomicU64 = AtomicU64::new(0);
-/// Nanoseconds spent inside `EngineScheduler::dispatch`.
-pub static DISPATCH_NS: AtomicU64 = AtomicU64::new(0);
-/// Graph-scheduler blocking wakeups (completion `recv` calls).
-pub static GRAPH_WAKEUPS: AtomicU64 = AtomicU64::new(0);
-/// Completions absorbed per those wakeups (batched draining: this
-/// exceeds `GRAPH_WAKEUPS` whenever a wakeup drains more than one).
-pub static GRAPH_COMPLETIONS: AtomicU64 = AtomicU64::new(0);
+/// One set of scheduler hot-path counters.  Clone the `Arc` wrapping it
+/// into every scheduler/runner that should report into the same bucket;
+/// independent harnesses hold independent instances, so their deltas
+/// never cross-talk even when run concurrently in one process.
+#[derive(Debug, Default)]
+pub struct SchedCounters {
+    /// `EngineScheduler::dispatch` entries (one per wakeup with work).
+    dispatch_passes: AtomicU64,
+    /// Inner dispatch-loop iterations (batch-formation attempts).
+    dispatch_loops: AtomicU64,
+    /// Full priority-order materializations (cross-bucket key sort + sweep).
+    order_builds: AtomicU64,
+    /// Per-query bucket rebuilds (lazy invalidation hits).
+    bucket_rebuilds: AtomicU64,
+    /// Mutex acquisitions on the dispatch path (tenancy spec-table clones).
+    lock_acqs: AtomicU64,
+    /// Batches handed to an instance.
+    batches_formed: AtomicU64,
+    /// Jobs dispatched inside those batches.
+    jobs_dispatched: AtomicU64,
+    /// Nanoseconds spent inside `EngineScheduler::dispatch`.
+    dispatch_ns: AtomicU64,
+    /// Graph-scheduler blocking wakeups (completion `recv` calls).
+    graph_wakeups: AtomicU64,
+    /// Completions absorbed per those wakeups (batched draining: this
+    /// exceeds `graph_wakeups` whenever a wakeup drains more than one).
+    graph_completions: AtomicU64,
+}
+
+impl SchedCounters {
+    pub const fn new() -> Self {
+        SchedCounters {
+            dispatch_passes: AtomicU64::new(0),
+            dispatch_loops: AtomicU64::new(0),
+            order_builds: AtomicU64::new(0),
+            bucket_rebuilds: AtomicU64::new(0),
+            lock_acqs: AtomicU64::new(0),
+            batches_formed: AtomicU64::new(0),
+            jobs_dispatched: AtomicU64::new(0),
+            dispatch_ns: AtomicU64::new(0),
+            graph_wakeups: AtomicU64::new(0),
+            graph_completions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn count_dispatch_pass(&self) {
+        self.dispatch_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_dispatch_loop(&self) {
+        self.dispatch_loops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_order_build(&self) {
+        self.order_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_bucket_rebuild(&self) {
+        self.bucket_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_lock_acq(&self) {
+        self.lock_acqs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_batch(&self, jobs: usize) {
+        self.batches_formed.fetch_add(1, Ordering::Relaxed);
+        self.jobs_dispatched.fetch_add(jobs as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_dispatch_ns(&self, ns: u64) {
+        self.dispatch_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count_graph_wakeup(&self) {
+        self.graph_wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count_graph_completions(&self, n: u64) {
+        self.graph_completions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SchedStats {
+        SchedStats {
+            dispatch_passes: self.dispatch_passes.load(Ordering::Relaxed),
+            dispatch_loops: self.dispatch_loops.load(Ordering::Relaxed),
+            order_builds: self.order_builds.load(Ordering::Relaxed),
+            bucket_rebuilds: self.bucket_rebuilds.load(Ordering::Relaxed),
+            lock_acqs: self.lock_acqs.load(Ordering::Relaxed),
+            batches_formed: self.batches_formed.load(Ordering::Relaxed),
+            jobs_dispatched: self.jobs_dispatched.load(Ordering::Relaxed),
+            dispatch_ns: self.dispatch_ns.load(Ordering::Relaxed),
+            graph_wakeups: self.graph_wakeups.load(Ordering::Relaxed),
+            graph_completions: self.graph_completions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Fallback instance fed by the free functions below, for call sites
+/// that predate per-scheduler counters or deliberately want a
+/// process-wide view.
+static GLOBAL: SchedCounters = SchedCounters::new();
+
+/// The process-global counter set (what the free functions feed).
+pub fn global() -> &'static SchedCounters {
+    &GLOBAL
+}
 
 pub fn count_dispatch_pass() {
-    DISPATCH_PASSES.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_dispatch_pass();
 }
 
 pub fn count_dispatch_loop() {
-    DISPATCH_LOOPS.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_dispatch_loop();
 }
 
 pub fn count_order_build() {
-    ORDER_BUILDS.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_order_build();
 }
 
 pub fn count_bucket_rebuild() {
-    BUCKET_REBUILDS.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_bucket_rebuild();
 }
 
 pub fn count_lock_acq() {
-    LOCK_ACQS.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_lock_acq();
 }
 
 pub fn count_batch(jobs: usize) {
-    BATCHES_FORMED.fetch_add(1, Ordering::Relaxed);
-    JOBS_DISPATCHED.fetch_add(jobs as u64, Ordering::Relaxed);
+    GLOBAL.count_batch(jobs);
 }
 
 pub fn add_dispatch_ns(ns: u64) {
-    DISPATCH_NS.fetch_add(ns, Ordering::Relaxed);
+    GLOBAL.add_dispatch_ns(ns);
 }
 
 pub fn count_graph_wakeup() {
-    GRAPH_WAKEUPS.fetch_add(1, Ordering::Relaxed);
+    GLOBAL.count_graph_wakeup();
 }
 
 pub fn count_graph_completions(n: u64) {
-    GRAPH_COMPLETIONS.fetch_add(n, Ordering::Relaxed);
+    GLOBAL.count_graph_completions(n);
 }
 
 /// Point-in-time snapshot of every counter; delta two snapshots to
@@ -94,19 +181,9 @@ pub struct SchedStats {
     pub graph_completions: u64,
 }
 
+/// Snapshot of the process-global counter set.
 pub fn snapshot() -> SchedStats {
-    SchedStats {
-        dispatch_passes: DISPATCH_PASSES.load(Ordering::Relaxed),
-        dispatch_loops: DISPATCH_LOOPS.load(Ordering::Relaxed),
-        order_builds: ORDER_BUILDS.load(Ordering::Relaxed),
-        bucket_rebuilds: BUCKET_REBUILDS.load(Ordering::Relaxed),
-        lock_acqs: LOCK_ACQS.load(Ordering::Relaxed),
-        batches_formed: BATCHES_FORMED.load(Ordering::Relaxed),
-        jobs_dispatched: JOBS_DISPATCHED.load(Ordering::Relaxed),
-        dispatch_ns: DISPATCH_NS.load(Ordering::Relaxed),
-        graph_wakeups: GRAPH_WAKEUPS.load(Ordering::Relaxed),
-        graph_completions: GRAPH_COMPLETIONS.load(Ordering::Relaxed),
-    }
+    GLOBAL.snapshot()
 }
 
 impl SchedStats {
@@ -160,5 +237,21 @@ mod tests {
         assert!(d.graph_completions >= 2);
         // Saturating: a misordered pair yields zeros, not wraparound.
         assert_eq!(before.delta_since(&after).dispatch_passes, 0);
+    }
+
+    #[test]
+    fn per_instance_counters_are_isolated() {
+        let a = SchedCounters::new();
+        let b = SchedCounters::new();
+        a.count_dispatch_pass();
+        a.count_batch(7);
+        b.count_order_build();
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        assert_eq!(sa.dispatch_passes, 1);
+        assert_eq!(sa.jobs_dispatched, 7);
+        assert_eq!(sa.order_builds, 0);
+        assert_eq!(sb.dispatch_passes, 0);
+        assert_eq!(sb.order_builds, 1);
     }
 }

@@ -233,6 +233,20 @@ impl FairQueue {
         self.vtime = start;
     }
 
+    /// Give back a prior [`FairQueue::charge`] for work the device never
+    /// finished (a cancelled speculative dispatch, a shed job): the
+    /// tenant's finish tag retreats by the same `cost * SFQ_SCALE /
+    /// weight` the charge advanced it, so rolled-back work costs no SFQ
+    /// share.  `vstart` clamps to the live virtual time, so an
+    /// over-refund cannot mint credit ahead of other tenants.
+    pub fn refund(&mut self, t: TenantId, cost: usize, weight: u32) {
+        let w = u64::from(weight.max(1));
+        let delta = (cost.max(1) as u64).saturating_mul(SFQ_SCALE) / w;
+        if let Some(f) = self.vfinish.get_mut(&t) {
+            *f = f.saturating_sub(delta);
+        }
+    }
+
     /// Forget everything (comparison-harness hygiene between halves).
     pub fn reset(&mut self) {
         self.vtime = 0;
@@ -416,6 +430,34 @@ mod tests {
             (ratio - 3.0).abs() < 0.1,
             "3:1 weights must serve ~3:1, got {served:?}"
         );
+    }
+
+    #[test]
+    fn refund_restores_share_without_minting_credit() {
+        let mut fq = FairQueue::new();
+        let before = fq.vstart(1);
+        fq.charge(1, 10, 2);
+        let charged = fq.vstart(1);
+        assert!(charged > before);
+        // Refunding the same (cost, weight) undoes the charge exactly.
+        fq.refund(1, 10, 2);
+        assert_eq!(fq.vstart(1), before);
+        // Over-refunding saturates the finish tag at zero, and vstart
+        // still clamps to the live virtual time — a huge refund cannot
+        // mint credit that replays ahead of the current busy period.
+        fq.charge(2, 100, 1);
+        fq.charge(2, 100, 1);
+        let vtime_floor = fq.vstart(3); // fresh tenant = current vtime
+        fq.refund(1, 1_000_000, 1);
+        assert_eq!(
+            fq.vstart(1),
+            vtime_floor,
+            "over-refund clamps to live virtual time, not zero"
+        );
+        // Refunding a tenant with no ledger entry is a no-op.
+        let w99 = fq.vstart(99);
+        fq.refund(99, 10, 1);
+        assert_eq!(fq.vstart(99), w99);
     }
 
     #[test]

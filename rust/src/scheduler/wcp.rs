@@ -92,6 +92,7 @@ pub fn cost_class(node: &Primitive) -> &'static str {
         | PayloadSpec::ClonePrefix { .. } => "service",
         PayloadSpec::Condition { .. }
         | PayloadSpec::Aggregate { .. }
+        | PayloadSpec::Expand { .. }
         | PayloadSpec::PartialDecode { .. } => "host",
     }
 }
@@ -182,6 +183,13 @@ pub fn static_node_cost_us(node: &Primitive) -> u64 {
         // Host-side control flow is evaluated inline by the graph
         // scheduler; partial-decode markers complete from a stream the
         // decode node already pays for.
+        // Runtime fan-out: the spawned tool subgraph is unknown at build
+        // time; one tool invocation is the lower bound (the tracker's
+        // `grow` folds the real fan-out in once it materializes).
+        PayloadSpec::Expand { cost_us, .. } => *cost_us,
+        // Host-side control flow is evaluated inline by the graph
+        // scheduler; partial-decode markers complete from a stream the
+        // decode node already pays for.
         PayloadSpec::Condition { .. }
         | PayloadSpec::Aggregate { .. }
         | PayloadSpec::PartialDecode { .. } => 0,
@@ -192,31 +200,117 @@ pub fn static_node_cost_us(node: &Primitive) -> u64 {
 ///
 /// Invariant (see `tests/prop_invariants.rs`): `remaining_us()` is
 /// monotonically non-increasing as nodes complete, and reaches 0 when all
-/// nodes have.
+/// nodes have.  Guard resolution ([`WcpTracker::resolve_guard`]) and
+/// runtime graph growth ([`WcpTracker::grow`]) sit *outside* that
+/// invariant: a confirmed guard restores a probability-discounted
+/// subpath to full weight and growth adds new work, so both may raise
+/// the estimate — the graph scheduler restamps queued items through
+/// `RestampWcp` when they do.
 #[derive(Debug)]
 pub struct WcpTracker {
-    /// Longest cost-weighted path from node v to the sink (includes v's
-    /// own cost).  Static: completion order cannot change it because no
-    /// descendant of an incomplete node can be complete.
+    /// Longest effective-cost-weighted path from node v to the sink
+    /// (includes v's own cost).  Recomputed on guard resolution and
+    /// growth; between those events completion order cannot change it
+    /// because no descendant of an incomplete node can be complete.
     path_us: Vec<u64>,
+    /// Snapshot of each node's own cost estimate, taken when the node
+    /// entered the tracker (EWMA corrections observed later re-weight
+    /// *later* queries, never a live tracker).
+    base_cost: Vec<u64>,
+    /// Each node's guard, mirrored from the primitives.
+    guard: Vec<Option<(NodeId, bool)>>,
+    /// Probability the node's guard passes (`prob_true` of the guarding
+    /// condition, or its complement for `want == false`; 1.0 unguarded).
+    guard_prob: Vec<f64>,
+    /// Forward edges, mirrored so resolution/growth can recompute paths
+    /// without holding the e-graph.
+    children: Vec<Vec<NodeId>>,
+    /// Cached topological order of the mirrored graph.
+    order: Vec<NodeId>,
+    /// Resolved condition outcomes (`resolve_guard`).
+    resolved: HashMap<NodeId, bool>,
+    /// Probability-weighted mode (PR10, speculation on): unresolved
+    /// guarded subpaths count at `guard_prob` weight instead of full
+    /// cost.  Off = the pre-PR10 pessimistic upper bound, bit-identical.
+    weighted: bool,
     done: Vec<bool>,
     remaining: u64,
 }
 
 impl WcpTracker {
-    /// Estimate paths over an e-graph (one pass in reverse topo order).
+    /// Estimate paths over an e-graph (one pass in reverse topo order),
+    /// in the classic pessimistic mode: guarded subpaths count at full
+    /// cost until [`WcpTracker::resolve_guard`] prunes a refuted branch.
     pub fn new(egraph: &EGraph) -> WcpTracker {
+        WcpTracker::build(egraph, false)
+    }
+
+    /// Probability-weighted variant (speculation on): an unresolved
+    /// guarded subpath counts at its guard's pass probability, so a
+    /// 10%-likely expensive branch no longer dominates the query's rank.
+    pub fn new_weighted(egraph: &EGraph) -> WcpTracker {
+        WcpTracker::build(egraph, true)
+    }
+
+    fn build(egraph: &EGraph, weighted: bool) -> WcpTracker {
         let n = egraph.len();
-        let mut path_us = vec![0u64; n];
-        if let Ok(order) = egraph.graph.topo_order() {
-            for &v in order.iter().rev() {
-                let downstream =
-                    egraph.children[v].iter().map(|&c| path_us[c]).max().unwrap_or(0);
-                path_us[v] = node_cost_us(&egraph.graph.nodes[v]).saturating_add(downstream);
-            }
+        let mut w = WcpTracker {
+            path_us: vec![0u64; n],
+            base_cost: (0..n).map(|v| node_cost_us(&egraph.graph.nodes[v])).collect(),
+            guard: (0..n).map(|v| egraph.graph.nodes[v].guard).collect(),
+            guard_prob: vec![1.0; n],
+            children: egraph.children.clone(),
+            order: egraph.graph.topo_order().unwrap_or_default(),
+            resolved: HashMap::new(),
+            weighted,
+            done: vec![false; n],
+            remaining: 0,
+        };
+        for v in 0..n {
+            w.guard_prob[v] = guard_pass_prob(egraph, w.guard[v]);
         }
-        let remaining = path_us.iter().copied().max().unwrap_or(0);
-        WcpTracker { path_us, done: vec![false; n], remaining }
+        w.recompute();
+        w
+    }
+
+    /// Effective own-cost of node `v` under the current guard knowledge:
+    /// full cost when unguarded or confirmed, zero when refuted, and —
+    /// in weighted mode — probability-scaled while unresolved.
+    fn effective_cost(&self, v: NodeId) -> u64 {
+        match self.guard[v] {
+            None => self.base_cost[v],
+            Some((g, want)) => match self.resolved.get(&g) {
+                Some(&outcome) if outcome == want => self.base_cost[v],
+                Some(_) => 0,
+                None if self.weighted => {
+                    (self.base_cost[v] as f64 * self.guard_prob[v]) as u64
+                }
+                None => self.base_cost[v],
+            },
+        }
+    }
+
+    /// Full reverse-topo path recomputation; sets `remaining` to the
+    /// incomplete frontier (no monotone clamp — callers that must not
+    /// raise the estimate clamp themselves, as `complete` does).
+    fn recompute(&mut self) {
+        for i in (0..self.order.len()).rev() {
+            let v = self.order[i];
+            let downstream =
+                self.children[v].iter().map(|&c| self.path_us[c]).max().unwrap_or(0);
+            self.path_us[v] = self.effective_cost(v).saturating_add(downstream);
+        }
+        self.remaining = self.frontier();
+    }
+
+    fn frontier(&self) -> u64 {
+        self.path_us
+            .iter()
+            .zip(&self.done)
+            .filter(|(_, d)| !**d)
+            .map(|(p, _)| *p)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Remaining critical-path device time of the query, microseconds.
@@ -236,15 +330,59 @@ impl WcpTracker {
             return;
         }
         self.done[v] = true;
-        let frontier = self
-            .path_us
-            .iter()
-            .zip(&self.done)
-            .filter(|(_, d)| !**d)
-            .map(|(p, _)| *p)
-            .max()
-            .unwrap_or(0);
+        let frontier = self.frontier();
         self.remaining = self.remaining.min(frontier);
+    }
+
+    /// Fold a condition's resolved outcome into the path estimates: the
+    /// refuted branch's cost is pruned the moment the guard resolves,
+    /// and (weighted mode) the confirmed branch's discount is lifted —
+    /// so this is the one completion-adjacent event that may *raise*
+    /// `remaining_us()`.  Returns the new estimate so the caller can
+    /// restamp queued items.
+    pub fn resolve_guard(&mut self, cond: NodeId, outcome: bool) -> u64 {
+        self.resolved.insert(cond, outcome);
+        self.recompute();
+        self.remaining
+    }
+
+    /// Absorb runtime graph growth: the e-graph appended nodes (and may
+    /// have given existing nodes new children).  Existing nodes keep
+    /// their snapshot costs and completion state; new nodes enter at
+    /// their current cost estimate.  `remaining_us()` typically rises —
+    /// new work exists — and the caller restamps queued items.
+    pub fn grow(&mut self, egraph: &EGraph) -> u64 {
+        let old = self.base_cost.len();
+        let n = egraph.len();
+        for v in old..n {
+            self.base_cost.push(node_cost_us(&egraph.graph.nodes[v]));
+            self.guard.push(egraph.graph.nodes[v].guard);
+            self.guard_prob.push(guard_pass_prob(egraph, egraph.graph.nodes[v].guard));
+            self.done.push(false);
+            self.path_us.push(0);
+        }
+        self.children = egraph.children.clone();
+        self.order = egraph.graph.topo_order().unwrap_or_default();
+        self.recompute();
+        self.remaining
+    }
+}
+
+/// Probability that `guard` passes, from the guarding condition's
+/// `prob_true` (complemented for `want == false`); 1.0 when unguarded
+/// or the guard is not a condition node.
+pub fn guard_pass_prob(egraph: &EGraph, guard: Option<(NodeId, bool)>) -> f64 {
+    let Some((g, want)) = guard else { return 1.0 };
+    match egraph.graph.nodes.get(g).map(|n| &n.payload) {
+        Some(PayloadSpec::Condition { prob_true, .. }) => {
+            let p = prob_true.clamp(0.0, 1.0);
+            if want {
+                p
+            } else {
+                1.0 - p
+            }
+        }
+        _ => 1.0,
     }
 }
 
@@ -357,5 +495,113 @@ mod tests {
         let src = e.sources()[0];
         assert_eq!(w.path_us(src), w.remaining_us());
         assert_eq!(w.path_us(usize::MAX), 0);
+    }
+
+    /// Search-gen e-graph (judge condition guarding the web branch) for
+    /// the guard-resolution tests.
+    fn guarded_egraph() -> (EGraph, NodeId) {
+        let t = crate::apps::search_gen("llm-lite");
+        let q = QueryConfig::example(7);
+        let e = EGraph::new(build_pgraph(&t, &q).unwrap()).unwrap();
+        let cond = e
+            .graph
+            .nodes
+            .iter()
+            .position(|n| matches!(n.payload, PayloadSpec::Condition { .. }))
+            .expect("search-gen has a judge condition");
+        (e, cond)
+    }
+
+    #[test]
+    fn weighted_mode_discounts_unresolved_guarded_branch() {
+        let (e, cond) = guarded_egraph();
+        let classic = WcpTracker::new(&e);
+        let mut weighted = WcpTracker::new_weighted(&e);
+        // The guarded web branch sits on the critical path (its 35ms
+        // network envelope dominates), so discounting it by the guard's
+        // pass probability strictly lowers the unresolved estimate.
+        assert!(
+            weighted.remaining_us() < classic.remaining_us(),
+            "weighted {} must undercut classic {} while the guard is open",
+            weighted.remaining_us(),
+            classic.remaining_us()
+        );
+        // Confirming the guard lifts the discount: the weighted estimate
+        // rises back to exactly the classic post-confirmation value (the
+        // two modes must agree once no probability mass is left).
+        let before = weighted.remaining_us();
+        let mut classic2 = WcpTracker::new(&e);
+        let c_rem = classic2.resolve_guard(cond, true);
+        let w_rem = weighted.resolve_guard(cond, true);
+        assert_eq!(w_rem, c_rem, "modes must agree after resolution");
+        assert!(w_rem >= before, "confirmation cannot lower the weighted estimate");
+    }
+
+    #[test]
+    fn refuted_guard_prunes_branch_in_both_modes() {
+        let (e, cond) = guarded_egraph();
+        let mut classic = WcpTracker::new(&e);
+        let mut weighted = WcpTracker::new_weighted(&e);
+        let full = classic.remaining_us();
+        let c_rem = classic.resolve_guard(cond, false);
+        let w_rem = weighted.resolve_guard(cond, false);
+        assert_eq!(w_rem, c_rem, "modes must agree after resolution");
+        assert!(
+            c_rem < full,
+            "pruning the refuted web branch must shrink the path ({c_rem} vs {full})"
+        );
+    }
+
+    #[test]
+    fn grow_absorbs_appended_nodes_and_raises_remaining() {
+        let mut e = one_shot_egraph(8);
+        let mut w = WcpTracker::new(&e);
+        let before = w.remaining_us();
+        // Hang a tool call off the current sink, then a barrier join —
+        // the shape expand_node() appends at runtime.
+        let sink = e.len() - 1;
+        let blank = |kind, payload, engine: &str, hard: Vec<usize>| crate::graph::primitive::Primitive {
+            id: 0,
+            kind,
+            engine: engine.into(),
+            component: 0,
+            batchable: true,
+            splittable: false,
+            payload,
+            hard_deps: hard,
+            guard: None,
+        };
+        let base = e.len();
+        let ids = e
+            .append(vec![
+                blank(
+                    crate::graph::primitive::PrimKind::ToolCalling,
+                    PayloadSpec::Tool { name: "call_api#0".into(), cost_us: 50_000 },
+                    "tool",
+                    vec![sink],
+                ),
+                blank(
+                    crate::graph::primitive::PrimKind::Aggregate,
+                    PayloadSpec::Aggregate {
+                        parts: vec![DataRef::Node(base)],
+                        mode: crate::graph::primitive::AggregateMode::Barrier,
+                    },
+                    "",
+                    Vec::new(),
+                ),
+            ])
+            .unwrap();
+        assert_eq!(ids, vec![base, base + 1]);
+        let after = w.grow(&e);
+        assert!(
+            after > before,
+            "50ms of appended tool work must raise the estimate ({after} vs {before})"
+        );
+        assert!(w.path_us(base) >= 50_000);
+        // Completing everything still drains to zero over the grown graph.
+        for v in e.graph.topo_order().unwrap() {
+            w.complete(v);
+        }
+        assert_eq!(w.remaining_us(), 0);
     }
 }

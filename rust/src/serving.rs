@@ -133,6 +133,14 @@ impl LoadReport {
         mean(self.metrics.iter().map(|m| m.dispatch_hops))
     }
 
+    /// Total speculative branch dispatches cancelled by guard refutation
+    /// across the run (wasted-work counter, distinct from dispatch hops:
+    /// a cancelled speculation consumed engine capacity without ever
+    /// contributing to an output).
+    pub fn total_speculative_cancelled(&self) -> u64 {
+        self.metrics.iter().map(|m| m.speculative_cancelled).sum()
+    }
+
     /// Latency percentiles as a JSON value (CI perf-trajectory smoke
     /// artifacts, e.g. `BENCH_PR2.json` / the merged `BENCH_PR4.json`).
     pub fn to_json(&self) -> crate::json::Json {
@@ -144,6 +152,7 @@ impl LoadReport {
             ("p99_ms", num(self.e2e_ms.p99)),
             ("mean_ms", num(self.e2e_ms.mean)),
             ("mean_dispatch_hops", num(self.mean_dispatch_hops())),
+            ("speculative_cancelled", num(self.total_speculative_cancelled() as f64)),
             ("qps", num(self.qps)),
             ("wall_s", num(self.wall_s)),
         ];
@@ -448,6 +457,65 @@ pub fn run_pipeline_comparison(
     result
 }
 
+/// The PR10 speculative-branch comparison: replay one seeded Poisson
+/// trace of the guard-heavy + agentic mix ([`spec_mix_prepared`])
+/// twice — speculation off (guarded branches wait for their
+/// `Condition`), then on (likely branches dispatch at fully discounted
+/// rank while the guard is still in flight, runtime tool fan-out runs
+/// its subgraphs in parallel) — with fixed query ids so the two
+/// reports' outputs are comparable bit-for-bit.  Speculation changes
+/// *when* branch work is dispatched and how tool fan-outs are chained,
+/// never what any node computes: a confirmed branch replays the exact
+/// buffered completion and a cancelled branch collapses to the same
+/// `Skipped` the off half produces, so any output divergence is a
+/// correctness bug, not noise.  Returns `(off, on)` and restores the
+/// caller's speculation setting.
+pub fn run_spec_comparison(
+    platform: &Platform,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<(LoadReport, LoadReport)> {
+    use crate::bench::spec_mix_prepared;
+    let trace = PoissonTrace::generate(rate, n, seed);
+    let id_of = |i: usize| 0x9CB_0000 + i as QueryId;
+    // Warm the shared instruction-prefix cache before the first timed
+    // half (see run_wcp_comparison — the cold prefix prefill must not
+    // bias whichever half runs first).
+    if let Some((e, _)) = spec_mix_prepared("llm-lite", 1, seed).pop() {
+        let _ = platform.run_query(0x9CB_FFFF, e)?;
+    }
+    let drain = || std::thread::sleep(Duration::from_millis(50));
+    let spec_snapshot = platform.speculation();
+    // Inner closure so the caller's speculation setting is restored
+    // even when a half errors out.
+    let result = (|| {
+        platform.set_speculation(false);
+        // Identity latency corrections for both halves (the comparison
+        // varies the speculation knob alone).
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain(); // let queued FreeQuery cleanup land before reusing ids
+        let off = run_load_prepared_ids(
+            platform,
+            spec_mix_prepared("llm-lite", n, seed),
+            &trace.arrivals,
+            id_of,
+        )?;
+        platform.set_speculation(true);
+        crate::scheduler::wcp::reset_latency_feedback();
+        drain();
+        let on = run_load_prepared_ids(
+            platform,
+            spec_mix_prepared("llm-lite", n, seed),
+            &trace.arrivals,
+            id_of,
+        )?;
+        Ok((off, on))
+    })();
+    platform.set_speculation(spec_snapshot);
+    result
+}
+
 /// Run pre-built e-graphs at a multi-tenant arrival schedule, stamping
 /// each query with its tenant.  Unlike [`run_load_prepared_ids`], a
 /// per-query error is data here, not a run failure: with admission
@@ -687,8 +755,11 @@ fn loopback_instance(
 /// The PR9 scheduler-overhead microbench: drive one `EngineScheduler`
 /// (TopoAware + WCP, row-slot accounting, no accumulation window) over a
 /// pre-enqueued burst of `n` zero-cost `ToolCall` jobs served by a single
-/// [`loopback_instance`], and isolate pure orchestration cost from the
-/// process-global hot-path counters.  The whole burst is enqueued — and
+/// [`loopback_instance`], and isolate pure orchestration cost from a
+/// private hot-path counter set (PR10: the bench owns its counters, so a
+/// concurrently running spec-bench or serving platform in the same test
+/// binary can no longer leak work into the delta).  The whole burst is
+/// enqueued — and
 /// the job channel closed — *before* the scheduler thread starts, so
 /// batch formation always sees the same queue state and the run is fully
 /// deterministic: same `(n, seed, incremental)` in, same
@@ -708,6 +779,7 @@ pub fn run_sched_bench(n: usize, seed: u64, incremental: bool) -> Result<SchedBe
     let (ev_tx, ev_rx) = channel::<InstanceEvent>();
     let (job_tx, job_rx) = channel::<QueueItem>();
     let (done_tx, done_rx) = channel::<crate::engines::Completion>();
+    let counters = Arc::new(stats::SchedCounters::new());
     let sched = EngineScheduler::new(
         "sched-bench".to_string(),
         vec![loopback_instance(0, ev_tx)],
@@ -724,6 +796,7 @@ pub fn run_sched_bench(n: usize, seed: u64, incremental: bool) -> Result<SchedBe
         ExecMode::FullBatch,
         Arc::new(SharedTenancy::default()),
         Arc::new(AtomicBool::new(incremental)),
+        counters.clone(),
     );
 
     // Distinct, well-separated critical-path stamps in seeded random
@@ -760,7 +833,7 @@ pub fn run_sched_bench(n: usize, seed: u64, incremental: bool) -> Result<SchedBe
     drop(job_tx); // burst fully enqueued; the scheduler drains and exits
     drop(done_tx); // completions only flow through queue items now
 
-    let before = stats::snapshot();
+    let before = counters.snapshot();
     let start = Instant::now();
     let h = std::thread::spawn(move || sched.run());
     let mut completion_order = Vec::with_capacity(n);
@@ -778,7 +851,7 @@ pub fn run_sched_bench(n: usize, seed: u64, incremental: bool) -> Result<SchedBe
     }
     h.join().expect("sched-bench scheduler thread");
     let wall_s = start.elapsed().as_secs_f64();
-    let delta = stats::snapshot().delta_since(&before);
+    let delta = counters.snapshot().delta_since(&before);
     // Scheduler and loopback have exited and every reply sender is gone:
     // anything still readable is a duplicated dispatch.
     if done_rx.try_recv().is_ok() {

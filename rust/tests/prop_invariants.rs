@@ -950,6 +950,157 @@ fn cancelled_speculative_prefill_releases_all_kv() {
     });
 }
 
+/// PR10 invariant (speculative branch cancel): cancelling a refuted
+/// speculative branch — in any interleaving of queued-but-undispatched
+/// items and an in-flight prefill at a random point of progress — leaks
+/// nothing: the `SchedQueue` retains zero items for the cancelled node
+/// (and every unrelated item survives untouched), the executor's KV
+/// ledger drains to zero under both accounting modes (reserve-at-admit
+/// and persistent residency), no `Failed` completion ever surfaces
+/// toward the speculating runner, and the tenant's fair-queueing charge
+/// refunds exactly.  This replays the same primitive sequence the
+/// engine scheduler's `CancelNode` interception and the runner's
+/// `cancel_branch_node` perform, under random cancel timing.
+#[test]
+fn cancelled_speculative_branch_leaks_nothing() {
+    use std::collections::HashMap;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Arc, Mutex};
+    use teola::engines::instance::StepExecutor;
+    use teola::engines::llm::SeqStore;
+    use teola::engines::sim::SimLlmExecutor;
+    use teola::engines::{JobOutput, RequestCtx};
+    use teola::scheduler::{FairQueue, SchedQueue};
+
+    check(60, |rng| {
+        let t0 = Instant::now();
+        let spec_query: u64 = 0x5bec;
+        let spec_node: usize = rng.range_usize(3, 40);
+
+        // --- Queued-but-undispatched half: a SchedQueue holding a mix
+        // of the speculative node's items and unrelated work.
+        let mut queue = SchedQueue::new();
+        let n_spec = rng.range_usize(1, 5);
+        let n_other = rng.range_usize(0, 8);
+        for i in 0..(n_spec + n_other) {
+            let mut it = mk_item(rng, t0);
+            if i < n_spec {
+                it.query = spec_query;
+                it.node = spec_node;
+                // Speculative dispatches carry the fully discounted rank.
+                it.wcp_us = 0;
+            } else {
+                // Unrelated: same query/different node or different query.
+                if rng.chance(0.5) {
+                    it.query = spec_query;
+                    it.node = spec_node + 1 + rng.range_usize(0, 5);
+                } else {
+                    it.query = rng.range(1, 5);
+                }
+            }
+            it.bundle = (it.query, it.node as u64);
+            queue.push(it);
+        }
+        let before = queue.len();
+        // The CancelNode interception: purge by (query, node), replies
+        // dropped — a cancelled speculation must never surface Failed.
+        let ids: Vec<usize> = queue
+            .iter_ids()
+            .filter(|(_, it)| it.query == spec_query && it.node == spec_node)
+            .map(|(id, _)| id)
+            .collect();
+        prop_assert(ids.len() == n_spec, "purge sees every queued branch item")?;
+        for id in ids {
+            drop(queue.remove(id));
+        }
+        prop_assert(
+            queue.len() == before - n_spec,
+            "only the cancelled node's items leave the queue",
+        )?;
+        prop_assert(
+            queue.iter().all(|it| !(it.query == spec_query && it.node == spec_node)),
+            "zero SchedQueue slots remain for the cancelled branch",
+        )?;
+
+        // --- In-flight half: the branch's prefill is mid-execution on a
+        // stepped executor when the CancelSeq lands, at a random point
+        // of progress, under a random ledger mode.
+        let store: SeqStore = Arc::new(Mutex::new(HashMap::new()));
+        let mut exec = SimLlmExecutor::new(
+            "llm-lite",
+            store.clone(),
+            3,
+            2,
+            4096,
+            Arc::new(AtomicUsize::new(0)),
+        )
+        .with_kv_budget(Arc::new(AtomicUsize::new(4096)));
+        if rng.chance(0.5) {
+            exec = exec.with_kv_watermark(Arc::new(AtomicUsize::new(70)));
+        }
+        let (tx, rx) = channel();
+        let ctx = |node: usize| RequestCtx {
+            query: spec_query,
+            node,
+            depth: 0,
+            arrival: Instant::now(),
+            wcp_us: 0,
+            kv_tokens: 0,
+            wcp_discounted: false,
+            tenant: teola::engines::UNTENANTED,
+            reply: tx.clone(),
+            successors: Vec::new(),
+        };
+        let seq: SeqId = (spec_query, spec_node as u32);
+        let len = rng.range_usize(8, 200);
+        let bounced = exec.admit(vec![(
+            ctx(spec_node),
+            EngineJob::Prefill { seq, tokens: vec![9; len], offset: 0, prefix: None },
+        )]);
+        prop_assert(bounced.is_empty(), "speculative prefill admits under a roomy budget")?;
+        let mut emitted = Vec::new();
+        for _ in 0..rng.range_usize(0, 7) {
+            exec.step(&mut |c| emitted.push(c)).map_err(|e| e.to_string())?;
+        }
+        let bounced = exec.admit(vec![(ctx(spec_node), EngineJob::CancelSeq { seq })]);
+        prop_assert(bounced.is_empty(), "CancelSeq is never bounced")?;
+        while exec.resident() > 0 {
+            exec.step(&mut |c| emitted.push(c)).map_err(|e| e.to_string())?;
+        }
+        prop_assert(
+            exec.kv_occupied() == 0,
+            format!("cancelled branch leaked KV: {}", exec.kv_occupied()),
+        )?;
+        prop_assert(
+            !store.lock().unwrap().contains_key(&seq),
+            "host-side sequence state purged on branch cancel",
+        )?;
+        drop(tx);
+        emitted.extend(rx.try_iter());
+        for c in &emitted {
+            prop_assert(
+                !matches!(c.output, JobOutput::Failed(_)),
+                "a cancelled speculative branch must never surface Failed",
+            )?;
+        }
+
+        // --- Fair-queueing refund: the CancelNode refund is an exact
+        // inverse of the dispatch-time charge, so a cancelled branch
+        // costs its tenant zero SFQ share.
+        let mut fq = FairQueue::new();
+        let tenant = rng.range(1, 5) as teola::engines::TenantId;
+        let w = rng.range(1, 7) as u32;
+        let v0 = fq.vstart(tenant);
+        let cost = rng.range_usize(1, 900);
+        fq.charge(tenant, cost, w);
+        fq.refund(tenant, cost, w);
+        prop_assert(
+            fq.vstart(tenant) == v0,
+            format!("refund not exact: vstart {} != {v0}", fq.vstart(tenant)),
+        )
+    });
+}
+
 /// PR8 invariant (start-time fair queueing): under random weights,
 /// random per-dispatch costs, and a random warm-up arrival order, an
 /// always-backlogged tenant set served by ascending virtual-start tag

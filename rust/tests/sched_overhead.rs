@@ -121,6 +121,7 @@ fn trickle_sched() -> (Sender<QueueItem>, std::thread::JoinHandle<()>) {
         ExecMode::FullBatch,
         Arc::new(SharedTenancy::default()),
         Arc::new(AtomicBool::new(true)),
+        Arc::new(teola::scheduler::stats::SchedCounters::new()),
     );
     let h = std::thread::spawn(move || sched.run());
     (job_tx, h)

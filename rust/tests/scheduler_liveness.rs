@@ -57,6 +57,7 @@ fn engine_with(
         ExecMode::Stepped,
         Arc::new(teola::scheduler::tenancy::SharedTenancy::default()),
         Arc::new(AtomicBool::new(true)),
+        Arc::new(teola::scheduler::stats::SchedCounters::new()),
     );
     let h = std::thread::spawn(move || sched.run());
     (job_tx, h)

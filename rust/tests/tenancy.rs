@@ -324,6 +324,7 @@ fn qos_sched(
         ExecMode::FullBatch,
         tenancy,
         Arc::new(AtomicBool::new(true)),
+        Arc::new(teola::scheduler::stats::SchedCounters::new()),
     );
     (job_tx, sched)
 }
